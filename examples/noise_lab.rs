@@ -1,0 +1,110 @@
+//! Noise laboratory: everything about the paper's R = round(N(0,1)/2).
+//!
+//! Prints the Eq. 10 target probabilities, the empirical histograms of the
+//! exact / fast bitwise generators and the Box–Muller reference, the exact
+//! rounded-normal probabilities for comparison, a quick per-method
+//! throughput shoot-out, and a stochastic-precision-annealing demo
+//! (Proposition 4) on a real weight block.
+//!
+//! Run: cargo run --release --example noise_lab
+
+use gaussws::numerics::analysis::{self, ROUNDED_NORMAL};
+use gaussws::numerics::formats;
+use gaussws::pqt::gaussws::{forward, noise_histogram, NoiseGen};
+use gaussws::prng::bitwise::target_probabilities;
+use gaussws::prng::gauss::{exact_rounded_probs, fill_rounded_normal};
+use gaussws::prng::{generate_exact, generate_fast, Philox4x32};
+use gaussws::util::bench::Bencher;
+
+fn main() {
+    let n = 2_000_000usize;
+
+    // ---- distributions ---------------------------------------------------
+    let (p0, p1, p2) = target_probabilities();
+    let (e0, e1, e2) = exact_rounded_probs();
+    println!("== R distributions ==");
+    println!("{:<26} {:>9} {:>9} {:>9}", "", "Pr(0)", "Pr(±1)ea", "Pr(±2)ea");
+    println!("{:<26} {:>9.4} {:>9.4} {:>9.6}", "Eq.10 target (paper)", p0, p1, p2);
+    println!("{:<26} {:>9.4} {:>9.4} {:>9.6}", "exact round(N(0,1)/2)", e0, e1, e2);
+
+    let hist = |vals: &[i32]| -> [f64; 5] {
+        let mut h = [0f64; 5];
+        for &v in vals {
+            h[(v + 2) as usize] += 1.0;
+        }
+        h.iter_mut().for_each(|x| *x /= vals.len() as f64);
+        *h.as_slice().try_into().as_ref().unwrap()
+    };
+    let exact = generate_exact(1, n);
+    let fast = generate_fast(2, n);
+    let he = hist(&(0..n).map(|i| exact.get(i)).collect::<Vec<_>>());
+    let hf = hist(&(0..n).map(|i| fast.get(i)).collect::<Vec<_>>());
+    let mut bm = vec![0f32; n];
+    fill_rounded_normal(3, &mut bm);
+    let hb = hist(&bm.iter().map(|&x| (x as i32).clamp(-2, 2)).collect::<Vec<_>>());
+    println!("{:<26} {:>9.4} {:>9.4} {:>9.6}", "bitwise exact (measured)", he[2], he[3], he[4]);
+    println!("{:<26} {:>9.4} {:>9.4} {:>9.6}", "bitwise fast  (measured)", hf[2], hf[3], hf[4]);
+    println!("{:<26} {:>9.4} {:>9.4} {:>9.6}", "box-muller    (measured)", hb[2], hb[3], hb[4]);
+
+    // ---- throughput ------------------------------------------------------
+    println!("\n== generator throughput ({} elements) ==", n);
+    let b = Bencher::quick();
+    for (name, f) in [
+        ("bitwise fast (ours)", Box::new(|| generate_fast(9, n).words.len()) as Box<dyn FnMut() -> usize>),
+        ("bitwise exact", Box::new(|| generate_exact(9, n).words.len())),
+        ("box-muller f32", Box::new(|| {
+            let mut buf = vec![0f32; n];
+            fill_rounded_normal(9, &mut buf);
+            buf.len()
+        })),
+    ] {
+        let mut f = f;
+        let r = b.run(name, &mut f);
+        println!("  {:<22} {:>8.1} Melem/s", r.name, r.elems_per_sec(n) / 1e6);
+    }
+
+    // ---- Lemma 1 / Prop 4 on a live block ---------------------------------
+    println!("\n== Section 3.3 on a live 32x32 block (BF16 operator) ==");
+    println!(
+        "Lemma 1 bound (rounded normal, m=7): b_t < {}",
+        analysis::lemma1_bt_bound(7, &ROUNDED_NORMAL)
+    );
+    let mut rng = Philox4x32::new(5);
+    let mut w: Vec<f32> = (0..32 * 32)
+        .map(|_| gaussws::prng::gauss::box_muller_pair(&mut rng).0 as f32 * 0.02)
+        .collect();
+    // plant tiny parameters well below the Lemma-2 threshold
+    let tiny_idx: Vec<usize> = (0..64).map(|k| k * 16 + 3).collect();
+    for &i in &tiny_idx {
+        w[i] = 2f32.powi(-24);
+    }
+    let mut what = vec![0f32; w.len()];
+    let st = forward(&w, 32, 32, 32, &[4.0], 11, NoiseGen::Exact, &mut what);
+    let masked = tiny_idx.iter().filter(|&&i| what[i] != w[i] || what[i] == 0.0).count();
+    let nonzero_r = tiny_idx
+        .iter()
+        .filter(|&&i| gaussws::pqt::gaussws::noise_at(&st, i) != 0)
+        .count();
+    println!(
+        "Prop 4: {}/{} planted 2^-24 params perturbed/masked; {} had R != 0 \
+         (masking tracks Pr(R!=0) ~ {:.3})",
+        masked,
+        tiny_idx.len(),
+        nonzero_r,
+        1.0 - ROUNDED_NORMAL.p_zero
+    );
+    println!("noise histogram of the block: {:?}", noise_histogram(&st));
+
+    // ---- Table C.1 anchor ------------------------------------------------
+    println!("\n== datatype sufficiency (Prop 3) ==");
+    for bt in [3, 4, 5, 9] {
+        println!(
+            "  b_t = {bt}: w needs e{}, ŵ needs e{}m{}",
+            analysis::prop3_exp_bits_w(bt, &ROUNDED_NORMAL),
+            analysis::prop3_exp_bits_what(bt, &ROUNDED_NORMAL),
+            analysis::mantissa_bits_what(bt)
+        );
+    }
+    let _ = formats::FP6_E3M2; // anchor: see `gaussws tables c1`
+    println!("\nfull table: `gaussws tables c1`");
+}

@@ -1,0 +1,71 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): pre-train a multi-million-
+//! parameter GPT2-style model through the full three-layer stack — Pallas
+//! noise kernel inside the jax-lowered train-step HLO, executed by the rust
+//! coordinator with rust AdamW, seed tree, LR schedule and checkpointing —
+//! and log the loss curve.
+//!
+//! Run: cargo run --release --example pretrain_gpt2 -- \
+//!        [--method gaussws|diffq|bf16] [--steps 300] [--workers 1]
+//!        [--size small|tiny] [--out runs]
+
+use gaussws::config::schema::{Optimizer, TrainConfig};
+use gaussws::coordinator::Trainer;
+use gaussws::exp;
+use gaussws::runtime::Runtime;
+use gaussws::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let method = args.get_or("method", "gaussws");
+    let size = args.get_or("size", "small");
+    let steps = args.usize_or("steps", 300);
+    let out = args.get_or("out", "runs");
+    let tag = match method {
+        "bf16" | "none" => format!("{size}_gpt2.bf16"),
+        "diffq" => format!("{size}_gpt2.diffq_all"),
+        _ => format!("{size}_gpt2.gaussws_all"),
+    };
+
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: args.usize_or("warmup", steps / 10),
+        max_lr: args.f64_or("lr", 6e-4),
+        min_lr: args.f64_or("min-lr", 6e-5),
+        optimizer: Optimizer::parse(args.get_or("optimizer", "adamw"))?,
+        workers: args.usize_or("workers", 1),
+        seed: args.u64_or("seed", 1234),
+        ..Default::default()
+    };
+
+    let rt = Runtime::new(args.get_or("artifacts-dir", "artifacts"))?;
+    let run_name = format!("e2e_gpt2_{method}_{size}");
+    let mut t = Trainer::new(rt, &tag, cfg, &run_name)?;
+    let n_params: usize = t.params.values().map(|v| v.len()).sum();
+    println!(
+        "== e2e pre-train: {tag} ==\n   {n_params} params | {} PQT layers | {} tokens/step | {steps} steps",
+        t.bi.len(),
+        t.tokens_per_step()
+    );
+    let t0 = std::time::Instant::now();
+    t.run(steps, args.usize_or("print-every", 20))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    t.log.write_to(out)?;
+    t.save_checkpoint(&format!("{out}/{run_name}.ck"))?;
+    println!("\n== results ==");
+    println!("  loss: {:.4} -> {:.4} (wma16 {:.4})",
+        t.log.losses()[0],
+        t.log.losses().last().unwrap(),
+        t.log.final_loss().unwrap());
+    println!("  throughput: {:.0} tokens/s  (wall {wall:.0}s, {} tokens total)",
+        t.log.tokens_per_sec(),
+        t.tokens_per_step() * steps);
+    println!("  divergences: {:?}", t.log.divergences);
+    println!("  memory model ({method}): {:.1} MiB",
+        t.memory_model_bytes(method) as f64 / (1 << 20) as f64);
+    if !t.bi.is_empty() {
+        println!("\n{}", exp::render_fig5(&exp::fig5_report(&t)));
+    }
+    println!("curve: {out}/{run_name}.csv   checkpoint: {out}/{run_name}.ck");
+    Ok(())
+}

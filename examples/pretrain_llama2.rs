@@ -1,0 +1,72 @@
+//! Llama2-style pre-training driver (the Fig. 4 workload shape): RMSNorm +
+//! SwiGLU + rotary architecture, GaussWS/DiffQ/BF16 arms, AdamW or
+//! Adam-mini, with the avg + windowed-max loss reporting the paper uses.
+//!
+//! Run: cargo run --release --example pretrain_llama2 -- \
+//!        [--method gaussws|diffq|bf16] [--optimizer adamw|adam-mini]
+//!        [--size tiny|small] [--steps 200]
+
+use gaussws::config::schema::{Optimizer, TrainConfig};
+use gaussws::coordinator::Trainer;
+use gaussws::exp;
+use gaussws::runtime::Runtime;
+use gaussws::util::stats::windowed_max;
+use gaussws::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let method = args.get_or("method", "gaussws");
+    let size = args.get_or("size", "tiny");
+    let steps = args.usize_or("steps", 200);
+    let tag = match method {
+        "bf16" | "none" => format!("{size}_llama2.bf16"),
+        "diffq" => format!("{size}_llama2.diffq_all"),
+        "b8t6" => format!("{size}_llama2.gaussws_b8t6"), // Fig F.1 arm
+        _ => format!("{size}_llama2.gaussws_all"),
+    };
+
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: args.usize_or("warmup", steps / 10),
+        max_lr: args.f64_or("lr", 1e-3),
+        min_lr: args.f64_or("min-lr", 1e-4),
+        optimizer: Optimizer::parse(args.get_or("optimizer", "adamw"))?,
+        workers: args.usize_or("workers", 1),
+        seed: args.u64_or("seed", 1234),
+        ..Default::default()
+    };
+
+    let rt = Runtime::new(args.get_or("artifacts-dir", "artifacts"))?;
+    let run_name = format!("e2e_llama2_{method}_{}", cfg.optimizer.name());
+    let mut t = Trainer::new(rt, &tag, cfg, &run_name)?;
+    println!(
+        "== llama2 pre-train: {tag} ({}) — {} params ==",
+        t.cfg.optimizer.name(),
+        t.params.values().map(|v| v.len()).sum::<usize>()
+    );
+    t.run(steps, args.usize_or("print-every", 20))?;
+
+    // Fig. 4 style reporting: smoothed average + windowed max
+    let losses = t.log.losses();
+    let wma16 = t.log.smoothed(1.0 / 16.0);
+    let wma128 = t.log.smoothed(1.0 / 128.0);
+    let mx = windowed_max(&losses, 64);
+    println!("\n== Fig-4-style summary (avg | max windows) ==");
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let i = ((losses.len() as f64 * frac) as usize).saturating_sub(1);
+        println!(
+            "  {:>4.0}% of run: wma16 {:.4}  wma128 {:.4}  max64 {:.4}",
+            frac * 100.0,
+            wma16[i],
+            wma128[i],
+            mx[i]
+        );
+    }
+    let out = args.get_or("out", "runs");
+    t.log.write_to(out)?;
+    if !t.bi.is_empty() {
+        println!("\n{}", exp::render_fig5(&exp::fig5_report(&t)));
+    }
+    println!("curve: {out}/{run_name}.csv");
+    Ok(())
+}

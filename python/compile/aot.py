@@ -1,0 +1,310 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + manifest.json.
+
+HLO text (NOT serialized protos) is the interchange format: the `xla` crate
+links xla_extension 0.5.1, which rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly.
+
+Each artifact records its flattened input/output signature in
+`artifacts/manifest.json` so the rust runtime can marshal buffers without
+any knowledge of jax pytrees. Flattening order is jax's: dict leaves in
+sorted-key order, then positional args.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# artifact specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("bfloat16"): "bf16",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def _sig(tree):
+    """Flatten a pytree of ShapeDtypeStructs into the manifest signature."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for (path, leaf) in paths:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        ) or "arg"
+        out.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": _DTYPE_NAMES[jnp.dtype(leaf.dtype)],
+            }
+        )
+    assert len(out) == len(leaves)
+    return out
+
+
+class Artifact:
+    """One lowerable computation + its manifest entry."""
+
+    def __init__(self, name, kind, fn, example_args, meta=None):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.example_args = example_args
+        self.meta = meta or {}
+
+    def lower_text(self) -> str:
+        # keep_unused: the bf16 baseline ignores `seed`, but the manifest
+        # signature (and the rust marshaller) must stay uniform across arms
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*self.example_args)
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        return comp.as_hlo_text()
+
+    def manifest_entry(self, out_shapes):
+        return {
+            "file": f"{self.name}.hlo.txt",
+            "kind": self.kind,
+            "inputs": _sig(self.example_args),
+            "outputs": out_shapes,
+            "meta": self.meta,
+        }
+
+
+def _model_artifacts(name, cfg: M.ModelCfg, pqt: M.PqtCfg, batch, with_eval=True):
+    """Train (+ optional eval) artifacts for one (model, pqt) config."""
+    params = jax.eval_shape(lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    bi = M.init_bi(cfg, pqt)
+    bi_spec = {k: _sds(v.shape, jnp.float32) for k, v in bi.items()}
+    x = _sds((batch, cfg.seq_len), jnp.int32)
+    y = _sds((batch, cfg.seq_len), jnp.int32)
+    seed = _sds((), jnp.int32)
+    meta = {
+        "arch": cfg.arch,
+        "n_layer": cfg.n_layer,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch": batch,
+        "method": pqt.method,
+        "parts": list(pqt.parts),
+        "b_init": pqt.b_init,
+        "b_target": pqt.b_target,
+        "lambda": pqt.lambda_,
+        "param_names": sorted(params.keys()),
+        "param_shapes": {k: list(v.shape) for k, v in params.items()},
+        "bi_names": sorted(bi_spec.keys()),
+        "bi_shapes": {k: list(v.shape) for k, v in bi_spec.items()},
+    }
+    arts = [
+        Artifact(
+            f"{name}.train",
+            "train",
+            M.train_step_fn(cfg, pqt),
+            (params, bi_spec, x, y, seed),
+            meta,
+        )
+    ]
+    if with_eval:
+        arts.append(
+            Artifact(
+                f"{name}.eval",
+                "eval",
+                M.eval_step_fn(cfg, pqt),
+                (params, bi_spec, x, y, seed),
+                meta,
+            )
+        )
+    return arts
+
+
+def _op_artifacts():
+    """Standalone kernel-op artifacts (quickstart + runtime round-trip tests
+    + the L1 bench driver)."""
+    from .kernels import noise as noise_mod
+    from .kernels.gaussws import sample_fwd_kernel
+
+    arts = []
+    # Eq. 10 bitwise noise: (G, 4) u32 -> (G, 32) f32
+    g = 2048
+    arts.append(
+        Artifact(
+            "op.noise_bitwise",
+            "op",
+            lambda bits: (noise_mod.bitwise_noise(bits),),
+            (_sds((g, 4), jnp.uint32),),
+            {"groups": g},
+        )
+    )
+    # Box-Muller comparison: (G, 32) u32 -> (G, 32) f32
+    arts.append(
+        Artifact(
+            "op.noise_boxmuller",
+            "op",
+            lambda bits: (noise_mod.box_muller_noise(bits),),
+            (_sds((g, 32), jnp.uint32),),
+            {"groups": g},
+        )
+    )
+    # Eq. 3 sampling op on a 256x256 weight
+    m = n = 256
+    arts.append(
+        Artifact(
+            "op.gaussws_sample",
+            "op",
+            lambda w, bt, r: (sample_fwd_kernel(w, bt, r),),
+            (
+                _sds((m, n), jnp.float32),
+                _sds((m // 32, n // 32), jnp.float32),
+                _sds((m, n), jnp.float32),
+            ),
+            {"m": m, "n": n},
+        )
+    )
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# the default artifact set (kept deliberately explicit — this list IS the
+# build matrix for the experiments in EXPERIMENTS.md)
+
+
+def default_artifacts():
+    arts = _op_artifacts()
+
+    tiny_gpt2 = M.ModelCfg(arch="gpt2", n_layer=2, d_model=64, n_head=2,
+                           d_ff=128, vocab=256, seq_len=64)
+    tiny_llama = M.ModelCfg(arch="llama2", n_layer=2, d_model=64, n_head=2,
+                            d_ff=128, vocab=256, seq_len=64)
+
+    # Fig 1b / 3a arms (GPT2): baseline, GaussWS per-part, DiffQ
+    gpt2_arms = [
+        ("bf16", M.PqtCfg(method="none")),
+        ("gaussws_all", M.PqtCfg(method="gaussws", parts=("all",))),
+        ("gaussws_qkv", M.PqtCfg(method="gaussws", parts=("qkv",))),
+        ("gaussws_out", M.PqtCfg(method="gaussws", parts=("out",))),
+        ("gaussws_od", M.PqtCfg(method="gaussws", parts=("od",))),
+        ("gaussws_up", M.PqtCfg(method="gaussws", parts=("up",))),
+        ("gaussws_down", M.PqtCfg(method="gaussws", parts=("down",))),
+        ("diffq_all", M.PqtCfg(method="diffq", parts=("all",))),
+    ]
+    for tag, pqt in gpt2_arms:
+        arts += _model_artifacts(
+            f"tiny_gpt2.{tag}", tiny_gpt2, pqt, batch=8,
+            with_eval=(tag in ("bf16", "gaussws_all")),
+        )
+
+    # Fig 4 arms (Llama2): baseline, GaussWS, DiffQ + Fig F.1 (b 8->6)
+    llama_arms = [
+        ("bf16", M.PqtCfg(method="none")),
+        ("gaussws_all", M.PqtCfg(method="gaussws", parts=("all",))),
+        ("diffq_all", M.PqtCfg(method="diffq", parts=("all",))),
+        ("gaussws_b8t6", M.PqtCfg(method="gaussws", parts=("all",),
+                                  b_init=8.0, b_target=6.0)),
+    ]
+    for tag, pqt in llama_arms:
+        arts += _model_artifacts(
+            f"tiny_llama2.{tag}", tiny_llama, pqt, batch=8, with_eval=False,
+        )
+
+    # E2E driver: a ~3.4M-param GPT2 (the 1-core-CPU stand-in for the
+    # paper's 124M; see DESIGN.md substitutions)
+    small_gpt2 = M.ModelCfg(arch="gpt2", n_layer=4, d_model=256, n_head=4,
+                            d_ff=1024, vocab=512, seq_len=128)
+    for tag, pqt in [
+        ("bf16", M.PqtCfg(method="none")),
+        ("gaussws_all", M.PqtCfg(method="gaussws", parts=("all",))),
+        ("diffq_all", M.PqtCfg(method="diffq", parts=("all",))),
+    ]:
+        arts += _model_artifacts(
+            f"small_gpt2.{tag}", small_gpt2, pqt, batch=4, with_eval=(tag != "diffq_all"),
+        )
+
+    # Small llama for Table-1-style overhead ladder (second rung)
+    small_llama = M.ModelCfg(arch="llama2", n_layer=4, d_model=256, n_head=4,
+                             d_ff=704, vocab=512, seq_len=128)
+    for tag, pqt in [
+        ("bf16", M.PqtCfg(method="none")),
+        ("gaussws_all", M.PqtCfg(method="gaussws", parts=("all",))),
+        ("diffq_all", M.PqtCfg(method="diffq", parts=("all",))),
+    ]:
+        arts += _model_artifacts(
+            f"small_llama2.{tag}", small_llama, pqt, batch=4, with_eval=False,
+        )
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--list", action="store_true")
+    # legacy single-file interface (kept for Makefile compatibility)
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    arts = default_artifacts()
+    if args.list:
+        for a in arts:
+            print(f"{a.kind:6} {a.name}")
+        return
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+        if not arts:
+            print(f"no artifact matches '{args.only}'", file=sys.stderr)
+            sys.exit(1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path) and args.only:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for a in arts:
+        # output signature via eval_shape on the jitted fn
+        out_tree = jax.eval_shape(a.fn, *a.example_args)
+        out_sig = _sig(out_tree)
+        text = a.lower_text()
+        path = os.path.join(out_dir, f"{a.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][a.name] = a.manifest_entry(out_sig)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB, "
+              f"{len(out_sig)} outputs)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

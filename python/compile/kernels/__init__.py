@@ -1,0 +1,3 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import diffq, gaussws, noise, ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""DiffQ baseline arm: the same Eq. 3/4 machinery with uniform U(-0.5, 0.5)
+noise — the paper's "DiffQ" extension (Section 4: "equivalent to GaussWS
+except for BF16 U(-0.5,0.5) in place of round(N(0,1)/2)").
+
+Reuses the Pallas sampling kernel from :mod:`.gaussws`; only the noise
+source differs, which is exactly the paper's ablation axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import noise as noise_mod
+from .gaussws import pq_sample
+
+
+def diffq_layer(w, bt, key):
+    """Uniform-noise sample of ŵ. Returns (what_bf16, R)."""
+    m, n = w.shape
+    r = noise_mod.uniform_matrix(key, m, n)
+    return pq_sample(w, bt, r), r
+
+
+__all__ = ["diffq_layer", "pq_sample"]
+
+
+def _smoke():  # pragma: no cover - manual check
+    import jax.numpy as jnp
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    bt = jnp.full((2, 2), 4.0)
+    what, r = diffq_layer(w, bt, jax.random.PRNGKey(1))
+    assert what.shape == w.shape and r.shape == w.shape
+
+
+if __name__ == "__main__":  # pragma: no cover
+    _smoke()
+    print("diffq smoke ok")

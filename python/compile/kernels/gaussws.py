@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: the Eq. 3 sampling op.
+
+One kernel program owns a (TM, TN) VMEM tile of the weight matrix (TM/TN are
+multiples of the 32-element MX block), computes the square-blockwise
+``max|w|`` *inside* the tile via reshape-reductions, applies the scaled
+noise, and writes the bf16 sample:
+
+    what = bf16( w + R * (max_bl|w| * 2^(1 - b_t)) )
+
+BlockSpec expresses the HBM->VMEM schedule the paper's Triton kernel did
+with threadblocks (DESIGN.md §Hardware-Adaptation): the tile is the unit of
+memory traffic, the 32x32 sub-blocks are the quantization groups.
+
+The op is wrapped in ``jax.custom_vjp`` implementing Eq. 4 exactly:
+
+    dL/dw   = g                        (identity pass-through)
+    dL/db_t = -ln2 * amax * 2^(1-b_t) * block_sum(g * R)
+
+with the ``d max|w| / dw ~= 0`` approximation from the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = ref.BLOCK  # 32, MX block size
+
+
+def _tile(dim: int, pref: int = 256) -> int:
+    """Largest tile <= pref that divides dim and is a multiple of BLOCK."""
+    t = min(dim, pref)
+    while t > BLOCK and (dim % t != 0 or t % BLOCK != 0):
+        t -= BLOCK
+    assert dim % t == 0 and t % BLOCK == 0, (dim, t)
+    return t
+
+
+def _sample_kernel(w_ref, bt_ref, r_ref, o_ref):
+    """One (TM, TN) tile of Eq. 3."""
+    w = w_ref[...]
+    bt = bt_ref[...]
+    r = r_ref[...]
+    tm, tn = w.shape
+    gm, gn = tm // BLOCK, tn // BLOCK
+    blocks = jnp.abs(w).reshape(gm, BLOCK, gn, BLOCK)
+    amax = blocks.max(axis=(1, 3))  # (gm, gn)
+    scale = amax * jnp.exp2(1.0 - bt)  # (gm, gn)
+    scale_full = jnp.broadcast_to(
+        scale[:, None, :, None], (gm, BLOCK, gn, BLOCK)
+    ).reshape(tm, tn)
+    o_ref[...] = (w + r * scale_full).astype(jnp.bfloat16)
+
+
+def sample_fwd_kernel(w: jnp.ndarray, bt: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-backed Eq. 3 forward. w, noise: (m, n) f32; bt: (m/32, n/32)."""
+    m, n = w.shape
+    tm, tn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _sample_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tm // BLOCK, tn // BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        interpret=True,
+    )(w, bt, noise)
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp wrapper (Eq. 4)
+
+
+@jax.custom_vjp
+def pq_sample(w: jnp.ndarray, bt: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Eq. 3 sample; gradients per Eq. 4.
+
+    ``noise`` is treated as a constant sample (zero cotangent); it must be
+    the same array in forward and backward, which the caller guarantees by
+    construction (it is a saved residual).
+    """
+    return sample_fwd_kernel(w, bt, noise)
+
+
+def _pq_fwd(w, bt, noise):
+    what = sample_fwd_kernel(w, bt, noise)
+    amax = ref.block_absmax(w, BLOCK)
+    return what, (amax, bt, noise)
+
+
+def _pq_bwd(res, g):
+    amax, bt, noise = res
+    g32 = g.astype(jnp.float32)
+    scale = amax * jnp.exp2(1.0 - bt)
+    dbt = -math.log(2.0) * scale * ref.block_sum(g32 * noise, BLOCK)
+    return g32, dbt, None
+
+
+pq_sample.defvjp(_pq_fwd, _pq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# convenience: full layer op (noise generation + sampling)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def gaussws_layer(w, bt, key, use_bitwise: bool = True):
+    """Generate Eq. 10 noise for ``w`` and sample ŵ. Returns (what_bf16, R)."""
+    from . import noise as noise_mod
+
+    m, n = w.shape
+    if use_bitwise:
+        r = noise_mod.noise_matrix(key, m, n)
+    else:
+        bits = jax.random.bits(key, (m * n // 32, 32), jnp.uint32)
+        r = noise_mod.box_muller_noise(bits).reshape(m, n)
+    return pq_sample(w, bt, r), r

@@ -1,0 +1,135 @@
+"""L1 Pallas kernels: Eq. 10 bitwise rounded-normal noise generation.
+
+The paper's insight (Section 3.4): the approximated rounded normal
+``R ≈ round(N(0,1)/2)`` needs **no** FP operations at all — only AND/OR over
+raw PRNG bits. On GPU this relieves the CUDA-core bottleneck; on the TPU
+model it keeps the generator on cheap VPU bit ops with no transcendentals
+(DESIGN.md §Hardware-Adaptation).
+
+Two kernels:
+
+* :func:`bitwise_noise` — consumes pre-generated random words
+  (``jax.random.bits``; the "GPU PRNG" analog) with 4 words per 32 lanes
+  (rotation-reuse construction, bit-exact vs ``ref.noise_planes_fast``).
+* :func:`box_muller_noise` — the conventional generator the paper benchmarks
+  against in Fig. 6: uniform → Box–Muller → divide → round, all in FP.
+
+Both are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are shape-polymorphic over the leading dimension via the
+grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows of 32-lane groups processed by one kernel program.
+_TILE_G = 512
+
+
+def _tile_rows(g: int) -> int:
+    """Largest divisor of g that is <= _TILE_G (grid must tile exactly)."""
+    t = min(_TILE_G, g)
+    while g % t != 0:
+        t -= 1
+    return t
+
+
+def _bitwise_kernel(r_ref, o_ref):
+    """One tile: (g, 4) uint32 words -> (g, 32) f32 noise values."""
+    r = r_ref[...]
+    a, b, c = r[:, 1], r[:, 2], r[:, 3]
+    rot = ref.rotl
+    chain = (
+        b & rot(b, 7) & rot(b, 13) & rot(b, 22)
+        & c & rot(c, 5) & rot(c, 17) & rot(c, 26)
+    )
+    mag2 = (a | rot(a, 11)) & chain
+    mag1 = (rot(a, 3) | rot(b, 29)) & (rot(c, 9) | rot(a, 19)) & rot(b, 16) & ~mag2
+    sign = r[:, 0]
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+
+    def bit(word):
+        return ((word[:, None] >> lanes) & 1).astype(jnp.float32)
+
+    s, m1, m2 = bit(sign), bit(mag1), bit(mag2)
+    mag = m1 + 2.0 * m2
+    o_ref[...] = jnp.where(s == 1.0, -mag, mag)
+
+
+def bitwise_noise(bits: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 10 noise from random words: (G, 4) uint32 -> (G, 32) f32.
+
+    G must be a multiple of ``_TILE_G`` or smaller than it (single tile).
+    Values are in {-2, -1, 0, +1, +2} with the Eq. 10 probabilities.
+    """
+    g = bits.shape[0]
+    tile = _tile_rows(g)
+    return pl.pallas_call(
+        _bitwise_kernel,
+        grid=(g // tile,),
+        in_specs=[pl.BlockSpec((tile, 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 32), jnp.float32),
+        interpret=True,
+    )(bits)
+
+
+def _box_muller_kernel(r_ref, o_ref):
+    """Conventional path: 2x uint32 -> U(0,1) -> Box-Muller -> round(N/2)."""
+    r = r_ref[...]
+    u1 = (r[:, 0:16].astype(jnp.float32) + 1.0) / 4294967296.0  # (0, 1]
+    u2 = r[:, 16:32].astype(jnp.float32) / 4294967296.0
+    rad = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = 2.0 * jnp.pi * u2
+    n1 = rad * jnp.cos(theta)
+    n2 = rad * jnp.sin(theta)
+    n = jnp.concatenate([n1, n2], axis=-1)
+    o_ref[...] = jnp.round(n / 2.0)
+
+
+def box_muller_noise(bits: jnp.ndarray) -> jnp.ndarray:
+    """Exact rounded normal from random words: (G, 32) uint32 -> (G, 32) f32.
+
+    This is the Fig. 6 "bm" comparison arm: one random word per output
+    element, plus log/sqrt/cos per pair.
+    """
+    g = bits.shape[0]
+    tile = _tile_rows(g)
+    return pl.pallas_call(
+        _box_muller_kernel,
+        grid=(g // tile,),
+        in_specs=[pl.BlockSpec((tile, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 32), jnp.float32),
+        interpret=True,
+    )(bits)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def noise_matrix(key, m: int, n: int) -> jnp.ndarray:
+    """Generate an (m, n) Eq. 10 noise matrix from a PRNG key.
+
+    Random words come from ``jax.random.bits`` (threefry — the counter-based
+    "GPU PRNG" of the paper's §3.6 seed hierarchy); the Pallas kernel turns
+    them into noise values with pure bit ops. 4 words per 32 elements =
+    0.125 words/element, vs 1 word/element for Box–Muller.
+    """
+    total = m * n
+    assert total % 32 == 0, (m, n)
+    g = total // 32
+    bits = jax.random.bits(key, (g, 4), jnp.uint32)
+    return bitwise_noise(bits).reshape(m, n)
+
+
+def uniform_matrix(key, m: int, n: int) -> jnp.ndarray:
+    """DiffQ noise: U(-0.5, 0.5), bf16-rounded (the DiffQ arm runs the same
+    BF16 operator), returned as f32."""
+    u = jax.random.uniform(key, (m, n), jnp.float32) - 0.5
+    return u.astype(jnp.bfloat16).astype(jnp.float32)

@@ -1,0 +1,189 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is straight-line jnp with no pallas: the pytest suite
+asserts the kernels match these to bit accuracy (noise construction is
+integer-exact; sampling matches after identical bf16 rounding).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+# Square block size b_l, fixed to the MX convention (paper Section 3.2).
+BLOCK = 32
+
+# ---------------------------------------------------------------------------
+# blockwise helpers
+
+
+def block_absmax(w: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Square-blockwise max(|w|): (m, n) -> (m/b, n/b).
+
+    m and n must be multiples of `block` (the model pads its weights).
+    """
+    m, n = w.shape
+    assert m % block == 0 and n % block == 0, (m, n, block)
+    blocks = jnp.abs(w).reshape(m // block, block, n // block, block)
+    return blocks.max(axis=(1, 3))
+
+
+def broadcast_blocks(s: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Inverse of block reduction: (gm, gn) -> (gm*b, gn*b) by replication."""
+    gm, gn = s.shape
+    return jnp.broadcast_to(s[:, None, :, None], (gm, block, gn, block)).reshape(
+        gm * block, gn * block
+    )
+
+
+def block_sum(x: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Square-blockwise sum: (m, n) -> (m/b, n/b)."""
+    m, n = x.shape
+    return x.reshape(m // block, block, n // block, block).sum(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 bitwise rounded-normal construction (mirrors rust prng::bitwise)
+
+
+def noise_planes_exact(r: jnp.ndarray) -> jnp.ndarray:
+    """Bit-parallel Eq. 10 R values from independent random words.
+
+    `r` is uint32 with shape (..., 16): 16 fresh words per 32 output lanes.
+    Returns int8 with shape (..., 32), values in {-2,-1,0,1,2}:
+
+      mag2 = (r1|r2) & r3 & ... & r10              p = 3/4 * 2^-8
+      mag1 = (r11|r12) & (r13|r14) & r15 & ~mag2   p = (3/4)^2 / 2
+      sign = r0
+    """
+    assert r.dtype == jnp.uint32 and r.shape[-1] == 16
+    sign = r[..., 0]
+    mag2 = r[..., 1] | r[..., 2]
+    for k in range(3, 11):
+        mag2 = mag2 & r[..., k]
+    mag1 = (r[..., 11] | r[..., 12]) & (r[..., 13] | r[..., 14]) & r[..., 15] & ~mag2
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+
+    def bit(word):
+        return ((word[..., None] >> lanes) & 1).astype(jnp.int8)
+
+    s, m1, m2 = bit(sign), bit(mag1), bit(mag2)
+    mag = m1 + 2 * m2
+    return jnp.where(s == 1, -mag, mag)
+
+
+def rotl(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Rotate-left on uint32 lanes."""
+    k = k % 32
+    if k == 0:
+        return x
+    return (x << jnp.uint32(k)) | (x >> jnp.uint32(32 - k))
+
+
+def noise_planes_fast(r: jnp.ndarray) -> jnp.ndarray:
+    """Fast 4-words/32-lanes variant (rotation reuse), mirroring
+    rust `prng::bitwise::planes_fast` exactly. `r` shape (..., 4) uint32."""
+    assert r.dtype == jnp.uint32 and r.shape[-1] == 4
+    a, b, c = r[..., 1], r[..., 2], r[..., 3]
+    chain = (
+        b
+        & rotl(b, 7)
+        & rotl(b, 13)
+        & rotl(b, 22)
+        & c
+        & rotl(c, 5)
+        & rotl(c, 17)
+        & rotl(c, 26)
+    )
+    mag2 = (a | rotl(a, 11)) & chain
+    mag1 = (rotl(a, 3) | rotl(b, 29)) & (rotl(c, 9) | rotl(a, 19)) & rotl(b, 16) & ~mag2
+    sign = r[..., 0]
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+
+    def bit(word):
+        return ((word[..., None] >> lanes) & 1).astype(jnp.int8)
+
+    s, m1, m2 = bit(sign), bit(mag1), bit(mag2)
+    mag = m1 + 2 * m2
+    return jnp.where(s == 1, -mag, mag)
+
+
+def eq10_probabilities() -> tuple:
+    """(p_zero, p_one_each, p_two_each) of the Eq. 10 target distribution."""
+    p2_each = 0.75 * 2.0**-9
+    p_mag2 = 2 * p2_each
+    p1_each = 0.75 * 0.75 * 0.25 * (1 - p_mag2)
+    return 1 - 2 * p1_each - p_mag2, p1_each, p2_each
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 sampling
+
+
+def gaussws_sample(
+    w: jnp.ndarray, bt: jnp.ndarray, noise: jnp.ndarray, block: int = BLOCK
+) -> jnp.ndarray:
+    """Reference Eq. 3: bf16(w + R * broadcast(max|w| * 2^(1-bt))).
+
+    w: (m, n) f32; bt: (m/b, n/b) f32; noise: (m, n) f32 in {-2..2}.
+    Returns bf16.
+    """
+    amax = block_absmax(w, block)
+    scale = broadcast_blocks(amax * jnp.exp2(1.0 - bt), block)
+    return (w + noise * scale).astype(jnp.bfloat16)
+
+
+def diffq_sample(
+    w: jnp.ndarray, bt: jnp.ndarray, noise: jnp.ndarray, block: int = BLOCK
+) -> jnp.ndarray:
+    """DiffQ arm: same formula, uniform noise in (-0.5, 0.5)."""
+    return gaussws_sample(w, bt, noise, block)
+
+
+def gaussws_bt_grad(
+    w: jnp.ndarray,
+    bt: jnp.ndarray,
+    noise: jnp.ndarray,
+    g: jnp.ndarray,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Reference Eq. 4: dL/dbt = -ln2 * amax * 2^(1-bt) * block_sum(g * R)."""
+    amax = block_absmax(w, block)
+    scale = amax * jnp.exp2(1.0 - bt)
+    return -math.log(2.0) * scale * block_sum(g * noise, block)
+
+
+# ---------------------------------------------------------------------------
+# fp_{e,m} casting emulation (Section 3.3 analysis in jnp)
+
+
+def fp_cast(x: jnp.ndarray, exp_bits: int, man_bits: int) -> jnp.ndarray:
+    """Emulate RNE casting into an fp_{e,m} format (float64 math, IEEE-like
+    with subnormals; saturating overflow). Mirrors rust FpFormat::cast."""
+    x = x.astype(jnp.float64)
+    bias = 2 ** (exp_bits - 1) - 1
+    min_normal_exp = 1 - bias
+    max_exp = (2**exp_bits - 1) - 1 - bias  # reserve top code for inf/nan
+    max_finite = (2.0 - 2.0**-man_bits) * 2.0**max_exp
+
+    a = jnp.abs(x)
+    # exact binade exponent: frexp gives a = m * 2^e with m in [0.5, 1),
+    # so floor(log2 a) = e - 1 (log2+floor is off-by-one near boundaries)
+    _, e_raw = jnp.frexp(jnp.where(a > 0, a, 1.0))
+    e = e_raw - 1
+    eff_e = jnp.maximum(e, min_normal_exp)
+    # ldexp is exact for power-of-two steps; exp2 is exp(x*ln2) on CPU and
+    # drifts ~1e-15 at large exponents, which breaks bit-exact comparisons
+    step = jnp.ldexp(jnp.ones_like(a), eff_e - man_bits)
+    q = a / step
+    r = jnp.round(q)  # jnp.round is round-half-to-even
+    v = r * step
+    v = jnp.minimum(v, max_finite)
+    out = jnp.sign(x) * v
+    return jnp.where(a == 0, x, out)
+
+
+def bt_from_bi(bi: jnp.ndarray, b_init: float, b_target: float) -> jnp.ndarray:
+    """Eq. 11 linear bitwidth map."""
+    return b_target + bi * (b_init - b_target)

@@ -1,0 +1,279 @@
+"""L2: GPT2/Llama2-style transformer forward/backward in pure JAX with PQT
+linears (Pallas-backed Eq. 3 sampling, Eq. 4 custom VJP).
+
+This module is build-time only: `aot.py` lowers `train_step` / `eval_step`
+to HLO text once; the rust coordinator executes the artifacts. Parameter
+names and layouts deliberately mirror `rust/src/nn/transformer.rs`
+(weights are (out_features, in_features)) so checkpoints cross the
+language boundary without translation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import noise as noise_mod
+from .kernels.gaussws import pq_sample
+from .kernels.ref import BLOCK, bt_from_bi
+
+# ---------------------------------------------------------------------------
+# configs (mirror rust config::schema)
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    arch: str = "gpt2"  # "gpt2" | "llama2"
+    n_layer: int = 2
+    d_model: int = 64
+    n_head: int = 2
+    d_ff: int = 128
+    vocab: int = 256
+    seq_len: int = 64
+
+    def __post_init__(self):
+        assert self.arch in ("gpt2", "llama2"), self.arch
+        assert self.d_model % self.n_head == 0
+        # PQT blocks require multiples of 32 on every linear dimension
+        for dim in (self.d_model, self.d_ff, self.vocab):
+            assert dim % BLOCK == 0, f"{dim} not a multiple of {BLOCK}"
+
+    @property
+    def linear_names(self):
+        if self.arch == "gpt2":
+            return ("qkv", "out", "up", "down")
+        return ("q", "k", "v", "out", "gate", "down", "up")
+
+    def linear_shape(self, name: str):
+        d, f = self.d_model, self.d_ff
+        return {
+            "qkv": (3 * d, d),
+            "q": (d, d),
+            "k": (d, d),
+            "v": (d, d),
+            "out": (d, d),
+            "gate": (f, d),
+            "up": (f, d),
+            "down": (d, f),
+        }[name]
+
+
+@dataclass(frozen=True)
+class PqtCfg:
+    method: str = "gaussws"  # "none" | "gaussws" | "diffq"
+    parts: tuple = ("all",)
+    b_init: float = 6.0
+    b_target: float = 4.0
+    lambda_: float = 0.0
+
+    def applies(self, name: str) -> bool:
+        if self.method == "none":
+            return False
+        parts = []
+        for p in self.parts:
+            parts.extend(["out", "down"] if p == "od" else [p])
+        return "all" in parts or name in parts
+
+
+# ---------------------------------------------------------------------------
+# parameter init (names match rust)
+
+
+def init_params(cfg: ModelCfg, key) -> dict:
+    params = {}
+    d = cfg.d_model
+    resid_std = 0.02 / math.sqrt(2.0 * cfg.n_layer)
+    keys = iter(jax.random.split(key, 4 + cfg.n_layer * 8))
+
+    def randn(shape, std):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * std)
+
+    params["embed"] = randn((cfg.vocab, d), 0.02)
+    if cfg.arch == "gpt2":
+        params["pos_embed"] = randn((cfg.seq_len, d), 0.01)
+    for l in range(cfg.n_layer):
+        p = f"blk{l}."
+        for name in cfg.linear_names:
+            std = resid_std if name in ("out", "down") else 0.02
+            params[p + name] = randn(cfg.linear_shape(name), std)
+        params[p + "ln1.g"] = jnp.ones((d,), jnp.float32)
+        params[p + "ln2.g"] = jnp.ones((d,), jnp.float32)
+        if cfg.arch == "gpt2":
+            params[p + "ln1.b"] = jnp.zeros((d,), jnp.float32)
+            params[p + "ln2.b"] = jnp.zeros((d,), jnp.float32)
+    params["lnf.g"] = jnp.ones((d,), jnp.float32)
+    if cfg.arch == "gpt2":
+        params["lnf.b"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def init_bi(cfg: ModelCfg, pqt: PqtCfg) -> dict:
+    """One b_i grid per PQT-enabled linear, initialized to 1 (paper §3.6)."""
+    bi = {}
+    if pqt.method == "none":
+        return bi
+    for l in range(cfg.n_layer):
+        for name in cfg.linear_names:
+            if pqt.applies(name):
+                r, c = cfg.linear_shape(name)
+                bi[f"blk{l}.{name}"] = jnp.ones((r // BLOCK, c // BLOCK), jnp.float32)
+    return bi
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _norm(cfg: ModelCfg, x, g, b=None, eps=1e-5):
+    if cfg.arch == "gpt2":
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + eps) * g + b
+    ms = (x * x).mean(-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def _rope(x, theta=10000.0):
+    """Rotary embedding on (B, T, H, hd) with pair rotation like rust."""
+    b, t, h, hd = x.shape
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(0, hd, 2, dtype=jnp.float32)[None, :]
+    freq = 1.0 / theta ** (idx / hd)
+    ang = pos * freq  # (T, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x0, x1 = x[..., 0::2], x[..., 1::2]
+    sin = sin[None, :, None, :]
+    cos = cos[None, :, None, :]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(b, t, h, hd)
+
+
+def _mm(x, w_bf16):
+    """BF16 GEMM with FP32 accumulation: y = x @ w.T (paper §4 setup)."""
+    return jnp.einsum(
+        "...d,od->...o",
+        x.astype(jnp.bfloat16),
+        w_bf16,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _linear(cfg: ModelCfg, pqt: PqtCfg, params, bi, name, x, key):
+    """One (possibly PQT-sampled) linear layer. Returns (y, aux_bt_list)."""
+    w = params[name]
+    if pqt.applies(name.split(".", 1)[1]):
+        bt = bt_from_bi(bi[name], pqt.b_init, pqt.b_target)
+        m, n = w.shape
+        if pqt.method == "gaussws":
+            r = noise_mod.noise_matrix(key, m, n)
+        else:  # diffq
+            r = noise_mod.uniform_matrix(key, m, n)
+        what = pq_sample(w, bt, r)
+        return _mm(x, what), [bt]
+    return _mm(x, w.astype(jnp.bfloat16)), []
+
+
+def forward(cfg: ModelCfg, pqt: PqtCfg, params, bi, tokens, seed):
+    """Logits for a (B, T) int32 token batch. `seed` is an int32 scalar;
+    per-layer noise keys are derived by fold_in (the §3.6 seed tree's leaf
+    level — the trunk lives in rust)."""
+    B, T = tokens.shape
+    d = cfg.d_model
+    key = jax.random.PRNGKey(seed)
+    x = params["embed"][tokens]  # (B, T, d)
+    if cfg.arch == "gpt2":
+        x = x + params["pos_embed"][None, :T, :]
+
+    bts = []
+    lin_idx = 0
+    for l in range(cfg.n_layer):
+        p = f"blk{l}."
+
+        def lkey():
+            nonlocal lin_idx
+            lin_idx += 1
+            return jax.random.fold_in(key, lin_idx)
+
+        h = _norm(cfg, x, params[p + "ln1.g"], params.get(p + "ln1.b"))
+        if cfg.arch == "gpt2":
+            qkv, aux = _linear(cfg, pqt, params, bi, p + "qkv", h, lkey())
+            bts += aux
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+        else:
+            q, aux_q = _linear(cfg, pqt, params, bi, p + "q", h, lkey())
+            k, aux_k = _linear(cfg, pqt, params, bi, p + "k", h, lkey())
+            v, aux_v = _linear(cfg, pqt, params, bi, p + "v", h, lkey())
+            bts += aux_q + aux_k + aux_v
+        hd = d // cfg.n_head
+        q = q.reshape(B, T, cfg.n_head, hd)
+        k = k.reshape(B, T, cfg.n_head, hd)
+        v = v.reshape(B, T, cfg.n_head, hd)
+        if cfg.arch == "llama2":
+            q, k = _rope(q), _rope(k)
+        scores = jnp.einsum("bihe,bjhe->bhij", q, k) / math.sqrt(hd)
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhij,bjhe->bihe", att, v).reshape(B, T, d)
+        y, aux = _linear(cfg, pqt, params, bi, p + "out", ctx, lkey())
+        bts += aux
+        x = x + y
+
+        h = _norm(cfg, x, params[p + "ln2.g"], params.get(p + "ln2.b"))
+        if cfg.arch == "gpt2":
+            u, aux = _linear(cfg, pqt, params, bi, p + "up", h, lkey())
+            bts += aux
+            u = jax.nn.gelu(u, approximate=True)
+        else:
+            gate, aux_g = _linear(cfg, pqt, params, bi, p + "gate", h, lkey())
+            u, aux_u = _linear(cfg, pqt, params, bi, p + "up", h, lkey())
+            bts += aux_g + aux_u
+            u = u * jax.nn.silu(gate)
+        dn, aux = _linear(cfg, pqt, params, bi, p + "down", u, lkey())
+        bts += aux
+        x = x + dn
+
+    x = _norm(cfg, x, params["lnf.g"], params.get("lnf.b"))
+    logits = _mm(x, params["embed"].astype(jnp.bfloat16))  # tied head
+    return logits, bts
+
+
+def loss_fn(cfg: ModelCfg, pqt: PqtCfg, params, bi, x_tok, y_tok, seed):
+    """Mean next-token cross entropy (+ optional Eq. 12 λ term)."""
+    logits, bts = forward(cfg, pqt, params, bi, x_tok, seed)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tok[..., None], axis=-1).mean()
+    if pqt.lambda_ != 0.0 and bts:
+        reg = sum(jnp.abs(bt - pqt.b_target).mean() for bt in bts)
+        nll = nll + pqt.lambda_ * reg
+    return nll
+
+
+def train_step_fn(cfg: ModelCfg, pqt: PqtCfg):
+    """(params, bi, x, y, seed) -> (loss, grads_params, grads_bi).
+
+    The rust coordinator applies the optimizer; keeping the update out of
+    the artifact means one HLO serves every (optimizer, LR schedule, decay)
+    configuration.
+    """
+
+    def step(params, bi, x_tok, y_tok, seed):
+        (loss), grads = jax.value_and_grad(
+            lambda p, b: loss_fn(cfg, pqt, p, b, x_tok, y_tok, seed), argnums=(0, 1)
+        )(params, bi)
+        return loss, grads[0], grads[1]
+
+    return step
+
+
+def eval_step_fn(cfg: ModelCfg, pqt: PqtCfg):
+    """(params, bi, x, y, seed) -> loss (no grads)."""
+
+    def step(params, bi, x_tok, y_tok, seed):
+        return loss_fn(cfg, pqt, params, bi, x_tok, y_tok, seed)
+
+    return step

@@ -1,0 +1,101 @@
+"""AOT path tests: lowering produces parseable HLO text with the expected
+signature, and the manifest agrees with eval_shape."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_op_artifact_lowers_to_hlo_text():
+    arts = {a.name: a for a in aot.default_artifacts()}
+    a = arts["op.gaussws_sample"]
+    text = a.lower_text()
+    assert text.startswith("HloModule"), text[:60]
+    # return_tuple=True -> root is a tuple
+    assert "ROOT" in text
+    assert len(text) > 1000
+
+
+def test_signature_flattening_order():
+    """dict args flatten in sorted-key order — the rust side depends on it."""
+    tree = ({"b": jax.ShapeDtypeStruct((2,), jnp.float32),
+             "a": jax.ShapeDtypeStruct((3,), jnp.float32)},
+            jax.ShapeDtypeStruct((), jnp.int32))
+    sig = aot._sig(tree)
+    names = [s["name"] for s in sig]
+    assert names == ["0/a", "0/b", "1"]
+    assert sig[0]["shape"] == [3]
+    assert sig[2]["dtype"] == "s32"
+
+
+def test_default_artifact_set_is_complete():
+    names = {a.name for a in aot.default_artifacts()}
+    # every experiment's needs are present
+    for required in [
+        "op.noise_bitwise",
+        "op.noise_boxmuller",
+        "op.gaussws_sample",
+        "tiny_gpt2.bf16.train",
+        "tiny_gpt2.gaussws_all.train",
+        "tiny_gpt2.gaussws_qkv.train",
+        "tiny_gpt2.gaussws_od.train",
+        "tiny_gpt2.diffq_all.train",
+        "tiny_llama2.gaussws_all.train",
+        "tiny_llama2.gaussws_b8t6.train",
+        "small_gpt2.gaussws_all.train",
+        "small_gpt2.bf16.train",
+        "small_llama2.diffq_all.train",
+    ]:
+        assert required in names, required
+
+
+def test_train_artifact_signature_matches_eval_shape():
+    arts = {a.name: a for a in aot.default_artifacts()}
+    a = arts["tiny_gpt2.gaussws_all.train"]
+    out_tree = jax.eval_shape(a.fn, *a.example_args)
+    out_sig = aot._sig(out_tree)
+    # loss + one grad per param + one grad per bi
+    meta = a.meta
+    assert len(out_sig) == 1 + len(meta["param_names"]) + len(meta["bi_names"])
+    assert out_sig[0]["shape"] == []  # loss scalar first
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_written_manifest_consistency():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    arts = manifest["artifacts"]
+    assert len(arts) >= 20
+    for name, entry in arts.items():
+        path = os.path.join(ARTIFACTS, entry["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(80)
+        assert head.startswith("HloModule"), name
+        assert entry["inputs"], name
+        assert entry["outputs"], name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_train_signature_counts():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        arts = json.load(f)["artifacts"]
+    e = arts["tiny_gpt2.gaussws_all.train"]
+    n_params = len(e["meta"]["param_names"])
+    n_bi = len(e["meta"]["bi_names"])
+    assert len(e["inputs"]) == n_params + n_bi + 3  # + x, y, seed
+    assert len(e["outputs"]) == 1 + n_params + n_bi

@@ -1,0 +1,123 @@
+"""Section 3.3 analysis in jnp: the fp_{e,m} cast emulator vs ml_dtypes
+ground truth, and Lemma 1/2 + Proposition 3/4 numerics."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """fp_{e,m} emulation needs f64 precision; scope it to this module so
+    the uint32 bit-twiddling tests elsewhere keep default 32-bit semantics."""
+    with jax.enable_x64(True):
+        yield
+
+
+@pytest.mark.parametrize(
+    "em,np_dtype",
+    [
+        ((8, 7), ml_dtypes.bfloat16),
+        ((5, 10), np.float16),
+        ((5, 2), ml_dtypes.float8_e5m2),
+        ((4, 3), ml_dtypes.float8_e4m3fn),
+        ((2, 1), ml_dtypes.float4_e2m1fn),
+    ],
+)
+def test_fp_cast_matches_ml_dtypes(em, np_dtype):
+    e, m = em
+    rng = np.random.default_rng(0)
+    # stay within the format's finite range to avoid inf-policy differences
+    info = ml_dtypes.finfo(np_dtype)
+    x = rng.normal(size=4096).astype(np.float64) * float(info.max) / 8
+    ours = np.asarray(ref.fp_cast(jnp.asarray(x), e, m))
+    truth = x.astype(np_dtype).astype(np.float64)
+    np.testing.assert_allclose(ours, truth, rtol=0, atol=0)
+
+
+def test_fp_cast_subnormals_bf16():
+    # values below bf16 min-subnormal/2 round to zero; above survive
+    min_sub = 2.0 ** (-126 - 7)
+    x = jnp.asarray([min_sub * 0.49, min_sub * 0.51, min_sub])
+    out = np.asarray(ref.fp_cast(x, 8, 7))
+    assert out[0] == 0.0
+    assert out[1] != 0.0
+    assert out[2] == min_sub
+
+
+def test_lemma1_bound_bf16():
+    """PQN survives fp_{8,7} iff b_t < m + 2 + tau = 9 (rounded normal)."""
+    m_bits = 7
+    for bt, should_survive in [(8.0, True), (11.0, False)]:
+        # adversarial w at the top of a binade; smallest noise |R| = 1
+        w = 1.999
+        pqn = 1.0 * w * 2.0 ** (1 - bt)  # amax ~= w
+        cast = lambda v: float(ref.fp_cast(jnp.asarray([v]), 8, m_bits)[0])
+        survived = cast(w + pqn) != cast(w)
+        assert survived == should_survive, (bt, survived)
+
+
+def test_lemma2_threshold():
+    """eps survives iff xi > floor(tau+2-bt+log2 amax) - m."""
+    m_bits, bt = 7, 4.0
+    xi_bound = math.floor(0 + 2 - bt + 0) - m_bits  # amax = 1
+    pqn = 2.0 ** (1 - bt)  # smallest positive noise contribution
+    cast = lambda v: float(ref.fp_cast(jnp.asarray([v]), 8, m_bits)[0])
+    eps_ok = 2.0 ** (xi_bound + 1)
+    assert cast(eps_ok + pqn) != cast(pqn)
+    eps_bad = 2.0 ** (xi_bound - 3)
+    assert cast(eps_bad + pqn) == cast(pqn)
+
+
+def test_prop3_fp6_suffices_for_bt4():
+    """b_t = 4: Table C.1 row says ŵ fits FP6_e3m2. Sample the op and cast
+    the result to e3m2 — the PQN must survive the cast."""
+    from compile.kernels import gaussws, noise
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 32), jnp.float32) * 0.02
+    bt = jnp.full((1, 1), 4.0)
+    r = noise.noise_matrix(jax.random.PRNGKey(1), 32, 32)
+    what = np.asarray(gaussws.sample_fwd_kernel(w, bt, r), np.float32)
+    # normalize by the block scale so the e3m2 dynamic range is used as the
+    # MX container would (per-block power-of-two scale)
+    scale = 2.0 ** np.ceil(np.log2(np.abs(what).max() / 28.0))  # e3m2 max=28
+    casted = np.asarray(ref.fp_cast(jnp.asarray(what / scale), 3, 2)) * scale
+    rr = np.asarray(r)
+    # where noise fired, the cast ŵ must still differ from the cast w
+    w_cast = np.asarray(ref.fp_cast(jnp.asarray(np.asarray(w) / scale), 3, 2)) * scale
+    changed = (casted != w_cast)[rr != 0].mean()
+    assert changed > 0.95, changed
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(min_value=2, max_value=8),
+    m=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_fp_cast_idempotent(e, m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=256))
+    once = ref.fp_cast(x, e, m)
+    twice = ref.fp_cast(once, e, m)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_prop4_annealing_probability():
+    """Masked fraction of sub-threshold eps equals Pr(R != 0) ~ 0.283."""
+    from compile.kernels import noise
+
+    n = 512
+    r = np.asarray(noise.noise_matrix(jax.random.PRNGKey(3), n, n))
+    p0, _, _ = ref.eq10_probabilities()
+    # empirical Pr(R=0)
+    assert abs((r == 0).mean() - p0) < 5e-3
+    # masked fraction = Pr(R != 0)
+    assert abs((r != 0).mean() - (1 - p0)) < 5e-3

@@ -1,0 +1,86 @@
+"""L1 correctness: the Pallas noise kernels vs the pure-jnp oracle, plus
+distributional checks against the Eq. 10 probabilities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import noise, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    groups=st.sampled_from([32, 64, 512, 1024, 1536]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_bitwise_kernel_matches_ref(groups, seed):
+    bits = jax.random.bits(jax.random.PRNGKey(seed), (groups, 4), jnp.uint32)
+    kernel = noise.bitwise_noise(bits)
+    oracle = ref.noise_planes_fast(bits).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(oracle))
+
+
+def test_exact_ref_construction_probabilities():
+    bits = jax.random.bits(jax.random.PRNGKey(0), (40_000, 16), jnp.uint32)
+    r = np.asarray(ref.noise_planes_exact(bits)).ravel()
+    p0, p1, p2 = ref.eq10_probabilities()
+    n = r.size
+    assert abs((r == 0).mean() - p0) < 3e-3
+    assert abs((r == 1).mean() - p1) < 2e-3
+    assert abs((r == -1).mean() - p1) < 2e-3
+    assert abs((r == 2).mean() - p2) < 5e-4
+    assert abs((r == -2).mean() - p2) < 5e-4
+    assert set(np.unique(r)).issubset({-2, -1, 0, 1, 2})
+
+
+def test_fast_construction_probabilities():
+    bits = jax.random.bits(jax.random.PRNGKey(1), (40_000, 4), jnp.uint32)
+    r = np.asarray(noise.bitwise_noise(bits)).ravel()
+    p0, p1, p2 = ref.eq10_probabilities()
+    assert abs((r == 0).mean() - p0) < 3e-3
+    assert abs((r == 1).mean() - p1) < 2e-3
+    assert abs((r == 2).mean() - p2) < 5e-4
+
+
+def test_box_muller_matches_exact_rounded_normal():
+    bits = jax.random.bits(jax.random.PRNGKey(2), (40_000, 32), jnp.uint32)
+    r = np.asarray(noise.box_muller_noise(bits)).ravel()
+    # exact rounded normal: Pr(0) = P(|N|<1) ~ 0.6827, Pr(±1) ~ 0.1573
+    assert abs((r == 0).mean() - 0.6827) < 5e-3
+    assert abs((r == 1).mean() - 0.1573) < 4e-3
+    assert abs((r == -1).mean() - 0.1573) < 4e-3
+
+
+def test_noise_matrix_shape_and_determinism():
+    a = noise.noise_matrix(jax.random.PRNGKey(5), 64, 96)
+    b = noise.noise_matrix(jax.random.PRNGKey(5), 64, 96)
+    c = noise.noise_matrix(jax.random.PRNGKey(6), 64, 96)
+    assert a.shape == (64, 96)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_uniform_matrix_range():
+    u = np.asarray(noise.uniform_matrix(jax.random.PRNGKey(7), 64, 64))
+    assert (u >= -0.5).all() and (u <= 0.5).all()
+    assert abs(u.mean()) < 5e-3
+    # bf16-rounded: every value is representable in bf16
+    assert (u.astype(jnp.bfloat16).astype(np.float32) == u).all()
+
+
+def test_mean_zero_variance_matches_target():
+    r = np.asarray(noise.noise_matrix(jax.random.PRNGKey(8), 512, 512)).ravel()
+    p0, p1, p2 = ref.eq10_probabilities()
+    var_target = 2 * (p1 + 4 * p2)
+    assert abs(r.mean()) < 5e-3
+    assert abs(r.var() - var_target) < 5e-3
+
+
+@pytest.mark.parametrize("words,fn", [(4, noise.bitwise_noise), (32, noise.box_muller_noise)])
+def test_kernels_are_jittable_and_stable(words, fn):
+    bits = jax.random.bits(jax.random.PRNGKey(3), (512, words), jnp.uint32)
+    eager = fn(bits)
+    jitted = jax.jit(fn)(bits)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))

@@ -1,0 +1,150 @@
+"""L1 correctness: the Eq. 3 Pallas sampling kernel vs the jnp oracle, and
+the Eq. 4 custom VJP vs both the closed form and finite differences."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gaussws, noise, ref
+
+
+def _setup(m, n, seed, bt_val=None):
+    kw, kr, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(kw, (m, n), jnp.float32)
+    r = noise.noise_matrix(kr, m, n)
+    if bt_val is None:
+        bt = jax.random.uniform(kb, (m // 32, n // 32), jnp.float32, 3.0, 8.0)
+    else:
+        bt = jnp.full((m // 32, n // 32), bt_val, jnp.float32)
+    return w, bt, r
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([32, 64, 96, 256]),
+    n=st.sampled_from([32, 64, 128]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_kernel_matches_oracle_bitexact(m, n, seed):
+    w, bt, r = _setup(m, n, seed)
+    kernel = gaussws.sample_fwd_kernel(w, bt, r)
+    oracle = ref.gaussws_sample(w, bt, r)
+    assert kernel.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(kernel, np.float32), np.asarray(oracle, np.float32)
+    )
+
+
+def test_zero_noise_is_pure_bf16_cast():
+    w, bt, _ = _setup(64, 64, 0)
+    zero = jnp.zeros_like(w)
+    what = gaussws.sample_fwd_kernel(w, bt, zero)
+    np.testing.assert_array_equal(
+        np.asarray(what, np.float32), np.asarray(w.astype(jnp.bfloat16), np.float32)
+    )
+
+
+def test_bt_scaling_halves_noise_per_bit():
+    w, _, r = _setup(64, 64, 1)
+    for lo, hi in [(3.0, 4.0), (5.0, 7.0)]:
+        bt_lo = jnp.full((2, 2), lo)
+        bt_hi = jnp.full((2, 2), hi)
+        pqn_lo = np.asarray(gaussws.sample_fwd_kernel(w, bt_lo, r), np.float32) - np.asarray(w)
+        pqn_hi = np.asarray(gaussws.sample_fwd_kernel(w, bt_hi, r), np.float32) - np.asarray(w)
+        # average magnitudes scale like 2^(hi-lo) (bf16 rounding adds slack)
+        ratio = np.abs(pqn_lo).mean() / max(np.abs(pqn_hi).mean(), 1e-12)
+        assert 2 ** (hi - lo) * 0.7 < ratio < 2 ** (hi - lo) * 1.4, ratio
+
+
+def test_vjp_matches_eq4_closed_form():
+    w, bt, r = _setup(96, 64, 2)
+
+    def loss(w_, bt_):
+        what = gaussws.pq_sample(w_, bt_, r)
+        return (what.astype(jnp.float32) ** 2).sum() / 2.0
+
+    gw, gbt = jax.grad(loss, argnums=(0, 1))(w, bt)
+    what32 = gaussws.pq_sample(w, bt, r).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(what32), rtol=1e-6)
+    expect = ref.gaussws_bt_grad(w, bt, r, what32)
+    np.testing.assert_allclose(np.asarray(gbt), np.asarray(expect), rtol=1e-5)
+
+
+def test_bt_grad_matches_finite_differences():
+    # FD on the *uncast* formula (the bf16 rounding makes the true loss a
+    # step function; Eq. 4 differentiates the underlying smooth map).
+    # f64 numpy math: central differences in f32 lose ~1% to cancellation.
+    w_j, _, r_j = _setup(32, 32, 3)
+    w = np.asarray(w_j, np.float64)
+    r = np.asarray(r_j, np.float64)
+    amax = np.abs(w).max()
+
+    def smooth_loss(btv):
+        what = w + r * (amax * 2.0 ** (1.0 - btv))
+        return (what**2).sum() / 2.0
+
+    bt0 = 5.0
+    what0 = w + r * amax * 2.0 ** (1 - bt0)
+    analytic = -math.log(2.0) * amax * 2.0 ** (1 - bt0) * (what0 * r).sum()
+    h = 1e-5
+    fd = (smooth_loss(bt0 + h) - smooth_loss(bt0 - h)) / (2 * h)
+    np.testing.assert_allclose(analytic, fd, rtol=1e-6)
+    # and the jnp closed form agrees with the numpy closed form
+    jnp_grad = ref.gaussws_bt_grad(
+        w_j, jnp.full((1, 1), bt0, jnp.float32), r_j, jnp.asarray(what0, jnp.float32)
+    )
+    np.testing.assert_allclose(float(jnp_grad[0, 0]), analytic, rtol=1e-3)
+
+
+def test_noise_gets_no_gradient():
+    w, bt, r = _setup(32, 32, 4)
+
+    def loss(r_):
+        return gaussws.pq_sample(w, bt, r_).astype(jnp.float32).sum()
+
+    gr = jax.grad(loss)(r)
+    np.testing.assert_array_equal(np.asarray(gr), 0.0)
+
+
+def test_gaussws_layer_end_to_end():
+    w = jax.random.normal(jax.random.PRNGKey(9), (128, 64))
+    bt = jnp.full((4, 2), 4.0)
+    what, r = gaussws.gaussws_layer(w, bt, jax.random.PRNGKey(10))
+    assert what.shape == w.shape and what.dtype == jnp.bfloat16
+    assert set(np.unique(np.asarray(r))).issubset({-2.0, -1.0, 0.0, 1.0, 2.0})
+    # reproducible per key
+    what2, _ = gaussws.gaussws_layer(w, bt, jax.random.PRNGKey(10))
+    np.testing.assert_array_equal(
+        np.asarray(what, np.float32), np.asarray(what2, np.float32)
+    )
+
+
+def test_stochastic_precision_annealing_prop4():
+    """Proposition 4 at the op level: tiny |w| elements are masked by the
+    bf16 cast with probability ~ 1-p when R != 0, preserved when R = 0."""
+    m = n = 256
+    # one block owner sets amax=1; everything else is tiny eps
+    eps = 2.0**-20
+    w = jnp.full((m, n), eps, jnp.float32).at[0, 0].set(1.0)
+    bt = jnp.full((m // 32, n // 32), 4.0)
+    r = noise.noise_matrix(jax.random.PRNGKey(11), m, n)
+    what = np.asarray(gaussws.sample_fwd_kernel(w, bt, r), np.float32)
+    rr = np.asarray(r)
+    pqn_only = rr * 2.0 ** (1 - 4.0)  # amax=1 in block (0,0)
+    # analysis only applies inside block (0,0), where amax = 1 (the other
+    # blocks have amax = eps, so their PQN is eps-scaled too)
+    blk0 = np.zeros((m, n), bool)
+    blk0[:32, :32] = True
+    blk0[0, 0] = False  # the amax owner itself
+    mask = (rr != 0) & blk0
+    # where R != 0: eps underflows -> what == bf16(PQN alone)
+    lost = (
+        what[mask] == pqn_only[mask].astype(jnp.bfloat16).astype(np.float32)
+    ).mean()
+    assert lost > 0.99, lost
+    # where R == 0: eps survives the bf16 cast exactly
+    keep = (rr == 0) & blk0
+    assert (what[keep] == np.float32(eps)).all()

@@ -1,0 +1,67 @@
+//! §3.5 design-decision ablations:
+//!
+//! 1. store-ŵ (2 B/param) vs regenerate-in-backward (0 B, second noise
+//!    pass) — the paper chose storing; we time both so the trade-off is
+//!    explicit on this testbed.
+//! 2. b_i weight-decay annealing speed, with and without the Eq. 12 λ loss
+//!    — the mechanism that pulls b_t from b_init to b_target.
+//! 3. noise generator variants (exact vs fast) inside the full layer op.
+
+use gaussws::config::schema::PqtMethod;
+use gaussws::pqt::gaussws::{backward_bt, forward, NoiseGen};
+use gaussws::pqt::{PqtGrads, PqtLinear};
+use gaussws::prng::Philox4x32;
+use gaussws::util::bench::Bencher;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let (m, n) = (2048, 2048);
+    let total = m * n;
+    let mut rng = Philox4x32::new(1);
+    let w: Vec<f32> = (0..total).map(|_| rng.next_f32() - 0.5).collect();
+    let g: Vec<f32> = (0..total).map(|_| rng.next_f32() - 0.5).collect();
+    let bt = vec![4.0f32; (m / 32) * (n / 32)];
+    let mut what = vec![0f32; total];
+
+    println!("== ablation 1: store-ŵ vs regenerate (backward path, {m}x{n}) ==");
+    let st = forward(&w, m, n, 32, &bt, 7, NoiseGen::Fast, &mut what);
+    let r_stored = b.run("stored noise backward", || backward_bt(&st, &g).len());
+    let r_regen = b.run("regenerate + backward", || {
+        let st2 = forward(&w, m, n, 32, &bt, 7, NoiseGen::Fast, &mut what);
+        backward_bt(&st2, &g).len()
+    });
+    println!(
+        "  stored: {:>7.1} ms   regenerate: {:>7.1} ms   ({:.2}x)   storage saved: {} KiB",
+        r_stored.median_s * 1e3,
+        r_regen.median_s * 1e3,
+        r_regen.median_s / r_stored.median_s,
+        st.noise_bytes() / 1024
+    );
+
+    println!("\n== ablation 2: b_t annealing (b_init 6 -> b_target 4, 2000 steps @ lr 1e-2) ==");
+    // Eq. 12's per-block gradient carries a 1/m factor (m = blocks/layer),
+    // so visible-λ values scale with the block count; the paper's 1e-4 is
+    // calibrated for 600k-step runs.
+    for lambda in [0.0, 1.0, 10.0] {
+        let mut layer = PqtLinear::new("a", 512, 512, 32, PqtMethod::GaussWs, 6.0, 4.0);
+        let zero = PqtGrads { grad_bi: vec![0.0; layer.n_blocks()] };
+        for _ in 0..2000 {
+            layer.update_bi(&zero, 1e-2, 0.1, lambda);
+        }
+        println!(
+            "  lambda = {:<4}: b_t after 2000 steps = {:.3} (wd-only drifts, λ accelerates)",
+            lambda,
+            layer.bw.bt()[0]
+        );
+    }
+
+    println!("\n== ablation 3: noise generator variant inside the layer op ==");
+    for (name, gen) in [("exact (16 w/32e)", NoiseGen::Exact), ("fast (4 w/32e)", NoiseGen::Fast)] {
+        let r = b.run(name, || {
+            forward(&w, m, n, 32, &bt, 9, gen, &mut what);
+            what[0]
+        });
+        println!("  {:<18} {:>8.3} Gelem/s", name, r.gelems_per_sec(total));
+    }
+}

@@ -1,0 +1,66 @@
+//! Figure D.1 / §2.1 ablation — forward/backward consistency of the block
+//! geometries: vector-wise (standard MX) vs square 32×32 (GaussWS). Also
+//! times both quantizers (the square geometry costs nothing extra).
+
+use gaussws::mx::{measure_square, measure_vectorwise, ElemType};
+use gaussws::prng::gauss::box_muller_pair;
+use gaussws::prng::Philox4x32;
+use gaussws::util::bench::Bencher;
+
+fn randn(seed: u64, n: usize) -> Vec<f64> {
+    let mut g = Philox4x32::new(seed);
+    (0..n).map(|_| box_muller_pair(&mut g).0).collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let elems = [
+        ("INT4", ElemType::Int { bits: 4 }),
+        ("INT8", ElemType::Int { bits: 8 }),
+        ("FP8_e4m3", ElemType::Fp(gaussws::numerics::formats::FP8_E4M3)),
+        ("FP6_e3m2", ElemType::Fp(gaussws::numerics::formats::FP6_E3M2)),
+    ];
+    let (rows, cols) = (512, 512);
+    let w = randn(1, rows * cols);
+
+    println!("Fig D.1 ablation — transpose consistency of quantization geometries");
+    println!(
+        "{:<10} {:>17} {:>14} {:>17} {:>14}",
+        "elem", "vec mismatch %", "vec rms err", "square mismatch %", "square rms err"
+    );
+    for (name, elem) in &elems {
+        let rv = measure_vectorwise(&w, rows, cols, 32, elem);
+        let rs = measure_square(&w, rows, cols, 32, elem);
+        println!(
+            "{:<10} {:>16.2}% {:>14.5} {:>16.2}% {:>14.5}",
+            name,
+            rv.mismatch_fraction * 100.0,
+            rv.rms_error_fwd,
+            rs.mismatch_fraction * 100.0,
+            rs.rms_error_fwd
+        );
+        assert_eq!(rs.mismatch_fraction, 0.0, "square blocks must commute");
+    }
+
+    println!("\nquantizer cost (Melem/s):");
+    let int4 = ElemType::Int { bits: 4 };
+    let rv = b.run("vectorwise", || {
+        gaussws::mx::quantize_vectorwise(&w, rows, cols, 32, gaussws::mx::Axis::Row, &int4).data[0]
+    });
+    let rs = b.run("square", || {
+        gaussws::mx::quantize_square(&w, rows, cols, 32, &int4).data[0]
+    });
+    println!(
+        "  vectorwise {:>8.1}   square {:>8.1}   (ratio {:.2}x)",
+        rv.elems_per_sec(rows * cols) / 1e6,
+        rs.elems_per_sec(rows * cols) / 1e6,
+        rv.median_s / rs.median_s
+    );
+    println!(
+        "\npaper shape check: vector-wise quantization shows fwd/bwd mismatch for\n\
+         the integer element types the paper's Fig D.1 uses (FP elements with\n\
+         wide exponent ranges can mask it); square-blockwise is exactly\n\
+         consistent everywhere at similar RMS error and comparable cost."
+    );
+}

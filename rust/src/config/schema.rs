@@ -1,0 +1,381 @@
+//! Typed configuration schema + validation, loaded from the TOML subset in
+//! [`super::toml`]. Mirrors the paper's Appendix E hyperparameter table.
+
+use super::toml::{parse, TomlDoc};
+use anyhow::{bail, Context, Result};
+
+/// Transformer architecture family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// GPT2-style: LayerNorm, GELU MLP, fused qkv; 4 linears per block
+    /// (qkv, out, up, down).
+    Gpt2,
+    /// Llama2-style: RMSNorm, SwiGLU, rotary embeddings; 7 linears per
+    /// block (q, k, v, out, gate, down, up).
+    Llama2,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpt2" => Ok(Arch::Gpt2),
+            "llama2" | "llama" => Ok(Arch::Llama2),
+            other => bail!("unknown arch '{other}' (expected gpt2|llama2)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Gpt2 => "gpt2",
+            Arch::Llama2 => "llama2",
+        }
+    }
+
+    /// Linear-layer names per transformer block, in paper order (Fig. 5).
+    pub fn linear_names(&self) -> &'static [&'static str] {
+        match self {
+            Arch::Gpt2 => &["qkv", "out", "up", "down"],
+            Arch::Llama2 => &["q", "k", "v", "out", "gate", "down", "up"],
+        }
+    }
+}
+
+/// Model shape configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    /// A tiny config for experiments on the 1-core CPU testbed.
+    pub fn tiny(arch: Arch) -> ModelConfig {
+        ModelConfig { arch, n_layer: 2, d_model: 64, n_head: 2, d_ff: 128, vocab: 256, seq_len: 64 }
+    }
+
+    /// Approximate parameter count (embeddings + blocks + head tied).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_block = match self.arch {
+            // qkv (d,3d) + out (d,d) + up (d,ff) + down (ff,d)
+            Arch::Gpt2 => d * 3 * d + d * d + d * self.d_ff + self.d_ff * d,
+            // q,k,v,out (d,d each) + gate,up (d,ff) + down (ff,d)
+            Arch::Llama2 => 4 * d * d + 2 * d * self.d_ff + self.d_ff * d,
+        };
+        self.vocab * d + self.n_layer * per_block
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_head != 0 {
+            bail!("d_model {} not divisible by n_head {}", self.d_model, self.n_head);
+        }
+        if self.n_layer == 0 || self.vocab < 2 || self.seq_len == 0 {
+            bail!("degenerate model config: {self:?}");
+        }
+        Ok(())
+    }
+}
+
+/// PQT method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PqtMethod {
+    /// Plain BF16 baseline — no noise.
+    None,
+    /// The paper's Gaussian weight sampling (rounded-normal R).
+    GaussWs,
+    /// DiffQ-style uniform U(-0.5, 0.5) R (the paper's extension of DiffQ).
+    DiffQ,
+}
+
+impl PqtMethod {
+    pub fn parse(s: &str) -> Result<PqtMethod> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "bf16" | "baseline" => Ok(PqtMethod::None),
+            "gaussws" | "gauss" => Ok(PqtMethod::GaussWs),
+            "diffq" => Ok(PqtMethod::DiffQ),
+            other => bail!("unknown pqt method '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PqtMethod::None => "bf16",
+            PqtMethod::GaussWs => "gaussws",
+            PqtMethod::DiffQ => "diffq",
+        }
+    }
+}
+
+/// PQT configuration (paper §3.6 + §4 settings).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PqtConfig {
+    pub method: PqtMethod,
+    /// Which linear layers get PQT, e.g. ["all"], ["qkv"], ["out","down"].
+    pub parts: Vec<String>,
+    /// Square block size b_l (paper: 32).
+    pub block: usize,
+    /// Initial bitwidth b_init (paper default 6).
+    pub b_init: f64,
+    /// Target bitwidth b_target (paper default 4).
+    pub b_target: f64,
+    /// Weight decay applied to the internal b_i parameter.
+    pub bi_weight_decay: f64,
+    /// Optional λ for the Eq. 12 bitwidth loss (0 disables).
+    pub lambda: f64,
+}
+
+impl Default for PqtConfig {
+    fn default() -> Self {
+        PqtConfig {
+            method: PqtMethod::GaussWs,
+            parts: vec!["all".into()],
+            block: 32,
+            b_init: 6.0,
+            b_target: 4.0,
+            bi_weight_decay: 0.1,
+            lambda: 0.0,
+        }
+    }
+}
+
+/// Optimizer selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    AdamW,
+    AdamMini,
+}
+
+impl Optimizer {
+    pub fn parse(s: &str) -> Result<Optimizer> {
+        match s.to_ascii_lowercase().as_str() {
+            "adamw" => Ok(Optimizer::AdamW),
+            "adam-mini" | "adamini" | "adam_mini" => Ok(Optimizer::AdamMini),
+            other => bail!("unknown optimizer '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::AdamW => "adamw",
+            Optimizer::AdamMini => "adam-mini",
+        }
+    }
+}
+
+/// Training-loop configuration (Appendix E shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub max_lr: f64,
+    pub min_lr: f64,
+    pub batch: usize,
+    pub grad_accum: usize,
+    pub weight_decay: f64,
+    pub optimizer: Optimizer,
+    pub seed: u64,
+    /// Simulated data-parallel worker count (the paper used 8 GPUs).
+    pub workers: usize,
+    /// Adam betas / eps.
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Gradient clipping (global L2 norm); 0 disables.
+    pub grad_clip: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            warmup_steps: 20,
+            max_lr: 6e-4,
+            min_lr: 6e-5,
+            batch: 8,
+            grad_accum: 1,
+            weight_decay: 0.1,
+            optimizer: Optimizer::AdamW,
+            seed: 1234,
+            workers: 1,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// A full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: ModelConfig,
+    pub pqt: PqtConfig,
+    pub train: TrainConfig,
+    /// Where AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Where run outputs (CSV/JSON logs, checkpoints) go.
+    pub out_dir: String,
+}
+
+impl RunConfig {
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let doc = parse(text).context("parsing run config")?;
+        Self::from_doc(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let arch = Arch::parse(&doc.str_or("model.arch", "gpt2"))?;
+        let tiny = ModelConfig::tiny(arch);
+        let model = ModelConfig {
+            arch,
+            n_layer: doc.i64_or("model.n_layer", tiny.n_layer as i64) as usize,
+            d_model: doc.i64_or("model.d_model", tiny.d_model as i64) as usize,
+            n_head: doc.i64_or("model.n_head", tiny.n_head as i64) as usize,
+            d_ff: doc.i64_or("model.d_ff", tiny.d_ff as i64) as usize,
+            vocab: doc.i64_or("model.vocab", tiny.vocab as i64) as usize,
+            seq_len: doc.i64_or("model.seq_len", tiny.seq_len as i64) as usize,
+        };
+        model.validate()?;
+        let pd = PqtConfig::default();
+        let parts = match doc.get("pqt.parts") {
+            Some(v) => v
+                .as_arr()
+                .context("pqt.parts must be an array")?
+                .iter()
+                .map(|x| x.as_str().map(String::from).context("pqt.parts items must be strings"))
+                .collect::<Result<Vec<_>>>()?,
+            None => pd.parts.clone(),
+        };
+        let pqt = PqtConfig {
+            method: PqtMethod::parse(&doc.str_or("pqt.method", "gaussws"))?,
+            parts,
+            block: doc.i64_or("pqt.block", pd.block as i64) as usize,
+            b_init: doc.f64_or("pqt.b_init", pd.b_init),
+            b_target: doc.f64_or("pqt.b_target", pd.b_target),
+            bi_weight_decay: doc.f64_or("pqt.bi_weight_decay", pd.bi_weight_decay),
+            lambda: doc.f64_or("pqt.lambda", pd.lambda),
+        };
+        let td = TrainConfig::default();
+        let train = TrainConfig {
+            steps: doc.i64_or("train.steps", td.steps as i64) as usize,
+            warmup_steps: doc.i64_or("train.warmup_steps", td.warmup_steps as i64) as usize,
+            max_lr: doc.f64_or("train.max_lr", td.max_lr),
+            min_lr: doc.f64_or("train.min_lr", td.min_lr),
+            batch: doc.i64_or("train.batch", td.batch as i64) as usize,
+            grad_accum: doc.i64_or("train.grad_accum", td.grad_accum as i64) as usize,
+            weight_decay: doc.f64_or("train.weight_decay", td.weight_decay),
+            optimizer: Optimizer::parse(&doc.str_or("train.optimizer", "adamw"))?,
+            seed: doc.i64_or("train.seed", td.seed as i64) as u64,
+            workers: doc.i64_or("train.workers", td.workers as i64) as usize,
+            beta1: doc.f64_or("train.beta1", td.beta1),
+            beta2: doc.f64_or("train.beta2", td.beta2),
+            eps: doc.f64_or("train.eps", td.eps),
+            grad_clip: doc.f64_or("train.grad_clip", td.grad_clip),
+        };
+        if train.steps == 0 || train.batch == 0 || train.workers == 0 {
+            bail!("degenerate train config: {train:?}");
+        }
+        if train.min_lr > train.max_lr {
+            bail!("min_lr {} > max_lr {}", train.min_lr, train.max_lr);
+        }
+        Ok(RunConfig {
+            name: doc.str_or("name", "run"),
+            model,
+            pqt,
+            train,
+            artifacts_dir: doc.str_or("artifacts_dir", "artifacts"),
+            out_dir: doc.str_or("out_dir", "runs"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = RunConfig::from_toml_str("name = \"t\"").unwrap();
+        assert_eq!(c.model.arch, Arch::Gpt2);
+        assert_eq!(c.pqt.method, PqtMethod::GaussWs);
+        assert_eq!(c.pqt.b_init, 6.0);
+        assert_eq!(c.pqt.b_target, 4.0);
+        assert_eq!(c.train.optimizer, Optimizer::AdamW);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = RunConfig::from_toml_str(
+            r#"
+name = "fig4-small"
+[model]
+arch = "llama2"
+n_layer = 4
+d_model = 128
+n_head = 4
+d_ff = 256
+vocab = 512
+seq_len = 128
+[pqt]
+method = "diffq"
+parts = ["out", "down"]
+b_init = 8
+b_target = 6
+[train]
+steps = 500
+optimizer = "adam-mini"
+max_lr = 1e-3
+min_lr = 1e-4
+workers = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.model.arch, Arch::Llama2);
+        assert_eq!(c.pqt.method, PqtMethod::DiffQ);
+        assert_eq!(c.pqt.parts, vec!["out", "down"]);
+        assert_eq!(c.pqt.b_init, 8.0);
+        assert_eq!(c.train.workers, 4);
+        assert_eq!(c.train.optimizer, Optimizer::AdamMini);
+    }
+
+    #[test]
+    fn validation_rejects_bad_heads() {
+        let r = RunConfig::from_toml_str("[model]\nd_model = 65\nn_head = 2");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validation_rejects_inverted_lr() {
+        let r = RunConfig::from_toml_str("[train]\nmax_lr = 1e-5\nmin_lr = 1e-3");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let m = ModelConfig::tiny(Arch::Gpt2);
+        // vocab*d + 2 blocks * (3dd + dd + 2*d*ff)
+        let d = 64;
+        let expect = 256 * d + 2 * (3 * d * d + d * d + 2 * d * 128);
+        assert_eq!(m.param_count(), expect);
+    }
+
+    #[test]
+    fn linear_names_match_fig5_order() {
+        assert_eq!(Arch::Gpt2.linear_names(), &["qkv", "out", "up", "down"]);
+        assert_eq!(Arch::Llama2.linear_names(), &["q", "k", "v", "out", "gate", "down", "up"]);
+    }
+}

@@ -1,0 +1,275 @@
+//! Minimal TOML parser (substrate). Supports the subset used by the
+//! launcher configs: `[table]` / `[table.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays. No multi-line
+//! strings, no inline tables, no array-of-tables.
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path keys (`"table.sub.key"`) to values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All keys under a table prefix (e.g. `"model"` → `model.*`).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let pfx = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&pfx)).map(|k| k.as_str()).collect()
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("toml error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML document (see module docs for the supported subset).
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let t = strip_comment(raw).trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or(TomlError { line, msg: "unterminated table header".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line, msg: "empty table name".into() });
+            }
+            prefix = name.to_string();
+            continue;
+        }
+        let (key, val) = t
+            .split_once('=')
+            .ok_or(TomlError { line, msg: format!("expected key = value, got '{t}'") })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError { line, msg: "empty key".into() });
+        }
+        let value = parse_value(val.trim(), line)?;
+        let path =
+            if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+        doc.entries.insert(path, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(TomlError { line, msg: "empty value".into() });
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or(TomlError { line, msg: "unterminated string".into() })?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner =
+            rest.strip_suffix(']').ok_or(TomlError { line, msg: "unterminated array".into() })?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError { line, msg: format!("cannot parse value '{s}'") })
+}
+
+/// Split an array body on commas that are not inside quotes or brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = parse(
+            r#"
+# run config
+name = "fig1b"
+seed = 1234
+
+[model]
+arch = "gpt2"
+n_layer = 4
+rotary = false
+
+[train]
+lr = 6e-4
+steps = 1_000
+parts = ["qkv", "out"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig1b");
+        assert_eq!(doc.i64_or("seed", 0), 1234);
+        assert_eq!(doc.str_or("model.arch", ""), "gpt2");
+        assert_eq!(doc.i64_or("model.n_layer", 0), 4);
+        assert!(!doc.bool_or("model.rotary", true));
+        assert_eq!(doc.f64_or("train.lr", 0.0), 6e-4);
+        assert_eq!(doc.i64_or("train.steps", 0), 1000);
+        let parts = doc.get("train.parts").unwrap().as_arr().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].as_str(), Some("qkv"));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = parse("k = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_lines() {
+        let e = parse("a = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[open\n").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn nested_table_names() {
+        let doc = parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.i64_or("a.b.c", 0), 1);
+        assert_eq!(doc.keys_under("a.b"), vec!["a.b.c"]);
+    }
+
+    #[test]
+    fn arrays_of_numbers() {
+        let doc = parse("xs = [1, 2.5, 3]").unwrap();
+        let xs = doc.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs[1].as_f64(), Some(2.5));
+    }
+}

@@ -1,0 +1,121 @@
+//! Binary checkpointing of named f32 tensors (params, b_i, optimizer
+//! moments) plus scalar metadata. Format:
+//!
+//! ```text
+//! magic "GWCK1\n"
+//! u64 step | u64 master_seed | u32 n_tensors
+//! per tensor: u32 name_len | name bytes | u64 numel | numel × f32 LE
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"GWCK1\n";
+
+/// A checkpoint in memory.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub master_seed: u64,
+    pub tensors: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn insert(&mut self, name: &str, data: Vec<f32>) {
+        self.tensors.insert(name.to_string(), data);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Vec<f32>> {
+        self.tensors.get(name).with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&self.master_seed.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u64b)?;
+        let master_seed = u64::from_le_bytes(u64b);
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let n = u32::from_le_bytes(u32b);
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name utf8")?;
+            f.read_exact(&mut u64b)?;
+            let numel = u64::from_le_bytes(u64b) as usize;
+            let mut bytes = vec![0u8; numel * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, data);
+        }
+        Ok(Checkpoint { step, master_seed, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint { step: 42, master_seed: 7, tensors: Default::default() };
+        ck.insert("embed", vec![1.0, -2.5, 3.25]);
+        ck.insert("blk0.qkv", vec![0.0; 128]);
+        ck.insert("opt.m.embed", vec![0.5; 3]);
+        let path = std::env::temp_dir().join("gaussws_ck_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ck = Checkpoint::default();
+        assert!(ck.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let path = std::env::temp_dir().join("gaussws_ck_bad.bin");
+        std::fs::write(&path, b"NOTCK!rest").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Run metrics: per-step loss/LR/throughput logging, WMA smoothing
+//! (Fig. 4 uses α = 1/16 and 1/128), windowed-max loss, divergence
+//! detection, and CSV/JSON export for the experiment harness.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::{wma_series, windowed_max};
+use std::io::Write;
+use std::path::Path;
+
+/// One training-step record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRow {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    /// tokens processed this step (across all workers)
+    pub tokens: usize,
+    /// wall seconds for the step
+    pub dt: f64,
+}
+
+/// A full run log.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub rows: Vec<StepRow>,
+    /// steps at which divergence was detected
+    pub divergences: Vec<usize>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> RunLog {
+        RunLog { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, row: StepRow) {
+        self.rows.push(row);
+    }
+
+    pub fn losses(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.loss).collect()
+    }
+
+    /// Smoothed loss curve (weighted moving average).
+    pub fn smoothed(&self, alpha: f64) -> Vec<f64> {
+        wma_series(&self.losses(), alpha)
+    }
+
+    /// Windowed max loss (Fig. 4 "maximum loss" columns).
+    pub fn max_loss(&self, window: usize) -> Vec<f64> {
+        windowed_max(&self.losses(), window)
+    }
+
+    /// Final smoothed loss (α=1/16), the scalar used in summary tables.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.smoothed(1.0 / 16.0).last().copied()
+    }
+
+    /// Mean tokens/second over the run (ignores the first step: compile).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let rows = if self.rows.len() > 1 { &self.rows[1..] } else { &self.rows[..] };
+        let tok: usize = rows.iter().map(|r| r.tokens).sum();
+        let dt: f64 = rows.iter().map(|r| r.dt).sum();
+        if dt == 0.0 {
+            0.0
+        } else {
+            tok as f64 / dt
+        }
+    }
+
+    /// Detect divergence: loss non-finite, or exceeding `factor`× the
+    /// running minimum of the smoothed curve. Records and returns true.
+    pub fn check_divergence(&mut self, factor: f64) -> bool {
+        let sm = self.smoothed(1.0 / 16.0);
+        let Some(&last) = sm.last() else { return false };
+        let step = self.rows.last().unwrap().step;
+        let min = sm.iter().cloned().fold(f64::INFINITY, f64::min);
+        if !last.is_finite() || (sm.len() > 10 && last > factor * min) {
+            if self.divergences.last() != Some(&step) {
+                self.divergences.push(step);
+            }
+            return true;
+        }
+        false
+    }
+
+    /// CSV with smoothed columns.
+    pub fn to_csv(&self) -> String {
+        let sm16 = self.smoothed(1.0 / 16.0);
+        let sm128 = self.smoothed(1.0 / 128.0);
+        let mx = self.max_loss(64);
+        let mut out = String::from("step,loss,wma16,wma128,max64,lr,tokens,dt\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6e},{},{:.4}\n",
+                r.step, r.loss, sm16[i], sm128[i], mx[i], r.lr, r.tokens, r.dt
+            ));
+        }
+        out
+    }
+
+    /// Summary JSON (used by the experiment index in EXPERIMENTS.md).
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("steps", num(self.rows.len() as f64)),
+            ("final_loss", num(self.final_loss().unwrap_or(f64::NAN))),
+            ("tokens_per_sec", num(self.tokens_per_sec())),
+            (
+                "divergences",
+                arr(self.divergences.iter().map(|&d| num(d as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.summary.json`.
+    pub fn write_to(&self, dir: impl AsRef<Path>) -> std::io::Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.name)))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.summary.json", self.name)))?;
+        f.write_all(self.summary_json().to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(losses: &[f64]) -> RunLog {
+        let mut l = RunLog::new("t");
+        for (i, &x) in losses.iter().enumerate() {
+            l.push(StepRow { step: i, loss: x, lr: 1e-3, tokens: 100, dt: 0.1 });
+        }
+        l
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let l = log_with(&[3.0, 2.5, 2.0]);
+        let csv = l.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    fn tokens_per_sec_skips_compile_step() {
+        let mut l = RunLog::new("t");
+        l.push(StepRow { step: 0, loss: 1.0, lr: 0.0, tokens: 100, dt: 10.0 }); // compile
+        l.push(StepRow { step: 1, loss: 1.0, lr: 0.0, tokens: 100, dt: 0.1 });
+        l.push(StepRow { step: 2, loss: 1.0, lr: 0.0, tokens: 100, dt: 0.1 });
+        assert!((l.tokens_per_sec() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn divergence_on_nan() {
+        let mut l = log_with(&[3.0, 2.0, f64::NAN]);
+        assert!(l.check_divergence(3.0));
+        assert_eq!(l.divergences.len(), 1);
+    }
+
+    #[test]
+    fn divergence_on_explosion() {
+        let mut losses = vec![2.0; 50];
+        losses.extend(vec![50.0; 30]);
+        let mut l = log_with(&losses);
+        assert!(l.check_divergence(3.0));
+    }
+
+    #[test]
+    fn no_false_divergence_on_noise() {
+        let losses: Vec<f64> = (0..100).map(|i| 3.0 - i as f64 * 0.01).collect();
+        let mut l = log_with(&losses);
+        assert!(!l.check_divergence(3.0));
+        assert!(l.divergences.is_empty());
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let l = log_with(&[3.0, 2.0, 1.0]);
+        let j = l.summary_json();
+        assert_eq!(j.get("steps").as_usize(), Some(3));
+        assert!(j.get("final_loss").as_f64().unwrap() < 3.0);
+    }
+}

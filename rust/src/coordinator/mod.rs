@@ -1,0 +1,11 @@
+//! L3 coordinator: trainer loop, simulated data-parallel workers with tree
+//! all-reduce, metrics, and checkpointing.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+pub mod workers;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::{RunLog, StepRow};
+pub use trainer::Trainer;

@@ -1,0 +1,397 @@
+//! The training coordinator: owns parameters, optimizer state, the seed
+//! tree, the sharded data loaders and the metrics log; drives the AOT
+//! train-step artifact through the PJRT runtime.
+//!
+//! Division of labour (deliberate, see DESIGN.md):
+//! * the **HLO artifact** computes `(loss, ∂L/∂params, ∂L/∂b_i)` for one
+//!   micro-batch — model math, Pallas noise kernel and Eq. 4 inside;
+//! * **rust** owns everything stateful: AdamW/Adam-mini, LR schedule,
+//!   decoupled weight decay (including the b_i decay that anneals b_t
+//!   toward b_target), gradient clipping, the data-parallel all-reduce,
+//!   seed management, divergence detection and checkpointing.
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{RunLog, StepRow};
+use super::workers::{clip_global_norm, scale_grads, tree_all_reduce_sum};
+use crate::config::schema::{Optimizer, TrainConfig};
+use crate::data::{Loader, SynthCorpus, SynthSpec};
+use crate::nn::optim::{AdamMini, AdamW, LrSchedule, Opt};
+use crate::prng::{Philox4x32, SeedTree};
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Trainer over one train artifact.
+pub struct Trainer {
+    pub runtime: Runtime,
+    pub artifact: String,
+    pub cfg: TrainConfig,
+    pub params: BTreeMap<String, Vec<f32>>,
+    pub bi: BTreeMap<String, Vec<f32>>,
+    param_shapes: BTreeMap<String, Vec<usize>>,
+    bi_shapes: BTreeMap<String, Vec<usize>>,
+    opt_params: Opt,
+    opt_bi: Opt,
+    schedule: LrSchedule,
+    seeds: SeedTree,
+    loaders: Vec<Loader>,
+    pub log: RunLog,
+    pub step: usize,
+    /// Artifact meta: b_init/b_target for bt reconstruction (Fig. 5).
+    pub b_init: f64,
+    pub b_target: f64,
+    /// Weight decay applied to b_i (paper: guides b_t to b_target).
+    pub bi_weight_decay: f64,
+}
+
+impl Trainer {
+    /// Build a trainer for `artifact` (name without the `.train` suffix or
+    /// with it — normalized here), e.g. "tiny_gpt2.gaussws_all".
+    pub fn new(
+        runtime: Runtime,
+        artifact: &str,
+        cfg: TrainConfig,
+        run_name: &str,
+    ) -> Result<Trainer> {
+        let artifact = if artifact.ends_with(".train") {
+            artifact.to_string()
+        } else {
+            format!("{artifact}.train")
+        };
+        let spec = runtime.manifest.get(&artifact)?.clone();
+        if spec.kind != "train" {
+            bail!("artifact '{artifact}' is kind '{}', not train", spec.kind);
+        }
+        let vocab = spec.meta_usize("vocab").context("meta.vocab")?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let seq_len = spec.meta_usize("seq_len").context("meta.seq_len")?;
+        let b_init = spec.meta.get("b_init").as_f64().unwrap_or(6.0);
+        let b_target = spec.meta.get("b_target").as_f64().unwrap_or(4.0);
+
+        // ---- parameter init (rust-side; python only defines shapes) ----
+        let mut params = BTreeMap::new();
+        let mut param_shapes = BTreeMap::new();
+        let n_layer = spec.meta_usize("n_layer").unwrap_or(2);
+        let resid_std = 0.02 / (2.0 * n_layer as f32).sqrt();
+        let mut rng = Philox4x32::new(cfg.seed ^ 0x9E37_79B9);
+        for name in spec.param_names() {
+            let shape = spec.param_shape(&name).context("param shape")?;
+            let numel: usize = shape.iter().product();
+            let data = if name.ends_with(".g") || name == "lnf.g" {
+                vec![1.0; numel]
+            } else if name.ends_with(".b") {
+                vec![0.0; numel]
+            } else {
+                let std = if name.ends_with(".out") || name.ends_with(".down") {
+                    resid_std
+                } else if name == "pos_embed" {
+                    0.01
+                } else {
+                    0.02
+                };
+                let mut v = vec![0f32; numel];
+                let mut i = 0;
+                while i < numel {
+                    let (a, b) = crate::prng::gauss::box_muller_pair(&mut rng);
+                    v[i] = a as f32 * std;
+                    if i + 1 < numel {
+                        v[i + 1] = b as f32 * std;
+                    }
+                    i += 2;
+                }
+                v
+            };
+            params.insert(name.clone(), data);
+            param_shapes.insert(name, shape);
+        }
+        let mut bi = BTreeMap::new();
+        let mut bi_shapes = BTreeMap::new();
+        for name in spec.bi_names() {
+            let shape = spec.bi_shape(&name).context("bi shape")?;
+            let numel: usize = shape.iter().product();
+            bi.insert(name.clone(), vec![1.0; numel]); // b_i init = 1 (§3.6)
+            bi_shapes.insert(name, shape);
+        }
+
+        // ---- optimizers ----
+        let p_sizes: Vec<usize> = params.values().map(|v| v.len()).collect();
+        let b_sizes: Vec<usize> = bi.values().map(|v| v.len()).collect();
+        let mk = |sizes: &[usize], wd: f64| -> Opt {
+            match cfg.optimizer {
+                Optimizer::AdamW => {
+                    Opt::AdamW(AdamW::new(sizes, cfg.max_lr, cfg.beta1, cfg.beta2, cfg.eps, wd))
+                }
+                Optimizer::AdamMini => Opt::AdamMini(AdamMini::new(
+                    sizes, 64, cfg.max_lr, cfg.beta1, cfg.beta2, cfg.eps, wd,
+                )),
+            }
+        };
+        let opt_params = mk(&p_sizes, cfg.weight_decay);
+        let opt_bi = mk(&b_sizes, 0.0); // b_i decay applied manually (decoupled)
+
+        // ---- data ----
+        let corpus = SynthCorpus::generate(SynthSpec {
+            vocab,
+            len: 1 << 21,
+            seed: cfg.seed ^ 0xC0FFEE,
+            ..Default::default()
+        });
+        let loaders: Vec<Loader> = (0..cfg.workers)
+            .map(|w| {
+                Loader::new(corpus.clone(), batch, seq_len, cfg.seed ^ 0xDA7A)
+                    .sharded(w, cfg.workers)
+            })
+            .collect();
+
+        // ---- seeds ----
+        let mut seeds = SeedTree::new(cfg.seed);
+        seeds.register_layer("noise");
+
+        let schedule =
+            LrSchedule::linear(cfg.max_lr, cfg.min_lr, cfg.warmup_steps, cfg.steps);
+        Ok(Trainer {
+            runtime,
+            artifact,
+            params,
+            bi,
+            param_shapes,
+            bi_shapes,
+            opt_params,
+            opt_bi,
+            schedule,
+            seeds,
+            loaders,
+            log: RunLog::new(run_name),
+            step: 0,
+            b_init,
+            b_target,
+            bi_weight_decay: 0.1,
+            cfg,
+        })
+    }
+
+    /// Tokens per optimizer step across all workers.
+    pub fn tokens_per_step(&self) -> usize {
+        self.loaders.iter().map(|l| l.tokens_per_batch()).sum::<usize>() * self.cfg.grad_accum
+    }
+
+    fn input_tensors(&self, x: Vec<i32>, y: Vec<i32>, seed: i32) -> Vec<HostTensor> {
+        let mut inputs = Vec::with_capacity(self.params.len() + self.bi.len() + 3);
+        for v in self.params.values() {
+            inputs.push(HostTensor::F32(v.clone()));
+        }
+        for v in self.bi.values() {
+            inputs.push(HostTensor::F32(v.clone()));
+        }
+        inputs.push(HostTensor::S32(x));
+        inputs.push(HostTensor::S32(y));
+        inputs.push(HostTensor::S32(vec![seed]));
+        inputs
+    }
+
+    /// Execute one full optimizer step (all workers, grad-accum, reduce,
+    /// clip, update, seed advance). Returns the mean loss.
+    pub fn train_step(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        let lr = self.schedule.at(self.step);
+        // one noise seed per step, SHARED across workers (DDP requires the
+        // same ŵ on every replica; §3.6)
+        let seed = (self.seeds.step_seed("noise") & 0x7FFF_FFFF) as i32;
+
+        let n_out = self.params.len() + self.bi.len(); // grads per worker
+        let mut worker_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.loaders.len());
+        let mut loss_sum = 0f64;
+        let mut n_micro = 0usize;
+        for w in 0..self.loaders.len() {
+            let mut accum: Option<Vec<Vec<f32>>> = None;
+            for micro in 0..self.cfg.grad_accum {
+                let b = self.loaders[w]
+                    .batch_at((self.step * self.cfg.grad_accum + micro) as u64);
+                let x: Vec<i32> = b.x.iter().map(|&t| t as i32).collect();
+                let y: Vec<i32> = b.y.iter().map(|&t| t as i32).collect();
+                let inputs = self.input_tensors(x, y, seed);
+                let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+                if outputs.len() != n_out + 1 {
+                    bail!("expected {} outputs, got {}", n_out + 1, outputs.len());
+                }
+                loss_sum += outputs[0].scalar_f32()? as f64;
+                n_micro += 1;
+                let grads: Vec<Vec<f32>> = outputs[1..]
+                    .iter()
+                    .map(|t| t.as_f32().map(|s| s.to_vec()))
+                    .collect::<Result<_>>()?;
+                match &mut accum {
+                    None => accum = Some(grads),
+                    Some(a) => {
+                        for (dst, src) in a.iter_mut().zip(grads.iter()) {
+                            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                                *d += s;
+                            }
+                        }
+                    }
+                }
+            }
+            worker_grads.push(accum.unwrap());
+        }
+
+        // all-reduce + average over (workers × micro-batches)
+        tree_all_reduce_sum(&mut worker_grads);
+        let mut grads = worker_grads.swap_remove(0);
+        scale_grads(&mut grads, 1.0 / (self.loaders.len() * self.cfg.grad_accum) as f32);
+        if self.cfg.grad_clip > 0.0 {
+            clip_global_norm(&mut grads, self.cfg.grad_clip);
+        }
+
+        // optimizer updates: params then bi (grads are ordered the same way)
+        self.opt_params.set_lr(lr);
+        self.opt_params.step_begin();
+        let names: Vec<String> = self.params.keys().cloned().collect();
+        for (idx, name) in names.iter().enumerate() {
+            let decay = self.param_shapes[name].len() >= 2; // matrices only
+            let w = self.params.get_mut(name).unwrap();
+            self.opt_params.update(idx, w, &grads[idx], decay);
+        }
+        self.opt_bi.set_lr(lr);
+        self.opt_bi.step_begin();
+        let bi_names: Vec<String> = self.bi.keys().cloned().collect();
+        let off = self.params.len();
+        for (k, name) in bi_names.iter().enumerate() {
+            let b = self.bi.get_mut(name).unwrap();
+            self.opt_bi.update(k, b, &grads[off + k], false);
+            // decoupled b_i weight decay — the b_t annealing mechanism
+            let decay = 1.0 - lr * self.bi_weight_decay;
+            for v in b.iter_mut() {
+                *v = (*v as f64 * decay) as f32;
+            }
+        }
+
+        self.seeds.advance_step();
+        let loss = loss_sum / n_micro as f64;
+        self.log.push(StepRow {
+            step: self.step,
+            loss,
+            lr,
+            tokens: self.tokens_per_step(),
+            dt: t0.elapsed().as_secs_f64(),
+        });
+        self.log.check_divergence(3.0);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Run `n` steps, optionally printing progress every `print_every`.
+    pub fn run(&mut self, n: usize, print_every: usize) -> Result<()> {
+        for _ in 0..n {
+            let loss = self.train_step()?;
+            if print_every > 0 && self.step % print_every == 0 {
+                println!(
+                    "[{}] step {:>5} loss {:.4} (wma {:.4}) lr {:.2e} {:.0} tok/s",
+                    self.log.name,
+                    self.step,
+                    loss,
+                    self.log.final_loss().unwrap_or(loss),
+                    self.schedule.at(self.step.saturating_sub(1)),
+                    self.log.tokens_per_sec(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate mean loss on `n_batches` held-out batches via an eval
+    /// artifact (same model tag, `.eval` suffix).
+    pub fn evaluate(&mut self, eval_artifact: &str, n_batches: usize) -> Result<f64> {
+        let name = if eval_artifact.ends_with(".eval") {
+            eval_artifact.to_string()
+        } else {
+            format!("{eval_artifact}.eval")
+        };
+        let mut total = 0f64;
+        let seed = (self.seeds.step_seed("noise") & 0x7FFF_FFFF) as i32;
+        for k in 0..n_batches {
+            // held-out stream: offset far beyond any training step
+            let b = self.loaders[0].batch_at(1_000_000 + k as u64);
+            let x: Vec<i32> = b.x.iter().map(|&t| t as i32).collect();
+            let y: Vec<i32> = b.y.iter().map(|&t| t as i32).collect();
+            let inputs = self.input_tensors(x, y, seed);
+            let outputs = self.runtime.execute(&name, &inputs)?;
+            total += outputs[0].scalar_f32()? as f64;
+        }
+        Ok(total / n_batches as f64)
+    }
+
+    /// Effective bitwidths b_t of one PQT layer (Eq. 11 over current b_i).
+    pub fn bt_of(&self, bi_name: &str) -> Option<Vec<f32>> {
+        self.bi.get(bi_name).map(|b| {
+            b.iter()
+                .map(|&x| (self.b_target + x as f64 * (self.b_init - self.b_target)) as f32)
+                .collect()
+        })
+    }
+
+    /// Names of PQT layers (sorted).
+    pub fn bi_layer_names(&self) -> Vec<String> {
+        self.bi.keys().cloned().collect()
+    }
+
+    /// GPU-memory model of the paper's Table 1 (bytes): master weights
+    /// (4 B f32) + ŵ (2 B bf16, PQT arms only) + optimizer state + packed
+    /// noise (0.5 B GaussWS / 2 B DiffQ while a layer's backward is alive).
+    pub fn memory_model_bytes(&self, method: &str) -> usize {
+        let n_params: usize = self.params.values().map(|v| v.len()).sum();
+        let pqt_params: usize = self
+            .bi_shapes
+            .iter()
+            .map(|(name, _)| {
+                let wname = name.clone();
+                self.params.get(&wname).map(|w| w.len()).unwrap_or(0)
+            })
+            .sum();
+        let base = n_params * 4 + self.opt_params.state_bytes() + self.opt_bi.state_bytes();
+        match method {
+            "gaussws" => base + pqt_params * 2 + pqt_params / 2,
+            "diffq" => base + pqt_params * 2 + pqt_params * 2,
+            _ => base,
+        }
+    }
+
+    /// Save a full checkpoint (params + b_i + step/seed).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let mut ck = Checkpoint {
+            step: self.step as u64,
+            master_seed: self.seeds.master_seed(),
+            tensors: Default::default(),
+        };
+        for (k, v) in &self.params {
+            ck.insert(&format!("param.{k}"), v.clone());
+        }
+        for (k, v) in &self.bi {
+            ck.insert(&format!("bi.{k}"), v.clone());
+        }
+        ck.save(path)?;
+        Ok(())
+    }
+
+    /// Restore params/b_i/step from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        for (k, v) in self.params.iter_mut() {
+            *v = ck.get(&format!("param.{k}"))?.clone();
+        }
+        for (k, v) in self.bi.iter_mut() {
+            *v = ck.get(&format!("bi.{k}"))?.clone();
+        }
+        self.step = ck.step as usize;
+        self.seeds.set_step(ck.step);
+        Ok(())
+    }
+
+    /// Export parameter tensors with shapes (for the rust inference path).
+    pub fn export_params(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        self.params
+            .iter()
+            .map(|(k, v)| (k.clone(), self.param_shapes[k].clone(), v.clone()))
+            .collect()
+    }
+}

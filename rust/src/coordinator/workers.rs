@@ -1,0 +1,130 @@
+//! Simulated data-parallel workers + gradient all-reduce.
+//!
+//! The paper trains on 8 GPUs with DDP: every rank holds a full parameter
+//! replica, consumes a disjoint data shard, and gradients are all-reduced
+//! before the optimizer step. Weight-sampling noise R must be *identical*
+//! across ranks (same seed), otherwise each replica trains a different ŵ —
+//! the coordinator enforces that by broadcasting the step seed.
+//!
+//! On the 1-core CPU testbed the rank executions are sequential, but the
+//! reduction topology is real: a binary-tree all-reduce whose communication
+//! volume matches what a ring/tree implementation would move, which the
+//! overhead model in `bench_overhead` accounts for.
+
+/// Accumulate `src` into `dst` element-wise.
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d += s;
+    }
+}
+
+/// Tree all-reduce (sum) over per-worker gradient sets, in place into
+/// worker 0's buffers; returns the number of pairwise block transfers
+/// performed (the communication-volume proxy).
+///
+/// `grads[w][t]` is tensor `t` of worker `w`. All workers must have
+/// identical tensor shapes.
+pub fn tree_all_reduce_sum(grads: &mut Vec<Vec<Vec<f32>>>) -> usize {
+    let n = grads.len();
+    assert!(n > 0);
+    let mut transfers = 0;
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            // split_at_mut to take two disjoint workers
+            let (lo, hi) = grads.split_at_mut(i + stride);
+            let dst = &mut lo[i];
+            let src = &hi[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                add_into(d, s);
+                transfers += 1;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    transfers
+}
+
+/// Average worker-0 buffers by the worker count after a sum-reduce.
+pub fn scale_grads(grads: &mut [Vec<f32>], factor: f32) {
+    for g in grads.iter_mut() {
+        for v in g.iter_mut() {
+            *v *= factor;
+        }
+    }
+}
+
+/// Global L2 norm over a gradient set.
+pub fn global_norm(grads: &[Vec<f32>]) -> f64 {
+    grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Clip a gradient set to `max_norm` (no-op if already within). Returns the
+/// pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f64) -> f64 {
+    let norm = global_norm(grads);
+    if norm > max_norm && norm > 0.0 {
+        let scale = (max_norm / norm) as f32;
+        scale_grads(grads, scale);
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker_grads(n_workers: usize, val: f32) -> Vec<Vec<Vec<f32>>> {
+        (0..n_workers).map(|w| vec![vec![val * (w + 1) as f32; 4], vec![val; 2]]).collect()
+    }
+
+    #[test]
+    fn all_reduce_sums_across_workers() {
+        for n in [1usize, 2, 3, 4, 5, 8] {
+            let mut g = worker_grads(n, 1.0);
+            tree_all_reduce_sum(&mut g);
+            // tensor 0: sum over w of (w+1) = n(n+1)/2
+            let expect = (n * (n + 1) / 2) as f32;
+            assert_eq!(g[0][0], vec![expect; 4], "n={n}");
+            assert_eq!(g[0][1], vec![n as f32; 2], "n={n}");
+        }
+    }
+
+    #[test]
+    fn averaging_after_reduce() {
+        let mut g = worker_grads(4, 2.0);
+        tree_all_reduce_sum(&mut g);
+        scale_grads(&mut g[0].clone(), 0.25); // smoke: no panic
+        let mut w0 = g.swap_remove(0);
+        scale_grads(&mut w0, 1.0 / 4.0);
+        assert_eq!(w0[1], vec![2.0; 2]);
+    }
+
+    #[test]
+    fn clip_reduces_norm() {
+        let mut g = vec![vec![3.0f32, 4.0]]; // norm 5
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-9);
+        assert!((global_norm(&g) - 1.0).abs() < 1e-5);
+        // under the bound: untouched
+        let mut g2 = vec![vec![0.3f32, 0.4]];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn transfer_count_is_log_tree() {
+        // n workers, t tensors: (n-1) pair merges × t tensor transfers
+        let mut g = worker_grads(8, 1.0);
+        let transfers = tree_all_reduce_sum(&mut g);
+        assert_eq!(transfers, 7 * 2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data pipeline substrate: synthetic corpus (OpenWebText/C4 stand-in),
+//! byte-BPE tokenizer, and the deterministic sharded batch loader.
+
+pub mod loader;
+pub mod synth;
+pub mod tokenizer;
+
+pub use loader::{Batch, Loader};
+pub use synth::{SynthCorpus, SynthSpec};
+pub use tokenizer::Tokenizer;

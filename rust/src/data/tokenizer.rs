@@ -1,0 +1,143 @@
+//! Byte-level tokenizer with an optional tiny BPE merge table — the
+//! tokenization substrate for feeding real text through the pipeline
+//! (quickstart demo / fq_inference on text prompts).
+
+use std::collections::HashMap;
+
+/// Byte-level BPE tokenizer: ids 0..=255 are raw bytes, ids ≥256 are merges.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge list in priority order: (left, right) -> new id 256+i
+    merges: Vec<(u32, u32)>,
+    merge_rank: HashMap<(u32, u32), usize>,
+}
+
+impl Tokenizer {
+    /// A pure byte tokenizer (no merges).
+    pub fn bytes() -> Tokenizer {
+        Tokenizer { merges: vec![], merge_rank: HashMap::new() }
+    }
+
+    /// Train `n_merges` BPE merges over a corpus.
+    pub fn train(corpus: &[u8], n_merges: usize) -> Tokenizer {
+        let mut ids: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::new();
+        for step in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // deterministic tie-break: highest count, then smallest pair
+            let best = counts.iter().max_by_key(|(pair, &c)| (c, std::cmp::Reverse(**pair)));
+            let Some((&pair, &count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            let new_id = 256 + step as u32;
+            merges.push(pair);
+            ids = merge_pass(&ids, pair, new_id);
+        }
+        let merge_rank = merges.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        Tokenizer { merges, merge_rank }
+    }
+
+    /// Vocabulary size (256 + merges).
+    pub fn vocab(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Encode bytes to token ids.
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        // repeatedly apply the lowest-rank applicable merge
+        loop {
+            let mut best: Option<(usize, (u32, u32))> = None;
+            for w in ids.windows(2) {
+                if let Some(&rank) = self.merge_rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, (w[0], w[1])));
+                    }
+                }
+            }
+            match best {
+                Some((rank, pair)) => {
+                    ids = merge_pass(&ids, pair, 256 + rank as u32);
+                }
+                None => break,
+            }
+        }
+        ids
+    }
+
+    /// Decode token ids back to bytes.
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut out);
+        }
+        out
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+}
+
+fn merge_pass(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokenizer_roundtrip() {
+        let t = Tokenizer::bytes();
+        let text = b"hello, GaussWS \xf0\x9f\x8e\xb2";
+        assert_eq!(t.decode(&t.encode(text)), text);
+        assert_eq!(t.vocab(), 256);
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compression() {
+        let corpus = b"the cat sat on the mat. the cat sat on the hat. the cat ran.".repeat(20);
+        let t = Tokenizer::train(&corpus, 32);
+        assert!(t.vocab() > 256);
+        let ids = t.encode(&corpus);
+        assert!(ids.len() < corpus.len(), "{} !< {}", ids.len(), corpus.len());
+        assert_eq!(t.decode(&ids), corpus);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let corpus = b"abababab cdcdcdcd".repeat(10);
+        let a = Tokenizer::train(&corpus, 8);
+        let b = Tokenizer::train(&corpus, 8);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn unseen_text_still_roundtrips() {
+        let t = Tokenizer::train(b"aaaa bbbb aaaa bbbb", 4);
+        let novel = b"zzzz qqqq aaaa";
+        assert_eq!(t.decode(&t.encode(novel)), novel);
+    }
+}

@@ -1,0 +1,277 @@
+//! Figure experiments: multi-arm training runs regenerating the loss-curve
+//! and bitwidth figures (1b, 3a, 3b, 4, 5, F.1) at testbed scale, plus the
+//! Fig. D.1 consistency demo.
+
+use crate::config::schema::{Optimizer, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::pqt::bitwidth::bt_stats;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// One arm of a multi-run figure.
+#[derive(Debug, Clone)]
+pub struct Arm {
+    /// Paper-style label, e.g. "gaussws[od] lr=6e-4".
+    pub label: String,
+    /// Artifact tag without `.train`, e.g. "tiny_gpt2.gaussws_od".
+    pub artifact: String,
+    pub max_lr: f64,
+    pub min_lr: f64,
+    pub optimizer: Optimizer,
+    /// b_i weight decay. The paper uses 0.1 over 600k steps; short testbed
+    /// runs scale it up so the same fraction of annealing is observable
+    /// (decay^steps invariant — see EXPERIMENTS.md).
+    pub bi_weight_decay: f64,
+}
+
+impl Arm {
+    pub fn new(label: &str, artifact: &str, max_lr: f64) -> Arm {
+        Arm {
+            label: label.to_string(),
+            artifact: artifact.to_string(),
+            max_lr,
+            min_lr: max_lr / 10.0,
+            optimizer: Optimizer::AdamW,
+            bi_weight_decay: 5.0,
+        }
+    }
+
+    pub fn with_opt(mut self, opt: Optimizer) -> Arm {
+        self.optimizer = opt;
+        self
+    }
+}
+
+/// Run one arm for `steps` steps; returns the trainer (holding log + b_i).
+pub fn run_arm(
+    artifacts_dir: &str,
+    arm: &Arm,
+    steps: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<Trainer> {
+    let runtime = Runtime::new(artifacts_dir)?;
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: (steps / 10).max(1),
+        max_lr: arm.max_lr,
+        min_lr: arm.min_lr,
+        optimizer: arm.optimizer,
+        workers,
+        seed,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(runtime, &arm.artifact, cfg, &arm.label)?;
+    t.bi_weight_decay = arm.bi_weight_decay;
+    t.run(steps, 0)?;
+    Ok(t)
+}
+
+/// Run a set of arms and write per-arm CSVs plus a combined summary.
+pub fn run_figure(
+    fig: &str,
+    arms: &[Arm],
+    artifacts_dir: &str,
+    out_dir: &str,
+    steps: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<Vec<Trainer>> {
+    let mut out = Vec::new();
+    println!("== {fig}: {} arms × {steps} steps ==", arms.len());
+    for arm in arms {
+        let t0 = std::time::Instant::now();
+        let t = run_arm(artifacts_dir, arm, steps, workers, seed)?;
+        let fl = t.log.final_loss().unwrap_or(f64::NAN);
+        println!(
+            "  {:<38} final wma-loss {:.4}  div@{:?}  {:.0} tok/s  ({:.1}s)",
+            arm.label,
+            fl,
+            t.log.divergences.first(),
+            t.log.tokens_per_sec(),
+            t0.elapsed().as_secs_f64()
+        );
+        let dir = format!("{out_dir}/{fig}");
+        let mut log = t.log.clone();
+        log.name = arm.label.replace(['[', ']', '=', ' '], "_");
+        log.write_to(&dir)?;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Figure 1b arms: BF16 at two LRs vs GaussWS[all] vs DiffQ[all] at both.
+pub fn fig1b_arms(lr_hi: f64, lr_lo: f64) -> Vec<Arm> {
+    vec![
+        Arm::new(&format!("bf16 lr={lr_hi:.0e}"), "tiny_gpt2.bf16", lr_hi),
+        Arm::new(&format!("bf16 lr={lr_lo:.0e}"), "tiny_gpt2.bf16", lr_lo),
+        Arm::new(&format!("gaussws[all] lr={lr_hi:.0e}"), "tiny_gpt2.gaussws_all", lr_hi),
+        Arm::new(&format!("gaussws[all] lr={lr_lo:.0e}"), "tiny_gpt2.gaussws_all", lr_lo),
+        Arm::new(&format!("diffq[all] lr={lr_hi:.0e}"), "tiny_gpt2.diffq_all", lr_hi),
+        Arm::new(&format!("diffq[all] lr={lr_lo:.0e}"), "tiny_gpt2.diffq_all", lr_lo),
+    ]
+}
+
+/// Figure 3a arms: GaussWS restricted to each linear of the GPT2 block.
+pub fn fig3a_arms(lr: f64) -> Vec<Arm> {
+    ["qkv", "out", "up", "down", "od", "all"]
+        .iter()
+        .map(|p| Arm::new(&format!("gaussws[{p}]"), &format!("tiny_gpt2.gaussws_{p}"), lr))
+        .collect()
+}
+
+/// Figure 3b arms: Adam-mini vs AdamW on baseline / GaussWS / DiffQ.
+pub fn fig3b_arms(lr: f64) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    for (m, tag) in
+        [("bf16", "tiny_gpt2.bf16"), ("gaussws[all]", "tiny_gpt2.gaussws_all"), ("diffq[all]", "tiny_gpt2.diffq_all")]
+    {
+        arms.push(Arm::new(&format!("{m} adamw"), tag, lr));
+        arms.push(Arm::new(&format!("{m} adam-mini"), tag, lr).with_opt(Optimizer::AdamMini));
+    }
+    arms
+}
+
+/// Figure 4 arms: Llama2-style, baseline vs GaussWS vs DiffQ × optimizer.
+pub fn fig4_arms(lr: f64) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    for (m, tag) in [
+        ("bf16", "tiny_llama2.bf16"),
+        ("gaussws[all]", "tiny_llama2.gaussws_all"),
+        ("diffq[all]", "tiny_llama2.diffq_all"),
+    ] {
+        arms.push(Arm::new(&format!("{m} adamw"), tag, lr));
+        arms.push(Arm::new(&format!("{m} adam-mini"), tag, lr).with_opt(Optimizer::AdamMini));
+    }
+    arms
+}
+
+/// Figure F.1 arms: GaussWS with (b_init=8, b_target=6) vs default (6, 4).
+pub fn figf1_arms(lr: f64) -> Vec<Arm> {
+    vec![
+        Arm::new("bf16", "tiny_llama2.bf16", lr),
+        Arm::new("gaussws b6->4", "tiny_llama2.gaussws_all", lr),
+        Arm::new("gaussws b8->6", "tiny_llama2.gaussws_b8t6", lr),
+    ]
+}
+
+/// Stability probe (the paper's §4.1 claim that PQT mitigates BF16
+/// training instability): sweep aggressive learning rates and record which
+/// arms diverge. At paper scale the BF16 baseline destabilizes at 30B–200B
+/// tokens; at testbed scale we provoke it with LR instead.
+pub fn stability_arms(lrs: &[f64]) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    for &lr in lrs {
+        for (m, tag) in [
+            ("bf16", "tiny_gpt2.bf16"),
+            ("gaussws[all]", "tiny_gpt2.gaussws_all"),
+            ("diffq[all]", "tiny_gpt2.diffq_all"),
+        ] {
+            let mut a = Arm::new(&format!("{m} lr={lr:.0e}"), tag, lr);
+            a.min_lr = lr; // constant aggressive LR: no decay rescue
+            arms.push(a);
+        }
+    }
+    arms
+}
+
+/// Figure 5: per-layer b_t statistics from a trained PQT model.
+/// Returns (layer_name, mean, std, min, max, tier fractions ≤5/≤9/≤12).
+pub fn fig5_report(t: &Trainer) -> Vec<(String, f64, f64, f32, f32, [f64; 3])> {
+    t.bi_layer_names()
+        .iter()
+        .map(|name| {
+            let bt = t.bt_of(name).unwrap();
+            let s = bt_stats(&bt);
+            (name.clone(), s.mean, s.std, s.min, s.max, s.tier_frac)
+        })
+        .collect()
+}
+
+/// Render the Fig. 5 report as text.
+pub fn render_fig5(rows: &[(String, f64, f64, f32, f32, [f64; 3])]) -> String {
+    let mut out = String::from(
+        "Fig 5 — resulting bitwidth b_t per layer\nlayer                    mean   std    min    max   ≤5      ≤9      ≤12\n",
+    );
+    let mut all_tiers = [0f64; 3];
+    for (name, mean, std, min, max, tiers) in rows {
+        out.push_str(&format!(
+            "{name:<24} {mean:>5.2} {std:>6.3} {min:>6.2} {max:>6.2}  {:>5.1}%  {:>5.1}%  {:>5.1}%\n",
+            tiers[0] * 100.0,
+            tiers[1] * 100.0,
+            tiers[2] * 100.0
+        ));
+        for k in 0..3 {
+            all_tiers[k] += tiers[k];
+        }
+    }
+    if !rows.is_empty() {
+        let n = rows.len() as f64;
+        out.push_str(&format!(
+            "{:<24} {:>27}  {:>5.1}%  {:>5.1}%  {:>5.1}%\n",
+            "ALL",
+            "",
+            all_tiers[0] / n * 100.0,
+            all_tiers[1] / n * 100.0,
+            all_tiers[2] / n * 100.0
+        ));
+    }
+    out
+}
+
+/// Fig. D.1 demo: render the 4×4 inconsistency example.
+pub fn render_figd1(seed: u64) -> String {
+    let (w, bwd, fwd) = crate::mx::fig_d1_example(seed);
+    let fmt = |m: &[f64]| -> String {
+        let mut s = String::new();
+        for r in 0..4 {
+            s.push_str("    ");
+            for c in 0..4 {
+                s.push_str(&format!("{:>7.3}", m[r * 4 + c]));
+            }
+            s.push('\n');
+        }
+        s
+    };
+    let mut out = String::new();
+    out.push_str("Fig D.1 — vector-wise quantization fwd/bwd discrepancy (INT4, block 2)\n");
+    out.push_str("  original W ~ N(0,1):\n");
+    out.push_str(&fmt(&w));
+    out.push_str("  backward view (quantized along K of Wᵀ):\n");
+    out.push_str(&fmt(&bwd));
+    out.push_str("  forward view (quantized along K of W):\n");
+    out.push_str(&fmt(&fwd));
+    let mismatches = bwd.iter().zip(fwd.iter()).filter(|(a, b)| a != b).count();
+    out.push_str(&format!("  -> {mismatches}/16 elements differ between passes\n"));
+    out.push_str("  (square 32x32 blocks make the two views identical — see mx::consistency tests)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_construction() {
+        let arms = fig1b_arms(6e-4, 6e-5);
+        assert_eq!(arms.len(), 6);
+        assert!(arms[2].artifact.contains("gaussws_all"));
+        let f3 = fig3a_arms(6e-4);
+        assert_eq!(f3.len(), 6);
+        assert!(fig3b_arms(1e-3).iter().any(|a| a.optimizer == Optimizer::AdamMini));
+        assert_eq!(figf1_arms(1e-3).len(), 3);
+    }
+
+    #[test]
+    fn figd1_renders_discrepancy() {
+        let s = render_figd1(2026);
+        assert!(s.contains("differ between passes"));
+        // at least one element differs for this seed (checked in mx tests)
+        assert!(!s.contains("-> 0/16"));
+    }
+
+    #[test]
+    fn fig5_render_empty_safe() {
+        assert!(render_fig5(&[]).contains("Fig 5"));
+    }
+}

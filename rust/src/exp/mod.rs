@@ -1,0 +1,9 @@
+//! Experiment harness: one function per paper table/figure, shared by the
+//! CLI (`gaussws exp <id>`) and the bench binaries. Each returns structured
+//! results and writes CSV/JSON into the run directory.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;

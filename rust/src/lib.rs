@@ -1,0 +1,30 @@
+//! # GaussWS — Gaussian Weight Sampling for Pseudo-Quantization Training
+//!
+//! Reproduction of *"Gaussian Weight Sampling for Scalable, Efficient and
+//! Stable Pseudo-Quantization Training"* (Ahn & Yoo, 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1 (build-time)** — Pallas kernels for the Eq. 3 sampling op and the
+//!   Eq. 10 bitwise rounded-normal generator (`python/compile/kernels/`).
+//! * **L2 (build-time)** — GPT2/Llama2-style transformer fwd/bwd in JAX with
+//!   PQT linears (custom VJP, Eq. 4), lowered once to HLO text artifacts.
+//! * **L3 (this crate)** — the training framework: PJRT runtime that loads
+//!   the artifacts, rust-side optimizers + bitwidth management + seed tree,
+//!   data pipeline, metrics, checkpoints, and the benchmark/experiment
+//!   harness reproducing every table and figure of the paper.
+//!
+//! Python never runs on the training path; after `make artifacts` the rust
+//! binary is self-contained.
+
+pub mod config;
+pub mod exp;
+pub mod coordinator;
+pub mod data;
+pub mod mx;
+pub mod nn;
+pub mod numerics;
+pub mod pqt;
+pub mod prng;
+pub mod runtime;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,299 @@
+//! `gaussws` — the L3 launcher.
+//!
+//! Subcommands:
+//!   train   --artifact <tag> [--steps N --workers K --lr X --optimizer O]
+//!   train   --config <file.toml>
+//!   exp     fig1b|fig3a|fig3b|fig4|fig5|figf1  [--steps N --out runs]
+//!   tables  c1|b1
+//!   demo    figd1
+//!   quantize --checkpoint ck --artifact tag   (Table C.1 on a checkpoint)
+//!   info    (list artifacts in the manifest)
+
+use anyhow::{bail, Context, Result};
+use gaussws::config::schema::{Optimizer, RunConfig, TrainConfig};
+use gaussws::coordinator::Trainer;
+use gaussws::exp;
+use gaussws::runtime::Runtime;
+use gaussws::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("exp") => cmd_exp(args),
+        Some("tables") => cmd_tables(args),
+        Some("demo") => cmd_demo(args),
+        Some("info") => cmd_info(args),
+        Some("quantize") => cmd_quantize(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try: train|exp|tables|demo|quantize|info)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gaussws — Gaussian Weight Sampling PQT framework\n\
+         \n\
+         usage:\n\
+         \x20 gaussws train --artifact tiny_gpt2.gaussws_all [--steps 200] [--workers 1]\n\
+         \x20                [--lr 6e-4] [--optimizer adamw|adam-mini] [--seed 1234]\n\
+         \x20                [--checkpoint out.ck] [--artifacts-dir artifacts]\n\
+         \x20 gaussws train --config configs/run.toml\n\
+         \x20 gaussws exp fig1b|fig3a|fig3b|fig4|fig5|figf1|stability [--steps 120] [--out runs]\n\
+         \x20 gaussws tables c1|b1\n\
+         \x20 gaussws demo figd1\n\
+         \x20 gaussws quantize --checkpoint runs/x.ck --artifact tiny_gpt2.gaussws_all\n\
+         \x20 gaussws info"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts-dir", "artifacts").to_string()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (artifact, cfg, name) = if let Some(path) = args.get("config") {
+        let rc = RunConfig::load(path)?;
+        // the artifact tag is derived from the config's model+pqt or given
+        // explicitly via --artifact
+        let artifact = args
+            .get("artifact")
+            .map(String::from)
+            .unwrap_or_else(|| format!("tiny_{}.{}_all", rc.model.arch.name(), rc.pqt.method.name()));
+        (artifact, rc.train, rc.name)
+    } else {
+        let artifact = args
+            .get("artifact")
+            .context("--artifact or --config required (see `gaussws info` for tags)")?
+            .to_string();
+        let steps = args.usize_or("steps", 200);
+        let max_lr = args.f64_or("lr", 6e-4);
+        let cfg = TrainConfig {
+            steps,
+            warmup_steps: args.usize_or("warmup", (steps / 10).max(1)),
+            max_lr,
+            min_lr: args.f64_or("min-lr", max_lr / 10.0),
+            batch: 0, // batch comes from the artifact; field unused here
+            optimizer: Optimizer::parse(args.get_or("optimizer", "adamw"))?,
+            workers: args.usize_or("workers", 1),
+            seed: args.u64_or("seed", 1234),
+            grad_accum: args.usize_or("grad-accum", 1),
+            ..Default::default()
+        };
+        (artifact.clone(), cfg, artifact)
+    };
+
+    let steps = cfg.steps;
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    println!("platform: {}", runtime.platform());
+    let mut t = Trainer::new(runtime, &artifact, cfg, &name)?;
+    println!(
+        "training '{artifact}' — {} params, {} PQT layers, {} tok/step",
+        t.params.values().map(|v| v.len()).sum::<usize>(),
+        t.bi.len(),
+        t.tokens_per_step()
+    );
+    t.run(steps, args.usize_or("print-every", 10))?;
+    let out = args.get_or("out", "runs");
+    t.log.write_to(out)?;
+    println!("wrote {out}/{}.csv  ({:.0} tok/s)", t.log.name, t.log.tokens_per_sec());
+    if let Some(ck) = args.get("checkpoint") {
+        t.save_checkpoint(ck)?;
+        println!("checkpoint -> {ck}");
+    }
+    if !t.bi.is_empty() {
+        println!("{}", exp::render_fig5(&exp::fig5_report(&t)));
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).or(args
+        .command
+        .as_deref()
+        .filter(|_| false))
+        .context("exp needs a figure id: fig1b|fig3a|fig3b|fig4|fig5|figf1|stability")?;
+    let steps = args.usize_or("steps", 120);
+    let out = args.get_or("out", "runs");
+    let dir = artifacts_dir(args);
+    let workers = args.usize_or("workers", 1);
+    let seed = args.u64_or("seed", 1234);
+    let lr = args.f64_or("lr", 6e-4);
+
+    match which {
+        "fig1b" => {
+            exp::run_figure("fig1b", &exp::fig1b_arms(lr, lr / 10.0), &dir, out, steps, workers, seed)?;
+        }
+        "fig3a" => {
+            exp::run_figure("fig3a", &exp::fig3a_arms(lr), &dir, out, steps, workers, seed)?;
+        }
+        "fig3b" => {
+            exp::run_figure("fig3b", &exp::fig3b_arms(lr), &dir, out, steps, workers, seed)?;
+        }
+        "fig4" => {
+            let arms = exp::fig4_arms(args.f64_or("lr", 1e-3));
+            exp::run_figure("fig4", &arms, &dir, out, steps, workers, seed)?;
+        }
+        "figf1" => {
+            let arms = exp::figf1_arms(args.f64_or("lr", 1e-3));
+            exp::run_figure("figf1", &arms, &dir, out, steps, workers, seed)?;
+        }
+        "stability" => {
+            let lrs = [3e-3, 1e-2, 3e-2];
+            let arms = exp::stability_arms(&lrs);
+            let ts = exp::run_figure("stability", &arms, &dir, out, steps, workers, seed)?;
+            println!("\narm -> diverged?");
+            for (arm, t) in arms.iter().zip(&ts) {
+                println!(
+                    "  {:<28} {}",
+                    arm.label,
+                    if t.log.divergences.is_empty() { "stable".to_string() } else { format!("DIVERGED @ step {}", t.log.divergences[0]) }
+                );
+            }
+        }
+        "fig5" => {
+            // train the two PQT archs briefly, then report b_t statistics
+            for tag in ["tiny_gpt2.gaussws_all", "tiny_llama2.gaussws_all"] {
+                let arm = exp::Arm::new(tag, tag, lr);
+                let t = exp::run_arm(&dir, &arm, steps, workers, seed)?;
+                println!("\n== {tag} after {steps} steps ==");
+                println!("{}", exp::render_fig5(&exp::fig5_report(&t)));
+            }
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("c1") => print!("{}", exp::render_table_c1()),
+        Some("b1") => print!("{}", exp::render_table_b1()),
+        _ => bail!("tables needs c1|b1"),
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("figd1") => print!("{}", exp::render_figd1(args.u64_or("seed", 2026))),
+        _ => bail!("demo needs figd1"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = gaussws::runtime::Manifest::load(artifacts_dir(args))?;
+    println!("{} artifacts in {}/manifest.json:", m.artifacts.len(), m.dir.display());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {:<36} {:<5} {:>2} in / {:>2} out{}",
+            name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.meta_str("method").map(|s| format!("  [{s}]")).unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+/// `gaussws quantize`: load a training checkpoint into the pure-rust
+/// transformer and report eval loss with the linear weights fake-quantized
+/// (square 32x32 MX blocks) to each Table-C.1 datatype — the deployment-
+/// side validation of the paper's low-precision-FP claim.
+fn cmd_quantize(args: &Args) -> Result<()> {
+    use gaussws::config::schema::{Arch, ModelConfig};
+    use gaussws::coordinator::Checkpoint;
+    use gaussws::data::{SynthCorpus, SynthSpec};
+    use gaussws::mx::{quantize_square, ElemType};
+    use gaussws::nn::tensor::Mat;
+    use gaussws::nn::transformer::{Params, Transformer};
+    use gaussws::numerics::formats;
+
+    let ck_path = args.get("checkpoint").context("--checkpoint required")?;
+    let tag = args.get("artifact").context("--artifact required (for shapes/meta)")?;
+    let m = gaussws::runtime::Manifest::load(artifacts_dir(args))?;
+    let spec = m.get(&format!("{}.train", tag.trim_end_matches(".train")))?;
+    let arch = Arch::parse(spec.meta_str("arch").context("meta.arch")?)?;
+    let cfg = ModelConfig {
+        arch,
+        n_layer: spec.meta_usize("n_layer").context("n_layer")?,
+        d_model: spec.meta_usize("d_model").context("d_model")?,
+        n_head: spec.meta_usize("n_head").context("n_head")?,
+        d_ff: spec.meta_usize("d_ff").context("d_ff")?,
+        vocab: spec.meta_usize("vocab").context("vocab")?,
+        seq_len: spec.meta_usize("seq_len").context("seq_len")?,
+    };
+    let ck = Checkpoint::load(ck_path)?;
+    let mut tensors = std::collections::BTreeMap::new();
+    for name in spec.param_names() {
+        let shape = spec.param_shape(&name).context("shape")?;
+        let data = ck.get(&format!("param.{name}"))?.clone();
+        let (rows, cols) = match shape.len() {
+            2 => (shape[0], shape[1]),
+            _ => (1, shape[0]),
+        };
+        tensors.insert(name, Mat::from_vec(rows, cols, data));
+    }
+    let params = Params { tensors };
+    let model = Transformer::new(cfg.clone());
+
+    // held-out windows from the same corpus family as training
+    let corpus = SynthCorpus::generate(SynthSpec {
+        vocab: cfg.vocab,
+        len: 1 << 16,
+        seed: args.u64_or("seed", 1234) ^ 0xC0FFEE,
+        ..Default::default()
+    });
+    let eval = |p: &Params| -> f64 {
+        let mut total = 0.0;
+        let n = 8;
+        let seq = cfg.seq_len.min(64);
+        for k in 0..n {
+            let start = 500 + k * 1500;
+            let toks: Vec<usize> =
+                corpus.tokens[start..start + seq + 1].iter().map(|&t| t as usize).collect();
+            total += model.loss(p, &toks);
+        }
+        total / n as f64
+    };
+
+    println!("checkpoint {ck_path} (step {}), {} params", ck.step, params.param_count());
+    println!("{:<14} {:>10}", "datatype", "eval loss");
+    println!("{:<14} {:>10.4}", "f32 (master)", eval(&params));
+    for (name, fmt) in [
+        ("bf16", formats::BF16),
+        ("fp12_e4m7", formats::FP12_E4M7),
+        ("fp8_e3m4", formats::FP8_E3M4),
+        ("fp8_e4m3", formats::FP8_E4M3),
+        ("fp6_e3m2", formats::FP6_E3M2),
+        ("fp4_e2m1", formats::FP4_E2M1),
+    ] {
+        let mut q = params.clone();
+        for lname in Params::linear_names(&cfg) {
+            let mat = q.get_mut(&lname);
+            let w64: Vec<f64> = mat.data.iter().map(|&x| x as f64).collect();
+            let qq = quantize_square(&w64, mat.rows, mat.cols, 32, &ElemType::Fp(fmt));
+            for (dst, &src) in mat.data.iter_mut().zip(qq.data.iter()) {
+                *dst = src as f32;
+            }
+        }
+        println!("{:<14} {:>10.4}", name, eval(&q));
+    }
+    Ok(())
+}

@@ -1,0 +1,309 @@
+//! Microscaling (MX)-style blockwise quantization substrate.
+//!
+//! MX (Rouhani et al., 2023) groups tensor elements into blocks of 32 that
+//! share one power-of-two scale; each element is stored in a narrow internal
+//! datatype (INT4/INT8/FP8/...). The paper builds on two block geometries:
+//!
+//! * **vector-wise** — 1×32 blocks along one axis (standard MX). Quantizing
+//!   along the matmul inner dimension makes the forward and backward passes
+//!   see *different* quantized weights after transposition (Fig. D.1).
+//! * **square-blockwise** — 32×32 blocks, a special case of vector-wise
+//!   where adjacent vectors share the scale. Transpose-commutative, which is
+//!   why GaussWS groups parameters this way (§3.2).
+
+use crate::numerics::fpformat::FpFormat;
+
+/// Which axis 1×`block` vectors run along.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Blocks are contiguous within a row (along columns).
+    Row,
+    /// Blocks run down a column (along rows).
+    Col,
+}
+
+/// Internal element datatype for quantization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElemType {
+    /// Signed integer with `bits` total (symmetric, no zero-point).
+    Int { bits: u32 },
+    /// Low-precision float.
+    Fp(FpFormat),
+}
+
+impl ElemType {
+    /// Largest representable magnitude at scale 1.
+    pub fn max_code(&self) -> f64 {
+        match self {
+            ElemType::Int { bits } => ((1i64 << (bits - 1)) - 1) as f64,
+            ElemType::Fp(f) => f.max_finite(),
+        }
+    }
+
+    /// Quantize a pre-scaled value (RNE) and clamp to range.
+    pub fn quantize(&self, x: f64) -> f64 {
+        match self {
+            ElemType::Int { .. } => {
+                let m = self.max_code();
+                crate::numerics::fpformat::round_ties_even(x).clamp(-m, m)
+            }
+            ElemType::Fp(f) => f.cast(x),
+        }
+    }
+}
+
+/// Compute the power-of-two shared scale for a block with max-abs `amax`,
+/// mapping amax *within* the element type's range (MX convention): the
+/// smallest power of two such that `amax / scale <= max_code`, so the block
+/// maximum never clips.
+pub fn po2_scale(amax: f64, elem: &ElemType) -> f64 {
+    if amax == 0.0 {
+        return 1.0;
+    }
+    let target = elem.max_code();
+    (amax / target).log2().ceil().exp2()
+}
+
+/// A matrix fake-quantized blockwise: values are dequantized back to f64 so
+/// downstream math can compare against the original.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub data: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+    /// one scale per block, row-major over the block grid
+    pub scales: Vec<f64>,
+}
+
+/// Vector-wise fake quantization with 1×`block` groups along `axis`.
+pub fn quantize_vectorwise(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    axis: Axis,
+    elem: &ElemType,
+) -> Quantized {
+    assert_eq!(w.len(), rows * cols);
+    let mut out = vec![0f64; w.len()];
+    let mut scales = Vec::new();
+    match axis {
+        Axis::Row => {
+            for r in 0..rows {
+                for b0 in (0..cols).step_by(block) {
+                    let b1 = (b0 + block).min(cols);
+                    let amax = (b0..b1).map(|c| w[r * cols + c].abs()).fold(0.0, f64::max);
+                    let s = po2_scale(amax, elem);
+                    scales.push(s);
+                    for c in b0..b1 {
+                        out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
+                    }
+                }
+            }
+        }
+        Axis::Col => {
+            for c in 0..cols {
+                for b0 in (0..rows).step_by(block) {
+                    let b1 = (b0 + block).min(rows);
+                    let amax = (b0..b1).map(|r| w[r * cols + c].abs()).fold(0.0, f64::max);
+                    let s = po2_scale(amax, elem);
+                    scales.push(s);
+                    for r in b0..b1 {
+                        out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
+                    }
+                }
+            }
+        }
+    }
+    Quantized { data: out, rows, cols, scales }
+}
+
+/// Square-blockwise fake quantization with `block`×`block` groups — the
+/// GaussWS geometry. Transpose-commutative (see tests).
+pub fn quantize_square(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    elem: &ElemType,
+) -> Quantized {
+    assert_eq!(w.len(), rows * cols);
+    let mut out = vec![0f64; w.len()];
+    let grid_r = rows.div_ceil(block);
+    let grid_c = cols.div_ceil(block);
+    let mut scales = vec![0f64; grid_r * grid_c];
+    for br in 0..grid_r {
+        for bc in 0..grid_c {
+            let r1 = ((br + 1) * block).min(rows);
+            let c1 = ((bc + 1) * block).min(cols);
+            let mut amax = 0f64;
+            for r in br * block..r1 {
+                for c in bc * block..c1 {
+                    amax = amax.max(w[r * cols + c].abs());
+                }
+            }
+            let s = po2_scale(amax, elem);
+            scales[br * grid_c + bc] = s;
+            for r in br * block..r1 {
+                for c in bc * block..c1 {
+                    out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
+                }
+            }
+        }
+    }
+    Quantized { data: out, rows, cols, scales }
+}
+
+/// Square-blockwise max-abs of an f32 matrix — the `max_bl(|w|)` of Eq. 3.
+/// Returns the block grid row-major, `⌈rows/block⌉ × ⌈cols/block⌉`.
+pub fn block_absmax_f32(w: &[f32], rows: usize, cols: usize, block: usize) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols);
+    let grid_r = rows.div_ceil(block);
+    let grid_c = cols.div_ceil(block);
+    let mut out = vec![0f32; grid_r * grid_c];
+    for r in 0..rows {
+        let br = r / block;
+        let row = &w[r * cols..(r + 1) * cols];
+        for (bc, chunk) in row.chunks(block).enumerate() {
+            let mut m = out[br * grid_c + bc];
+            for &v in chunk {
+                let a = v.abs();
+                if a > m {
+                    m = a;
+                }
+            }
+            out[br * grid_c + bc] = m;
+        }
+    }
+    out
+}
+
+/// Transpose a row-major f64 matrix.
+pub fn transpose(w: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    let mut out = vec![0f64; w.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = w[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Philox4x32;
+
+    fn randn(seed: u64, n: usize) -> Vec<f64> {
+        let mut g = Philox4x32::new(seed);
+        let mut out = vec![0f64; n];
+        let mut i = 0;
+        while i + 1 < n {
+            let (a, b) = crate::prng::gauss::box_muller_pair(&mut g);
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < n {
+            out[i] = crate::prng::gauss::box_muller_pair(&mut g).0;
+        }
+        out
+    }
+
+    const INT4: ElemType = ElemType::Int { bits: 4 };
+
+    #[test]
+    fn quantization_is_idempotent() {
+        let w = randn(1, 16 * 16);
+        let q = quantize_square(&w, 16, 16, 4, &INT4);
+        let q2 = quantize_square(&q.data, 16, 16, 4, &INT4);
+        assert_eq!(q.data, q2.data);
+    }
+
+    #[test]
+    fn error_bounded_by_half_scale() {
+        let w = randn(2, 32 * 32);
+        let q = quantize_square(&w, 32, 32, 32, &INT4);
+        let s = q.scales[0];
+        for (a, b) in w.iter().zip(q.data.iter()) {
+            assert!((a - b).abs() <= 0.5 * s + 1e-12, "{a} vs {b} (s={s})");
+        }
+    }
+
+    #[test]
+    fn square_block_is_transpose_commutative() {
+        // quantize(W)^T == quantize(W^T) for square blocks — §2.1 claim.
+        let (rows, cols) = (64, 96);
+        let w = randn(3, rows * cols);
+        let q = quantize_square(&w, rows, cols, 32, &INT4);
+        let qt = transpose(&q.data, rows, cols);
+        let wt = transpose(&w, rows, cols);
+        let q_of_t = quantize_square(&wt, cols, rows, 32, &INT4);
+        assert_eq!(qt, q_of_t.data);
+    }
+
+    #[test]
+    fn vectorwise_is_not_transpose_commutative() {
+        // The Fig. D.1 failure: vector-wise along rows != along cols.
+        let (rows, cols) = (32, 32);
+        let w = randn(4, rows * cols);
+        let q = quantize_vectorwise(&w, rows, cols, 2, Axis::Row, &INT4);
+        let qt = transpose(&q.data, rows, cols);
+        let wt = transpose(&w, rows, cols);
+        let q_of_t = quantize_vectorwise(&wt, cols, rows, 2, Axis::Row, &INT4);
+        assert_ne!(qt, q_of_t.data, "vector-wise should NOT commute with transpose");
+    }
+
+    #[test]
+    fn po2_scales_are_powers_of_two() {
+        let w = randn(5, 64 * 64);
+        let q = quantize_square(&w, 64, 64, 32, &INT4);
+        for &s in &q.scales {
+            assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of two");
+        }
+    }
+
+    #[test]
+    fn block_absmax_matches_naive() {
+        let w: Vec<f32> = randn(6, 64 * 48).iter().map(|&x| x as f32).collect();
+        let (rows, cols, block) = (64, 48, 16);
+        let got = block_absmax_f32(&w, rows, cols, block);
+        let grid_c = cols / block;
+        for br in 0..rows / block {
+            for bc in 0..grid_c {
+                let mut m = 0f32;
+                for r in br * block..(br + 1) * block {
+                    for c in bc * block..(bc + 1) * block {
+                        m = m.max(w[r * cols + c].abs());
+                    }
+                }
+                assert_eq!(got[br * grid_c + bc], m);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_edges_handled() {
+        // rows/cols not multiples of the block size
+        let w = randn(7, 37 * 45);
+        let q = quantize_square(&w, 37, 45, 32, &INT4);
+        assert_eq!(q.scales.len(), 2 * 2);
+        let v = quantize_vectorwise(&w, 37, 45, 32, Axis::Row, &INT4);
+        assert_eq!(v.data.len(), w.len());
+        let m = block_absmax_f32(&w.iter().map(|&x| x as f32).collect::<Vec<_>>(), 37, 45, 32);
+        assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn fp_elem_type_quantizes_with_format() {
+        use crate::numerics::fpformat::formats::FP8_E4M3;
+        let e = ElemType::Fp(FP8_E4M3);
+        let w = randn(8, 32 * 32);
+        let q = quantize_square(&w, 32, 32, 32, &e);
+        // every dequantized value representable in e4m3 at its scale
+        for (i, &v) in q.data.iter().enumerate() {
+            let s = q.scales[0];
+            assert!(FP8_E4M3.is_representable(v / s), "elem {i}: {v}");
+        }
+    }
+}

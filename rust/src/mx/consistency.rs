@@ -1,0 +1,159 @@
+//! Forward/backward consistency analysis (paper §2.1 and Figure D.1).
+//!
+//! An MX matmul quantizes `W` along the inner dimension. In the forward pass
+//! of `T = A·W` the inner dim of `W` is its rows; in the backward pass
+//! `∂L/∂A = ∂L/∂T · Wᵀ` the inner dim of `Wᵀ` is the *columns* of `W`.
+//! Vector-wise scales therefore differ between the two passes, so the network
+//! effectively trains through a different weight matrix than it evaluates.
+//! Square 32×32 blocks make the two views identical.
+
+use super::block::{quantize_square, quantize_vectorwise, transpose, Axis, ElemType, Quantized};
+
+/// Result of a consistency measurement on one matrix.
+#[derive(Debug, Clone)]
+pub struct ConsistencyReport {
+    /// Fraction of elements whose fake-quantized value differs between the
+    /// forward view and the (transposed) backward view.
+    pub mismatch_fraction: f64,
+    /// Mean |forward − backward| over all elements.
+    pub mean_abs_gap: f64,
+    /// Max |forward − backward|.
+    pub max_abs_gap: f64,
+    /// RMS quantization error of the forward view vs the original weights.
+    pub rms_error_fwd: f64,
+}
+
+/// Quantize `w` for the forward pass (blocks along `fwd_axis`) and for the
+/// backward pass (quantize `wᵀ` along the same logical axis, transpose
+/// back), then compare element-wise.
+pub fn measure_vectorwise(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    elem: &ElemType,
+) -> ConsistencyReport {
+    // Forward: inner dim = rows of W -> 1×block vectors down the columns.
+    let fwd = quantize_vectorwise(w, rows, cols, block, Axis::Col, elem);
+    // Backward: W^T with inner dim = rows of W^T = cols of W.
+    let wt = transpose(w, rows, cols);
+    let bwd_t = quantize_vectorwise(&wt, cols, rows, block, Axis::Col, elem);
+    let bwd = transpose(&bwd_t.data, cols, rows);
+    compare(w, &fwd, &bwd)
+}
+
+/// Same measurement with square-blockwise quantization: the report's
+/// mismatch fraction is provably zero.
+pub fn measure_square(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    elem: &ElemType,
+) -> ConsistencyReport {
+    let fwd = quantize_square(w, rows, cols, block, elem);
+    let wt = transpose(w, rows, cols);
+    let bwd_t = quantize_square(&wt, cols, rows, block, elem);
+    let bwd = transpose(&bwd_t.data, cols, rows);
+    compare(w, &fwd, &bwd)
+}
+
+fn compare(w: &[f64], fwd: &Quantized, bwd: &[f64]) -> ConsistencyReport {
+    let n = w.len() as f64;
+    let mut mismatches = 0usize;
+    let mut sum_gap = 0f64;
+    let mut max_gap = 0f64;
+    let mut sum_err2 = 0f64;
+    for i in 0..w.len() {
+        let gap = (fwd.data[i] - bwd[i]).abs();
+        if gap > 0.0 {
+            mismatches += 1;
+        }
+        sum_gap += gap;
+        max_gap = max_gap.max(gap);
+        let e = fwd.data[i] - w[i];
+        sum_err2 += e * e;
+    }
+    ConsistencyReport {
+        mismatch_fraction: mismatches as f64 / n,
+        mean_abs_gap: sum_gap / n,
+        max_abs_gap: max_gap,
+        rms_error_fwd: (sum_err2 / n).sqrt(),
+    }
+}
+
+/// The exact Figure D.1 demonstration: a 4×4 `N(0,1)` matrix, INT4 internal
+/// type, block size 2, vector-wise quantization. Returns the original, the
+/// backward-view and forward-view fake-quantized matrices.
+pub fn fig_d1_example(seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    use crate::prng::gauss::box_muller_pair;
+    use crate::prng::Philox4x32;
+    let mut g = Philox4x32::new(seed);
+    let mut w = vec![0f64; 16];
+    for i in 0..8 {
+        let (a, b) = box_muller_pair(&mut g);
+        w[2 * i] = a;
+        w[2 * i + 1] = b;
+    }
+    let elem = ElemType::Int { bits: 4 };
+    let bwd = {
+        let wt = transpose(&w, 4, 4);
+        let q = quantize_vectorwise(&wt, 4, 4, 2, Axis::Col, &elem);
+        transpose(&q.data, 4, 4)
+    };
+    let fwd = quantize_vectorwise(&w, 4, 4, 2, Axis::Col, &elem).data;
+    (w, bwd, fwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::gauss::box_muller_pair;
+    use crate::prng::Philox4x32;
+
+    fn randn(seed: u64, n: usize) -> Vec<f64> {
+        let mut g = Philox4x32::new(seed);
+        (0..n).map(|_| box_muller_pair(&mut g).0).collect()
+    }
+
+    const INT4: ElemType = ElemType::Int { bits: 4 };
+
+    #[test]
+    fn square_blocks_are_always_consistent() {
+        for seed in 0..5 {
+            let w = randn(seed, 96 * 64);
+            let rep = measure_square(&w, 96, 64, 32, &INT4);
+            assert_eq!(rep.mismatch_fraction, 0.0, "seed {seed}: {rep:?}");
+            assert_eq!(rep.max_abs_gap, 0.0);
+        }
+    }
+
+    #[test]
+    fn vectorwise_blocks_are_inconsistent() {
+        let w = randn(10, 96 * 64);
+        let rep = measure_vectorwise(&w, 96, 64, 32, &INT4);
+        assert!(rep.mismatch_fraction > 0.05, "expected visible mismatch: {rep:?}");
+        assert!(rep.max_abs_gap > 0.0);
+    }
+
+    #[test]
+    fn fig_d1_reproduces_discrepancy() {
+        let (w, bwd, fwd) = fig_d1_example(2026);
+        assert_eq!(w.len(), 16);
+        assert_ne!(bwd, fwd, "Fig D.1: fwd and bwd views must differ");
+    }
+
+    #[test]
+    fn quantization_error_similar_between_geometries() {
+        // Square blocks fix consistency without materially worse RMS error.
+        let w = randn(11, 128 * 128);
+        let rv = measure_vectorwise(&w, 128, 128, 32, &INT4);
+        let rs = measure_square(&w, 128, 128, 32, &INT4);
+        assert!(
+            rs.rms_error_fwd < rv.rms_error_fwd * 2.5,
+            "square RMS {} vs vector {}",
+            rs.rms_error_fwd,
+            rv.rms_error_fwd
+        );
+    }
+}

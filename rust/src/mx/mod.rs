@@ -1,0 +1,10 @@
+//! Microscaling (MX) quantization substrate: blockwise scaling geometries
+//! and the forward/backward consistency analysis of §2.1 / Fig. D.1.
+
+pub mod block;
+pub mod consistency;
+
+pub use block::{
+    block_absmax_f32, quantize_square, quantize_vectorwise, transpose, Axis, ElemType, Quantized,
+};
+pub use consistency::{fig_d1_example, measure_square, measure_vectorwise, ConsistencyReport};

@@ -1,0 +1,11 @@
+//! Neural-network substrate: f32 tensor ops, a forward-only GPT2/Llama2
+//! transformer (evaluation path), and the rust-side optimizers that apply
+//! HLO-computed gradients.
+
+pub mod optim;
+pub mod tensor;
+pub mod transformer;
+
+pub use optim::{AdamMini, AdamW, LrSchedule, Opt};
+pub use tensor::Mat;
+pub use transformer::{Params, Transformer};

@@ -1,0 +1,158 @@
+//! AdamW (Loshchilov & Hutter, 2019) with decoupled weight decay — the
+//! baseline optimizer of the paper's experiments (Appendix E).
+
+/// AdamW state and hyperparameters for a set of parameter tensors.
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    /// first/second moment per parameter tensor
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl AdamW {
+    /// `sizes[i]` is the element count of tensor `i`.
+    pub fn new(sizes: &[usize], lr: f64, beta1: f64, beta2: f64, eps: f64, wd: f64) -> Self {
+        AdamW {
+            lr,
+            beta1,
+            beta2,
+            eps,
+            weight_decay: wd,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+        }
+    }
+
+    /// Number of managed tensors.
+    pub fn n_tensors(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Optimizer-state memory in bytes (2 f32 moments per parameter).
+    pub fn state_bytes(&self) -> usize {
+        self.m.iter().map(|x| x.len()).sum::<usize>() * 8
+    }
+
+    /// Advance the shared timestep. Call once per step, before `update`.
+    pub fn step_begin(&mut self) {
+        self.t += 1;
+    }
+
+    /// Current timestep.
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Update tensor `idx` in place given its gradient. `decay` toggles
+    /// weight decay for this tensor (off for biases/norms, per convention).
+    pub fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], decay: bool) {
+        assert_eq!(w.len(), g.len());
+        assert_eq!(w.len(), self.m[idx].len());
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr = self.lr;
+        let wd = if decay { self.weight_decay } else { 0.0 };
+        let m = &mut self.m[idx];
+        let v = &mut self.v[idx];
+        for i in 0..w.len() {
+            let gi = g[i] as f64;
+            let mi = b1 * m[i] as f64 + (1.0 - b1) * gi;
+            let vi = b2 * v[i] as f64 + (1.0 - b2) * gi * gi;
+            m[i] = mi as f32;
+            v[i] = vi as f32;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            let upd = lr * (mhat / (vhat.sqrt() + self.eps) + wd * w[i] as f64);
+            w[i] = (w[i] as f64 - upd) as f32;
+        }
+    }
+
+    /// Serialize moments (for checkpoints): flat (m, v) per tensor.
+    pub fn export_state(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (self.m.clone(), self.v.clone())
+    }
+
+    /// Restore moments and timestep.
+    pub fn import_state(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, t: u64) {
+        assert_eq!(m.len(), self.m.len());
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(w) = 0.5*(w-3)^2, grad = w-3
+        let mut opt = AdamW::new(&[1], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        let mut w = vec![0.0f32];
+        for _ in 0..500 {
+            opt.step_begin();
+            let g = vec![w[0] - 3.0];
+            opt.update(0, &mut w, &g, false);
+        }
+        assert!((w[0] - 3.0).abs() < 1e-2, "w={}", w[0]);
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled() {
+        // zero gradient + decay shrinks weights multiplicatively
+        let mut opt = AdamW::new(&[1], 0.1, 0.9, 0.999, 1e-8, 0.5);
+        let mut w = vec![1.0f32];
+        opt.step_begin();
+        opt.update(0, &mut w, &[0.0], true);
+        assert!((w[0] - (1.0 - 0.1 * 0.5)).abs() < 1e-6);
+        // and decay=false leaves it alone under zero grad
+        let mut w2 = vec![1.0f32];
+        let mut opt2 = AdamW::new(&[1], 0.1, 0.9, 0.999, 1e-8, 0.5);
+        opt2.step_begin();
+        opt2.update(0, &mut w2, &[0.0], false);
+        assert_eq!(w2[0], 1.0);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // bias correction makes the first Adam step ≈ lr * sign(g)
+        let mut opt = AdamW::new(&[1], 0.01, 0.9, 0.999, 1e-12, 0.0);
+        let mut w = vec![0.0f32];
+        opt.step_begin();
+        opt.update(0, &mut w, &[5.0], false);
+        assert!((w[0] + 0.01).abs() < 1e-4, "w={}", w[0]);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut opt = AdamW::new(&[3], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        opt.step_begin();
+        opt.update(0, &mut w, &[0.1, 0.2, 0.3], false);
+        let (m, v) = opt.export_state();
+        let mut opt2 = AdamW::new(&[3], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        opt2.import_state(m, v, opt.t());
+        let mut w2 = w.clone();
+        opt.step_begin();
+        opt2.step_begin();
+        opt.update(0, &mut w, &[0.1, 0.2, 0.3], false);
+        opt2.update(0, &mut w2, &[0.1, 0.2, 0.3], false);
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let opt = AdamW::new(&[100, 50], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        assert_eq!(opt.state_bytes(), 150 * 8);
+    }
+}

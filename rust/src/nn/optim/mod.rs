@@ -1,0 +1,47 @@
+//! Optimizers (AdamW, Adam-mini) and LR schedules — the rust side of the
+//! training step: the HLO artifact computes (loss, grads); these apply them.
+
+pub mod adamini;
+pub mod adamw;
+pub mod schedule;
+
+pub use adamini::AdamMini;
+pub use adamw::AdamW;
+pub use schedule::{Decay, LrSchedule};
+
+/// A unified handle over the two optimizers so the trainer is generic.
+#[derive(Debug, Clone)]
+pub enum Opt {
+    AdamW(AdamW),
+    AdamMini(AdamMini),
+}
+
+impl Opt {
+    pub fn step_begin(&mut self) {
+        match self {
+            Opt::AdamW(o) => o.step_begin(),
+            Opt::AdamMini(o) => o.step_begin(),
+        }
+    }
+
+    pub fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], decay: bool) {
+        match self {
+            Opt::AdamW(o) => o.update(idx, w, g, decay),
+            Opt::AdamMini(o) => o.update(idx, w, g, decay),
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f64) {
+        match self {
+            Opt::AdamW(o) => o.lr = lr,
+            Opt::AdamMini(o) => o.lr = lr,
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            Opt::AdamW(o) => o.state_bytes(),
+            Opt::AdamMini(o) => o.state_bytes(),
+        }
+    }
+}

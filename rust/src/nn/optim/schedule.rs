@@ -1,0 +1,92 @@
+//! Learning-rate schedules. The paper uses linear warmup followed by a
+//! linear decay from `max_lr` to `min_lr` (Appendix E).
+
+/// Schedule shape after warmup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decay {
+    Linear,
+    Cosine,
+    /// Hold at max_lr after warmup (for overhead benches where the LR is
+    /// irrelevant).
+    Constant,
+}
+
+/// A warmup + decay LR schedule over a fixed horizon.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub max_lr: f64,
+    pub min_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub decay: Decay,
+}
+
+impl LrSchedule {
+    pub fn linear(max_lr: f64, min_lr: f64, warmup: usize, total: usize) -> Self {
+        LrSchedule { max_lr, min_lr, warmup_steps: warmup, total_steps: total, decay: Decay::Linear }
+    }
+
+    /// LR at step `t` (0-based).
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            // linear warmup from 0 (exclusive) to max_lr
+            return self.max_lr * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let span = self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let p = ((t - self.warmup_steps) as f64 / span as f64).clamp(0.0, 1.0);
+        match self.decay {
+            Decay::Linear => self.max_lr + (self.min_lr - self.max_lr) * p,
+            Decay::Cosine => {
+                self.min_lr
+                    + 0.5 * (self.max_lr - self.min_lr) * (1.0 + (std::f64::consts::PI * p).cos())
+            }
+            Decay::Constant => self.max_lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_to_max() {
+        let s = LrSchedule::linear(1e-3, 1e-4, 10, 100);
+        assert!(s.at(0) > 0.0);
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_decays_to_min() {
+        let s = LrSchedule::linear(1e-3, 1e-4, 10, 100);
+        assert!((s.at(100) - 1e-4).abs() < 1e-12);
+        assert!(s.at(50) < s.at(20));
+        // beyond the horizon clamps at min
+        assert!((s.at(500) - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_midpoint() {
+        let s = LrSchedule {
+            max_lr: 1.0,
+            min_lr: 0.0,
+            warmup_steps: 0,
+            total_steps: 100,
+            decay: Decay::Cosine,
+        };
+        assert!((s.at(50) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn constant_holds() {
+        let s = LrSchedule {
+            max_lr: 0.5,
+            min_lr: 0.1,
+            warmup_steps: 2,
+            total_steps: 10,
+            decay: Decay::Constant,
+        };
+        assert_eq!(s.at(5), 0.5);
+    }
+}

@@ -1,0 +1,262 @@
+//! Minimal row-major f32 tensor ops for the rust inference path
+//! (fake-quantized evaluation, Table C.1 validation) and L3 benchmarks.
+//!
+//! Training math runs in the AOT-compiled HLO (L2); this module only needs
+//! forward-pass ops, so it stays small and predictable. The matmul is
+//! cache-blocked with a transposed-B inner kernel — enough to evaluate
+//! multi-million-parameter models in seconds on the 1-core testbed.
+
+/// 2-D row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+}
+
+/// `C = A · B` where `A` is (m,k) and `b_t` is **B transposed** (n,k).
+/// Transposing B makes both inner loops unit-stride.
+pub fn matmul_bt(a: &Mat, b_t: &Mat, out: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b_t.rows);
+    assert_eq!(b_t.cols, k);
+    assert_eq!((out.rows, out.cols), (m, n));
+    for i in 0..m {
+        let ar = a.row(i);
+        let or = &mut out.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = b_t.row(j);
+            let mut acc = 0f32;
+            // the compiler vectorizes this reliably
+            for (x, y) in ar.iter().zip(br.iter()) {
+                acc += x * y;
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+/// `C = A · B` with B in natural (k,n) layout (transposes internally).
+pub fn matmul(a: &Mat, b: &Mat, out: &mut Mat) {
+    let bt = b.transpose();
+    matmul_bt(a, &bt, out);
+}
+
+/// In-place row-wise softmax with max-subtraction, optionally causal
+/// (row `i` attends to columns `0..=i+offset`).
+pub fn softmax_rows(x: &mut Mat, causal_offset: Option<usize>) {
+    for r in 0..x.rows {
+        let limit = match causal_offset {
+            Some(off) => (r + off + 1).min(x.cols),
+            None => x.cols,
+        };
+        let row = &mut x.data[r * x.cols..(r + 1) * x.cols];
+        let mx = row[..limit].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in row[..limit].iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row[..limit].iter_mut() {
+            *v *= inv;
+        }
+        for v in row[limit..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// GELU (tanh approximation, as in GPT2).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f64).tanh() as f32)
+}
+
+/// SiLU (swish), used by Llama's SwiGLU MLP.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// LayerNorm over the last dim with learned gain/bias.
+pub fn layer_norm(x: &mut Mat, gain: &[f32], bias: &[f32], eps: f32) {
+    assert_eq!(gain.len(), x.cols);
+    assert_eq!(bias.len(), x.cols);
+    for r in 0..x.rows {
+        let row = &mut x.data[r * x.cols..(r + 1) * x.cols];
+        let mean = row.iter().sum::<f32>() / row.len() as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gain[i] + bias[i];
+        }
+    }
+}
+
+/// RMSNorm over the last dim with learned gain (Llama-style).
+pub fn rms_norm(x: &mut Mat, gain: &[f32], eps: f32) {
+    assert_eq!(gain.len(), x.cols);
+    for r in 0..x.rows {
+        let row = &mut x.data[r * x.cols..(r + 1) * x.cols];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = *v * inv * gain[i];
+        }
+    }
+}
+
+/// Rotary position embedding applied in-place to a (seq, d) matrix where
+/// consecutive pairs (2i, 2i+1) rotate with angle `pos / theta^(2i/d)`.
+pub fn rope(x: &mut Mat, theta: f32) {
+    let d = x.cols;
+    for pos in 0..x.rows {
+        let row = &mut x.data[pos * d..(pos + 1) * d];
+        let mut i = 0;
+        while i + 1 < d {
+            let freq = 1.0 / theta.powf(i as f32 / d as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let (a, b) = (row[i], row[i + 1]);
+            row[i] = a * cos - b * sin;
+            row[i + 1] = a * sin + b * cos;
+            i += 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let mut c = Mat::zeros(2, 2);
+        matmul(&a, &b, &mut c);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        use crate::testing::prop::{check, Gen};
+        check("matmul vs naive", 10, |g: &mut Gen| {
+            let (m, k, n) = (g.usize_in(1, 17), g.usize_in(1, 23), g.usize_in(1, 13));
+            let a = Mat::from_vec(m, k, g.normal_vec_f32(m * k));
+            let b = Mat::from_vec(k, n, g.normal_vec_f32(k * n));
+            let mut c = Mat::zeros(m, n);
+            matmul(&a, &b, &mut c);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for t in 0..k {
+                        acc += a.at(i, t) as f64 * b.at(t, j) as f64;
+                    }
+                    if (acc as f32 - c.at(i, j)).abs() > 1e-3 {
+                        return Err(format!("({i},{j}): {} vs {}", acc, c.at(i, j)));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x, None);
+        for r in 0..2 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_masks_future() {
+        let mut x = Mat::from_vec(3, 3, vec![1.0; 9]);
+        softmax_rows(&mut x, Some(0));
+        assert_eq!(x.row(0), &[1.0, 0.0, 0.0]);
+        assert!((x.at(1, 0) - 0.5).abs() < 1e-6);
+        assert_eq!(x.at(1, 2), 0.0);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let gain = vec![1.0; 4];
+        let bias = vec![0.0; 4];
+        layer_norm(&mut x, &gain, &bias, 1e-5);
+        let mean: f32 = x.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = x.row(0).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rms_norm_unit_rms() {
+        let mut x = Mat::from_vec(1, 4, vec![2.0, -2.0, 2.0, -2.0]);
+        rms_norm(&mut x, &[1.0; 4], 1e-6);
+        let ms: f32 = x.row(0).iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms() {
+        let mut x = Mat::from_vec(3, 4, (0..12).map(|i| i as f32).collect());
+        let orig = x.clone();
+        rope(&mut x, 10000.0);
+        for r in 0..3 {
+            for p in 0..2 {
+                let n0 = orig.at(r, 2 * p).hypot(orig.at(r, 2 * p + 1));
+                let n1 = x.at(r, 2 * p).hypot(x.at(r, 2 * p + 1));
+                assert!((n0 - n1).abs() < 1e-4);
+            }
+        }
+        // position 0 is unrotated
+        assert_eq!(x.row(0), orig.row(0));
+    }
+
+    #[test]
+    fn activations_reference_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(1.0) - 0.7311).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,393 @@
+//! Forward-only GPT2/Llama2-style transformer for the rust evaluation path:
+//! perplexity of fake-quantized checkpoints (Table C.1 / FP6–FP12 claims)
+//! and L3 overhead benchmarks. Training runs through the L2 HLO artifacts.
+//!
+//! Weight layout matches `python/compile/model.py` exactly (see the
+//! manifest ordering in `runtime::artifact`), so HLO-trained parameters
+//! load directly.
+
+use super::tensor::{
+    gelu, layer_norm, matmul_bt, rms_norm, rope, silu, softmax_rows, Mat,
+};
+use crate::config::schema::{Arch, ModelConfig};
+use crate::prng::Philox4x32;
+use std::collections::BTreeMap;
+
+/// All parameters of the model, keyed by qualified name. Linear weights are
+/// stored **transposed** (out_features × in_features, like torch) so the
+/// forward pass can use the unit-stride `matmul_bt` kernel directly.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub tensors: BTreeMap<String, Mat>,
+}
+
+impl Params {
+    pub fn get(&self, k: &str) -> &Mat {
+        self.tensors.get(k).unwrap_or_else(|| panic!("missing tensor '{k}'"))
+    }
+
+    pub fn get_mut(&mut self, k: &str) -> &mut Mat {
+        self.tensors.get_mut(k).unwrap_or_else(|| panic!("missing tensor '{k}'"))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|m| m.data.len()).sum()
+    }
+
+    /// Names of the per-block linear weights, in (block, Fig. 5) order.
+    pub fn linear_names(cfg: &ModelConfig) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in 0..cfg.n_layer {
+            for name in cfg.arch.linear_names() {
+                out.push(format!("blk{l}.{name}"));
+            }
+        }
+        out
+    }
+}
+
+/// The model: config + helpers. Parameters live in [`Params`] so callers
+/// can mutate/quantize them freely between forwards.
+#[derive(Debug, Clone)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+}
+
+impl Transformer {
+    pub fn new(cfg: ModelConfig) -> Self {
+        cfg.validate().expect("invalid model config");
+        Transformer { cfg }
+    }
+
+    /// GPT2-style init (N(0, 0.02), scaled residual projections).
+    pub fn init_params(&self, seed: u64) -> Params {
+        let cfg = &self.cfg;
+        let mut g = Philox4x32::new(seed);
+        let mut tensors = BTreeMap::new();
+        let mut randn = |rows: usize, cols: usize, std: f32| -> Mat {
+            let mut m = Mat::zeros(rows, cols);
+            let mut i = 0;
+            while i < m.data.len() {
+                let (a, b) = crate::prng::gauss::box_muller_pair(&mut g);
+                m.data[i] = a as f32 * std;
+                if i + 1 < m.data.len() {
+                    m.data[i + 1] = b as f32 * std;
+                }
+                i += 2;
+            }
+            m
+        };
+        let d = cfg.d_model;
+        let resid_std = 0.02 / (2.0 * cfg.n_layer as f32).sqrt();
+        tensors.insert("embed".into(), randn(cfg.vocab, d, 0.02));
+        if cfg.arch == Arch::Gpt2 {
+            tensors.insert("pos_embed".into(), randn(cfg.seq_len, d, 0.01));
+        }
+        for l in 0..cfg.n_layer {
+            let p = |s: &str| format!("blk{l}.{s}");
+            match cfg.arch {
+                Arch::Gpt2 => {
+                    tensors.insert(p("qkv"), randn(3 * d, d, 0.02));
+                    tensors.insert(p("out"), randn(d, d, resid_std));
+                    tensors.insert(p("up"), randn(cfg.d_ff, d, 0.02));
+                    tensors.insert(p("down"), randn(d, cfg.d_ff, resid_std));
+                    tensors.insert(p("ln1.g"), Mat::from_vec(1, d, vec![1.0; d]));
+                    tensors.insert(p("ln1.b"), Mat::zeros(1, d));
+                    tensors.insert(p("ln2.g"), Mat::from_vec(1, d, vec![1.0; d]));
+                    tensors.insert(p("ln2.b"), Mat::zeros(1, d));
+                }
+                Arch::Llama2 => {
+                    tensors.insert(p("q"), randn(d, d, 0.02));
+                    tensors.insert(p("k"), randn(d, d, 0.02));
+                    tensors.insert(p("v"), randn(d, d, 0.02));
+                    tensors.insert(p("out"), randn(d, d, resid_std));
+                    tensors.insert(p("gate"), randn(cfg.d_ff, d, 0.02));
+                    tensors.insert(p("up"), randn(cfg.d_ff, d, 0.02));
+                    tensors.insert(p("down"), randn(d, cfg.d_ff, resid_std));
+                    tensors.insert(p("ln1.g"), Mat::from_vec(1, d, vec![1.0; d]));
+                    tensors.insert(p("ln2.g"), Mat::from_vec(1, d, vec![1.0; d]));
+                }
+            }
+        }
+        tensors.insert(
+            "lnf.g".into(),
+            Mat::from_vec(1, d, vec![1.0; d]),
+        );
+        if cfg.arch == Arch::Gpt2 {
+            tensors.insert("lnf.b".into(), Mat::zeros(1, d));
+        }
+        // output head tied to embed (we read "embed" for the head)
+        Params { tensors }
+    }
+
+    /// Forward one sequence of token ids; returns logits (seq × vocab).
+    pub fn forward(&self, params: &Params, tokens: &[usize]) -> Mat {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        assert!(t <= cfg.seq_len, "sequence longer than seq_len");
+        let d = cfg.d_model;
+        let embed = params.get("embed");
+        let mut x = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            x.data[i * d..(i + 1) * d].copy_from_slice(embed.row(tok));
+        }
+        if cfg.arch == Arch::Gpt2 {
+            let pos = params.get("pos_embed");
+            for i in 0..t {
+                for j in 0..d {
+                    x.data[i * d + j] += pos.at(i, j);
+                }
+            }
+        }
+
+        for l in 0..cfg.n_layer {
+            let p = |s: &str| format!("blk{l}.{s}");
+            // ---- attention sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln1.g")).data,
+                    &params.get(&p("ln1.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln1.g")).data, 1e-5),
+            }
+            let (q, k, v) = match cfg.arch {
+                Arch::Gpt2 => {
+                    let mut qkv = Mat::zeros(t, 3 * d);
+                    matmul_bt(&h, params.get(&p("qkv")), &mut qkv);
+                    let mut q = Mat::zeros(t, d);
+                    let mut k = Mat::zeros(t, d);
+                    let mut v = Mat::zeros(t, d);
+                    for i in 0..t {
+                        q.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[..d]);
+                        k.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[d..2 * d]);
+                        v.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[2 * d..]);
+                    }
+                    (q, k, v)
+                }
+                Arch::Llama2 => {
+                    let mut q = Mat::zeros(t, d);
+                    let mut k = Mat::zeros(t, d);
+                    let mut v = Mat::zeros(t, d);
+                    matmul_bt(&h, params.get(&p("q")), &mut q);
+                    matmul_bt(&h, params.get(&p("k")), &mut k);
+                    matmul_bt(&h, params.get(&p("v")), &mut v);
+                    (q, k, v)
+                }
+            };
+            let att = self.attention(q, k, v, t);
+            let mut att_out = Mat::zeros(t, d);
+            matmul_bt(&att, params.get(&p("out")), &mut att_out);
+            for i in 0..x.data.len() {
+                x.data[i] += att_out.data[i];
+            }
+            // ---- MLP sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln2.g")).data,
+                    &params.get(&p("ln2.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln2.g")).data, 1e-5),
+            }
+            let mut mlp = Mat::zeros(t, cfg.d_ff);
+            match cfg.arch {
+                Arch::Gpt2 => {
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for v in mlp.data.iter_mut() {
+                        *v = gelu(*v);
+                    }
+                }
+                Arch::Llama2 => {
+                    let mut gate = Mat::zeros(t, cfg.d_ff);
+                    matmul_bt(&h, params.get(&p("gate")), &mut gate);
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for (m, g) in mlp.data.iter_mut().zip(gate.data.iter()) {
+                        *m *= silu(*g);
+                    }
+                }
+            }
+            let mut down = Mat::zeros(t, d);
+            matmul_bt(&mlp, params.get(&p("down")), &mut down);
+            for i in 0..x.data.len() {
+                x.data[i] += down.data[i];
+            }
+        }
+
+        match cfg.arch {
+            Arch::Gpt2 => {
+                layer_norm(&mut x, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+            }
+            Arch::Llama2 => rms_norm(&mut x, &params.get("lnf.g").data, 1e-5),
+        }
+        // tied head: logits = x · embedᵀ
+        let mut logits = Mat::zeros(t, cfg.vocab);
+        matmul_bt(&x, params.get("embed"), &mut logits);
+        logits
+    }
+
+    /// Multi-head causal attention over already-projected q/k/v (t × d).
+    fn attention(&self, mut q: Mat, mut k: Mat, v: Mat, t: usize) -> Mat {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let hd = d / cfg.n_head;
+        if cfg.arch == Arch::Llama2 {
+            // rotary on q and k per head
+            for h in 0..cfg.n_head {
+                let mut qh = Mat::zeros(t, hd);
+                let mut kh = Mat::zeros(t, hd);
+                for i in 0..t {
+                    qh.data[i * hd..(i + 1) * hd]
+                        .copy_from_slice(&q.row(i)[h * hd..(h + 1) * hd]);
+                    kh.data[i * hd..(i + 1) * hd]
+                        .copy_from_slice(&k.row(i)[h * hd..(h + 1) * hd]);
+                }
+                rope(&mut qh, 10000.0);
+                rope(&mut kh, 10000.0);
+                for i in 0..t {
+                    q.data[i * d + h * hd..i * d + (h + 1) * hd]
+                        .copy_from_slice(qh.row(i));
+                    k.data[i * d + h * hd..i * d + (h + 1) * hd]
+                        .copy_from_slice(kh.row(i));
+                }
+            }
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Mat::zeros(t, d);
+        for h in 0..cfg.n_head {
+            // scores = q_h · k_hᵀ
+            let mut scores = Mat::zeros(t, t);
+            for i in 0..t {
+                for j in 0..t {
+                    let mut acc = 0f32;
+                    for e in 0..hd {
+                        acc += q.at(i, h * hd + e) * k.at(j, h * hd + e);
+                    }
+                    *scores.at_mut(i, j) = acc * scale;
+                }
+            }
+            softmax_rows(&mut scores, Some(0));
+            for i in 0..t {
+                for e in 0..hd {
+                    let mut acc = 0f32;
+                    for j in 0..=i {
+                        acc += scores.at(i, j) * v.at(j, h * hd + e);
+                    }
+                    *out.at_mut(i, h * hd + e) = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean cross-entropy of next-token prediction over a token sequence.
+    pub fn loss(&self, params: &Params, tokens: &[usize]) -> f64 {
+        assert!(tokens.len() >= 2);
+        let logits = self.forward(params, &tokens[..tokens.len() - 1]);
+        let mut total = 0f64;
+        let n = logits.rows;
+        for i in 0..n {
+            let row = logits.row(i);
+            let target = tokens[i + 1];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+            total += (lse - row[target]) as f64;
+        }
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(arch: Arch) -> (Transformer, Params) {
+        let cfg = ModelConfig { n_layer: 2, d_model: 32, n_head: 2, d_ff: 64, vocab: 50, seq_len: 16, arch };
+        let t = Transformer::new(cfg);
+        let p = t.init_params(1);
+        (t, p)
+    }
+
+    #[test]
+    fn forward_shapes_gpt2() {
+        let (t, p) = tiny(Arch::Gpt2);
+        let logits = t.forward(&p, &[1, 2, 3, 4]);
+        assert_eq!((logits.rows, logits.cols), (4, 50));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_shapes_llama2() {
+        let (t, p) = tiny(Arch::Llama2);
+        let logits = t.forward(&p, &[5, 6, 7]);
+        assert_eq!((logits.rows, logits.cols), (3, 50));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality_past_tokens_only() {
+        // changing a future token must not change earlier logits
+        let (t, p) = tiny(Arch::Gpt2);
+        let a = t.forward(&p, &[1, 2, 3, 4]);
+        let b = t.forward(&p, &[1, 2, 3, 9]);
+        for c in 0..50 {
+            assert_eq!(a.at(0, c), b.at(0, c));
+            assert_eq!(a.at(2, c), b.at(2, c));
+        }
+        assert_ne!(a.row(3), b.row(3));
+    }
+
+    #[test]
+    fn loss_near_log_vocab_at_init() {
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let toks: Vec<usize> = (0..16).map(|i| (i * 7 + 3) % 50).collect();
+            let loss = t.loss(&p, &toks);
+            let expect = (50f64).ln();
+            assert!((loss - expect).abs() < 1.0, "{arch:?}: loss={loss} vs ln(V)={expect}");
+        }
+    }
+
+    #[test]
+    fn params_count_in_expected_range() {
+        let (t, p) = tiny(Arch::Gpt2);
+        let approx = t.cfg.param_count();
+        let exact = p.param_count();
+        // approx excludes norms/pos-embed; within 30%
+        assert!((exact as f64) < approx as f64 * 1.5);
+        assert!((exact as f64) > approx as f64 * 0.9);
+    }
+
+    #[test]
+    fn linear_name_enumeration() {
+        let cfg = ModelConfig::tiny(Arch::Llama2);
+        let names = Params::linear_names(&cfg);
+        assert_eq!(names.len(), 2 * 7);
+        assert_eq!(names[0], "blk0.q");
+        assert_eq!(names[13], "blk1.up");
+    }
+
+    #[test]
+    fn quantized_params_still_produce_finite_loss() {
+        use crate::numerics::fpformat::formats::FP8_E3M4;
+        use crate::mx::{quantize_square, ElemType};
+        let (t, mut p) = tiny(Arch::Gpt2);
+        let names = Params::linear_names(&t.cfg);
+        for n in names {
+            let m = p.get_mut(&n);
+            let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+            let q = quantize_square(&w64, m.rows, m.cols, 32, &ElemType::Fp(FP8_E3M4));
+            for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
+                *dst = src as f32;
+            }
+        }
+        let toks: Vec<usize> = (0..16).map(|i| (i * 11 + 1) % 50).collect();
+        let loss = t.loss(&p, &toks);
+        assert!(loss.is_finite());
+    }
+}

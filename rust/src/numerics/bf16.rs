@@ -1,0 +1,136 @@
+//! Compact `bf16` storage type (u16 payload) with f32 conversion.
+//!
+//! The paper stores the sampled parameter `ŵ` explicitly in BF16
+//! (2 bytes/param, Section 3.5 "GPU memory"). The L3 hot path mirrors that:
+//! sampling produces a `Vec<Bf16>` buffer, and matmuls decode lazily.
+
+/// A bfloat16 value: the top 16 bits of an IEEE f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3f80);
+
+    /// Convert from f32 with round-to-nearest-even (hardware semantics).
+    #[inline(always)]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet NaN, preserve sign
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7fff + lsb);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Convert from f32 by truncation (round-toward-zero); cheaper, used by
+    /// the fast path when the extra half-ulp bias is acceptable.
+    #[inline(always)]
+    pub fn from_f32_truncate(x: f32) -> Self {
+        Bf16((x.to_bits() >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact).
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline(always)]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7f80) == 0x7f80 && (self.0 & 0x007f) != 0
+    }
+
+    #[inline(always)]
+    pub fn abs(self) -> Self {
+        Bf16(self.0 & 0x7fff)
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> Self {
+        x.to_f32()
+    }
+}
+
+/// Round an f32 slice to bf16 precision in place (value stays f32 but with
+/// bf16 granularity). This is the "BF16 operator" emulation used by the
+/// training substrate: inputs/outputs of an op are representable in bf16.
+pub fn round_slice_bf16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = Bf16::from_f32(*x).to_f32();
+    }
+}
+
+/// Encode an f32 slice into a packed bf16 buffer.
+pub fn encode_slice(xs: &[f32]) -> Vec<Bf16> {
+    xs.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+/// Decode a bf16 buffer into f32s.
+pub fn decode_slice(xs: &[Bf16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -3.5, 128.0] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v);
+        }
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // 1 + 2^-8 is exactly between 1.0 and 1 + 2^-7; RNE picks even (1.0).
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // 1 + 3*2^-8 is between 1+2^-7 and 1+2^-6; tie -> even -> 1+2^-6.
+        let x = 1.0 + 3.0 * 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0 + 2f32.powi(-6));
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn matches_fpformat_emulation() {
+        use crate::numerics::fpformat::formats::BF16;
+        let mut state = 0x9e3779b9u32;
+        for _ in 0..2000 {
+            state ^= state << 13;
+            state ^= state >> 17;
+            state ^= state << 5;
+            let x = f32::from_bits(0x3000_0000 | (state & 0x0fff_ffff)); // finite positives
+            let a = Bf16::from_f32(x).to_f32() as f64;
+            let b = BF16.cast(x as f64);
+            assert_eq!(a, b, "x={x}");
+        }
+    }
+
+    #[test]
+    fn truncate_never_increases_magnitude() {
+        let mut state = 7u32;
+        for _ in 0..1000 {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            let x = (state as f32 / u32::MAX as f32 - 0.5) * 100.0;
+            let t = Bf16::from_f32_truncate(x).to_f32();
+            assert!(t.abs() <= x.abs());
+        }
+    }
+}

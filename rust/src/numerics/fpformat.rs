@@ -1,0 +1,388 @@
+//! Software emulation of arbitrary floating-point formats `fp_{e,m}`.
+//!
+//! This is the numeric-format substrate underlying the paper's analysis
+//! (Section 3.3, Lemmas 1–2, Propositions 3–4, Table C.1): a value cast to a
+//! low-precision floating-point format with `e` exponent bits and `m`
+//! mantissa bits, with IEEE-754 semantics (subnormals, round-to-nearest-even
+//! by default, saturating or inf overflow policy).
+//!
+//! All arithmetic is done by decoding to `f32`/`f64` and re-encoding; the
+//! emulation is exact for every format with `e <= 8` and `m <= 23`.
+
+/// Rounding mode used when casting into a low-precision format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round to nearest, ties to even (IEEE default).
+    NearestEven,
+    /// Round toward zero (truncate).
+    TowardZero,
+    /// Stochastic rounding; probability of rounding up equals the fractional
+    /// distance. The `u32` argument threaded through `cast_stochastic` is the
+    /// random draw.
+    Stochastic,
+}
+
+/// Behaviour when a finite value exceeds the largest representable magnitude.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overflow {
+    /// Clamp to ±max_normal (common for FP8/FP6 formats without inf).
+    Saturate,
+    /// Round to ±infinity (IEEE behaviour).
+    Infinity,
+}
+
+/// A floating-point format with `e` exponent bits and `m` mantissa bits
+/// (plus one sign bit). Bias is the IEEE-style `2^(e-1) - 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpFormat {
+    /// Number of exponent bits (1..=8).
+    pub exp_bits: u32,
+    /// Number of mantissa bits (0..=23).
+    pub man_bits: u32,
+    /// Whether the format reserves the top exponent code for inf/nan.
+    /// FP8_e4m3 (OCP) famously does not reserve inf; we model the common
+    /// "IEEE-like" variant by default and expose this knob for OCP variants.
+    pub has_inf_nan: bool,
+    /// Overflow policy for finite inputs.
+    pub overflow: Overflow,
+}
+
+impl FpFormat {
+    /// Construct an IEEE-like format (`has_inf_nan = true`, inf on overflow).
+    pub const fn ieee(exp_bits: u32, man_bits: u32) -> Self {
+        FpFormat { exp_bits, man_bits, has_inf_nan: true, overflow: Overflow::Infinity }
+    }
+
+    /// Construct a saturating format without inf/nan codes (OCP-FP8 style).
+    pub const fn saturating(exp_bits: u32, man_bits: u32) -> Self {
+        FpFormat { exp_bits, man_bits, has_inf_nan: false, overflow: Overflow::Saturate }
+    }
+
+    /// IEEE exponent bias `2^(e-1) - 1`.
+    pub const fn bias(&self) -> i32 {
+        (1i32 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Exponent of the smallest normal value: `1 - bias`.
+    pub const fn min_normal_exp(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Exponent of the largest finite exponent range.
+    pub const fn max_exp(&self) -> i32 {
+        let top = (1i32 << self.exp_bits) - 1;
+        let max_code = if self.has_inf_nan { top - 1 } else { top };
+        max_code - self.bias()
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f64 {
+        (self.min_normal_exp() as f64).exp2()
+    }
+
+    /// Smallest positive subnormal value: `2^(min_normal_exp - m)`.
+    pub fn min_subnormal(&self) -> f64 {
+        ((self.min_normal_exp() - self.man_bits as i32) as f64).exp2()
+    }
+
+    /// Largest finite value.
+    pub fn max_finite(&self) -> f64 {
+        let frac = 2.0 - (-(self.man_bits as f64)).exp2();
+        frac * (self.max_exp() as f64).exp2()
+    }
+
+    /// Unit-in-the-last-place of `x` in this format (stepsize of its
+    /// exponent range), used throughout the underflow analysis:
+    /// `2^(floor(log2|x|) - m)` clamped to the subnormal step.
+    pub fn ulp(&self, x: f64) -> f64 {
+        if x == 0.0 || !x.is_finite() {
+            return self.min_subnormal();
+        }
+        let e = x.abs().log2().floor() as i32;
+        let e = e.max(self.min_normal_exp());
+        ((e - self.man_bits as i32) as f64).exp2()
+    }
+
+    /// Total number of bits (sign + exp + mantissa).
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Cast `x` into this format with round-to-nearest-even. Exact for
+    /// `e <= 11`, `m <= 52`.
+    pub fn cast(&self, x: f64) -> f64 {
+        self.cast_mode(x, Rounding::NearestEven, 0)
+    }
+
+    /// Cast with an explicit rounding mode. `rand` is consumed only by
+    /// [`Rounding::Stochastic`]; pass 0 otherwise.
+    pub fn cast_mode(&self, x: f64, mode: Rounding, rand: u32) -> f64 {
+        if x.is_nan() {
+            return f64::NAN;
+        }
+        if x.is_infinite() {
+            return if self.has_inf_nan {
+                x
+            } else {
+                self.max_finite().copysign(x)
+            };
+        }
+        if x == 0.0 {
+            return x; // preserve signed zero
+        }
+        let sign = if x < 0.0 { -1.0 } else { 1.0 };
+        let a = x.abs();
+
+        // Determine the quantization step for the exponent range of `a`,
+        // treating values below min_normal as subnormal.
+        let e = a.log2().floor() as i32;
+        let eff_e = e.max(self.min_normal_exp());
+        let step = ((eff_e - self.man_bits as i32) as f64).exp2();
+
+        let q = a / step; // in units of the step; may be fractional
+        let r = match mode {
+            Rounding::NearestEven => round_ties_even(q),
+            Rounding::TowardZero => q.floor(),
+            Rounding::Stochastic => {
+                let frac = q - q.floor();
+                // rand/2^32 uniform in [0,1)
+                let u = (rand as f64) / 4294967296.0;
+                if frac > u {
+                    q.floor() + 1.0
+                } else {
+                    q.floor()
+                }
+            }
+        };
+        let v = r * step;
+
+        // Overflow handling. Note rounding can bump into the next binade,
+        // which is fine — we only clamp past max_finite.
+        if v > self.max_finite() {
+            return match self.overflow {
+                Overflow::Saturate => self.max_finite() * sign,
+                Overflow::Infinity => f64::INFINITY * sign,
+            };
+        }
+        v * sign
+    }
+
+    /// Cast an `f32`, convenience wrapper.
+    pub fn cast_f32(&self, x: f32) -> f32 {
+        self.cast(x as f64) as f32
+    }
+
+    /// True iff `x` is exactly representable (cast is the identity).
+    pub fn is_representable(&self, x: f64) -> bool {
+        let c = self.cast(x);
+        (c == x) || (c.is_nan() && x.is_nan())
+    }
+
+    /// True iff casting `x` underflows to zero (x != 0 but cast(x) == 0).
+    pub fn underflows(&self, x: f64) -> bool {
+        x != 0.0 && x.is_finite() && self.cast(x) == 0.0
+    }
+
+    /// Enumerate every non-negative finite representable value in ascending
+    /// order. Cheap for tiny formats (FP4/FP6/FP8); used by exhaustive tests.
+    pub fn enumerate_non_negative(&self) -> Vec<f64> {
+        let mut out = vec![0.0];
+        // subnormals
+        for frac in 1..(1u64 << self.man_bits) {
+            out.push(frac as f64 * self.min_subnormal());
+        }
+        // normals
+        for e in self.min_normal_exp()..=self.max_exp() {
+            for frac in 0..(1u64 << self.man_bits) {
+                let mant = 1.0 + frac as f64 / (1u64 << self.man_bits) as f64;
+                out.push(mant * (e as f64).exp2());
+            }
+        }
+        out
+    }
+}
+
+/// `round(x)` with ties to even, like IEEE RNE at integer granularity.
+pub fn round_ties_even(x: f64) -> f64 {
+    let fl = x.floor();
+    let frac = x - fl;
+    if frac > 0.5 {
+        fl + 1.0
+    } else if frac < 0.5 {
+        fl
+    } else {
+        // tie: pick the even integer
+        if (fl as i64) % 2 == 0 {
+            fl
+        } else {
+            fl + 1.0
+        }
+    }
+}
+
+/// Named formats used throughout the paper and Table C.1.
+pub mod formats {
+    use super::FpFormat;
+
+    /// bfloat16: e8m7 (same exponent range as f32).
+    pub const BF16: FpFormat = FpFormat::ieee(8, 7);
+    /// IEEE half precision: e5m10.
+    pub const FP16: FpFormat = FpFormat::ieee(5, 10);
+    /// OCP FP8 E4M3 (saturating, no inf).
+    pub const FP8_E4M3: FpFormat = FpFormat::saturating(4, 3);
+    /// FP8 E5M2 (IEEE-like).
+    pub const FP8_E5M2: FpFormat = FpFormat::ieee(5, 2);
+    /// FP8 E3M4 — discussed in Table C.1 as the b_t <= 5 parameter type.
+    pub const FP8_E3M4: FpFormat = FpFormat::saturating(3, 4);
+    /// FP6 E3M2 — Table C.1 lower bound for b_t <= 4.
+    pub const FP6_E3M2: FpFormat = FpFormat::saturating(3, 2);
+    /// FP6 E2M3.
+    pub const FP6_E2M3: FpFormat = FpFormat::saturating(2, 3);
+    /// FP4 E2M1 (MXFP4 element type).
+    pub const FP4_E2M1: FpFormat = FpFormat::saturating(2, 1);
+    /// FP12 E4M7 — Table C.1 for b_t <= 9.
+    pub const FP12_E4M7: FpFormat = FpFormat::saturating(4, 7);
+    /// f32 emulation bound (identity for f32 inputs).
+    pub const FP32: FpFormat = FpFormat::ieee(8, 23);
+
+    /// Look a format up by its conventional name (used by the CLI and
+    /// config files). Returns `None` for unknown names.
+    pub fn by_name(name: &str) -> Option<FpFormat> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "bf16" => BF16,
+            "fp16" | "f16" => FP16,
+            "fp8_e4m3" | "e4m3" => FP8_E4M3,
+            "fp8_e5m2" | "e5m2" => FP8_E5M2,
+            "fp8_e3m4" | "e3m4" => FP8_E3M4,
+            "fp6_e3m2" => FP6_E3M2,
+            "fp6_e2m3" => FP6_E2M3,
+            "fp4_e2m1" | "fp4" => FP4_E2M1,
+            "fp12_e4m7" => FP12_E4M7,
+            "fp32" | "f32" => FP32,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::formats::*;
+    use super::*;
+
+    #[test]
+    fn bf16_cast_matches_bit_truncation_rne() {
+        // Compare against direct f32-bit RNE truncation to 7 mantissa bits.
+        let vals = [1.0f32, 1.5, 3.1415926, -0.3333, 1e-30, 6.5e4, -1.234e-5];
+        for &v in &vals {
+            let expect = {
+                let bits = v.to_bits();
+                let lsb = (bits >> 16) & 1;
+                let rounded = bits.wrapping_add(0x7fff + lsb);
+                f32::from_bits(rounded & 0xffff_0000)
+            };
+            let got = BF16.cast_f32(v);
+            assert_eq!(got, expect, "v={v}");
+        }
+    }
+
+    #[test]
+    fn fp16_constants() {
+        assert_eq!(FP16.max_finite(), 65504.0);
+        assert_eq!(FP16.min_normal(), 6.103515625e-5);
+        assert_eq!(FP16.min_subnormal(), 5.960464477539063e-8);
+    }
+
+    #[test]
+    fn fp8_e4m3_range() {
+        // IEEE-like e4m3 with saturation: max = (2 - 2^-3) * 2^8 = 480.
+        assert_eq!(FP8_E4M3.max_finite(), 480.0);
+        assert_eq!(FP8_E4M3.cast(1e6), 480.0);
+        assert_eq!(FP8_E4M3.cast(-1e6), -480.0);
+    }
+
+    #[test]
+    fn fp6_e3m2_enumeration_is_sorted_and_distinct() {
+        let vals = FP6_E3M2.enumerate_non_negative();
+        // zero + 3 subnormals + 7 exponent ranges × 4 mantissas = 32 codes
+        assert_eq!(vals.len(), 1 + 3 + 7 * 4);
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+        for v in vals {
+            assert!(FP6_E3M2.is_representable(v));
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+    }
+
+    #[test]
+    fn cast_is_idempotent() {
+        for fmt in [FP16, FP8_E4M3, FP8_E3M4, FP6_E3M2, FP4_E2M1, FP12_E4M7] {
+            for i in 0..1000 {
+                let x = (i as f64 - 500.0) * 0.137 + 0.001;
+                let once = fmt.cast(x);
+                assert_eq!(fmt.cast(once), once, "fmt={fmt:?} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormal_underflow_threshold() {
+        // Values below half the min subnormal round to zero under RNE.
+        for fmt in [FP16, FP8_E4M3, FP6_E3M2] {
+            let tiny = fmt.min_subnormal() * 0.49;
+            assert!(fmt.underflows(tiny));
+            let keep = fmt.min_subnormal() * 0.51;
+            assert!(!fmt.underflows(keep));
+        }
+    }
+
+    #[test]
+    fn toward_zero_truncates() {
+        let got = FP8_E4M3.cast_mode(1.99, Rounding::TowardZero, 0);
+        assert!(got <= 1.99);
+        // 1.99 in e4m3: step at [1,2) is 2^-3; floor(1.99/0.125)*0.125 = 1.875
+        assert_eq!(got, 1.875);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        // Mean of many stochastic casts approximates the input.
+        let fmt = FP8_E4M3;
+        let x = 1.3; // between 1.25 and 1.375
+        let mut acc = 0.0;
+        let mut state = 0x1234_5678u32;
+        let n = 20000;
+        for _ in 0..n {
+            // xorshift32 as the random source
+            state ^= state << 13;
+            state ^= state >> 17;
+            state ^= state << 5;
+            acc += fmt.cast_mode(x, Rounding::Stochastic, state);
+        }
+        let mean = acc / n as f64;
+        assert!((mean - x).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn ulp_matches_step() {
+        assert_eq!(FP16.ulp(1.0), (2.0f64).powi(-10));
+        assert_eq!(FP16.ulp(2.0), (2.0f64).powi(-9));
+        assert_eq!(FP8_E4M3.ulp(1.5), 0.125);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["bf16", "fp16", "fp8_e4m3", "fp8_e3m4", "fp6_e3m2", "fp4_e2m1", "fp12_e4m7"] {
+            assert!(formats::by_name(name).is_some(), "{name}");
+        }
+        assert!(formats::by_name("fp7_e9m9").is_none());
+    }
+}

@@ -1,0 +1,9 @@
+//! Numeric-format substrate: software floating-point emulation, bf16
+//! storage, and the paper's Section-3.3 underflow analysis.
+
+pub mod analysis;
+pub mod bf16;
+pub mod fpformat;
+
+pub use bf16::Bf16;
+pub use fpformat::{formats, FpFormat, Overflow, Rounding};

@@ -1,0 +1,178 @@
+//! Bitwidth parametrization (paper §3.6 "Bitwidth") and the Fig. 5
+//! statistics.
+//!
+//! Each 32×32 block of a PQT linear owns an internal parameter `b_i`,
+//! initialized to 1, linearly mapped to the effective bitwidth
+//!
+//! ```text
+//! b_t = b_target + b_i · (b_init − b_target)           (Eq. 11)
+//! ```
+//!
+//! so training starts at `b_init` and weight decay on `b_i` pulls `b_t`
+//! toward `b_target`. Optionally the Eq. 12 loss term
+//! `λ · Σ_layers mean_blocks |b_t − b_target|` adds explicit pressure.
+
+/// Per-layer bitwidth parameter: one `b_i` per square block.
+#[derive(Debug, Clone)]
+pub struct BitwidthParam {
+    /// Internal parameters, grid row-major; init 1.0.
+    pub b_i: Vec<f32>,
+    pub b_init: f32,
+    pub b_target: f32,
+}
+
+impl BitwidthParam {
+    pub fn new(n_blocks: usize, b_init: f64, b_target: f64) -> Self {
+        BitwidthParam {
+            b_i: vec![1.0; n_blocks],
+            b_init: b_init as f32,
+            b_target: b_target as f32,
+        }
+    }
+
+    /// Eq. 11 map for one block.
+    #[inline]
+    pub fn bt_of(&self, bi: f32) -> f32 {
+        self.b_target + bi * (self.b_init - self.b_target)
+    }
+
+    /// Effective bitwidths for all blocks.
+    pub fn bt(&self) -> Vec<f32> {
+        self.b_i.iter().map(|&bi| self.bt_of(bi)).collect()
+    }
+
+    /// Chain rule from ∂L/∂b_t to ∂L/∂b_i.
+    pub fn grad_bi(&self, grad_bt: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(grad_bt.len(), self.b_i.len());
+        let k = self.b_init - self.b_target;
+        grad_bt.iter().map(|&g| g * k).collect()
+    }
+
+    /// Eq. 12 loss contribution of this layer: `mean_blocks |b_t − b_target|`.
+    pub fn lambda_loss(&self) -> f64 {
+        if self.b_i.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .b_i
+            .iter()
+            .map(|&bi| (self.bt_of(bi) - self.b_target).abs() as f64)
+            .sum();
+        sum / self.b_i.len() as f64
+    }
+
+    /// ∂(Eq. 12 layer term)/∂b_i: `sign(b_t − b_target)·(b_init − b_target)/m`.
+    pub fn lambda_grad_bi(&self) -> Vec<f32> {
+        let m = self.b_i.len() as f32;
+        let k = self.b_init - self.b_target;
+        self.b_i
+            .iter()
+            .map(|&bi| {
+                let d = self.bt_of(bi) - self.b_target;
+                d.signum() * k / m
+            })
+            .collect()
+    }
+}
+
+/// Fig. 5 tier boundaries: parameters with `b_t ≤ 5`, `≤ 9`, `≤ 12` map to
+/// FP8_e3m4 / FP12_e4m7 / FP16 respectively (paper §5).
+pub const TIER_BOUNDS: [f32; 3] = [5.0, 9.0, 12.0];
+
+/// Summary statistics of resulting bitwidths for one layer (Fig. 5 rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BtStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f32,
+    pub max: f32,
+    /// Fractions of blocks with b_t ≤ 5 / ≤ 9 / ≤ 12 (cumulative tiers).
+    pub tier_frac: [f64; 3],
+}
+
+/// Compute Fig. 5 statistics from a layer's effective bitwidths.
+pub fn bt_stats(bt: &[f32]) -> BtStats {
+    assert!(!bt.is_empty());
+    let n = bt.len() as f64;
+    let mean = bt.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = bt.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let min = bt.iter().cloned().fold(f32::INFINITY, f32::min);
+    let max = bt.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut tier_frac = [0f64; 3];
+    for (t, &bound) in TIER_BOUNDS.iter().enumerate() {
+        tier_frac[t] = bt.iter().filter(|&&x| x <= bound).count() as f64 / n;
+    }
+    BtStats { mean, std: var.sqrt(), min, max, tier_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq11_map() {
+        let p = BitwidthParam::new(4, 6.0, 4.0);
+        // b_i = 1 -> b_t = b_init
+        assert_eq!(p.bt(), vec![6.0; 4]);
+        // b_i = 0 -> b_t = b_target
+        assert_eq!(p.bt_of(0.0), 4.0);
+        // halfway
+        assert_eq!(p.bt_of(0.5), 5.0);
+    }
+
+    #[test]
+    fn chain_rule_scale() {
+        let p = BitwidthParam::new(2, 8.0, 6.0);
+        assert_eq!(p.grad_bi(&[1.0, -2.0]), vec![2.0, -4.0]);
+    }
+
+    #[test]
+    fn lambda_loss_and_grad() {
+        let mut p = BitwidthParam::new(2, 6.0, 4.0);
+        p.b_i = vec![1.0, 0.5];
+        // |b_t - target| = |6-4| and |5-4| -> mean 1.5
+        assert!((p.lambda_loss() - 1.5).abs() < 1e-9);
+        let g = p.lambda_grad_bi();
+        // sign(+)·2/2 = 1 for both
+        assert_eq!(g, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn lambda_grad_matches_fd() {
+        let mut p = BitwidthParam::new(3, 6.0, 4.0);
+        p.b_i = vec![0.9, 0.2, 0.6];
+        let g = p.lambda_grad_bi();
+        let h = 1e-4;
+        for k in 0..3 {
+            let mut ph = p.clone();
+            ph.b_i[k] += h;
+            let mut pl = p.clone();
+            pl.b_i[k] -= h;
+            let fd = (ph.lambda_loss() - pl.lambda_loss()) / (2.0 * h as f64);
+            assert!((g[k] as f64 - fd).abs() < 1e-3, "k={k}: {} vs {fd}", g[k]);
+        }
+    }
+
+    #[test]
+    fn stats_and_tiers() {
+        let bt = [4.0f32, 5.0, 6.0, 9.0, 10.0, 12.0];
+        let s = bt_stats(&bt);
+        assert!((s.mean - 7.666666).abs() < 1e-4);
+        assert_eq!(s.min, 4.0);
+        assert_eq!(s.max, 12.0);
+        assert_eq!(s.tier_frac[0], 2.0 / 6.0); // <=5
+        assert_eq!(s.tier_frac[1], 4.0 / 6.0); // <=9
+        assert_eq!(s.tier_frac[2], 1.0); // <=12
+    }
+
+    #[test]
+    fn weight_decay_drives_bt_to_target() {
+        // simulate decoupled weight decay: b_i <- b_i (1 - lr*wd)
+        let mut p = BitwidthParam::new(1, 6.0, 4.0);
+        for _ in 0..2000 {
+            p.b_i[0] *= 1.0 - 0.01 * 0.1;
+        }
+        assert!(p.bt()[0] < 4.3, "b_t={}", p.bt()[0]);
+        assert!(p.bt()[0] >= 4.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! DiffQ-style baseline PQT op: identical to [`super::gaussws`] except the
+//! noise basis is uniform `U(-0.5, 0.5)` in f32 ("BF16 U(-0.5,0.5) in place
+//! of ⌊N(0,1)/2⌉" — paper §4 notation "DiffQ").
+//!
+//! This is the comparison arm of Figures 1b/3/4 and Table 1. Uniform noise
+//! costs 2 B/element of temporary storage (vs 0.5 B packed for GaussWS) and
+//! requires FP generation (PRNG ints → divide), which is what makes it
+//! slower (§4.2).
+
+use crate::mx::block::block_absmax_f32;
+use crate::numerics::Bf16;
+use crate::prng::Philox4x32;
+
+/// Saved forward state for the backward pass. `noise` is kept dense in f32
+/// (2 B/element as bf16 would be, 4 here for simplicity — accounted as 2 in
+/// the memory model since the paper stores BF16 noise).
+#[derive(Debug, Clone)]
+pub struct DiffqState {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    pub amax: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub noise: Vec<f32>,
+}
+
+impl DiffqState {
+    #[inline]
+    pub fn grid_cols(&self) -> usize {
+        self.cols.div_ceil(self.block)
+    }
+
+    /// Temporary noise bytes in the paper's accounting (BF16 storage).
+    pub fn noise_bytes(&self) -> usize {
+        self.noise.len() * 2
+    }
+}
+
+/// Forward: `ŵ = bf16(w + U(-0.5,0.5) ⊙ broadcast(amax · 2^(1−b_t)))`.
+pub fn forward(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    bt: &[f32],
+    seed: u64,
+    w_hat: &mut [f32],
+) -> DiffqState {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(w_hat.len(), w.len());
+    let grid_c = cols.div_ceil(block);
+    let grid_r = rows.div_ceil(block);
+    assert_eq!(bt.len(), grid_r * grid_c);
+
+    let amax = block_absmax_f32(w, rows, cols, block);
+    let scale: Vec<f32> =
+        amax.iter().zip(bt.iter()).map(|(&a, &b)| a * (1.0 - b).exp2()).collect();
+
+    // Uniform noise in bf16 precision (the paper's DiffQ extension runs the
+    // same BF16 operator).
+    let mut g = Philox4x32::new(seed);
+    let mut noise = vec![0f32; w.len()];
+    for n in noise.iter_mut() {
+        *n = Bf16::from_f32(g.next_f32() - 0.5).to_f32();
+    }
+
+    for r in 0..rows {
+        let br = r / block;
+        let row_off = r * cols;
+        let mut c = 0;
+        while c < cols {
+            let bc = c / block;
+            let end = ((bc + 1) * block).min(cols);
+            let s = scale[br * grid_c + bc];
+            for cc in c..end {
+                let i = row_off + cc;
+                w_hat[i] = Bf16::from_f32(w[i] + noise[i] * s).to_f32();
+            }
+            c = end;
+        }
+    }
+    DiffqState { rows, cols, block, amax, scale, noise }
+}
+
+/// Backward: ∂L/∂b_t per block (same Eq. 4 form, R = uniform noise).
+pub fn backward_bt(state: &DiffqState, g: &[f32]) -> Vec<f32> {
+    assert_eq!(g.len(), state.rows * state.cols);
+    let grid_c = state.grid_cols();
+    let mut dot = vec![0f64; state.scale.len()];
+    for r in 0..state.rows {
+        let br = r / state.block;
+        let row_off = r * state.cols;
+        for c in 0..state.cols {
+            let i = row_off + c;
+            dot[br * grid_c + c / state.block] += g[i] as f64 * state.noise[i] as f64;
+        }
+    }
+    let ln2 = std::f64::consts::LN_2;
+    state
+        .scale
+        .iter()
+        .zip(dot.iter())
+        .map(|(&s, &d)| (-ln2 * s as f64 * d) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, Gen};
+
+    #[test]
+    fn forward_formula_holds() {
+        check("diffq fwd formula", 10, |g| {
+            let (rows, cols, block) = (32, 48, 16);
+            let w = g.normal_vec_f32(rows * cols);
+            let grid = (rows / block) * (cols / block);
+            let bt: Vec<f32> = (0..grid).map(|_| g.f64_in(3.0, 8.0) as f32).collect();
+            let mut what = vec![0f32; w.len()];
+            let st = forward(&w, rows, cols, block, &bt, g.u64(), &mut what);
+            let grid_c = cols / block;
+            for r in 0..rows {
+                for c in 0..cols {
+                    let i = r * cols + c;
+                    let blk = (r / block) * grid_c + c / block;
+                    let expect =
+                        Bf16::from_f32(w[i] + st.noise[i] * st.scale[blk]).to_f32();
+                    if what[i] != expect {
+                        return Err(format!("({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn noise_is_uniform_half_range() {
+        let mut g = Gen::new(1);
+        let w = g.normal_vec_f32(128 * 128);
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, 128, 128, 32, &vec![4.0; 16], 3, &mut what);
+        assert!(st.noise.iter().all(|&x| (-0.5..=0.5).contains(&x)));
+        let mean: f64 = st.noise.iter().map(|&x| x as f64).sum::<f64>() / st.noise.len() as f64;
+        assert!(mean.abs() < 5e-3);
+        // uniform has NO mass at exactly zero (almost surely) unlike GaussWS
+        let zeros = st.noise.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros < st.noise.len() / 100);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut g = Gen::new(2);
+        let w = g.normal_vec_f32(64 * 64);
+        let bt = vec![4.0f32; 4];
+        let mut a = vec![0f32; w.len()];
+        let mut b = vec![0f32; w.len()];
+        forward(&w, 64, 64, 32, &bt, 5, &mut a);
+        forward(&w, 64, 64, 32, &bt, 5, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bt_grad_sign_and_magnitude() {
+        // With g = noise (positively correlated), dot > 0 so grad < 0:
+        // increasing b_t shrinks noise which shrinks this loss.
+        let mut g = Gen::new(3);
+        let w = g.normal_vec_f32(32 * 32);
+        let bt = vec![5.0f32];
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, 32, 32, 32, &bt, 7, &mut what);
+        let grads = backward_bt(&st, &st.noise.clone());
+        assert!(grads[0] < 0.0);
+    }
+
+    #[test]
+    fn memory_accounting_is_4x_gaussws() {
+        let mut g = Gen::new(4);
+        let w = g.normal_vec_f32(64 * 64);
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, 64, 64, 32, &vec![4.0; 4], 1, &mut what);
+        // 2 B/elem (paper) vs 0.5 B/elem for packed GaussWS noise
+        assert_eq!(st.noise_bytes(), 64 * 64 * 2);
+    }
+}

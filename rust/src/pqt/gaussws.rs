@@ -1,0 +1,343 @@
+//! The core GaussWS op (paper Eq. 3 forward / Eq. 4 backward) on host
+//! buffers — the L3 reference implementation and rust hot path.
+//!
+//! Forward, per weight matrix `w (rows × cols)` with square blocks `b_l`:
+//!
+//! ```text
+//! ŵ = bf16( w + R ⊙ broadcast_bl( max_bl(|w|) · 2^(1 − b_t) ) )
+//! ```
+//!
+//! where `R` is the packed rounded-normal noise (one 4-bit code/element)
+//! and `b_t` is the per-block bitwidth. The final bf16 cast models the
+//! "BF16 operator" the paper assumes (§3.3): downstream matmuls consume ŵ
+//! at bf16 precision, which is exactly where the underflow analysis bites.
+//!
+//! Backward (Eq. 4), given `g = ∂L/∂ŵ`:
+//!
+//! ```text
+//! ∂L/∂w   = g                                 (identity; ∂max/∂w ≈ 0)
+//! ∂L/∂b_t = −ln2 · max_bl(|w|) · 2^(1−b_t) · Σ_bl(g ⊙ R)
+//! ```
+
+use crate::mx::block::block_absmax_f32;
+use crate::numerics::Bf16;
+use crate::prng::bitwise::{decode_nibble, PackedNoise};
+use crate::prng::{generate_exact, generate_fast};
+
+/// Which noise generator backs the op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseGen {
+    /// Fully independent bits (16 words / 32 elems) — reference.
+    Exact,
+    /// Rotation-reuse fast path (4 words / 32 elems).
+    Fast,
+}
+
+/// Saved state from a forward sample, needed by the backward pass.
+///
+/// The packed noise costs 0.5 B/element (paper §4.2); `amax`/`scale` are one
+/// f32 per 32×32 block. Regenerating `R` from the seed instead would drop
+/// the 0.5 B at the cost of a second generator run — mirrored from the
+/// paper's design decision to store it.
+#[derive(Debug, Clone)]
+pub struct SampleState {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// Square-blockwise max|w|, grid row-major.
+    pub amax: Vec<f32>,
+    /// Per-block scale `amax · 2^(1−b_t)`.
+    pub scale: Vec<f32>,
+    /// Packed noise codes (sign–mantissa nibbles).
+    pub noise: PackedNoise,
+}
+
+impl SampleState {
+    /// Grid width (blocks per row of blocks).
+    #[inline]
+    pub fn grid_cols(&self) -> usize {
+        self.cols.div_ceil(self.block)
+    }
+
+    /// Grid height.
+    #[inline]
+    pub fn grid_rows(&self) -> usize {
+        self.rows.div_ceil(self.block)
+    }
+
+    /// Temporary memory footprint in bytes (the Table-1 accounting).
+    pub fn noise_bytes(&self) -> usize {
+        self.noise.storage_bytes()
+    }
+}
+
+/// Eq. 3 forward: sample `ŵ` from `w` with per-block bitwidth `bt`
+/// (grid row-major, `⌈rows/b⌉ × ⌈cols/b⌉`), writing bf16-rounded values
+/// into `w_hat`. Returns the state needed for the backward pass.
+///
+/// `seed` must come from the layer's [`crate::prng::SeedTree`] stream so the
+/// backward pass can regenerate the same noise.
+pub fn forward(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    bt: &[f32],
+    seed: u64,
+    gen: NoiseGen,
+    w_hat: &mut [f32],
+) -> SampleState {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(w_hat.len(), w.len());
+    let grid_c = cols.div_ceil(block);
+    let grid_r = rows.div_ceil(block);
+    assert_eq!(bt.len(), grid_r * grid_c);
+
+    let amax = block_absmax_f32(w, rows, cols, block);
+    let scale: Vec<f32> =
+        amax.iter().zip(bt.iter()).map(|(&a, &b)| a * (1.0 - b).exp2()).collect();
+    let noise = match gen {
+        NoiseGen::Exact => generate_exact(seed, w.len()),
+        NoiseGen::Fast => generate_fast(seed, w.len()),
+    };
+
+    // Row-major traversal; per row the block index changes every `block`
+    // columns. Perf pass (EXPERIMENTS.md §Perf): noise nibbles are decoded
+    // a packed word (8 elements) at a time through a 16-entry value LUT
+    // instead of per-element shifts, and the inner 8-wide loop is
+    // branch-free so it vectorizes.
+    const NIB_VAL: [f32; 16] = [
+        0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, -0.0, -1.0, -2.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+    ];
+    for r in 0..rows {
+        let br = r / block;
+        let row_off = r * cols;
+        let mut c = 0;
+        while c < cols {
+            let bc = c / block;
+            let end = ((bc + 1) * block).min(cols);
+            let s = scale[br * grid_c + bc];
+            let mut cc = c;
+            // fast path: segments aligned to packed words of 8 nibbles
+            while cc + 8 <= end && (row_off + cc) % 8 == 0 {
+                let i = row_off + cc;
+                let word = noise.words[i / 8];
+                for j in 0..8 {
+                    let v = NIB_VAL[((word >> (j * 4)) & 0xF) as usize];
+                    w_hat[i + j] = Bf16::from_f32(w[i + j] + v * s).to_f32();
+                }
+                cc += 8;
+            }
+            for c2 in cc..end {
+                let i = row_off + c2;
+                let rv = noise.get(i) as f32;
+                w_hat[i] = Bf16::from_f32(w[i] + rv * s).to_f32();
+            }
+            c = end;
+        }
+    }
+    SampleState { rows, cols, block, amax, scale, noise }
+}
+
+/// Eq. 4 backward: given `g = ∂L/∂ŵ` and the forward state, accumulate
+/// `∂L/∂b_t` per block. (`∂L/∂w` is the identity map, so callers reuse `g`.)
+pub fn backward_bt(state: &SampleState, g: &[f32]) -> Vec<f32> {
+    assert_eq!(g.len(), state.rows * state.cols);
+    let grid_c = state.grid_cols();
+    let mut dot = vec![0f64; state.scale.len()]; // Σ_bl (g ⊙ R), f64 accum
+    for r in 0..state.rows {
+        let br = r / state.block;
+        let row_off = r * state.cols;
+        for c in 0..state.cols {
+            let rv = state.noise.get(row_off + c);
+            if rv != 0 {
+                dot[br * grid_c + c / state.block] += g[row_off + c] as f64 * rv as f64;
+            }
+        }
+    }
+    let ln2 = std::f64::consts::LN_2;
+    state
+        .scale
+        .iter()
+        .zip(dot.iter())
+        .map(|(&s, &d)| (-ln2 * s as f64 * d) as f32)
+        .collect()
+}
+
+/// Convenience: the PQN alone (`ŵ − w` before the bf16 cast) for analysis
+/// and tests.
+pub fn pqn(state: &SampleState) -> Vec<f32> {
+    let grid_c = state.grid_cols();
+    let mut out = vec![0f32; state.rows * state.cols];
+    for r in 0..state.rows {
+        let br = r / state.block;
+        for c in 0..state.cols {
+            let i = r * state.cols + c;
+            let s = state.scale[br * grid_c + c / state.block];
+            out[i] = state.noise.get(i) as f32 * s;
+        }
+    }
+    out
+}
+
+/// Count noise values by code over a state (diagnostics).
+pub fn noise_histogram(state: &SampleState) -> [usize; 5] {
+    let mut h = [0usize; 5];
+    for i in 0..state.noise.len {
+        h[(state.noise.get(i) + 2) as usize] += 1;
+    }
+    h
+}
+
+/// Re-derive the integer noise value at element `i` (exposed for tests).
+#[inline]
+pub fn noise_at(state: &SampleState, i: usize) -> i32 {
+    decode_nibble((state.noise.words[i / 8] >> ((i % 8) * 4)) & 0xF)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, Gen};
+
+    fn sample_setup(g: &mut Gen, rows: usize, cols: usize, block: usize) -> (Vec<f32>, Vec<f32>) {
+        let w = g.normal_vec_f32(rows * cols);
+        let grid = rows.div_ceil(block) * cols.div_ceil(block);
+        let bt: Vec<f32> = (0..grid).map(|_| g.f64_in(3.0, 8.0) as f32).collect();
+        (w, bt)
+    }
+
+    #[test]
+    fn forward_matches_manual_formula() {
+        check("gaussws fwd formula", 20, |g| {
+            let (rows, cols, block) = (40, 36, 16);
+            let (w, bt) = sample_setup(g, rows, cols, block);
+            let seed = g.u64();
+            let mut what = vec![0f32; w.len()];
+            let st = forward(&w, rows, cols, block, &bt, seed, NoiseGen::Exact, &mut what);
+            let grid_c = cols.div_ceil(block);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let i = r * cols + c;
+                    let blk = (r / block) * grid_c + c / block;
+                    let expect = crate::numerics::Bf16::from_f32(
+                        w[i] + st.noise.get(i) as f32 * st.amax[blk] * (1.0 - bt[blk]).exp2(),
+                    )
+                    .to_f32();
+                    if what[i] != expect {
+                        return Err(format!("({r},{c}): {} vs {}", what[i], expect));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_noise_elements_only_feel_bf16_cast() {
+        check("R=0 passthrough", 10, |g| {
+            let (rows, cols, block) = (32, 32, 32);
+            let (w, bt) = sample_setup(g, rows, cols, block);
+            let mut what = vec![0f32; w.len()];
+            let st = forward(&w, rows, cols, block, &bt, g.u64(), NoiseGen::Fast, &mut what);
+            for i in 0..w.len() {
+                if st.noise.get(i) == 0 {
+                    let expect = crate::numerics::Bf16::from_f32(w[i]).to_f32();
+                    if what[i] != expect {
+                        return Err(format!("elem {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_seed_same_sample() {
+        let mut g = Gen::new(1);
+        let (w, bt) = sample_setup(&mut g, 64, 64, 32);
+        let mut a = vec![0f32; w.len()];
+        let mut b = vec![0f32; w.len()];
+        forward(&w, 64, 64, 32, &bt, 777, NoiseGen::Fast, &mut a);
+        forward(&w, 64, 64, 32, &bt, 777, NoiseGen::Fast, &mut b);
+        assert_eq!(a, b);
+        forward(&w, 64, 64, 32, &bt, 778, NoiseGen::Fast, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn backward_bt_matches_finite_difference() {
+        // dL/db_t via Eq. 4 vs central finite differences on a quadratic
+        // loss L = Σ ŵ² / 2 (so ∂L/∂ŵ = ŵ), computed WITHOUT the bf16 cast
+        // (use pqn directly) to avoid rounding noise in the FD.
+        let mut g = Gen::new(2);
+        let (rows, cols, block) = (32, 32, 32);
+        let w = g.normal_vec_f32(rows * cols);
+        let bt0 = 5.0f32;
+        let seed = 42;
+
+        let loss = |bt_val: f32| -> f64 {
+            let bt = vec![bt_val];
+            let mut what = vec![0f32; w.len()];
+            let st = forward(&w, rows, cols, block, &bt, seed, NoiseGen::Exact, &mut what);
+            // loss on the un-cast sample to keep FD smooth
+            let p = pqn(&st);
+            w.iter().zip(p.iter()).map(|(&wi, &pi)| ((wi + pi) as f64).powi(2) / 2.0).sum()
+        };
+
+        // analytic grad at bt0 (on the same un-cast ŵ)
+        let bt = vec![bt0];
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, rows, cols, block, &bt, seed, NoiseGen::Exact, &mut what);
+        let p = pqn(&st);
+        let gvec: Vec<f32> = w.iter().zip(p.iter()).map(|(&wi, &pi)| wi + pi).collect();
+        let analytic = backward_bt(&st, &gvec)[0] as f64;
+
+        let h = 1e-3f32;
+        let fd = (loss(bt0 + h) - loss(bt0 - h)) / (2.0 * h as f64);
+        let rel = (analytic - fd).abs() / fd.abs().max(1e-9);
+        assert!(rel < 5e-3, "analytic={analytic} fd={fd} rel={rel}");
+    }
+
+    #[test]
+    fn larger_bt_means_smaller_noise() {
+        let mut g = Gen::new(3);
+        let w = g.normal_vec_f32(64 * 64);
+        for (lo, hi) in [(3.0f32, 6.0f32), (4.0, 8.0)] {
+            let mut what = vec![0f32; w.len()];
+            let s_lo = forward(&w, 64, 64, 32, &vec![lo; 4], 9, NoiseGen::Exact, &mut what);
+            let s_hi = forward(&w, 64, 64, 32, &vec![hi; 4], 9, NoiseGen::Exact, &mut what);
+            let mag = |st: &SampleState| {
+                pqn(st).iter().map(|x| x.abs() as f64).sum::<f64>() / (64.0 * 64.0)
+            };
+            assert!(
+                mag(&s_lo) > mag(&s_hi) * (2f64.powf((hi - lo) as f64) * 0.9),
+                "noise should shrink ~2^Δb"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_w_is_identity_semantics() {
+        // Eq. 4: ∂L/∂w = ∂L/∂ŵ — the module layer just forwards g; assert
+        // the noise term is zero-mean so the passthrough is unbiased.
+        let mut g = Gen::new(4);
+        let w = g.normal_vec_f32(128 * 128);
+        let bt = vec![4.0f32; 16];
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, 128, 128, 32, &bt, 5, NoiseGen::Exact, &mut what);
+        let p = pqn(&st);
+        let mean: f64 = p.iter().map(|&x| x as f64).sum::<f64>() / p.len() as f64;
+        let s = st.scale.iter().cloned().fold(0f32, f32::max) as f64;
+        assert!(mean.abs() < 0.05 * s, "PQN mean {mean} too biased vs scale {s}");
+    }
+
+    #[test]
+    fn noise_storage_accounting() {
+        let mut g = Gen::new(5);
+        let w = g.normal_vec_f32(64 * 64);
+        let mut what = vec![0f32; w.len()];
+        let st = forward(&w, 64, 64, 32, &vec![4.0; 4], 1, NoiseGen::Fast, &mut what);
+        assert_eq!(st.noise_bytes(), 64 * 64 / 2); // 0.5 B per element
+    }
+}

@@ -1,0 +1,14 @@
+//! GaussWS pseudo-quantization training core: the Eq. 3/4 sampling ops
+//! (rounded-normal and DiffQ-uniform arms), bitwidth parametrization, the
+//! `PqtLinear` module, and the layer-selection policy.
+
+pub mod bitwidth;
+pub mod diffq;
+pub mod gaussws;
+pub mod module;
+pub mod policy;
+
+pub use bitwidth::{bt_stats, BitwidthParam, BtStats};
+pub use gaussws::NoiseGen;
+pub use module::{FwdState, PqtGrads, PqtLinear};
+pub use policy::Policy;

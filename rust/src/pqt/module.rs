@@ -1,0 +1,241 @@
+//! `PqtLinear` — the modularized `f(w, b_t) = ŵ` unit the paper describes
+//! in §3.5 ("a single PyTorch module" there; a single rust struct here).
+//!
+//! Owns the master weight `w` (f32), the per-block bitwidth parameter
+//! `b_i`, and its layer seed stream; produces the sampled `ŵ` each step and
+//! maps upstream gradients back onto `(w, b_i)`.
+
+use super::bitwidth::{bt_stats, BitwidthParam, BtStats};
+use super::gaussws::{self, NoiseGen, SampleState};
+use super::{diffq, diffq::DiffqState};
+use crate::config::schema::PqtMethod;
+
+/// Per-step forward output state (consumed by `backward`).
+#[derive(Debug)]
+pub enum FwdState {
+    /// BF16 baseline: no noise, nothing to store.
+    Baseline,
+    Gauss(SampleState),
+    Diffq(DiffqState),
+}
+
+impl FwdState {
+    /// Temporary noise bytes held for the backward pass (Table 1 memory
+    /// accounting; ŵ itself adds 2 B/param on top in all PQT arms).
+    pub fn noise_bytes(&self) -> usize {
+        match self {
+            FwdState::Baseline => 0,
+            FwdState::Gauss(s) => s.noise_bytes(),
+            FwdState::Diffq(s) => s.noise_bytes(),
+        }
+    }
+}
+
+/// Gradients produced by the backward pass.
+#[derive(Debug, Clone)]
+pub struct PqtGrads {
+    /// ∂L/∂b_i per block (empty for the baseline).
+    pub grad_bi: Vec<f32>,
+}
+
+/// A linear layer's PQT state.
+#[derive(Debug, Clone)]
+pub struct PqtLinear {
+    /// Qualified name, e.g. "blk3.qkv" (stable key into the seed tree).
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Square block size b_l (32 in the paper).
+    pub block: usize,
+    pub method: PqtMethod,
+    /// Per-block bitwidths (present for PQT arms; len 0 for baseline).
+    pub bw: BitwidthParam,
+    /// Noise generator variant for the GaussWS arm.
+    pub gen: NoiseGen,
+}
+
+impl PqtLinear {
+    pub fn new(
+        name: &str,
+        rows: usize,
+        cols: usize,
+        block: usize,
+        method: PqtMethod,
+        b_init: f64,
+        b_target: f64,
+    ) -> Self {
+        let grid = rows.div_ceil(block) * cols.div_ceil(block);
+        let n_blocks = if method == PqtMethod::None { 0 } else { grid };
+        PqtLinear {
+            name: name.to_string(),
+            rows,
+            cols,
+            block,
+            method,
+            bw: BitwidthParam::new(n_blocks, b_init, b_target),
+            gen: NoiseGen::Fast,
+        }
+    }
+
+    /// Number of square blocks in the grid.
+    pub fn n_blocks(&self) -> usize {
+        self.rows.div_ceil(self.block) * self.cols.div_ceil(self.block)
+    }
+
+    /// Sample `ŵ` from `w` for this step. `seed` comes from the layer's
+    /// seed-tree stream. For the baseline this is the bf16 cast of `w`
+    /// (the BF16 operator consumes bf16 weights either way).
+    pub fn forward(&self, w: &[f32], seed: u64, w_hat: &mut [f32]) -> FwdState {
+        assert_eq!(w.len(), self.rows * self.cols);
+        match self.method {
+            PqtMethod::None => {
+                for (o, &x) in w_hat.iter_mut().zip(w.iter()) {
+                    *o = crate::numerics::Bf16::from_f32(x).to_f32();
+                }
+                FwdState::Baseline
+            }
+            PqtMethod::GaussWs => {
+                let bt = self.bw.bt();
+                FwdState::Gauss(gaussws::forward(
+                    w, self.rows, self.cols, self.block, &bt, seed, self.gen, w_hat,
+                ))
+            }
+            PqtMethod::DiffQ => {
+                let bt = self.bw.bt();
+                FwdState::Diffq(diffq::forward(
+                    w, self.rows, self.cols, self.block, &bt, seed, w_hat,
+                ))
+            }
+        }
+    }
+
+    /// Backward: given `g = ∂L/∂ŵ`, return PQT-parameter grads.
+    /// (∂L/∂w = g, Eq. 4 — the caller routes `g` straight to the weight
+    /// optimizer; we only produce ∂L/∂b_i here.)
+    pub fn backward(&self, state: &FwdState, g: &[f32]) -> PqtGrads {
+        match state {
+            FwdState::Baseline => PqtGrads { grad_bi: vec![] },
+            FwdState::Gauss(s) => {
+                let grad_bt = gaussws::backward_bt(s, g);
+                PqtGrads { grad_bi: self.bw.grad_bi(&grad_bt) }
+            }
+            FwdState::Diffq(s) => {
+                let grad_bt = diffq::backward_bt(s, g);
+                PqtGrads { grad_bi: self.bw.grad_bi(&grad_bt) }
+            }
+        }
+    }
+
+    /// Apply one optimizer step to `b_i`: SGD on the (λ-scaled) gradient
+    /// plus decoupled weight decay toward 0 — the paper's mechanism for
+    /// guiding b_t to b_target.
+    pub fn update_bi(&mut self, grads: &PqtGrads, lr: f64, weight_decay: f64, lambda: f64) {
+        if self.bw.b_i.is_empty() {
+            return;
+        }
+        let lam_g = if lambda != 0.0 { self.bw.lambda_grad_bi() } else { vec![] };
+        for (k, bi) in self.bw.b_i.iter_mut().enumerate() {
+            let mut g = grads.grad_bi.get(k).copied().unwrap_or(0.0) as f64;
+            if lambda != 0.0 {
+                g += lambda * lam_g[k] as f64;
+            }
+            *bi = (*bi as f64 * (1.0 - lr * weight_decay) - lr * g) as f32;
+        }
+    }
+
+    /// Fig. 5 statistics of this layer's current effective bitwidths.
+    pub fn stats(&self) -> Option<BtStats> {
+        if self.bw.b_i.is_empty() {
+            None
+        } else {
+            Some(bt_stats(&self.bw.bt()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Gen;
+
+    fn layer(method: PqtMethod) -> PqtLinear {
+        PqtLinear::new("blk0.qkv", 64, 64, 32, method, 6.0, 4.0)
+    }
+
+    #[test]
+    fn baseline_is_bf16_cast() {
+        let mut g = Gen::new(1);
+        let w = g.normal_vec_f32(64 * 64);
+        let l = layer(PqtMethod::None);
+        let mut what = vec![0f32; w.len()];
+        let st = l.forward(&w, 123, &mut what);
+        for (i, (&a, &b)) in what.iter().zip(w.iter()).enumerate() {
+            assert_eq!(a, crate::numerics::Bf16::from_f32(b).to_f32(), "{i}");
+        }
+        assert_eq!(st.noise_bytes(), 0);
+        assert!(l.backward(&st, &w).grad_bi.is_empty());
+    }
+
+    #[test]
+    fn gaussws_forward_backward_roundtrip() {
+        let mut g = Gen::new(2);
+        let w = g.normal_vec_f32(64 * 64);
+        let l = layer(PqtMethod::GaussWs);
+        let mut what = vec![0f32; w.len()];
+        let st = l.forward(&w, 99, &mut what);
+        assert_ne!(what, w);
+        let grads = l.backward(&st, &what);
+        assert_eq!(grads.grad_bi.len(), l.n_blocks());
+    }
+
+    #[test]
+    fn bi_update_decays_toward_target() {
+        let mut g = Gen::new(3);
+        let w = g.normal_vec_f32(64 * 64);
+        let mut l = layer(PqtMethod::GaussWs);
+        let mut what = vec![0f32; w.len()];
+        let zero_g = PqtGrads { grad_bi: vec![0.0; l.n_blocks()] };
+        let bt0 = l.bw.bt()[0];
+        let _ = l.forward(&w, 1, &mut what);
+        for _ in 0..100 {
+            l.update_bi(&zero_g, 1e-2, 0.5, 0.0);
+        }
+        let bt1 = l.bw.bt()[0];
+        assert!(bt1 < bt0, "{bt1} !< {bt0}");
+        assert!(bt1 >= l.bw.b_target);
+    }
+
+    #[test]
+    fn lambda_pressure_reduces_bt_faster() {
+        let mut a = layer(PqtMethod::GaussWs);
+        let mut b = layer(PqtMethod::GaussWs);
+        let zero = PqtGrads { grad_bi: vec![0.0; a.n_blocks()] };
+        for _ in 0..50 {
+            a.update_bi(&zero, 1e-2, 0.1, 0.0);
+            b.update_bi(&zero, 1e-2, 0.1, 1.0); // strong λ
+        }
+        assert!(b.bw.bt()[0] < a.bw.bt()[0]);
+    }
+
+    #[test]
+    fn stats_reflect_current_bt() {
+        let l = layer(PqtMethod::GaussWs);
+        let s = l.stats().unwrap();
+        assert_eq!(s.mean, 6.0); // b_i = 1 -> b_t = b_init
+        assert!(layer(PqtMethod::None).stats().is_none());
+    }
+
+    #[test]
+    fn diffq_and_gaussws_share_interface() {
+        let mut g = Gen::new(4);
+        let w = g.normal_vec_f32(64 * 64);
+        for m in [PqtMethod::DiffQ, PqtMethod::GaussWs] {
+            let l = layer(m);
+            let mut what = vec![0f32; w.len()];
+            let st = l.forward(&w, 7, &mut what);
+            let grads = l.backward(&st, &w);
+            assert_eq!(grads.grad_bi.len(), 4);
+            assert!(st.noise_bytes() > 0);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Layer-selection policy: the paper's "method[part]" notation (§4).
+//!
+//! `[all]` applies PQT to every linear in every transformer block;
+//! `[qkv]`, `[out]`, `[up]`, `[down]` restrict to one linear; `[od]` is
+//! shorthand for `[out,down]` (the last layers of the two residual
+//! branches). Names are architecture-specific (Fig. 5 order).
+
+use crate::config::schema::Arch;
+use anyhow::{bail, Result};
+
+/// A resolved policy: the set of per-block linear names that get PQT.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Policy {
+    names: Vec<String>,
+    all: bool,
+}
+
+impl Policy {
+    /// Resolve part tokens (e.g. `["od"]`, `["qkv","up"]`, `["all"]`)
+    /// against an architecture's linear names.
+    pub fn resolve(parts: &[String], arch: Arch) -> Result<Policy> {
+        let valid = arch.linear_names();
+        let mut names: Vec<String> = Vec::new();
+        let mut all = false;
+        for raw in parts {
+            let p = raw.trim().to_ascii_lowercase();
+            match p.as_str() {
+                "all" => all = true,
+                "od" => {
+                    // shorthand for out,down (paper notation)
+                    names.push("out".into());
+                    names.push("down".into());
+                }
+                other => {
+                    if !valid.contains(&other) {
+                        bail!(
+                            "unknown part '{other}' for arch {} (valid: {:?} plus 'all'/'od')",
+                            arch.name(),
+                            valid
+                        );
+                    }
+                    names.push(other.to_string());
+                }
+            }
+        }
+        names.sort();
+        names.dedup();
+        Ok(Policy { names, all })
+    }
+
+    /// Does the linear `name` (e.g. "qkv") in any block get PQT?
+    pub fn applies(&self, name: &str) -> bool {
+        self.all || self.names.iter().any(|n| n == name)
+    }
+
+    /// Paper-style label, e.g. "gaussws[od]" / "gaussws[all]".
+    pub fn label(&self, method: &str) -> String {
+        if self.all {
+            format!("{method}[all]")
+        } else {
+            format!("{method}[{}]", self.names.join(","))
+        }
+    }
+
+    /// A policy that applies to nothing (BF16 baseline).
+    pub fn none() -> Policy {
+        Policy { names: vec![], all: false }
+    }
+
+    /// A policy that applies to everything.
+    pub fn all() -> Policy {
+        Policy { names: vec![], all: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_matches_everything() {
+        let p = Policy::resolve(&["all".into()], Arch::Gpt2).unwrap();
+        for n in Arch::Gpt2.linear_names() {
+            assert!(p.applies(n));
+        }
+        assert_eq!(p.label("gaussws"), "gaussws[all]");
+    }
+
+    #[test]
+    fn od_shorthand() {
+        let p = Policy::resolve(&["od".into()], Arch::Gpt2).unwrap();
+        assert!(p.applies("out"));
+        assert!(p.applies("down"));
+        assert!(!p.applies("qkv"));
+        assert!(!p.applies("up"));
+        assert_eq!(p.label("gaussws"), "gaussws[down,out]");
+    }
+
+    #[test]
+    fn single_part() {
+        let p = Policy::resolve(&["qkv".into()], Arch::Gpt2).unwrap();
+        assert!(p.applies("qkv"));
+        assert!(!p.applies("out"));
+    }
+
+    #[test]
+    fn unknown_part_rejected() {
+        assert!(Policy::resolve(&["qkv".into()], Arch::Llama2).is_err()); // llama has q,k,v
+        assert!(Policy::resolve(&["gate".into()], Arch::Gpt2).is_err());
+        assert!(Policy::resolve(&["gate".into()], Arch::Llama2).is_ok());
+    }
+
+    #[test]
+    fn none_policy() {
+        let p = Policy::none();
+        assert!(!p.applies("qkv"));
+    }
+}

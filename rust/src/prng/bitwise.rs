@@ -1,0 +1,349 @@
+//! Efficient generation of the approximated rounded normal `R ≈ ⌊N(0,1)/2⌉`
+//! using only bitwise operations (paper Section 3.4, Eq. 9–10).
+//!
+//! Target distribution over the support {−2, −1, 0, +1, +2}:
+//!
+//! ```text
+//! Pr(±2) = 3/4 · 2^-9           ≈ 1/682.7   (each)
+//! Pr(±1) = (3/4)^2 · 2^-2 · (1 − Pr(|R|=2)) ≈ 1/7.1 (each)
+//! Pr(0)  = remainder            ≈ 0.717
+//! ```
+//!
+//! Construction from independent random bits, 32 lanes at a time (one bit
+//! per lane across a `u32` word):
+//!
+//! * `mag2 = (a ∨ b) ∧ c₁ ∧ … ∧ c₈` — probability `3/4 · 2^-8` (the
+//!   *magnitude* event; the sign bit halves it to the `3/4 · 2^-9` above).
+//! * `mag1 = (d ∨ e) ∧ (f ∨ g) ∧ h` — probability `(3/4)² · 2^-1`, applied
+//!   only where `mag2` is clear.
+//! * `sign` — one raw random bit.
+//!
+//! Output is packed **sign–mantissa, 4 bits per element, 8 elements per
+//! `u32`** exactly as in the paper: `code = sign << 3 | magnitude`, with
+//! magnitude ∈ {0, 1, 2}. Dequantization multiplies by the per-block scale.
+//!
+//! Two generator variants:
+//! * [`generate_exact`] — 16 fresh random words per 32 elements; every bit
+//!   independent (the reference).
+//! * [`generate_fast`] — 4 fresh random words per 32 elements; the rare
+//!   `mag2` AND-chain reuses rotated copies of the same words. Marginal
+//!   per-lane probabilities are unchanged; only intra-word correlations are
+//!   introduced, which the tests bound. This mirrors the paper's trade-off
+//!   of tuning PRNG work per output element.
+
+use super::philox::Philox4x32;
+
+/// Number of 4-bit codes packed per u32 word.
+pub const CODES_PER_WORD: usize = 8;
+
+/// Packed 4-bit sign–mantissa codes for a noise tensor, 8 per u32 —
+/// 0.5 bytes per element, the paper's temporary-R footprint (§4.2).
+#[derive(Debug, Clone)]
+pub struct PackedNoise {
+    /// Packed words; element `i` lives in word `i / 8`, nibble `i % 8`.
+    pub words: Vec<u32>,
+    /// Number of valid elements (may be less than `words.len() * 8`).
+    pub len: usize,
+}
+
+impl PackedNoise {
+    /// Decode element `i` to its integer value in {−2, −1, 0, +1, +2}.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> i32 {
+        debug_assert!(i < self.len);
+        let nib = (self.words[i / 8] >> ((i % 8) * 4)) & 0xF;
+        decode_nibble(nib)
+    }
+
+    /// Decode everything to f32 (mostly for tests and small demos).
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.len).map(|i| self.get(i) as f32).collect()
+    }
+
+    /// Bytes of storage used (the 0.5 B/element figure from the paper).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
+/// Decode one 4-bit sign–mantissa nibble.
+#[inline(always)]
+pub fn decode_nibble(nib: u32) -> i32 {
+    let mag = (nib & 0x3) as i32;
+    if nib & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Encode sign (true = negative) and magnitude into a nibble.
+#[inline(always)]
+pub fn encode_nibble(neg: bool, mag: u32) -> u32 {
+    debug_assert!(mag <= 2);
+    ((neg as u32) << 3) | mag
+}
+
+/// Spread the 8 bits of a byte to the low bits of 8 nibbles:
+/// bit k of the byte lands at bit 4k of the u32.
+const fn spread8(b: u8) -> u32 {
+    let mut out = 0u32;
+    let mut k = 0;
+    while k < 8 {
+        out |= (((b >> k) & 1) as u32) << (4 * k);
+        k += 1;
+    }
+    out
+}
+
+/// Precomputed byte -> nibble-spread table (perf pass: replaces the
+/// per-lane shift loop; see EXPERIMENTS.md §Perf).
+static SPREAD: [u32; 256] = {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = spread8(i as u8);
+        i += 1;
+    }
+    t
+};
+
+/// Pack 32 per-lane bitplanes (sign, mag-bit0, mag-bit1) into 4 output
+/// words of 8 nibbles each: one table lookup per plane byte instead of
+/// eight per-lane shifts.
+#[inline(always)]
+fn pack_lanes(sign: u32, m0: u32, m1: u32, out: &mut [u32; 4]) {
+    let sb = sign.to_le_bytes();
+    let b0 = m0.to_le_bytes();
+    let b1 = m1.to_le_bytes();
+    let mut w = 0;
+    while w < 4 {
+        out[w] = SPREAD[b0[w] as usize]
+            | (SPREAD[b1[w] as usize] << 1)
+            | (SPREAD[sb[w] as usize] << 3);
+        w += 1;
+    }
+}
+
+/// Compute the three bitplanes (sign, mag0, mag1) for 32 lanes from fully
+/// independent words. `r` must hold 16 words.
+#[inline(always)]
+fn planes_exact(r: &[u32; 16]) -> (u32, u32, u32) {
+    let sign = r[0];
+    // mag2 event: (a|b) & 8-deep AND chain => p = 3/4 * 2^-8
+    let mag2 = (r[1] | r[2]) & r[3] & r[4] & r[5] & r[6] & r[7] & r[8] & r[9] & r[10];
+    // mag1 event: (d|e)&(f|g)&h => p = 9/32, masked off where mag2 fires
+    let mag1 = (r[11] | r[12]) & (r[13] | r[14]) & r[15] & !mag2;
+    // magnitude bits: mag2 -> binary 10, mag1 -> binary 01
+    let m0 = mag1;
+    let m1 = mag2;
+    (sign, m0, m1)
+}
+
+/// Bitplanes from only 4 fresh words; the AND chain reuses rotations.
+/// Marginal probabilities per lane are identical to `planes_exact`
+/// because a rotation of a uniform word is uniform and the chain ANDs
+/// 8 *distinct-rotation* copies (lane-wise still 8 distinct bits of the
+/// underlying words at distinct positions).
+#[inline(always)]
+fn planes_fast(r: &[u32; 4]) -> (u32, u32, u32) {
+    let sign = r[0];
+    let a = r[1];
+    let b = r[2];
+    let c = r[3];
+    // 8-deep AND from rotations of two words: each lane sees 8 bits drawn
+    // from distinct positions of (b, c) — independent per lane, correlated
+    // across lanes only through rotation overlap.
+    let chain = b
+        & b.rotate_left(7)
+        & b.rotate_left(13)
+        & b.rotate_left(22)
+        & c
+        & c.rotate_left(5)
+        & c.rotate_left(17)
+        & c.rotate_left(26);
+    let mag2 = (a | a.rotate_left(11)) & chain;
+    let mag1 = (a.rotate_left(3) | b.rotate_left(29)) & (c.rotate_left(9) | a.rotate_left(19)) & b.rotate_left(16) & !mag2;
+    (sign, mag1, mag2)
+}
+
+/// Generate `n` packed codes from `seed` using fully independent bits
+/// (16 PRNG words / 32 elements). Reference implementation.
+pub fn generate_exact(seed: u64, n: usize) -> PackedNoise {
+    let mut g = Philox4x32::new(seed);
+    let n_groups = n.div_ceil(32);
+    let mut words = Vec::with_capacity(n_groups * 4);
+    let mut r = [0u32; 16];
+    let mut out = [0u32; 4];
+    for _ in 0..n_groups {
+        g.fill_u32(&mut r);
+        let (s, m0, m1) = planes_exact(&r);
+        pack_lanes(s, m0, m1, &mut out);
+        words.extend_from_slice(&out);
+    }
+    PackedNoise { words, len: n }
+}
+
+/// Generate `n` packed codes from `seed` with the fast 4-words/32-elements
+/// construction (the performance hot path; see module docs for the
+/// correlation caveat).
+pub fn generate_fast(seed: u64, n: usize) -> PackedNoise {
+    let mut g = Philox4x32::new(seed);
+    let n_groups = n.div_ceil(32);
+    let mut words = Vec::with_capacity(n_groups * 4);
+    let mut r = [0u32; 4];
+    let mut out = [0u32; 4];
+    for _ in 0..n_groups {
+        g.fill_u32(&mut r);
+        let (s, m0, m1) = planes_fast(&r);
+        pack_lanes(s, m0, m1, &mut out);
+        words.extend_from_slice(&out);
+    }
+    PackedNoise { words, len: n }
+}
+
+/// Dequantize packed codes directly into an f32 buffer scaled by `scale`
+/// (a single block's `max|w| · 2^(1-b_t)`), i.e. the PQN of Eq. 3 for one
+/// block. `out.len()` must equal `noise.len`.
+pub fn dequantize_into(noise: &PackedNoise, scale: f32, out: &mut [f32]) {
+    assert_eq!(out.len(), noise.len);
+    // Lookup table over the 16 nibble codes — branch-free inner loop.
+    let mut lut = [0f32; 16];
+    for (nib, slot) in lut.iter_mut().enumerate() {
+        *slot = decode_nibble(nib as u32) as f32 * scale;
+    }
+    let full_words = noise.len / 8;
+    for w in 0..full_words {
+        let word = noise.words[w];
+        let base = w * 8;
+        for j in 0..8 {
+            out[base + j] = lut[((word >> (j * 4)) & 0xF) as usize];
+        }
+    }
+    for i in full_words * 8..noise.len {
+        out[i] = lut[((noise.words[i / 8] >> ((i % 8) * 4)) & 0xF) as usize];
+    }
+}
+
+/// Exact target probabilities of the Eq. 10 construction.
+/// Returns (p_zero, p_one_each, p_two_each).
+pub fn target_probabilities() -> (f64, f64, f64) {
+    let p2_each = 0.75 * 2f64.powi(-9);
+    let p_mag2 = 2.0 * p2_each;
+    let p1_each = 0.75 * 0.75 * 0.25 * (1.0 - p_mag2);
+    let p0 = 1.0 - 2.0 * p1_each - p_mag2;
+    (p0, p1_each, p2_each)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn histogram(noise: &PackedNoise) -> [usize; 5] {
+        // index: value + 2
+        let mut h = [0usize; 5];
+        for i in 0..noise.len {
+            h[(noise.get(i) + 2) as usize] += 1;
+        }
+        h
+    }
+
+    #[test]
+    fn nibble_roundtrip() {
+        for neg in [false, true] {
+            for mag in 0..=2u32 {
+                let nib = encode_nibble(neg, mag);
+                let v = decode_nibble(nib);
+                let expect = if neg { -(mag as i32) } else { mag as i32 };
+                assert_eq!(v, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_generator_matches_eq10_probabilities() {
+        let n = 2_000_000;
+        let h = histogram(&generate_exact(42, n));
+        let (p0, p1, p2) = target_probabilities();
+        let f = |c: usize| c as f64 / n as f64;
+        assert!((f(h[2]) - p0).abs() < 3e-3, "p0={} vs {}", f(h[2]), p0);
+        assert!((f(h[1]) - p1).abs() < 2e-3, "p(-1)={}", f(h[1]));
+        assert!((f(h[3]) - p1).abs() < 2e-3, "p(+1)={}", f(h[3]));
+        assert!((f(h[0]) - p2).abs() < 4e-4, "p(-2)={}", f(h[0]));
+        assert!((f(h[4]) - p2).abs() < 4e-4, "p(+2)={}", f(h[4]));
+    }
+
+    #[test]
+    fn fast_generator_matches_eq10_probabilities() {
+        let n = 2_000_000;
+        let h = histogram(&generate_fast(43, n));
+        let (p0, p1, p2) = target_probabilities();
+        let f = |c: usize| c as f64 / n as f64;
+        assert!((f(h[2]) - p0).abs() < 3e-3, "p0={} vs {}", f(h[2]), p0);
+        assert!((f(h[1]) - p1).abs() < 2e-3);
+        assert!((f(h[3]) - p1).abs() < 2e-3);
+        assert!((f(h[0]) - p2).abs() < 4e-4, "p(-2)={}", f(h[0]));
+        assert!((f(h[4]) - p2).abs() < 4e-4, "p(+2)={}", f(h[4]));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_fast(7, 1000);
+        let b = generate_fast(7, 1000);
+        assert_eq!(a.words, b.words);
+        let c = generate_fast(8, 1000);
+        assert_ne!(a.words, c.words);
+    }
+
+    #[test]
+    fn mean_near_zero_and_variance_near_rounded_normal() {
+        // Var of the Eq.10 dist: 2*(p1*1 + p2*4)
+        let n = 1_000_000;
+        let noise = generate_exact(11, n);
+        let mut sum = 0i64;
+        let mut sumsq = 0i64;
+        for i in 0..n {
+            let v = noise.get(i) as i64;
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum as f64 / n as f64;
+        let var = sumsq as f64 / n as f64 - mean * mean;
+        let (_, p1, p2) = target_probabilities();
+        let expect_var = 2.0 * (p1 + 4.0 * p2);
+        assert!(mean.abs() < 2e-3, "mean={mean}");
+        assert!((var - expect_var).abs() < 5e-3, "var={var} expect={expect_var}");
+    }
+
+    #[test]
+    fn storage_is_half_byte_per_element() {
+        let noise = generate_fast(1, 4096);
+        assert_eq!(noise.storage_bytes(), 4096 / 2);
+    }
+
+    #[test]
+    fn dequantize_scales_correctly() {
+        let noise = generate_exact(3, 1000);
+        let mut out = vec![0f32; 1000];
+        dequantize_into(&noise, 0.25, &mut out);
+        for i in 0..1000 {
+            assert_eq!(out[i], noise.get(i) as f32 * 0.25);
+        }
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let n = 500_000;
+        let noise = generate_fast(21, n);
+        let (mut neg, mut pos) = (0usize, 0usize);
+        for i in 0..n {
+            match noise.get(i) {
+                v if v > 0 => pos += 1,
+                v if v < 0 => neg += 1,
+                _ => {}
+            }
+        }
+        let ratio = pos as f64 / neg as f64;
+        assert!((ratio - 1.0).abs() < 0.02, "pos/neg={ratio}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Gaussian sampling baselines: Box–Muller `N(0,1)` and the exact rounded
+//! normal `⌊N(0,1)/2⌉`.
+//!
+//! These are the comparison points for Figure 6: the "conventional" way to
+//! obtain the paper's noise is PRNG → uniform → Box–Muller → divide → round,
+//! all in floating point. The bitwise generator in [`super::bitwise`]
+//! replaces every one of those FP ops with AND/OR.
+
+use super::philox::Philox4x32;
+use std::f64::consts::PI;
+
+/// Draw two independent `N(0,1)` samples via the Box–Muller transform.
+#[inline]
+pub fn box_muller_pair(g: &mut Philox4x32) -> (f64, f64) {
+    // u1 in (0,1] to avoid ln(0)
+    let u1 = 1.0 - g.next_f64();
+    let u2 = g.next_f64();
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Fill `out` with `N(0,1)` samples (Box–Muller).
+pub fn fill_normal(seed: u64, out: &mut [f64]) {
+    let mut g = Philox4x32::new(seed);
+    let mut chunks = out.chunks_exact_mut(2);
+    for pair in &mut chunks {
+        let (a, b) = box_muller_pair(&mut g);
+        pair[0] = a;
+        pair[1] = b;
+    }
+    if let [last] = chunks.into_remainder() {
+        *last = box_muller_pair(&mut g).0;
+    }
+}
+
+/// Exact rounded normal `⌊N(0,1)/2⌉` — round-half-away-from-zero of `N/2`,
+/// i.e. support {…,−2,−1,0,1,2,…} with `Pr(0) = P(|N| < 1) ≈ 0.6827`.
+#[inline]
+pub fn rounded_normal(g: &mut Philox4x32) -> i32 {
+    let (a, _) = box_muller_pair(g);
+    (a / 2.0).round() as i32
+}
+
+/// Fill a buffer with exact rounded normals (f32-valued, for the DiffQ-style
+/// reference path and distribution comparisons).
+pub fn fill_rounded_normal(seed: u64, out: &mut [f32]) {
+    let mut g = Philox4x32::new(seed);
+    let mut i = 0;
+    while i + 1 < out.len() {
+        let (a, b) = box_muller_pair(&mut g);
+        out[i] = (a / 2.0).round() as f32;
+        out[i + 1] = (b / 2.0).round() as f32;
+        i += 2;
+    }
+    if i < out.len() {
+        out[i] = rounded_normal(&mut g) as f32;
+    }
+}
+
+/// Fill a buffer with uniform `U(-0.5, 0.5)` samples — the DiffQ noise basis.
+pub fn fill_uniform_pm_half(seed: u64, out: &mut [f32]) {
+    let mut g = Philox4x32::new(seed);
+    for o in out.iter_mut() {
+        *o = g.next_f32() - 0.5;
+    }
+}
+
+/// Theoretical probabilities of the *exact* rounded normal over {0,±1,±2}:
+/// `(p0, p1_each, p2_each)` from the normal CDF.
+pub fn exact_rounded_probs() -> (f64, f64, f64) {
+    // Φ via erf approximation (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7)
+    fn phi(x: f64) -> f64 {
+        0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+    }
+    fn erf(x: f64) -> f64 {
+        let sign = if x < 0.0 { -1.0 } else { 1.0 };
+        let x = x.abs();
+        let t = 1.0 / (1.0 + 0.3275911 * x);
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        sign * y
+    }
+    let p0 = phi(1.0) - phi(-1.0);
+    let p1 = phi(3.0) - phi(1.0);
+    let p2 = 1.0 - phi(3.0); // everything beyond ±3 rounds to ≥2; tail mass
+    (p0, p1, p2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut buf = vec![0f64; 200_000];
+        fill_normal(5, &mut buf);
+        let n = buf.len() as f64;
+        let mean = buf.iter().sum::<f64>() / n;
+        let var = buf.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn rounded_normal_distribution() {
+        let mut buf = vec![0f32; 500_000];
+        fill_rounded_normal(9, &mut buf);
+        let n = buf.len() as f64;
+        let count = |v: f32| buf.iter().filter(|&&x| x == v).count() as f64 / n;
+        let (p0, p1, _p2) = exact_rounded_probs();
+        assert!((count(0.0) - p0).abs() < 5e-3, "p0={} expect={}", count(0.0), p0);
+        assert!((count(1.0) - p1).abs() < 3e-3);
+        assert!((count(-1.0) - p1).abs() < 3e-3);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut buf = vec![0f32; 100_000];
+        fill_uniform_pm_half(13, &mut buf);
+        assert!(buf.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        let mean: f32 = buf.iter().sum::<f32>() / buf.len() as f32;
+        assert!(mean.abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn eq10_approximation_is_close_to_exact() {
+        // The paper's bitwise approximation vs the true rounded normal:
+        // Pr(0): 0.717 vs 0.6827 — within 0.035; Pr(±1): 0.140 vs 0.157.
+        let (a0, a1, _a2) = super::super::bitwise::target_probabilities();
+        let (e0, e1, _e2) = exact_rounded_probs();
+        assert!((a0 - e0).abs() < 0.04);
+        assert!((a1 - e1).abs() < 0.02);
+    }
+}

@@ -1,0 +1,14 @@
+//! PRNG substrate: counter-based Philox, fast Romu, Box–Muller Gaussian
+//! baselines, the paper's Eq. 10 bitwise rounded-normal generator, and the
+//! Section-3.6 seed tree.
+
+pub mod bitwise;
+pub mod gauss;
+pub mod philox;
+pub mod romu;
+pub mod seedtree;
+
+pub use bitwise::{generate_exact, generate_fast, PackedNoise};
+pub use philox::Philox4x32;
+pub use romu::{RomuDuoJr, RomuTrio};
+pub use seedtree::SeedTree;

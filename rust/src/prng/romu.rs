@@ -1,0 +1,132 @@
+//! Romu family of fast nonlinear PRNGs (Overton, 2020) — the "legacy
+//! hardware friendly" generator cited by the paper (§3.4): multiply-free
+//! variants exist and state is tiny. We provide RomuTrio (the recommended
+//! general-purpose member) and RomuDuoJr (fastest).
+
+/// RomuTrio: 192-bit state, period > 2^75 w.h.p.
+#[derive(Debug, Clone, Copy)]
+pub struct RomuTrio {
+    x: u64,
+    y: u64,
+    z: u64,
+}
+
+impl RomuTrio {
+    /// Seed via SplitMix64 expansion to avoid weak all-zero-ish states.
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let mut next = || {
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let mut g = RomuTrio { x: next(), y: next(), z: next() };
+        if g.x == 0 && g.y == 0 && g.z == 0 {
+            g.x = 1;
+        }
+        // warm up
+        for _ in 0..4 {
+            g.next_u64();
+        }
+        g
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let xp = self.x;
+        let yp = self.y;
+        let zp = self.z;
+        self.x = zp.wrapping_mul(15241094284759029579);
+        self.y = yp.wrapping_sub(xp).rotate_left(12);
+        self.z = zp.wrapping_sub(yp).rotate_left(44);
+        xp
+    }
+
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0,1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// RomuDuoJr: 128-bit state, fastest member; fine for noise generation where
+/// statistical demands are modest and throughput is the point.
+#[derive(Debug, Clone, Copy)]
+pub struct RomuDuoJr {
+    x: u64,
+    y: u64,
+}
+
+impl RomuDuoJr {
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let mut next = || {
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let mut g = RomuDuoJr { x: next(), y: next() };
+        if g.x == 0 && g.y == 0 {
+            g.x = 1;
+        }
+        for _ in 0..4 {
+            g.next_u64();
+        }
+        g
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let xp = self.x;
+        self.x = self.y.wrapping_mul(15241094284759029579);
+        self.y = self.y.wrapping_sub(xp).rotate_left(27);
+        xp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trio_deterministic() {
+        let mut a = RomuTrio::new(99);
+        let mut b = RomuTrio::new(99);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn trio_uniform_mean() {
+        let mut g = RomuTrio::new(5);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| g.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn duojr_no_short_cycle() {
+        let mut g = RomuDuoJr::new(1);
+        let first = g.next_u64();
+        for _ in 0..10_000 {
+            assert_ne!(g.next_u64(), first); // coarse anti-cycle check
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = RomuTrio::new(1);
+        let mut b = RomuTrio::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,228 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. The manifest records, for every lowered HLO module, the
+//! flattened input/output signature (jax pytree order) plus model/PQT
+//! metadata, so buffer marshalling here needs no knowledge of jax.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element dtype of a tensor crossing the boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    S32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "bf16" => Dtype::Bf16,
+            "s32" => Dtype::S32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype '{other}' in manifest"),
+        })
+    }
+}
+
+/// Shape + dtype + pytree path of one input/output leaf.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").as_str().context("tensor name")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.get("dtype").as_str().context("tensor dtype")?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Sorted parameter names from the meta block (train/eval artifacts).
+    pub fn param_names(&self) -> Vec<String> {
+        str_list(self.meta.get("param_names"))
+    }
+
+    pub fn bi_names(&self) -> Vec<String> {
+        str_list(self.meta.get("bi_names"))
+    }
+
+    pub fn param_shape(&self, name: &str) -> Option<Vec<usize>> {
+        shape_of(self.meta.get("param_shapes").get(name))
+    }
+
+    pub fn bi_shape(&self, name: &str) -> Option<Vec<usize>> {
+        shape_of(self.meta.get("bi_shapes").get(name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).as_usize()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).as_str()
+    }
+}
+
+fn str_list(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+fn shape_of(j: &Json) -> Option<Vec<usize>> {
+    j.as_arr().map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        let obj = root.get("artifacts").as_obj().context("manifest.artifacts")?;
+        for (name, entry) in obj {
+            let inputs = entry
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let file = dir.join(entry.get("file").as_str().context("file")?);
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    kind: entry.get("kind").as_str().unwrap_or("op").to_string(),
+                    inputs,
+                    outputs,
+                    meta: entry.get("meta").clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Artifact name for a (model_tag, method_tag, kind) triple, e.g.
+    /// ("tiny_gpt2", "gaussws_all", "train").
+    pub fn model_artifact(&self, model: &str, method: &str, kind: &str) -> Result<&ArtifactSpec> {
+        self.get(&format!("{model}.{method}.{kind}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest(dir: &Path) {
+        let text = r#"{
+ "artifacts": {
+  "op.demo": {
+   "file": "op.demo.hlo.txt",
+   "kind": "op",
+   "inputs": [{"name": "w", "shape": [4, 4], "dtype": "f32"},
+              {"name": "seed", "shape": [], "dtype": "s32"}],
+   "outputs": [{"name": "out", "shape": [4, 4], "dtype": "bf16"}],
+   "meta": {"param_names": ["a", "b"], "param_shapes": {"a": [2, 2], "b": [3]},
+            "batch": 8}
+  }
+ }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("gaussws_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        sample_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("op.demo").unwrap();
+        assert_eq!(a.kind, "op");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![4, 4]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].dtype, Dtype::Bf16);
+        assert_eq!(a.param_names(), vec!["a", "b"]);
+        assert_eq!(a.param_shape("a"), Some(vec![2, 2]));
+        assert_eq!(a.meta_usize("batch"), Some(8));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn numel() {
+        let t = TensorSpec { name: "x".into(), shape: vec![3, 4, 5], dtype: Dtype::F32 };
+        assert_eq!(t.numel(), 60);
+        let s = TensorSpec { name: "s".into(), shape: vec![], dtype: Dtype::S32 };
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration-lite: if `make artifacts` has run, parse the real one
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.len() >= 3);
+            let op = m.get("op.gaussws_sample").unwrap();
+            assert_eq!(op.inputs.len(), 3);
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! rust hot path. Wraps the `xla` crate exactly as in
+//! /opt/xla-example/load_hlo (PjRtClient::cpu → HloModuleProto::from_text_file
+//! → compile → execute), plus signature checking against the manifest and a
+//! host-buffer value type.
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::S32(v) => v.len(),
+            HostTensor::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar f32/f64-ish value (loss outputs).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.len() != spec.numel() {
+            bail!(
+                "input '{}': expected {} elements ({:?}), got {}",
+                spec.name,
+                spec.numel(),
+                spec.shape,
+                self.len()
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (self, spec.dtype) {
+            (HostTensor::F32(v), Dtype::F32) => xla::Literal::vec1(v),
+            (HostTensor::S32(v), Dtype::S32) => xla::Literal::vec1(v),
+            (HostTensor::U32(v), Dtype::U32) => xla::Literal::vec1(v),
+            (t, d) => bail!("input '{}': dtype mismatch {t:?} vs {d:?}", spec.name),
+        };
+        // scalars: vec1 of len 1 reshaped to rank-0
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let out = match spec.dtype {
+            Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            Dtype::Bf16 => {
+                // widen bf16 outputs to f32 on the host
+                let wide = lit.convert(xla::PrimitiveType::F32)?;
+                HostTensor::F32(wide.to_vec::<f32>()?)
+            }
+            Dtype::S32 => HostTensor::S32(lit.to_vec::<i32>()?),
+            Dtype::U32 => HostTensor::U32(lit.to_vec::<u32>()?),
+        };
+        if out.len() != spec.numel() {
+            bail!("output '{}': expected {} elements, got {}", spec.name, spec.numel(), out.len());
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: one PJRT CPU client + an executable cache keyed by artifact
+/// name. Compilation happens once per artifact per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = spec
+            .file
+            .to_str()
+            .context("artifact path not utf8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs in manifest order; returns host
+    /// outputs in manifest order. Signature-checked both ways.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?;
+        let spec: ArtifactSpec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .zip(spec.inputs.iter())
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: root is a tuple of leaves.
+        let mut parts = result;
+        let leaves = parts.decompose_tuple()?;
+        if leaves.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}': expected {} outputs, got {}",
+                spec.outputs.len(),
+                leaves.len()
+            );
+        }
+        leaves
+            .iter()
+            .zip(spec.outputs.iter())
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime round-trips against real artifacts live in rust/tests/
+    // (they need `make artifacts` to have run). Here: host-tensor checks.
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0]);
+        let s = spec(&[2, 2], Dtype::F32);
+        let lit = t.to_literal(&s).unwrap();
+        let back = HostTensor::from_literal(&lit, &s).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let t = HostTensor::S32(vec![7]);
+        let s = spec(&[], Dtype::S32);
+        let lit = t.to_literal(&s).unwrap();
+        assert_eq!(HostTensor::from_literal(&lit, &s).unwrap(), t);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = HostTensor::F32(vec![1.0; 3]);
+        assert!(t.to_literal(&spec(&[2, 2], Dtype::F32)).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = HostTensor::F32(vec![1.0; 4]);
+        assert!(t.to_literal(&spec(&[4], Dtype::S32)).is_err());
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        assert_eq!(HostTensor::F32(vec![2.5]).scalar_f32().unwrap(), 2.5);
+        assert!(HostTensor::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+}

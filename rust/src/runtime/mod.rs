@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client wrapper + artifact manifest. Loads the HLO
+//! text emitted by `python/compile/aot.py` and executes it from the L3 hot
+//! path — Python never runs here.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+pub use client::{HostTensor, Runtime};

@@ -1,0 +1,5 @@
+//! Test support: a mini property-testing framework (proptest substitute).
+
+pub mod prop;
+
+pub use prop::{assert_allclose, check, Gen};

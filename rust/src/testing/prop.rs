@@ -1,0 +1,167 @@
+//! Mini property-testing framework (substrate — proptest is not in the
+//! offline vendor). Deterministic per-seed case generation with failure
+//! reporting of the generating seed and case index, so failures reproduce.
+
+use crate::prng::Philox4x32;
+
+/// A source of random primitive values for one generated case.
+pub struct Gen {
+    rng: Philox4x32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Philox4x32::new(seed) }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform i32 in [lo, hi] inclusive.
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.rng.next_u64() % (hi as i64 - lo as i64 + 1) as u64) as i32
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        crate::prng::gauss::box_muller_pair(&mut self.rng).0
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Vector of f32 normals.
+    pub fn normal_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `cases` generated property checks. The property returns
+/// `Result<(), String>`; the first failure panics with the seed and case
+/// index baked into the message.
+pub fn check(name: &str, cases: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Tiny FNV-ish string hash so property names decorrelate seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_run_and_pass() {
+        check("addition commutes", 100, |g| {
+            let a = g.f64_in(-1e6, 1e6);
+            let b = g.f64_in(-1e6, 1e6);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failures_panic_with_context() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 200, |g| {
+            let u = g.usize_in(3, 7);
+            if !(3..=7).contains(&u) {
+                return Err(format!("usize {u}"));
+            }
+            let i = g.i32_in(-5, 5);
+            if !(-5..=5).contains(&i) {
+                return Err(format!("i32 {i}"));
+            }
+            let f = g.f64_in(0.25, 0.5);
+            if !(0.25..0.5).contains(&f) {
+                return Err(format!("f64 {f}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0], 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut v1 = Vec::new();
+        check("det", 5, |g| {
+            v1.push(g.u64());
+            Ok(())
+        });
+        let mut v2 = Vec::new();
+        check("det", 5, |g| {
+            v2.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (substrate — clap is not in the offline vendor).
+//!
+//! Model: `program <subcommand> [--flag] [--key value] [positional...]`.
+//! Long options only; `--key=value` and `--key value` both accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining non-option tokens after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.options.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` greedily consumes a following non-option
+        // token, so boolean flags go last or use `--flag=true`.
+        let a = parse("train --config cfg.toml --steps 100 run1 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("cfg.toml"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --size=1024x512 --iters=3");
+        assert_eq!(a.get("size"), Some("1024x512"));
+        assert_eq!(a.usize_or("iters", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.f64_or("lr", 1e-3), 1e-3);
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+}

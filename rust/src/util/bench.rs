@@ -1,0 +1,128 @@
+//! Mini benchmark harness (substrate — criterion is not in the offline
+//! vendor). Warmup + timed iterations, median/MAD reporting, and throughput
+//! helpers matching the units the paper reports (10⁹ elements/s in Fig. 6,
+//! tokens/s in Table 1).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall time per iteration, seconds.
+    pub median_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Number of timed iterations.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Elements per second given `n` elements processed per iteration.
+    pub fn elems_per_sec(&self, n: usize) -> f64 {
+        n as f64 / self.median_s
+    }
+
+    /// Giga-elements per second (Fig. 6 unit).
+    pub fn gelems_per_sec(&self, n: usize) -> f64 {
+        self.elems_per_sec(n) / 1e9
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    /// Minimum total measured time before stopping (seconds).
+    pub min_time_s: f64,
+    /// Warmup iterations.
+    pub warmup: usize,
+    /// Max timed iterations (cap for very fast functions).
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_time_s: 0.5, warmup: 2, max_iters: 200 }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Bencher { min_time_s: 0.15, warmup: 1, max_iters: 50 }
+    }
+
+    /// Run `f` repeatedly, returning per-iteration statistics. The closure's
+    /// return value is consumed with `std::hint::black_box` to prevent DCE.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.min_time_s && times.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        if times.is_empty() {
+            // function slower than min_time; one mandatory sample
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        BenchResult { name: name.to_string(), median_s: median, mad_s: mad, iters: times.len() }
+    }
+}
+
+/// Pretty-print a row: name, median time, optional throughput.
+pub fn report(res: &BenchResult, elems: Option<usize>) {
+    match elems {
+        Some(n) => println!(
+            "{:<42} {:>10.3} ms ± {:>7.3}  {:>9.3} Gelem/s  ({} iters)",
+            res.name,
+            res.median_s * 1e3,
+            res.mad_s * 1e3,
+            res.gelems_per_sec(n),
+            res.iters
+        ),
+        None => println!(
+            "{:<42} {:>10.3} ms ± {:>7.3}  ({} iters)",
+            res.name,
+            res.median_s * 1e3,
+            res.mad_s * 1e3,
+            res.iters
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { min_time_s: 0.02, warmup: 1, max_iters: 20 };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let r = BenchResult { name: "x".into(), median_s: 0.001, mad_s: 0.0, iters: 1 };
+        assert_eq!(r.elems_per_sec(1_000_000), 1e9);
+        assert_eq!(r.gelems_per_sec(1_000_000), 1.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: JSON, CLI args, statistics, benchmarking harness.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod stats;
+
+pub use args::Args;
+pub use json::Json;

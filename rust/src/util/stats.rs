@@ -1,0 +1,164 @@
+//! Small statistics helpers shared by metrics, benches and tests.
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Geometric mean of positive values; 0 if any non-positive or empty.
+/// Used for the Table-1 "geometric mean of the overhead" summary.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Exponentially weighted moving average with smoothing `alpha` — the
+/// paper's Fig. 4 uses α = 1/16 and 1/128 for loss-curve smoothing.
+pub struct Wma {
+    alpha: f64,
+    state: Option<f64>,
+}
+
+impl Wma {
+    pub fn new(alpha: f64) -> Self {
+        Wma { alpha, state: None }
+    }
+
+    /// Feed one sample; returns the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let next = match self.state {
+            None => x,
+            Some(s) => s + self.alpha * (x - s),
+        };
+        self.state = Some(next);
+        next
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.state
+    }
+}
+
+/// Apply a WMA over a whole series.
+pub fn wma_series(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut w = Wma::new(alpha);
+    xs.iter().map(|&x| w.update(x)).collect()
+}
+
+/// Windowed maximum (the paper's "maximum loss" columns in Fig. 4).
+pub fn windowed_max(xs: &[f64], window: usize) -> Vec<f64> {
+    assert!(window > 0);
+    xs.iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let lo = i.saturating_sub(window - 1);
+            xs[lo..=i].iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        })
+        .collect()
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped into the
+/// edge bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[idx] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), 5.0);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn geo_mean_basic() {
+        assert!((geo_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geo_mean(&[1.0, -1.0]), 0.0);
+    }
+
+    #[test]
+    fn wma_converges_to_constant() {
+        let mut w = Wma::new(1.0 / 16.0);
+        let mut last = 0.0;
+        for _ in 0..1000 {
+            last = w.update(3.5);
+        }
+        assert!((last - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wma_first_sample_is_identity() {
+        let mut w = Wma::new(0.125);
+        assert_eq!(w.update(7.0), 7.0);
+    }
+
+    #[test]
+    fn windowed_max_tracks_spikes() {
+        let xs = [1.0, 5.0, 2.0, 2.0, 2.0, 2.0];
+        let m = windowed_max(&xs, 3);
+        assert_eq!(m, vec![1.0, 5.0, 5.0, 5.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1, 0.2, 0.9, -5.0, 5.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![3, 2]);
+    }
+}

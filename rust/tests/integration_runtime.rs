@@ -1,0 +1,143 @@
+//! Cross-language integration: the AOT artifacts (jax/Pallas-lowered HLO)
+//! executed through the PJRT runtime must agree with the pure-rust
+//! implementations of the same math. Requires `make artifacts`.
+
+use gaussws::numerics::Bf16;
+use gaussws::prng::Philox4x32;
+use gaussws::runtime::{HostTensor, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+/// Mirror of prng::bitwise::planes_fast on plain u32 words (the kernel and
+/// the rust generator share this construction).
+fn planes_fast_ref(r: &[u32; 4]) -> Vec<i32> {
+    let a = r[1];
+    let b = r[2];
+    let c = r[3];
+    let chain = b
+        & b.rotate_left(7)
+        & b.rotate_left(13)
+        & b.rotate_left(22)
+        & c
+        & c.rotate_left(5)
+        & c.rotate_left(17)
+        & c.rotate_left(26);
+    let mag2 = (a | a.rotate_left(11)) & chain;
+    let mag1 =
+        (a.rotate_left(3) | b.rotate_left(29)) & (c.rotate_left(9) | a.rotate_left(19)) & b.rotate_left(16) & !mag2;
+    let sign = r[0];
+    (0..32)
+        .map(|lane| {
+            let s = (sign >> lane) & 1;
+            let m = ((mag1 >> lane) & 1) as i32 + 2 * ((mag2 >> lane) & 1) as i32;
+            if s == 1 {
+                -m
+            } else {
+                m
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn noise_kernel_matches_rust_bit_construction() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.get("op.noise_bitwise").unwrap().clone();
+    let groups = spec.inputs[0].shape[0];
+    let mut g = Philox4x32::new(42);
+    let mut bits = vec![0u32; groups * 4];
+    g.fill_u32(&mut bits);
+    let out = rt
+        .execute("op.noise_bitwise", &[HostTensor::U32(bits.clone())])
+        .unwrap();
+    let vals = out[0].as_f32().unwrap();
+    assert_eq!(vals.len(), groups * 32);
+    for grp in 0..groups.min(256) {
+        let words = [bits[grp * 4], bits[grp * 4 + 1], bits[grp * 4 + 2], bits[grp * 4 + 3]];
+        let expect = planes_fast_ref(&words);
+        for lane in 0..32 {
+            assert_eq!(
+                vals[grp * 32 + lane] as i32,
+                expect[lane],
+                "group {grp} lane {lane}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sampling_kernel_matches_rust_formula() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.get("op.gaussws_sample").unwrap().clone();
+    let (m, n) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let (gm, gn) = (m / 32, n / 32);
+
+    let mut g = Philox4x32::new(7);
+    let w: Vec<f32> = (0..m * n).map(|_| (g.next_f32() - 0.5) * 2.0).collect();
+    let bt: Vec<f32> = (0..gm * gn).map(|_| 3.0 + g.next_f32() * 5.0).collect();
+    // noise values in {-2..2}
+    let noise: Vec<f32> = (0..m * n).map(|_| ((g.next_u32() % 5) as i32 - 2) as f32).collect();
+
+    let out = rt
+        .execute(
+            "op.gaussws_sample",
+            &[
+                HostTensor::F32(w.clone()),
+                HostTensor::F32(bt.clone()),
+                HostTensor::F32(noise.clone()),
+            ],
+        )
+        .unwrap();
+    let what = out[0].as_f32().unwrap();
+
+    // rust-side amax per 32x32 block
+    let amax = gaussws::mx::block_absmax_f32(&w, m, n, 32);
+    for r in 0..m {
+        for c in 0..n {
+            let i = r * n + c;
+            let blk = (r / 32) * gn + c / 32;
+            let scale = amax[blk] * (1.0 - bt[blk]).exp2();
+            let expect = Bf16::from_f32(w[i] + noise[i] * scale).to_f32();
+            assert_eq!(what[i], expect, "({r},{c})");
+        }
+    }
+}
+
+#[test]
+fn box_muller_kernel_distribution() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.get("op.noise_boxmuller").unwrap().clone();
+    let groups = spec.inputs[0].shape[0];
+    let mut g = Philox4x32::new(3);
+    let mut bits = vec![0u32; groups * 32];
+    g.fill_u32(&mut bits);
+    let out = rt.execute("op.noise_boxmuller", &[HostTensor::U32(bits)]).unwrap();
+    let vals = out[0].as_f32().unwrap();
+    let n = vals.len() as f64;
+    let p0 = vals.iter().filter(|&&v| v == 0.0).count() as f64 / n;
+    // exact rounded normal: Pr(0) = P(|N|<1) ~ 0.6827
+    assert!((p0 - 0.6827).abs() < 0.02, "p0={p0}");
+}
+
+#[test]
+fn artifact_signature_mismatches_are_rejected() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // wrong input count
+    assert!(rt.execute("op.noise_bitwise", &[]).is_err());
+    // wrong dtype
+    let spec = rt.manifest.get("op.noise_bitwise").unwrap().clone();
+    let numel = spec.inputs[0].numel();
+    assert!(rt
+        .execute("op.noise_bitwise", &[HostTensor::F32(vec![0.0; numel])])
+        .is_err());
+    // unknown artifact
+    assert!(rt.execute("op.does_not_exist", &[]).is_err());
+}

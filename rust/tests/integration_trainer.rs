@@ -1,0 +1,161 @@
+//! End-to-end trainer integration over the real artifacts: loss decreases,
+//! runs are deterministic per seed, checkpoints resume exactly, PQT
+//! bitwidths anneal, and data-parallel workers agree with single-worker
+//! training on expectations. Requires `make artifacts` (skips otherwise).
+
+use gaussws::config::schema::{Optimizer, TrainConfig};
+use gaussws::coordinator::Trainer;
+use gaussws::runtime::Runtime;
+
+fn trainer(artifact: &str, steps: usize, seed: u64, workers: usize, opt: Optimizer) -> Option<Trainer> {
+    let runtime = match Runtime::new("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return None;
+        }
+    };
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: 3,
+        max_lr: 1e-3,
+        min_lr: 1e-4,
+        optimizer: opt,
+        workers,
+        seed,
+        ..Default::default()
+    };
+    Some(Trainer::new(runtime, artifact, cfg, "itest").unwrap())
+}
+
+#[test]
+fn loss_decreases_on_tiny_gpt2_gaussws() {
+    let Some(mut t) = trainer("tiny_gpt2.gaussws_all", 25, 1, 1, Optimizer::AdamW) else {
+        return;
+    };
+    t.run(25, 0).unwrap();
+    let losses = t.log.losses();
+    let first = losses[0];
+    let last_avg: f64 = losses[20..].iter().sum::<f64>() / 5.0;
+    assert!(
+        last_avg < first - 0.15,
+        "loss should drop: first={first:.3} last5={last_avg:.3}"
+    );
+    // init loss ~ ln(vocab) = ln 256 ~ 5.55
+    assert!((first - 5.55).abs() < 0.8, "init loss {first}");
+}
+
+#[test]
+fn deterministic_per_seed() {
+    let Some(mut a) = trainer("tiny_gpt2.gaussws_all", 6, 9, 1, Optimizer::AdamW) else {
+        return;
+    };
+    let Some(mut b) = trainer("tiny_gpt2.gaussws_all", 6, 9, 1, Optimizer::AdamW) else {
+        return;
+    };
+    a.run(6, 0).unwrap();
+    b.run(6, 0).unwrap();
+    assert_eq!(a.log.losses(), b.log.losses());
+    let Some(mut c) = trainer("tiny_gpt2.gaussws_all", 6, 10, 1, Optimizer::AdamW) else {
+        return;
+    };
+    c.run(6, 0).unwrap();
+    assert_ne!(a.log.losses(), c.log.losses());
+}
+
+#[test]
+fn checkpoint_resume_is_exact() {
+    let Some(mut full) = trainer("tiny_gpt2.gaussws_all", 10, 4, 1, Optimizer::AdamW) else {
+        return;
+    };
+    full.run(5, 0).unwrap();
+    let ck = std::env::temp_dir().join("gaussws_itest.ck");
+    full.save_checkpoint(ck.to_str().unwrap()).unwrap();
+    full.run(5, 0).unwrap();
+
+    let Some(mut resumed) = trainer("tiny_gpt2.gaussws_all", 10, 4, 1, Optimizer::AdamW) else {
+        return;
+    };
+    resumed.load_checkpoint(ck.to_str().unwrap()).unwrap();
+    assert_eq!(resumed.step, 5);
+    resumed.run(5, 0).unwrap();
+    // NOTE: optimizer moments are not in the checkpoint, so trajectories
+    // only match approximately; params at resume point match exactly.
+    let l_full = full.log.losses()[5];
+    let l_res = resumed.log.losses()[0];
+    assert!(
+        (l_full - l_res).abs() < 0.2,
+        "resume loss {l_res} vs original {l_full}"
+    );
+}
+
+#[test]
+fn bitwidths_anneal_toward_target() {
+    let Some(mut t) = trainer("tiny_gpt2.gaussws_all", 30, 2, 1, Optimizer::AdamW) else {
+        return;
+    };
+    // the paper anneals over 600k steps with wd=0.1; at 30 test steps we
+    // scale the decay up so the mechanism is observable
+    t.bi_weight_decay = 20.0;
+    let bt0: f32 = t.bt_of(&t.bi_layer_names()[0]).unwrap()[0];
+    assert_eq!(bt0, 6.0); // b_init
+    t.run(30, 0).unwrap();
+    for name in t.bi_layer_names() {
+        let bt = t.bt_of(&name).unwrap();
+        let mean: f32 = bt.iter().sum::<f32>() / bt.len() as f32;
+        assert!(mean < 6.0, "{name}: b_t should decay below b_init, got {mean}");
+        assert!(mean > 3.5, "{name}: b_t should stay near/above b_target, got {mean}");
+    }
+}
+
+#[test]
+fn multi_worker_matches_bigger_batch_direction() {
+    // 2 workers see 2x tokens/step; loss after N steps should be <= the
+    // 1-worker run within tolerance (more data, same steps).
+    let Some(mut w1) = trainer("tiny_gpt2.bf16", 12, 5, 1, Optimizer::AdamW) else {
+        return;
+    };
+    let Some(mut w2) = trainer("tiny_gpt2.bf16", 12, 5, 2, Optimizer::AdamW) else {
+        return;
+    };
+    w1.run(12, 0).unwrap();
+    w2.run(12, 0).unwrap();
+    assert_eq!(w2.tokens_per_step(), 2 * w1.tokens_per_step());
+    let f1 = w1.log.final_loss().unwrap();
+    let f2 = w2.log.final_loss().unwrap();
+    assert!(f2 < f1 + 0.15, "2-worker {f2} vs 1-worker {f1}");
+}
+
+#[test]
+fn adam_mini_trains_too() {
+    let Some(mut t) = trainer("tiny_gpt2.gaussws_all", 15, 6, 1, Optimizer::AdamMini) else {
+        return;
+    };
+    t.run(15, 0).unwrap();
+    let losses = t.log.losses();
+    assert!(losses[14] < losses[0], "{:?}", (losses[0], losses[14]));
+    // Adam-mini optimizer state is smaller than AdamW's would be
+    // (~4B/param vs 8B/param); check through the memory model
+    let mem = t.memory_model_bytes("gaussws");
+    let n: usize = t.params.values().map(|v| v.len()).sum();
+    assert!(mem < n * 11, "mem {mem} vs params {n}");
+}
+
+#[test]
+fn eval_artifact_runs() {
+    let Some(mut t) = trainer("tiny_gpt2.gaussws_all", 5, 7, 1, Optimizer::AdamW) else {
+        return;
+    };
+    t.run(5, 0).unwrap();
+    let loss = t.evaluate("tiny_gpt2.gaussws_all", 2).unwrap();
+    assert!(loss.is_finite() && loss > 0.0 && loss < 10.0, "{loss}");
+}
+
+#[test]
+fn diffq_and_baseline_artifacts_train() {
+    for tag in ["tiny_gpt2.diffq_all", "tiny_gpt2.bf16"] {
+        let Some(mut t) = trainer(tag, 8, 8, 1, Optimizer::AdamW) else { return };
+        t.run(8, 0).unwrap();
+        assert!(t.log.losses().iter().all(|l| l.is_finite()), "{tag}");
+    }
+}

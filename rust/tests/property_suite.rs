@@ -1,0 +1,233 @@
+//! Cross-module property tests (mini-proptest from `gaussws::testing`):
+//! invariants that span substrates rather than living inside one module.
+
+use gaussws::config::schema::PqtMethod;
+use gaussws::mx::{quantize_square, transpose, ElemType};
+use gaussws::numerics::fpformat::{formats, FpFormat};
+use gaussws::pqt::gaussws::{backward_bt, forward, pqn, NoiseGen};
+use gaussws::pqt::PqtLinear;
+use gaussws::testing::prop::{check, Gen};
+
+#[test]
+fn prop_fp_cast_is_monotone() {
+    // x <= y  =>  cast(x) <= cast(y), for every format
+    check("fp cast monotone", 300, |g| {
+        let fmt = *g.choose(&[
+            formats::FP16,
+            formats::FP8_E4M3,
+            formats::FP8_E3M4,
+            formats::FP6_E3M2,
+            formats::FP4_E2M1,
+            formats::FP12_E4M7,
+        ]);
+        let a = g.f64_in(-100.0, 100.0);
+        let b = g.f64_in(-100.0, 100.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if fmt.cast(lo) <= fmt.cast(hi) {
+            Ok(())
+        } else {
+            Err(format!("{fmt:?}: cast({lo}) > cast({hi})"))
+        }
+    });
+}
+
+#[test]
+fn prop_fp_cast_error_within_half_ulp() {
+    check("fp cast error bound", 300, |g| {
+        let fmt = *g.choose(&[formats::FP16, formats::FP8_E4M3, formats::FP12_E4M7]);
+        let x = g.f64_in(-10.0, 10.0);
+        let c = fmt.cast(x);
+        if c.abs() >= fmt.max_finite() {
+            return Ok(()); // saturated
+        }
+        let ulp = fmt.ulp(x);
+        if (c - x).abs() <= 0.5 * ulp + 1e-18 {
+            Ok(())
+        } else {
+            Err(format!("{fmt:?}: |{c} - {x}| > ulp/2 = {}", ulp / 2.0))
+        }
+    });
+}
+
+#[test]
+fn prop_square_quant_commutes_with_transpose_for_any_block() {
+    check("square quant transpose", 40, |g| {
+        let rows = g.usize_in(1, 3) * 32;
+        let cols = g.usize_in(1, 3) * 32;
+        let block = *g.choose(&[8usize, 16, 32]);
+        let w = g.normal_vec(rows * cols);
+        let elem = ElemType::Int { bits: g.i32_in(2, 8) as u32 };
+        let q = quantize_square(&w, rows, cols, block, &elem);
+        let qt = transpose(&q.data, rows, cols);
+        let wt = transpose(&w, rows, cols);
+        let q2 = quantize_square(&wt, cols, rows, block, &elem);
+        if qt == q2.data {
+            Ok(())
+        } else {
+            Err(format!("{rows}x{cols} block {block}"))
+        }
+    });
+}
+
+#[test]
+fn prop_gaussws_backward_is_linear_in_g() {
+    // backward_bt(a*g1 + g2) == a*backward_bt(g1) + backward_bt(g2)
+    check("eq4 linearity", 25, |g| {
+        let (m, n) = (64usize, 64usize);
+        let w = g.normal_vec_f32(m * n);
+        let bt = vec![g.f64_in(3.0, 8.0) as f32; 4];
+        let mut what = vec![0f32; m * n];
+        let st = forward(&w, m, n, 32, &bt, g.u64(), NoiseGen::Exact, &mut what);
+        let g1 = g.normal_vec_f32(m * n);
+        let g2 = g.normal_vec_f32(m * n);
+        let a = g.f64_in(-2.0, 2.0) as f32;
+        let combo: Vec<f32> = g1.iter().zip(&g2).map(|(x, y)| a * x + y).collect();
+        let lhs = backward_bt(&st, &combo);
+        let b1 = backward_bt(&st, &g1);
+        let b2 = backward_bt(&st, &g2);
+        for k in 0..lhs.len() {
+            let rhs = a * b1[k] + b2[k];
+            if (lhs[k] - rhs).abs() > 1e-3 * (1.0 + rhs.abs()) {
+                return Err(format!("block {k}: {} vs {rhs}", lhs[k]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pqn_scale_invariance() {
+    // scaling w by 2^k scales the PQN by exactly 2^k (power-of-two => the
+    // blockwise max and bf16 arithmetic commute with the scaling)
+    check("pqn scale invariance", 20, |g| {
+        let (m, n) = (32usize, 32usize);
+        let w = g.normal_vec_f32(m * n);
+        let k = g.i32_in(-3, 3);
+        let s = (k as f32).exp2();
+        let ws: Vec<f32> = w.iter().map(|&x| x * s).collect();
+        let bt = vec![5.0f32];
+        let seed = g.u64();
+        let mut buf = vec![0f32; m * n];
+        let st1 = forward(&w, m, n, 32, &bt, seed, NoiseGen::Exact, &mut buf);
+        let st2 = forward(&ws, m, n, 32, &bt, seed, NoiseGen::Exact, &mut buf);
+        let p1 = pqn(&st1);
+        let p2 = pqn(&st2);
+        for i in 0..p1.len() {
+            if (p1[i] * s - p2[i]).abs() > 1e-6 * s.abs() {
+                return Err(format!("elem {i}: {} vs {}", p1[i] * s, p2[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_module_forward_preserves_w_where_noise_zero() {
+    check("module zero-noise passthrough", 15, |g| {
+        let l = PqtLinear::new("p", 64, 64, 32, PqtMethod::GaussWs, 6.0, 4.0);
+        let w = g.normal_vec_f32(64 * 64);
+        let mut what = vec![0f32; w.len()];
+        let st = l.forward(&w, g.u64(), &mut what);
+        if let gaussws::pqt::FwdState::Gauss(s) = &st {
+            for i in 0..w.len() {
+                if s.noise.get(i) == 0 {
+                    let expect = gaussws::numerics::Bf16::from_f32(w[i]).to_f32();
+                    if what[i] != expect {
+                        return Err(format!("elem {i}"));
+                    }
+                }
+            }
+            Ok(())
+        } else {
+            Err("wrong state".into())
+        }
+    });
+}
+
+#[test]
+fn prop_loader_batches_deterministic_and_in_vocab() {
+    use gaussws::data::{Loader, SynthCorpus, SynthSpec};
+    check("loader determinism", 10, |g| {
+        let vocab = *g.choose(&[64usize, 256]);
+        let corpus = SynthCorpus::generate(SynthSpec {
+            vocab,
+            len: 50_000,
+            seed: g.u64(),
+            ..Default::default()
+        });
+        let l = Loader::new(corpus, 2, 16, g.u64());
+        let step = g.u64() % 1000;
+        let a = l.batch_at(step);
+        let b = l.batch_at(step);
+        if a != b {
+            return Err("non-deterministic batch".into());
+        }
+        if !a.x.iter().all(|&t| (t as usize) < vocab) {
+            return Err("token out of vocab".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_docs() {
+    use gaussws::util::json::{arr, num, obj, s, Json};
+    check("json roundtrip", 50, |g| {
+        // build a random nested doc
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            if depth == 0 || g.bool() {
+                match g.i32_in(0, 2) {
+                    0 => num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                    1 => s(&format!("s{}", g.u32())),
+                    _ => Json::Bool(g.bool()),
+                }
+            } else if g.bool() {
+                arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect())
+            } else {
+                obj((0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect())
+            }
+        }
+        let doc = build(g, 3);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+        if parsed == doc {
+            Ok(())
+        } else {
+            Err(format!("roundtrip mismatch: {text}"))
+        }
+    });
+}
+
+#[test]
+fn prop_bf16_cast_idempotent_and_exact_on_grid() {
+    use gaussws::numerics::Bf16;
+    check("bf16 idempotent", 200, |g| {
+        let x = (g.f64_in(-1e4, 1e4)) as f32;
+        let once = Bf16::from_f32(x).to_f32();
+        let twice = Bf16::from_f32(once).to_f32();
+        if once.to_bits() == twice.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("{x}"))
+        }
+    });
+}
+
+#[test]
+fn prop_fpformat_enumeration_closed_under_cast() {
+    // every enumerated value is a fixed point of cast (tiny formats)
+    check("enumeration fixed points", 6, |g| {
+        let fmt: FpFormat = *g.choose(&[formats::FP4_E2M1, formats::FP6_E3M2, formats::FP6_E2M3]);
+        for v in fmt.enumerate_non_negative() {
+            if fmt.cast(v) != v {
+                return Err(format!("{fmt:?}: {v}"));
+            }
+        }
+        Ok(())
+    });
+}
