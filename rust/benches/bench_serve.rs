@@ -1,0 +1,116 @@
+//! Serving-path throughput/latency benchmark: drives the continuous-
+//! batching engine at batch sizes 1/4/16 on the tiny GPT2 config and emits
+//! one `BENCH {json}` record per arm plus an aggregate written to
+//! `BENCH_serve.json` at the workspace root (or `--out <path>`), replacing
+//! the committed placeholder. This is the perf trajectory for the serving
+//! hot path — rerun after engine changes and compare `tokens_per_sec` /
+//! `p95_total_ms` per arm.
+//!
+//! Run: cargo bench --bench bench_serve [-- --quick --out BENCH_serve.json]
+
+use gaussws::config::schema::{Arch, ModelConfig};
+use gaussws::data::{SynthCorpus, SynthSpec};
+use gaussws::nn::transformer::Transformer;
+use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+use gaussws::util::json::{arr, num, obj, s, Json};
+use gaussws::util::Args;
+
+fn run_arm(
+    store: &WeightStore,
+    corpus: &SynthCorpus,
+    batch: usize,
+    threads: usize,
+    requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> Json {
+    let mut engine = Engine::from_store(
+        store,
+        EngineConfig { max_batch: batch, kv_slots: batch, threads, eos: None, capacity: usize::MAX },
+    );
+    let span = corpus.tokens.len() - prompt_len - 1;
+    for id in 0..requests {
+        let start = (id * 2311 + 97) % span;
+        let prompt: Vec<usize> =
+            corpus.tokens[start..start + prompt_len].iter().map(|&t| t as usize).collect();
+        engine.enqueue(GenRequest::greedy(id as u64, prompt, max_new)).expect("valid request");
+    }
+    let done = engine.run_to_completion();
+    assert_eq!(done.len(), requests, "batch={batch}: all requests must complete");
+    assert!(
+        batch == 1 || engine.stats.max_occupancy() > 1,
+        "batch={batch}: continuous batching inactive"
+    );
+    let record = engine.stats.bench_json(
+        &format!("{}/b{batch}", store.elem.name()),
+        vec![
+            ("store", s(&store.elem.name())),
+            ("batch", num(batch as f64)),
+            ("threads", num(threads as f64)),
+            ("prompt_len", num(prompt_len as f64)),
+            ("max_new", num(max_new as f64)),
+        ],
+    );
+    println!("BENCH {record}");
+    record
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 7);
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let prompt_len = args.usize_or("prompt-len", 12);
+    let max_new = args.usize_or("max-new", if quick { 8 } else { 24 });
+    let per_slot = if quick { 2 } else { 4 };
+
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(seed);
+    let store = WeightStore::from_params(
+        &params,
+        &cfg,
+        StoreElem::parse(args.get_or("store", "fp8_e3m4")).expect("store mode"),
+        32,
+    );
+    let corpus = SynthCorpus::generate(SynthSpec {
+        vocab: cfg.vocab,
+        len: 1 << 16,
+        seed: seed ^ 0xFEED,
+        ..Default::default()
+    });
+
+    println!(
+        "bench_serve: tiny_gpt2, store {}, threads {threads}, {} req/slot, max_new {max_new}",
+        store.elem.name(),
+        per_slot
+    );
+    let mut records = Vec::new();
+    for batch in [1usize, 4, 16] {
+        let requests = batch * per_slot;
+        records.push(run_arm(&store, &corpus, batch, threads, requests, prompt_len, max_new));
+    }
+
+    let aggregate = obj(vec![
+        ("bench", s("serve")),
+        ("model", s("tiny_gpt2")),
+        ("store", s(&store.elem.name())),
+        ("status", s("measured")),
+        ("threads", num(threads as f64)),
+        ("arms", arr(records)),
+    ]);
+    // default to the committed placeholder at the workspace root (cargo
+    // bench's cwd is the package dir, one level below it)
+    let default_out = format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR"));
+    let out = args.get_or("out", &default_out);
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("create bench output dir");
+        }
+    }
+    std::fs::write(out, format!("{aggregate}\n")).expect("write bench record");
+    println!("aggregate -> {out}");
+}

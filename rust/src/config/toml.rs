@@ -88,12 +88,19 @@ impl TomlDoc {
 }
 
 /// Parse error with 1-based line number.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("toml error on line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse a TOML document (see module docs for the supported subset).
 pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {

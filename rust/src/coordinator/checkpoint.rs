@@ -7,6 +7,9 @@
 //! per tensor: u32 name_len | name bytes | u64 numel | numel × f32 LE
 //! ```
 
+use crate::config::schema::ModelConfig;
+use crate::nn::tensor::Mat;
+use crate::nn::transformer::{Params, Transformer};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -49,6 +52,38 @@ impl Checkpoint {
             }
         }
         Ok(())
+    }
+
+    /// Reassemble the `param.*` tensors into transformer [`Params`], with
+    /// shapes derived from `cfg` (the checkpoint format stores flat buffers
+    /// only). This is the manifest-free train→serve bridge: a checkpoint
+    /// plus a model config is everything the serving engine needs.
+    pub fn to_params(&self, cfg: &ModelConfig) -> Result<Params> {
+        let shapes = Transformer::shapes(cfg);
+        let mut tensors = BTreeMap::new();
+        for (name, (rows, cols)) in shapes {
+            let data = self.get(&format!("param.{name}"))?.clone();
+            if data.len() != rows * cols {
+                bail!(
+                    "checkpoint tensor 'param.{name}' has {} elements, config wants {}×{}",
+                    data.len(),
+                    rows,
+                    cols
+                );
+            }
+            tensors.insert(name, Mat::from_vec(rows, cols, data));
+        }
+        Ok(Params { tensors })
+    }
+
+    /// Capture transformer [`Params`] as `param.*` tensors (inverse of
+    /// [`Checkpoint::to_params`], minus optimizer state).
+    pub fn from_params(params: &Params, step: u64, master_seed: u64) -> Checkpoint {
+        let mut ck = Checkpoint { step, master_seed, tensors: Default::default() };
+        for (name, m) in &params.tensors {
+            ck.insert(&format!("param.{name}"), m.data.clone());
+        }
+        ck
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
@@ -110,6 +145,22 @@ mod tests {
     fn missing_tensor_errors() {
         let ck = Checkpoint::default();
         assert!(ck.get("nope").is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_via_checkpoint() {
+        use crate::config::schema::Arch;
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(11);
+        let ck = Checkpoint::from_params(&params, 3, 11);
+        let back = ck.to_params(&cfg).unwrap();
+        assert_eq!(params.tensors, back.tensors);
+        // wrong config shape is rejected, not silently misread
+        let mut bigger = cfg.clone();
+        bigger.d_model = 128;
+        bigger.n_head = 4;
+        assert!(ck.to_params(&bigger).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
 ///
 /// `grads[w][t]` is tensor `t` of worker `w`. All workers must have
 /// identical tensor shapes.
-pub fn tree_all_reduce_sum(grads: &mut Vec<Vec<Vec<f32>>>) -> usize {
+pub fn tree_all_reduce_sum(grads: &mut [Vec<Vec<f32>>]) -> usize {
     let n = grads.len();
     assert!(n > 0);
     let mut transfers = 0;

@@ -12,9 +12,18 @@
 //!   the artifacts, rust-side optimizers + bitwidth management + seed tree,
 //!   data pipeline, metrics, checkpoints, and the benchmark/experiment
 //!   harness reproducing every table and figure of the paper.
+//! * **L4 (this crate, [`serve`])** — the deployment side of the paper's
+//!   claim: checkpoints are snapshotted into a low-precision MX weight
+//!   store (BF16/FP8/FP6 square-blockwise, bit-packed, dequantize-on-load)
+//!   and served through a continuous-batching engine with per-sequence
+//!   KV-cache slots, a multi-threaded decode worker pool, and p50/p95
+//!   latency + tokens/sec accounting. `gaussws serve` and
+//!   `examples/serve_load.rs` drive it end to end.
 //!
 //! Python never runs on the training path; after `make artifacts` the rust
-//! binary is self-contained.
+//! binary is self-contained. The PJRT execution path itself sits behind the
+//! `pjrt` cargo feature (the `xla` crate is not in the offline vendor);
+//! everything else — including the entire serve layer — is pure rust.
 
 pub mod config;
 pub mod exp;
@@ -26,5 +35,6 @@ pub mod numerics;
 pub mod pqt;
 pub mod prng;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

@@ -1,4 +1,4 @@
-//! `gaussws` — the L3 launcher.
+//! `gaussws` — the L3/L4 launcher.
 //!
 //! Subcommands:
 //!   train   --artifact <tag> [--steps N --workers K --lr X --optimizer O]
@@ -7,10 +7,12 @@
 //!   tables  c1|b1
 //!   demo    figd1
 //!   quantize --checkpoint ck --artifact tag   (Table C.1 on a checkpoint)
+//!   serve   [--checkpoint ck | --snapshot s.gwqs] --store fp8_e3m4
+//!           (quantized-snapshot serving engine + self-driven load)
 //!   info    (list artifacts in the manifest)
 
 use anyhow::{bail, Context, Result};
-use gaussws::config::schema::{Optimizer, RunConfig, TrainConfig};
+use gaussws::config::schema::{Arch, ModelConfig, Optimizer, RunConfig, TrainConfig};
 use gaussws::coordinator::Trainer;
 use gaussws::exp;
 use gaussws::runtime::Runtime;
@@ -36,7 +38,10 @@ fn run(args: &Args) -> Result<()> {
         Some("demo") => cmd_demo(args),
         Some("info") => cmd_info(args),
         Some("quantize") => cmd_quantize(args),
-        Some(other) => bail!("unknown subcommand '{other}' (try: train|exp|tables|demo|quantize|info)"),
+        Some("serve") => cmd_serve(args),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try: train|exp|tables|demo|quantize|serve|info)")
+        }
         None => {
             print_usage();
             Ok(())
@@ -57,6 +62,12 @@ fn print_usage() {
          \x20 gaussws tables c1|b1\n\
          \x20 gaussws demo figd1\n\
          \x20 gaussws quantize --checkpoint runs/x.ck --artifact tiny_gpt2.gaussws_all\n\
+         \x20 gaussws serve [--checkpoint runs/x.ck | --snapshot w.gwqs] [--store fp8_e3m4]\n\
+         \x20               [--arch gpt2 --n-layer 2 --d-model 64 --n-head 2 --d-ff 128\n\
+         \x20                --vocab 256 --seq-len 64] [--save-snapshot w.gwqs]\n\
+         \x20               [--requests 32 --max-batch 8 --kv-slots 8 --threads N]\n\
+         \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
+         \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
          \x20 gaussws info"
     );
 }
@@ -294,6 +305,180 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             }
         }
         println!("{:<14} {:>10.4}", name, eval(&q));
+    }
+    Ok(())
+}
+
+/// Model shape from `--config <toml>` ([model] table) or individual flags,
+/// defaulting to the tiny GPT2 testbed config.
+fn serve_model_cfg(args: &Args) -> Result<ModelConfig> {
+    if let Some(path) = args.get("config") {
+        return Ok(RunConfig::load(path)?.model);
+    }
+    let arch = Arch::parse(args.get_or("arch", "gpt2"))?;
+    let tiny = ModelConfig::tiny(arch);
+    let cfg = ModelConfig {
+        arch,
+        n_layer: args.usize_or("n-layer", tiny.n_layer),
+        d_model: args.usize_or("d-model", tiny.d_model),
+        n_head: args.usize_or("n-head", tiny.n_head),
+        d_ff: args.usize_or("d-ff", tiny.d_ff),
+        vocab: args.usize_or("vocab", tiny.vocab),
+        seq_len: args.usize_or("seq-len", tiny.seq_len),
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// `gaussws serve`: load a checkpoint (or a saved `.gwqs` snapshot) into the
+/// low-precision MX weight store, spin up the continuous-batching engine,
+/// and drive it with a synthetic request stream — the train → quantized
+/// snapshot → serve lifecycle in one command. `--save-snapshot` exports the
+/// store for later `--snapshot` serving; `--eval` reports the served
+/// weights' held-out loss/perplexity (the Table C.1 deployment check).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use gaussws::coordinator::Checkpoint;
+    use gaussws::data::{SynthCorpus, SynthSpec};
+    use gaussws::nn::transformer::Transformer;
+    use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+    use gaussws::util::json::{num, s};
+
+    let elem = StoreElem::parse(args.get_or("store", "fp8_e3m4"))?;
+    let block = args.usize_or("block", 32);
+    let seed = args.u64_or("seed", 1234);
+
+    // ---- weights: snapshot > checkpoint > demo init ----
+    let (store, source) = if let Some(path) = args.get("snapshot") {
+        (WeightStore::load(path)?, format!("snapshot {path}"))
+    } else {
+        let cfg = serve_model_cfg(args)?;
+        if let Some(ck_path) = args.get("checkpoint") {
+            let ck = Checkpoint::load(ck_path)?;
+            let step = ck.step;
+            (
+                WeightStore::from_checkpoint(&ck, &cfg, elem, block)
+                    .context("snapshotting checkpoint into the weight store")?,
+                format!("checkpoint {ck_path} (step {step})"),
+            )
+        } else {
+            println!(
+                "note: no --checkpoint/--snapshot; serving randomly initialized weights (demo)"
+            );
+            let model = Transformer::new(cfg.clone());
+            let params = model.init_params(seed);
+            (WeightStore::from_params(&params, &cfg, elem, block), "random init (demo)".into())
+        }
+    };
+    if let Some(out) = args.get("save-snapshot") {
+        store.save(out)?;
+        println!("quantized snapshot -> {out}");
+    }
+    let mcfg = store.cfg.clone();
+    println!(
+        "serving {} ({} arch, {} layers, d={}) from {source}",
+        store.elem.name(),
+        mcfg.arch.name(),
+        mcfg.n_layer,
+        mcfg.d_model
+    );
+    println!(
+        "weight store: {} -> {} bytes ({:.2}x vs master f32), 32x32-block MX",
+        store.master_bytes(),
+        store.bytes(),
+        store.master_bytes() as f64 / store.bytes() as f64
+    );
+
+    // ---- engine ----
+    let max_batch = args.usize_or("max-batch", 8);
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let ecfg = EngineConfig {
+        max_batch,
+        kv_slots: args.usize_or("kv-slots", max_batch),
+        threads,
+        eos: args.get("eos").and_then(|v| v.parse().ok()),
+        capacity: usize::MAX,
+    };
+    let mut engine = Engine::from_store(&store, ecfg);
+
+    // ---- optional deployment-quality eval (Table C.1 check) ----
+    if args.flag("eval") {
+        let corpus = SynthCorpus::generate(SynthSpec {
+            vocab: mcfg.vocab,
+            len: 1 << 16,
+            seed: seed ^ 0xC0FFEE,
+            ..Default::default()
+        });
+        let seq = mcfg.seq_len.min(64);
+        let mut total = 0.0;
+        let n = 8;
+        for k in 0..n {
+            let start = 500 + k * 1500;
+            let toks: Vec<usize> =
+                corpus.tokens[start..start + seq + 1].iter().map(|&t| t as usize).collect();
+            total += engine.model.loss(&engine.params, &toks);
+        }
+        let loss = total / n as f64;
+        println!("served-weights eval: loss {loss:.4}  ppl {:.2}", loss.exp());
+    }
+
+    // ---- self-driven synthetic load ----
+    let n_req = args.usize_or("requests", 32);
+    let prompt_len = args.usize_or("prompt-len", 16).clamp(1, mcfg.seq_len.saturating_sub(1));
+    let max_new = args.usize_or("max-new", 24).max(1);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    let top_k = args.usize_or("top-k", 0);
+    let corpus = SynthCorpus::generate(SynthSpec {
+        vocab: mcfg.vocab,
+        len: 1 << 16,
+        seed: seed ^ 0xFEED,
+        ..Default::default()
+    });
+    let span = corpus.tokens.len() - prompt_len - 1;
+    for id in 0..n_req {
+        let start = (id * 2048 + 31) % span;
+        let prompt: Vec<usize> =
+            corpus.tokens[start..start + prompt_len].iter().map(|&t| t as usize).collect();
+        engine.enqueue(GenRequest {
+            id: id as u64,
+            prompt,
+            max_new_tokens: max_new,
+            temperature,
+            top_k,
+            seed: seed ^ id as u64,
+        })?;
+    }
+    let done = engine.run_to_completion();
+    println!();
+    println!("{}", engine.stats.render(&store.elem.name()));
+    let (_, slots, high_water, kv_bytes) = engine.kv_usage();
+    println!("kv pool: {slots} slots, high water {high_water}, {kv_bytes} bytes");
+    if done.len() != n_req {
+        bail!("served {} of {n_req} requests", done.len());
+    }
+
+    let record = engine.stats.bench_json(
+        &format!("{}/b{max_batch}", store.elem.name()),
+        vec![
+            ("store", s(&store.elem.name())),
+            ("arch", s(mcfg.arch.name())),
+            ("max_batch", num(max_batch as f64)),
+            ("threads", num(threads as f64)),
+            ("prompt_len", num(prompt_len as f64)),
+            ("max_new", num(max_new as f64)),
+        ],
+    );
+    println!("BENCH {record}");
+    if let Some(path) = args.get("bench-out") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("bench record -> {path}");
     }
     Ok(())
 }

@@ -1,5 +1,6 @@
-//! Neural-network substrate: f32 tensor ops, a forward-only GPT2/Llama2
-//! transformer (evaluation path), and the rust-side optimizers that apply
+//! Neural-network substrate: f32 tensor ops, a GPT2/Llama2 transformer with
+//! both a train-shaped full forward (evaluation path) and an incremental
+//! KV-cache decode (serving path), and the rust-side optimizers that apply
 //! HLO-computed gradients.
 
 pub mod optim;
@@ -8,4 +9,4 @@ pub mod transformer;
 
 pub use optim::{AdamMini, AdamW, LrSchedule, Opt};
 pub use tensor::Mat;
-pub use transformer::{Params, Transformer};
+pub use transformer::{DecodeCache, Params, Transformer};

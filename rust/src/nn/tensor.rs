@@ -146,17 +146,23 @@ pub fn rms_norm(x: &mut Mat, gain: &[f32], eps: f32) {
 pub fn rope(x: &mut Mat, theta: f32) {
     let d = x.cols;
     for pos in 0..x.rows {
-        let row = &mut x.data[pos * d..(pos + 1) * d];
-        let mut i = 0;
-        while i + 1 < d {
-            let freq = 1.0 / theta.powf(i as f32 / d as f32);
-            let ang = pos as f32 * freq;
-            let (sin, cos) = ang.sin_cos();
-            let (a, b) = (row[i], row[i + 1]);
-            row[i] = a * cos - b * sin;
-            row[i + 1] = a * sin + b * cos;
-            i += 2;
-        }
+        rope_row(&mut x.data[pos * d..(pos + 1) * d], pos, theta);
+    }
+}
+
+/// Rotary embedding for one head-dim row at absolute position `pos` — the
+/// incremental-decode form of [`rope`] (identical math for a single row).
+pub fn rope_row(row: &mut [f32], pos: usize, theta: f32) {
+    let d = row.len();
+    let mut i = 0;
+    while i + 1 < d {
+        let freq = 1.0 / theta.powf(i as f32 / d as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (row[i], row[i + 1]);
+        row[i] = a * cos - b * sin;
+        row[i + 1] = a * sin + b * cos;
+        i += 2;
     }
 }
 
@@ -250,6 +256,17 @@ mod tests {
         }
         // position 0 is unrotated
         assert_eq!(x.row(0), orig.row(0));
+    }
+
+    #[test]
+    fn rope_row_matches_full_rope() {
+        let mut x = Mat::from_vec(5, 6, (0..30).map(|i| (i as f32).sin()).collect());
+        let rows: Vec<Vec<f32>> = (0..5).map(|r| x.row(r).to_vec()).collect();
+        rope(&mut x, 10000.0);
+        for (pos, mut row) in rows.into_iter().enumerate() {
+            rope_row(&mut row, pos, 10000.0);
+            assert_eq!(&row[..], x.row(pos), "pos {pos}");
+        }
     }
 
     #[test]

@@ -1,13 +1,16 @@
-//! Forward-only GPT2/Llama2-style transformer for the rust evaluation path:
-//! perplexity of fake-quantized checkpoints (Table C.1 / FP6–FP12 claims)
-//! and L3 overhead benchmarks. Training runs through the L2 HLO artifacts.
+//! GPT2/Llama2-style transformer for the rust inference paths: the
+//! train-shaped full forward (perplexity of fake-quantized checkpoints,
+//! Table C.1 / FP6–FP12 claims, L3 overhead benchmarks) plus an
+//! incremental single-token decode over a per-sequence KV cache
+//! ([`DecodeCache`] / [`Transformer::decode_step`]) — the serving hot
+//! path. Training runs through the L2 HLO artifacts.
 //!
 //! Weight layout matches `python/compile/model.py` exactly (see the
 //! manifest ordering in `runtime::artifact`), so HLO-trained parameters
 //! load directly.
 
 use super::tensor::{
-    gelu, layer_norm, matmul_bt, rms_norm, rope, silu, softmax_rows, Mat,
+    gelu, layer_norm, matmul_bt, rms_norm, rope, rope_row, silu, softmax_rows, Mat,
 };
 use crate::config::schema::{Arch, ModelConfig};
 use crate::prng::Philox4x32;
@@ -46,6 +49,53 @@ impl Params {
     }
 }
 
+/// Per-sequence K/V cache for incremental decoding: one (capacity × d_model)
+/// K and V matrix per layer, filled row-by-row as tokens are decoded. This
+/// is what turns the O(t²) train-shaped forward into an O(t) per-token
+/// decode — the serving hot path.
+#[derive(Debug, Clone)]
+pub struct DecodeCache {
+    /// Cached keys per layer, rows `0..len` valid. For Llama the rotary
+    /// embedding is already applied (K is cached post-RoPE).
+    pub k: Vec<Mat>,
+    /// Cached values per layer, rows `0..len` valid.
+    pub v: Vec<Mat>,
+    /// Number of cached positions (== the next decode position).
+    pub len: usize,
+    /// Maximum positions this cache can hold.
+    pub capacity: usize,
+}
+
+impl DecodeCache {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> DecodeCache {
+        let capacity = capacity.min(cfg.seq_len);
+        DecodeCache {
+            k: (0..cfg.n_layer).map(|_| Mat::zeros(capacity, cfg.d_model)).collect(),
+            v: (0..cfg.n_layer).map(|_| Mat::zeros(capacity, cfg.d_model)).collect(),
+            len: 0,
+            capacity,
+        }
+    }
+
+    /// Forget all cached positions (slot reuse between sequences).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.capacity
+    }
+
+    /// Bytes of K/V storage held by this cache.
+    pub fn bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|m| m.data.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
 /// The model: config + helpers. Parameters live in [`Params`] so callers
 /// can mutate/quantize them freely between forwards.
 #[derive(Debug, Clone)]
@@ -57,6 +107,50 @@ impl Transformer {
     pub fn new(cfg: ModelConfig) -> Self {
         cfg.validate().expect("invalid model config");
         Transformer { cfg }
+    }
+
+    /// The (rows, cols) of every parameter tensor for a config — the same
+    /// layout [`Transformer::init_params`] produces. This is the shape
+    /// source for loading shape-less checkpoints (`coordinator::Checkpoint`
+    /// stores flat buffers) without consulting an artifact manifest.
+    pub fn shapes(cfg: &ModelConfig) -> BTreeMap<String, (usize, usize)> {
+        let d = cfg.d_model;
+        let mut out = BTreeMap::new();
+        out.insert("embed".to_string(), (cfg.vocab, d));
+        if cfg.arch == Arch::Gpt2 {
+            out.insert("pos_embed".to_string(), (cfg.seq_len, d));
+        }
+        for l in 0..cfg.n_layer {
+            let p = |s: &str| format!("blk{l}.{s}");
+            match cfg.arch {
+                Arch::Gpt2 => {
+                    out.insert(p("qkv"), (3 * d, d));
+                    out.insert(p("out"), (d, d));
+                    out.insert(p("up"), (cfg.d_ff, d));
+                    out.insert(p("down"), (d, cfg.d_ff));
+                    out.insert(p("ln1.g"), (1, d));
+                    out.insert(p("ln1.b"), (1, d));
+                    out.insert(p("ln2.g"), (1, d));
+                    out.insert(p("ln2.b"), (1, d));
+                }
+                Arch::Llama2 => {
+                    out.insert(p("q"), (d, d));
+                    out.insert(p("k"), (d, d));
+                    out.insert(p("v"), (d, d));
+                    out.insert(p("out"), (d, d));
+                    out.insert(p("gate"), (cfg.d_ff, d));
+                    out.insert(p("up"), (cfg.d_ff, d));
+                    out.insert(p("down"), (d, cfg.d_ff));
+                    out.insert(p("ln1.g"), (1, d));
+                    out.insert(p("ln2.g"), (1, d));
+                }
+            }
+        }
+        out.insert("lnf.g".to_string(), (1, d));
+        if cfg.arch == Arch::Gpt2 {
+            out.insert("lnf.b".to_string(), (1, d));
+        }
+        out
     }
 
     /// GPT2-style init (N(0, 0.02), scaled residual projections).
@@ -285,6 +379,149 @@ impl Transformer {
         out
     }
 
+    /// Incremental decode: run ONE token at position `cache.len`, appending
+    /// its K/V to `cache` and attending over all cached positions. Returns
+    /// the logits row (vocab). Mirrors [`Transformer::forward`]'s op order
+    /// exactly, so for the same token prefix the logits agree with the full
+    /// forward's last row up to f32 rounding.
+    pub fn decode_step(&self, params: &Params, token: usize, cache: &mut DecodeCache) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let pos = cache.len;
+        assert!(!cache.is_full(), "KV cache full (capacity {})", cache.capacity);
+        assert!(pos < cfg.seq_len, "decode position {pos} >= seq_len {}", cfg.seq_len);
+        assert!(token < cfg.vocab, "token {token} out of vocab");
+        assert_eq!(cache.k.len(), cfg.n_layer, "cache layer count mismatch");
+
+        let embed = params.get("embed");
+        let mut x = Mat::from_vec(1, d, embed.row(token).to_vec());
+        if cfg.arch == Arch::Gpt2 {
+            let pe = params.get("pos_embed");
+            for j in 0..d {
+                x.data[j] += pe.at(pos, j);
+            }
+        }
+
+        let hd = d / cfg.n_head;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            let p = |s: &str| format!("blk{l}.{s}");
+            // ---- attention sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln1.g")).data,
+                    &params.get(&p("ln1.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln1.g")).data, 1e-5),
+            }
+            let (q, k, v) = match cfg.arch {
+                Arch::Gpt2 => {
+                    let mut qkv = Mat::zeros(1, 3 * d);
+                    matmul_bt(&h, params.get(&p("qkv")), &mut qkv);
+                    let q = Mat::from_vec(1, d, qkv.row(0)[..d].to_vec());
+                    let k = Mat::from_vec(1, d, qkv.row(0)[d..2 * d].to_vec());
+                    let v = Mat::from_vec(1, d, qkv.row(0)[2 * d..].to_vec());
+                    (q, k, v)
+                }
+                Arch::Llama2 => {
+                    let mut q = Mat::zeros(1, d);
+                    let mut k = Mat::zeros(1, d);
+                    let mut v = Mat::zeros(1, d);
+                    matmul_bt(&h, params.get(&p("q")), &mut q);
+                    matmul_bt(&h, params.get(&p("k")), &mut k);
+                    matmul_bt(&h, params.get(&p("v")), &mut v);
+                    // rotary at this absolute position, per head; K is
+                    // cached post-RoPE, matching `forward`
+                    for head in 0..cfg.n_head {
+                        rope_row(&mut q.data[head * hd..(head + 1) * hd], pos, 10000.0);
+                        rope_row(&mut k.data[head * hd..(head + 1) * hd], pos, 10000.0);
+                    }
+                    (q, k, v)
+                }
+            };
+            // append this position's K/V (K post-RoPE, matching forward)
+            let kc = &mut cache.k[l];
+            kc.data[pos * d..(pos + 1) * d].copy_from_slice(k.row(0));
+            let vc = &mut cache.v[l];
+            vc.data[pos * d..(pos + 1) * d].copy_from_slice(v.row(0));
+            let kc = &cache.k[l];
+            let vc = &cache.v[l];
+
+            // attention over cached positions 0..=pos
+            let mut att = Mat::zeros(1, d);
+            for head in 0..cfg.n_head {
+                let mut scores = Mat::zeros(1, pos + 1);
+                for j in 0..=pos {
+                    let mut acc = 0f32;
+                    for e in 0..hd {
+                        acc += q.at(0, head * hd + e) * kc.at(j, head * hd + e);
+                    }
+                    *scores.at_mut(0, j) = acc * scale;
+                }
+                softmax_rows(&mut scores, None);
+                for e in 0..hd {
+                    let mut acc = 0f32;
+                    for j in 0..=pos {
+                        acc += scores.at(0, j) * vc.at(j, head * hd + e);
+                    }
+                    *att.at_mut(0, head * hd + e) = acc;
+                }
+            }
+            let mut att_out = Mat::zeros(1, d);
+            matmul_bt(&att, params.get(&p("out")), &mut att_out);
+            for i in 0..x.data.len() {
+                x.data[i] += att_out.data[i];
+            }
+            // ---- MLP sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln2.g")).data,
+                    &params.get(&p("ln2.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln2.g")).data, 1e-5),
+            }
+            let mut mlp = Mat::zeros(1, cfg.d_ff);
+            match cfg.arch {
+                Arch::Gpt2 => {
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for v in mlp.data.iter_mut() {
+                        *v = gelu(*v);
+                    }
+                }
+                Arch::Llama2 => {
+                    let mut gate = Mat::zeros(1, cfg.d_ff);
+                    matmul_bt(&h, params.get(&p("gate")), &mut gate);
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for (m, g) in mlp.data.iter_mut().zip(gate.data.iter()) {
+                        *m *= silu(*g);
+                    }
+                }
+            }
+            let mut down = Mat::zeros(1, d);
+            matmul_bt(&mlp, params.get(&p("down")), &mut down);
+            for i in 0..x.data.len() {
+                x.data[i] += down.data[i];
+            }
+        }
+
+        match cfg.arch {
+            Arch::Gpt2 => {
+                layer_norm(&mut x, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+            }
+            Arch::Llama2 => rms_norm(&mut x, &params.get("lnf.g").data, 1e-5),
+        }
+        let mut logits = Mat::zeros(1, cfg.vocab);
+        matmul_bt(&x, params.get("embed"), &mut logits);
+        cache.len = pos + 1;
+        logits.data
+    }
+
     /// Mean cross-entropy of next-token prediction over a token sequence.
     pub fn loss(&self, params: &Params, tokens: &[usize]) -> f64 {
         assert!(tokens.len() >= 2);
@@ -370,6 +607,56 @@ mod tests {
         assert_eq!(names.len(), 2 * 7);
         assert_eq!(names[0], "blk0.q");
         assert_eq!(names[13], "blk1.up");
+    }
+
+    #[test]
+    fn shapes_match_init_params_exactly() {
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let shapes = Transformer::shapes(&t.cfg);
+            assert_eq!(shapes.len(), p.tensors.len(), "{arch:?}: tensor count");
+            for (name, m) in &p.tensors {
+                let &(r, c) = shapes.get(name).unwrap_or_else(|| panic!("missing {name}"));
+                assert_eq!((r, c), (m.rows, m.cols), "{arch:?}: {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_matches_full_forward() {
+        // every decode position must reproduce the train-shaped forward's
+        // logits row for the same prefix — the KV-cache correctness claim
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let tokens = [3usize, 17, 42, 5, 11, 29];
+            let full = t.forward(&p, &tokens);
+            let mut cache = DecodeCache::new(&t.cfg, tokens.len());
+            for (i, &tok) in tokens.iter().enumerate() {
+                let logits = t.decode_step(&p, tok, &mut cache);
+                assert_eq!(cache.len, i + 1);
+                assert_eq!(logits.len(), t.cfg.vocab);
+                for (c, &got) in logits.iter().enumerate() {
+                    let want = full.at(i, c);
+                    assert!(
+                        (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "{arch:?} pos {i} col {c}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_cache_reset_reuses_slot() {
+        let (t, p) = tiny(Arch::Gpt2);
+        let mut cache = DecodeCache::new(&t.cfg, 8);
+        let a: Vec<f32> = t.decode_step(&p, 7, &mut cache);
+        t.decode_step(&p, 9, &mut cache);
+        cache.reset();
+        assert_eq!(cache.len, 0);
+        let b = t.decode_step(&p, 7, &mut cache);
+        assert_eq!(a, b, "slot reuse must be state-free after reset");
+        assert!(cache.bytes() > 0);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Runtime layer: PJRT client wrapper + artifact manifest. Loads the HLO
 //! text emitted by `python/compile/aot.py` and executes it from the L3 hot
-//! path — Python never runs here.
+//! path — Python never runs here. Execution requires the `pjrt` cargo
+//! feature (the `xla` crate is not in the offline vendor); without it the
+//! manifest still parses and `Runtime::new` errors descriptively.
 
 pub mod artifact;
 pub mod client;

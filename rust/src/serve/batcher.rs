@@ -1,0 +1,287 @@
+//! Continuous batching: a FIFO request queue feeding a bounded set of
+//! active sequences. Unlike static batching, sequences join and leave the
+//! batch *between decode waves* — a finished sequence's KV slot is recycled
+//! to the next queued request immediately, so the batch stays full under
+//! heterogeneous generation lengths (the property production schedulers
+//! like Orca/vLLM exploit).
+//!
+//! The batcher owns scheduling state only; the decode math lives in the
+//! engine, which advances every active sequence by one position per wave
+//! (prompt tokens first — prefill — then sampled continuation tokens).
+
+use crate::prng::Philox4x32;
+use crate::serve::kvcache::{KvCachePool, SlotId};
+use crate::serve::protocol::{FinishReason, GenRequest, GenResponse};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Sample a next token from a logits row. `temperature <= 0` is greedy
+/// argmax; otherwise softmax at that temperature, optionally truncated to
+/// the `top_k` most likely tokens.
+pub fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Philox4x32) -> usize {
+    assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    // candidate set: all tokens, or the top-k by logit
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.truncate(top_k);
+    }
+    let inv_t = 1.0 / temperature;
+    let mx = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx.iter().map(|&i| (((logits[i] - mx) * inv_t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (k, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return idx[k];
+        }
+    }
+    *idx.last().unwrap()
+}
+
+/// One admitted sequence: request + decode progress + its KV slot.
+#[derive(Debug)]
+pub struct ActiveSeq {
+    pub req: GenRequest,
+    pub slot: SlotId,
+    pub generated: Vec<usize>,
+    /// Prompt tokens fed so far (prefill progress).
+    prompt_cursor: usize,
+    rng: Philox4x32,
+    pub enqueued: Instant,
+    pub admitted: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finish: Option<FinishReason>,
+}
+
+impl ActiveSeq {
+    fn new(req: GenRequest, slot: SlotId, enqueued: Instant) -> ActiveSeq {
+        let rng = Philox4x32::new(req.seed ^ 0x5E2E_F00D);
+        ActiveSeq {
+            req,
+            slot,
+            generated: Vec::new(),
+            prompt_cursor: 0,
+            rng,
+            enqueued,
+            admitted: Instant::now(),
+            first_token_at: None,
+            finish: None,
+        }
+    }
+
+    /// The token to feed at the next decode wave.
+    pub fn next_input(&self) -> usize {
+        if self.prompt_cursor < self.req.prompt.len() {
+            self.req.prompt[self.prompt_cursor]
+        } else {
+            *self.generated.last().expect("active sequence past prefill has a last token")
+        }
+    }
+
+    /// Still consuming prompt tokens (the wave after this input is prefill
+    /// unless it was the last prompt token)?
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_cursor < self.req.prompt.len()
+    }
+
+    /// Consume the logits the engine produced for [`ActiveSeq::next_input`]:
+    /// advance prefill, or sample the next token and check termination.
+    pub fn absorb(&mut self, logits: &[f32], eos: Option<usize>) {
+        debug_assert!(self.finish.is_none(), "absorbing into a finished sequence");
+        if self.prompt_cursor < self.req.prompt.len() {
+            self.prompt_cursor += 1;
+            if self.prompt_cursor < self.req.prompt.len() {
+                return; // mid-prefill: logits predict a token we already have
+            }
+        }
+        let tok = sample_logits(logits, self.req.temperature, self.req.top_k, &mut self.rng);
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.generated.push(tok);
+        if eos == Some(tok) {
+            self.finish = Some(FinishReason::Eos);
+        } else if self.generated.len() >= self.req.max_new_tokens {
+            self.finish = Some(FinishReason::Length);
+        }
+    }
+
+    fn into_response(self, now: Instant) -> GenResponse {
+        GenResponse {
+            id: self.req.id,
+            prompt_len: self.req.prompt.len(),
+            tokens: self.generated,
+            finish: self.finish.unwrap_or(FinishReason::Length),
+            queue_s: self.admitted.duration_since(self.enqueued).as_secs_f64(),
+            ttft_s: self
+                .first_token_at
+                .unwrap_or(now)
+                .duration_since(self.enqueued)
+                .as_secs_f64(),
+            total_s: now.duration_since(self.enqueued).as_secs_f64(),
+        }
+    }
+}
+
+/// The continuous-batching scheduler.
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pending: VecDeque<(GenRequest, Instant)>,
+    pub active: Vec<ActiveSeq>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Batcher {
+        assert!(max_batch > 0);
+        Batcher { max_batch, pending: VecDeque::new(), active: Vec::new() }
+    }
+
+    /// Queue a request (admission happens at the next wave boundary).
+    pub fn push(&mut self, req: GenRequest) {
+        self.pending.push_back((req, Instant::now()));
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+
+    /// Admit queued requests while the batch has room AND the pool has a
+    /// free KV slot. Returns the number admitted this boundary.
+    pub fn admit(&mut self, pool: &mut KvCachePool) -> usize {
+        let mut admitted = 0;
+        while self.active.len() < self.max_batch && !self.pending.is_empty() {
+            let Some(slot) = pool.try_alloc() else { break };
+            let (req, enqueued) = self.pending.pop_front().unwrap();
+            self.active.push(ActiveSeq::new(req, slot, enqueued));
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Remove finished sequences, recycling their KV slots; returns their
+    /// responses.
+    pub fn retire(&mut self, pool: &mut KvCachePool) -> Vec<GenResponse> {
+        let now = Instant::now();
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finish.is_some() {
+                let seq = self.active.swap_remove(i);
+                pool.release(seq.slot);
+                done.push(seq.into_response(now));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::{Arch, ModelConfig};
+
+    fn pool(n: usize) -> KvCachePool {
+        KvCachePool::new(&ModelConfig::tiny(Arch::Gpt2), n, 32)
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Philox4x32::new(1);
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Philox4x32::new(2);
+        let logits = [5.0f32, 4.0, -50.0, -50.0];
+        for _ in 0..50 {
+            let t = sample_logits(&logits, 1.0, 2, &mut rng);
+            assert!(t == 0 || t == 1, "top-2 sample escaped: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let logits = [0.5f32, 0.4, 0.3, 0.2];
+        let mut a = Philox4x32::new(7);
+        let mut b = Philox4x32::new(7);
+        for _ in 0..20 {
+            assert_eq!(
+                sample_logits(&logits, 0.8, 0, &mut a),
+                sample_logits(&logits, 0.8, 0, &mut b)
+            );
+        }
+    }
+
+    #[test]
+    fn admission_respects_batch_and_slots() {
+        let mut b = Batcher::new(2);
+        let mut p = pool(1);
+        for id in 0..3 {
+            b.push(GenRequest::greedy(id, vec![1, 2], 4));
+        }
+        // slot-bound: only one admitted despite max_batch = 2
+        assert_eq!(b.admit(&mut p), 1);
+        assert_eq!(b.active_len(), 1);
+        assert_eq!(b.pending_len(), 2);
+        // finish it; retire frees the slot, next admit picks up the queue
+        b.active[0].finish = Some(FinishReason::Length);
+        let done = b.retire(&mut p);
+        assert_eq!(done.len(), 1);
+        assert_eq!(b.admit(&mut p), 1);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn prefill_then_generate_state_machine() {
+        let mut seq = ActiveSeq::new(GenRequest::greedy(1, vec![10, 11, 12], 2), 0, Instant::now());
+        // feeding prompt: inputs are the prompt tokens in order
+        assert_eq!(seq.next_input(), 10);
+        seq.absorb(&[0.0, 1.0, 0.0], None); // logits ignored mid-prefill
+        assert!(seq.in_prefill());
+        assert_eq!(seq.next_input(), 11);
+        seq.absorb(&[0.0, 1.0, 0.0], None);
+        assert_eq!(seq.next_input(), 12);
+        // last prompt token: its logits produce the first generated token
+        seq.absorb(&[0.0, 0.0, 5.0], None);
+        assert_eq!(seq.generated, vec![2]);
+        assert!(seq.first_token_at.is_some());
+        assert!(seq.finish.is_none());
+        assert_eq!(seq.next_input(), 2);
+        seq.absorb(&[9.0, 0.0, 0.0], None);
+        assert_eq!(seq.generated, vec![2, 0]);
+        assert_eq!(seq.finish, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn eos_stops_generation() {
+        let mut seq = ActiveSeq::new(GenRequest::greedy(1, vec![3], 10), 0, Instant::now());
+        seq.absorb(&[0.0, 7.0, 0.0], Some(1));
+        assert_eq!(seq.finish, Some(FinishReason::Eos));
+        assert_eq!(seq.generated, vec![1]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Slot-pooled KV cache: a fixed set of preallocated per-sequence
+//! [`DecodeCache`]s with free-list reuse. The pool size bounds serving
+//! memory (`slots × 2 × n_layer × capacity × d_model × 4 B`); when every
+//! slot is busy, admission control in the batcher holds new sequences in
+//! the queue until a sequence retires and its slot is recycled.
+
+use crate::config::schema::ModelConfig;
+use crate::nn::transformer::DecodeCache;
+
+/// Identifier of one pool slot.
+pub type SlotId = usize;
+
+/// A pool of reusable KV-cache slots.
+#[derive(Debug)]
+pub struct KvCachePool {
+    /// `None` while a slot is checked out to a decode wave.
+    slots: Vec<Option<DecodeCache>>,
+    free: Vec<SlotId>,
+    /// Allocations served since construction.
+    pub allocs: usize,
+    /// Slot recycles (a previously-used slot handed to a new sequence).
+    pub reuses: usize,
+    /// Per-slot flag: has this slot served a sequence before?
+    used_before: Vec<bool>,
+    high_water: usize,
+    slot_bytes: usize,
+}
+
+impl KvCachePool {
+    /// `n_slots` caches, each holding up to `capacity` positions (clamped to
+    /// the model's `seq_len` by [`DecodeCache::new`]).
+    pub fn new(cfg: &ModelConfig, n_slots: usize, capacity: usize) -> KvCachePool {
+        assert!(n_slots > 0, "pool needs at least one slot");
+        let slots: Vec<Option<DecodeCache>> =
+            (0..n_slots).map(|_| Some(DecodeCache::new(cfg, capacity))).collect();
+        let slot_bytes = slots[0].as_ref().map(|c| c.bytes()).unwrap_or(0);
+        KvCachePool {
+            slots,
+            free: (0..n_slots).rev().collect(),
+            allocs: 0,
+            reuses: 0,
+            used_before: vec![false; n_slots],
+            high_water: 0,
+            slot_bytes,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Peak concurrent slot usage.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Bytes of K/V storage across all slots.
+    pub fn bytes(&self) -> usize {
+        self.slot_bytes * self.slots.len()
+    }
+
+    /// Claim a free slot (its cache is reset), or `None` if all are busy.
+    pub fn try_alloc(&mut self) -> Option<SlotId> {
+        let id = self.free.pop()?;
+        if self.used_before[id] {
+            self.reuses += 1;
+        }
+        self.used_before[id] = true;
+        if let Some(c) = self.slots[id].as_mut() {
+            c.reset();
+        }
+        self.allocs += 1;
+        self.high_water = self.high_water.max(self.in_use());
+        Some(id)
+    }
+
+    /// Return a retired sequence's slot to the free list.
+    pub fn release(&mut self, id: SlotId) {
+        debug_assert!(self.slots[id].is_some(), "releasing a checked-out slot");
+        debug_assert!(!self.free.contains(&id), "double release of slot {id}");
+        self.free.push(id);
+    }
+
+    /// Check a slot's cache out for a decode wave (the caller gets owned
+    /// mutable access with no aliasing, so waves can run on worker threads).
+    pub fn take(&mut self, id: SlotId) -> DecodeCache {
+        self.slots[id].take().expect("slot already checked out")
+    }
+
+    /// Return a checked-out cache.
+    pub fn put_back(&mut self, id: SlotId, cache: DecodeCache) {
+        debug_assert!(self.slots[id].is_none(), "slot was not checked out");
+        self.slots[id] = Some(cache);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::Arch;
+
+    fn pool(n: usize) -> KvCachePool {
+        KvCachePool::new(&ModelConfig::tiny(Arch::Gpt2), n, 16)
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = pool(2);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.in_use(), 2);
+        assert!(p.try_alloc().is_none(), "exhausted pool must refuse");
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        let c = p.try_alloc().unwrap();
+        assert_eq!(c, a, "free list reuses the released slot");
+        assert_eq!(p.reuses, 1);
+        assert_eq!(p.high_water(), 2);
+        p.release(b);
+        p.release(c);
+    }
+
+    #[test]
+    fn reused_slot_cache_is_reset() {
+        let mut p = pool(1);
+        let id = p.try_alloc().unwrap();
+        let mut c = p.take(id);
+        c.len = 5; // simulate use
+        p.put_back(id, c);
+        p.release(id);
+        let id2 = p.try_alloc().unwrap();
+        assert_eq!(id, id2);
+        assert_eq!(p.take(id2).len, 0, "alloc must hand out a reset cache");
+    }
+
+    #[test]
+    fn take_put_back_preserves_contents() {
+        let mut p = pool(2);
+        let id = p.try_alloc().unwrap();
+        let mut c = p.take(id);
+        c.len = 3;
+        p.put_back(id, c);
+        let c = p.take(id);
+        assert_eq!(c.len, 3);
+        p.put_back(id, c);
+    }
+
+    #[test]
+    fn pool_reports_bytes() {
+        let p = pool(3);
+        assert!(p.bytes() > 0);
+    }
+}

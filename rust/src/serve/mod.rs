@@ -1,0 +1,37 @@
+//! L4 — the serving layer: batched fake-quantized inference over
+//! GaussWS-trained checkpoints.
+//!
+//! The train→serve lifecycle this layer closes:
+//!
+//! 1. **snapshot** — [`weights::WeightStore`] captures a checkpoint's linear
+//!    weights as square-blockwise (32×32) MX groups: one power-of-two scale
+//!    per block plus bit-packed element codes in a low-precision FP format
+//!    (BF16 / FP8 / FP6 / FP4). Dequantize-on-load reproduces
+//!    `mx::quantize_square` bit-for-bit, so serving inherits the Table C.1
+//!    graceful-degradation claims of the training-time grouping.
+//! 2. **decode** — `nn::transformer::decode_step` runs one token against a
+//!    per-sequence KV cache ([`kvcache::KvCachePool`] slots with free-list
+//!    reuse) instead of recomputing the full train-shaped forward.
+//! 3. **schedule** — [`batcher::Batcher`] continuously batches: sequences
+//!    join and leave the active set at wave boundaries, so a retiring
+//!    sequence's KV slot is immediately recycled to the queue.
+//! 4. **serve** — [`engine::Engine`] advances every active sequence one
+//!    position per wave, splitting the batch across worker threads; a
+//!    spawned engine front exposes blocking [`engine::EngineClient`]s.
+//! 5. **account** — [`stats::ServeStats`] tracks p50/p95 latency, TTFT,
+//!    queue time, tokens/sec and batch occupancy, and emits the
+//!    `BENCH_serve.json` throughput record.
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod protocol;
+pub mod stats;
+pub mod weights;
+
+pub use batcher::{sample_logits, Batcher};
+pub use engine::{Engine, EngineClient, EngineConfig, EngineHandle};
+pub use kvcache::{KvCachePool, SlotId};
+pub use protocol::{FinishReason, GenRequest, GenResponse};
+pub use stats::ServeStats;
+pub use weights::{StoreElem, WeightStore};

@@ -1,0 +1,165 @@
+//! Request/response types for the serving engine, plus a line-oriented JSON
+//! wire encoding (one object per line) so load generators and logs can
+//! round-trip requests without a schema library.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::{bail, Context, Result};
+
+/// A generation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// Prompt token ids (must be non-empty; serving has no BOS convention).
+    pub prompt: Vec<usize>,
+    /// Number of tokens to generate (the sequence may stop earlier on EOS).
+    pub max_new_tokens: usize,
+    /// Softmax temperature; `0.0` means greedy argmax.
+    pub temperature: f32,
+    /// Top-k truncation for sampling; `0` means the full vocabulary.
+    pub top_k: usize,
+    /// Per-request sampling seed (ignored when greedy).
+    pub seed: u64,
+}
+
+impl GenRequest {
+    /// A greedy request with default knobs.
+    pub fn greedy(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens, temperature: 0.0, top_k: 0, seed: id }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("prompt", arr(self.prompt.iter().map(|&t| num(t as f64)).collect())),
+            ("max_new_tokens", num(self.max_new_tokens as f64)),
+            ("temperature", num(self.temperature as f64)),
+            ("top_k", num(self.top_k as f64)),
+            ("seed", num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenRequest> {
+        let prompt = j
+            .get("prompt")
+            .as_arr()
+            .context("request.prompt must be an array")?
+            .iter()
+            .map(|v| v.as_usize().context("prompt token must be a number"))
+            .collect::<Result<Vec<_>>>()?;
+        if prompt.is_empty() {
+            bail!("request.prompt must be non-empty");
+        }
+        Ok(GenRequest {
+            id: j.get("id").as_u64().context("request.id")?,
+            prompt,
+            max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(16),
+            temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
+            top_k: j.get("top_k").as_usize().unwrap_or(0),
+            seed: j.get("seed").as_u64().unwrap_or(0),
+        })
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Produced the engine's EOS token.
+    Eos,
+}
+
+impl FinishReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Eos => "eos",
+        }
+    }
+}
+
+/// A completed generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenResponse {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated token ids (prompt excluded).
+    pub tokens: Vec<usize>,
+    pub finish: FinishReason,
+    /// Seconds spent queued before the first engine wave touched it.
+    pub queue_s: f64,
+    /// Seconds from enqueue to the first *generated* token.
+    pub ttft_s: f64,
+    /// Seconds from enqueue to completion.
+    pub total_s: f64,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("prompt_len", num(self.prompt_len as f64)),
+            ("tokens", arr(self.tokens.iter().map(|&t| num(t as f64)).collect())),
+            ("finish", s(self.finish.name())),
+            ("queue_ms", num(self.queue_s * 1e3)),
+            ("ttft_ms", num(self.ttft_s * 1e3)),
+            ("total_ms", num(self.total_s * 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let r = GenRequest {
+            id: 42,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 8,
+            temperature: 0.7,
+            top_k: 40,
+            seed: 99,
+        };
+        let text = r.to_json().to_string();
+        let back = GenRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.prompt, vec![1, 2, 3]);
+        assert_eq!(back.max_new_tokens, 8);
+        assert!((back.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(back.top_k, 40);
+        assert_eq!(back.seed, 99);
+    }
+
+    #[test]
+    fn request_defaults_fill_in() {
+        let j = Json::parse(r#"{"id": 1, "prompt": [5]}"#).unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.temperature, 0.0);
+    }
+
+    #[test]
+    fn empty_prompt_rejected() {
+        let j = Json::parse(r#"{"id": 1, "prompt": []}"#).unwrap();
+        assert!(GenRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn response_json_has_timing() {
+        let r = GenResponse {
+            id: 7,
+            prompt_len: 3,
+            tokens: vec![9, 9],
+            finish: FinishReason::Length,
+            queue_s: 0.001,
+            ttft_s: 0.002,
+            total_s: 0.004,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("finish").as_str(), Some("length"));
+        assert!((j.get("ttft_ms").as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+}

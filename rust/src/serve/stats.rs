@@ -1,0 +1,231 @@
+//! Serving-side accounting: per-request latency (queue / TTFT / total),
+//! generated-token throughput, and per-wave batch occupancy. This is the
+//! first latency-oriented metrics surface in the codebase — the training
+//! loop reports tokens/step, serving reports p50/p95 and tokens/sec.
+
+use crate::serve::protocol::GenResponse;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Completed requests.
+    pub completed: usize,
+    /// Prompt tokens consumed (prefill work).
+    pub prompt_tokens: usize,
+    /// Tokens generated (decode work the caller actually received).
+    pub gen_tokens: usize,
+    /// Decode waves executed.
+    pub waves: usize,
+    /// Sequences advanced per wave (the continuous-batching occupancy).
+    occupancy: Vec<usize>,
+    total_s: Vec<f64>,
+    ttft_s: Vec<f64>,
+    queue_s: Vec<f64>,
+    /// Wall-clock span from the first wave to the last completion.
+    first_wave: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one decode wave that advanced `n_seqs` sequences.
+    pub fn record_wave(&mut self, n_seqs: usize) {
+        if n_seqs == 0 {
+            return;
+        }
+        self.waves += 1;
+        self.occupancy.push(n_seqs);
+        if self.first_wave.is_none() {
+            self.first_wave = Some(Instant::now());
+        }
+    }
+
+    /// Record a completed request.
+    pub fn record_completion(&mut self, resp: &GenResponse) {
+        self.completed += 1;
+        self.prompt_tokens += resp.prompt_len;
+        self.gen_tokens += resp.tokens.len();
+        self.total_s.push(resp.total_s);
+        self.ttft_s.push(resp.ttft_s);
+        self.queue_s.push(resp.queue_s);
+        self.last_done = Some(Instant::now());
+    }
+
+    /// Wall seconds from the first decode wave to the last completion.
+    pub fn wall_s(&self) -> f64 {
+        match (self.first_wave, self.last_done) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Generated tokens per second of serving wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let w = self.wall_s();
+        if w > 0.0 {
+            self.gen_tokens as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    pub fn p50_total_ms(&self) -> f64 {
+        percentile(&self.total_s, 50.0) * 1e3
+    }
+
+    pub fn p95_total_ms(&self) -> f64 {
+        percentile(&self.total_s, 95.0) * 1e3
+    }
+
+    pub fn p50_ttft_ms(&self) -> f64 {
+        percentile(&self.ttft_s, 50.0) * 1e3
+    }
+
+    pub fn p95_ttft_ms(&self) -> f64 {
+        percentile(&self.ttft_s, 95.0) * 1e3
+    }
+
+    pub fn mean_queue_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.queue_s) * 1e3
+    }
+
+    /// Mean sequences advanced per wave.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occupancy.is_empty() {
+            return 0.0;
+        }
+        self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
+    }
+
+    /// Peak sequences advanced in one wave.
+    pub fn max_occupancy(&self) -> usize {
+        self.occupancy.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The BENCH record: one flat JSON object per serving run, consumed by
+    /// `benches/bench_serve.rs` and the perf-trajectory file
+    /// `BENCH_serve.json`.
+    pub fn bench_json(&self, label: &str, extra: Vec<(&str, Json)>) -> Json {
+        let mut pairs = vec![
+            ("bench", s("serve")),
+            ("label", s(label)),
+            ("requests", num(self.completed as f64)),
+            ("prompt_tokens", num(self.prompt_tokens as f64)),
+            ("gen_tokens", num(self.gen_tokens as f64)),
+            ("waves", num(self.waves as f64)),
+            ("tokens_per_sec", num(self.tokens_per_sec())),
+            ("p50_total_ms", num(self.p50_total_ms())),
+            ("p95_total_ms", num(self.p95_total_ms())),
+            ("p50_ttft_ms", num(self.p50_ttft_ms())),
+            ("p95_ttft_ms", num(self.p95_ttft_ms())),
+            ("mean_queue_ms", num(self.mean_queue_ms())),
+            ("mean_batch_occupancy", num(self.mean_occupancy())),
+            ("max_batch_occupancy", num(self.max_occupancy() as f64)),
+        ];
+        pairs.extend(extra);
+        obj(pairs)
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self, label: &str) -> String {
+        format!(
+            "== serve stats [{label}] ==\n\
+             requests        {:>10}\n\
+             prompt tokens   {:>10}\n\
+             gen tokens      {:>10}\n\
+             decode waves    {:>10}\n\
+             tokens/sec      {:>10.1}\n\
+             latency p50/p95 {:>7.1} / {:.1} ms\n\
+             ttft    p50/p95 {:>7.1} / {:.1} ms\n\
+             queue mean      {:>10.2} ms\n\
+             occupancy mean  {:>10.2}  (max {})",
+            self.completed,
+            self.prompt_tokens,
+            self.gen_tokens,
+            self.waves,
+            self.tokens_per_sec(),
+            self.p50_total_ms(),
+            self.p95_total_ms(),
+            self.p50_ttft_ms(),
+            self.p95_ttft_ms(),
+            self.mean_queue_ms(),
+            self.mean_occupancy(),
+            self.max_occupancy(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::FinishReason;
+
+    fn resp(id: u64, n: usize, total: f64) -> GenResponse {
+        GenResponse {
+            id,
+            prompt_len: 4,
+            tokens: vec![1; n],
+            finish: FinishReason::Length,
+            queue_s: 0.001,
+            ttft_s: total / 2.0,
+            total_s: total,
+        }
+    }
+
+    #[test]
+    fn aggregates_completions() {
+        let mut st = ServeStats::new();
+        st.record_wave(1);
+        st.record_wave(3);
+        st.record_wave(2);
+        for i in 0..4 {
+            st.record_completion(&resp(i, 5, 0.010 * (i + 1) as f64));
+        }
+        assert_eq!(st.completed, 4);
+        assert_eq!(st.gen_tokens, 20);
+        assert_eq!(st.prompt_tokens, 16);
+        assert_eq!(st.max_occupancy(), 3);
+        assert!((st.mean_occupancy() - 2.0).abs() < 1e-9);
+        assert!(st.p50_total_ms() > 0.0);
+        assert!(st.p95_total_ms() >= st.p50_total_ms());
+        assert!(st.tokens_per_sec() >= 0.0);
+    }
+
+    #[test]
+    fn empty_waves_not_counted() {
+        let mut st = ServeStats::new();
+        st.record_wave(0);
+        assert_eq!(st.waves, 0);
+        assert_eq!(st.mean_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let mut st = ServeStats::new();
+        st.record_wave(2);
+        st.record_completion(&resp(0, 3, 0.02));
+        let j = st.bench_json("bf16/b4", vec![("batch", num(4.0))]);
+        assert_eq!(j.get("bench").as_str(), Some("serve"));
+        assert_eq!(j.get("label").as_str(), Some("bf16/b4"));
+        assert_eq!(j.get("gen_tokens").as_usize(), Some(3));
+        assert_eq!(j.get("batch").as_usize(), Some(4));
+        // reparses as valid JSON
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn render_mentions_occupancy() {
+        let mut st = ServeStats::new();
+        st.record_wave(2);
+        st.record_completion(&resp(0, 3, 0.02));
+        let text = st.render("test");
+        assert!(text.contains("occupancy"));
+        assert!(text.contains("tokens/sec"));
+    }
+}

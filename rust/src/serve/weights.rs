@@ -1,0 +1,614 @@
+//! Low-precision MX weight store for serving: linear weights are snapshotted
+//! as square-blockwise (32×32) groups with one power-of-two scale per block
+//! and *bit-packed element codes* in the target FP format (BF16 → 2 bytes,
+//! FP8/FP6/FP4 → 1 byte per element). Dequantization happens per block on
+//! load, reproducing exactly what `mx::quantize_square` would emit — so the
+//! serving path inherits the Table C.1 fidelity claims of the training-time
+//! grouping.
+//!
+//! Non-linear tensors (embeddings, norms) stay f32: they are a small
+//! fraction of the parameters and the paper's claim covers the PQT linears.
+//!
+//! On-disk format (`GWQS1`), little-endian:
+//!
+//! ```text
+//! magic "GWQS1\n"
+//! u32 label_len | label bytes                 (store mode, e.g. "fp8_e3m4")
+//! u32 arch_len  | arch bytes                  ("gpt2" | "llama2")
+//! u64 ×6: n_layer d_model n_head d_ff vocab seq_len
+//! u64 block
+//! u8 elem tag: 0 = f32 (no quantization), 1 = FP(e,m,inf,sat)
+//! if FP: u8 exp_bits | u8 man_bits | u8 has_inf_nan | u8 saturating
+//! u32 n_tensors
+//! per tensor:
+//!   u32 name_len | name | u64 rows | u64 cols
+//!   u8 kind: 0 = raw f32, 1 = u8 codes, 2 = u16 codes
+//!   raw:   rows*cols × f32
+//!   coded: u64 n_scales | n_scales × f32 | rows*cols × (u8|u16)
+//! ```
+
+use crate::config::schema::{Arch, ModelConfig};
+use crate::mx::{quantize_square, ElemType};
+use crate::nn::tensor::Mat;
+use crate::nn::transformer::Params;
+use crate::numerics::fpformat::{formats, FpFormat, Overflow};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"GWQS1\n";
+
+/// Encode a value exactly representable in `fmt` into its sign/exp/mantissa
+/// code (at most 16 bits for every format this crate defines).
+pub fn encode_code(fmt: &FpFormat, v: f64) -> u16 {
+    let m = fmt.man_bits;
+    let sign: u16 = if v.is_sign_negative() { 1 << (fmt.exp_bits + m) } else { 0 };
+    let a = v.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    if a.is_infinite() {
+        // only reachable for has_inf_nan formats
+        return sign | ((((1u32 << fmt.exp_bits) - 1) as u16) << m);
+    }
+    let e = a.log2().floor() as i32;
+    if e < fmt.min_normal_exp() {
+        // subnormal: mantissa counts the min-subnormal step
+        let man = (a / fmt.min_subnormal()).round() as u16;
+        sign | man
+    } else {
+        let exp_code = (e + fmt.bias()) as u16;
+        let frac = a / (e as f64).exp2() - 1.0; // in [0, 1)
+        let man = (frac * (1u64 << m) as f64).round() as u16;
+        sign | (exp_code << m) | man
+    }
+}
+
+/// Decode a code produced by [`encode_code`] back to its exact value.
+pub fn decode_code(fmt: &FpFormat, code: u16) -> f64 {
+    let m = fmt.man_bits;
+    let man = (code & ((1u16 << m) - 1)) as u32;
+    let exp_code = ((code >> m) as u32) & ((1u32 << fmt.exp_bits) - 1);
+    let sign = if (code >> (fmt.exp_bits + m)) & 1 == 1 { -1.0 } else { 1.0 };
+    if exp_code == 0 {
+        return sign * man as f64 * fmt.min_subnormal();
+    }
+    if fmt.has_inf_nan && exp_code == (1u32 << fmt.exp_bits) - 1 {
+        return if man == 0 { sign * f64::INFINITY } else { f64::NAN };
+    }
+    let e = exp_code as i32 - fmt.bias();
+    sign * (1.0 + man as f64 / (1u64 << m) as f64) * (e as f64).exp2()
+}
+
+/// The element storage mode of a store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StoreElem {
+    /// Keep master f32 (no quantization) — the fidelity baseline.
+    F32,
+    /// Bit-packed low-precision FP elements with per-block po2 scales.
+    Fp(FpFormat),
+}
+
+impl StoreElem {
+    /// Parse a CLI/store-mode name: `f32`/`master`, or any
+    /// `numerics::formats::by_name` format of at most 16 total bits
+    /// (bf16, fp12_e4m7, fp8_e3m4, fp6_e3m2, ...). The packed code path
+    /// stores one `u16` per element, so wider formats (fp32) are only
+    /// servable unquantized via `f32`.
+    pub fn parse(name: &str) -> Result<StoreElem> {
+        match name.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "master" | "none" => Ok(StoreElem::F32),
+            other => {
+                let fmt = formats::by_name(other)
+                    .with_context(|| format!("unknown weight-store mode '{other}'"))?;
+                if fmt.total_bits() > 16 {
+                    bail!("weight-store mode '{other}' is {} bits; max packed width is 16 (use 'f32' for unquantized serving)", fmt.total_bits());
+                }
+                Ok(StoreElem::Fp(fmt))
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StoreElem::F32 => "f32".to_string(),
+            StoreElem::Fp(f) => format!("fp{}_e{}m{}", f.total_bits(), f.exp_bits, f.man_bits),
+        }
+    }
+}
+
+/// Packed element payload of one stored tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Codes {
+    /// Unquantized master weights.
+    F32(Vec<f32>),
+    /// One byte per element (formats with ≤ 8 total bits).
+    U8(Vec<u8>),
+    /// Two bytes per element (BF16 and other 9–16 bit formats).
+    U16(Vec<u16>),
+}
+
+impl Codes {
+    pub fn len(&self) -> usize {
+        match self {
+            Codes::F32(v) => v.len(),
+            Codes::U8(v) => v.len(),
+            Codes::U16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes (the compression the store actually achieves).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Codes::F32(v) => v.len() * 4,
+            Codes::U8(v) => v.len(),
+            Codes::U16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// One tensor in the store.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredTensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-block po2 scales, row-major over the ⌈rows/b⌉ × ⌈cols/b⌉ grid.
+    /// Empty for raw-f32 tensors.
+    pub scales: Vec<f32>,
+    pub codes: Codes,
+}
+
+impl StoredTensor {
+    pub fn bytes(&self) -> usize {
+        self.scales.len() * 4 + self.codes.bytes()
+    }
+}
+
+/// A quantized snapshot of a model's parameters, ready to serve.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub cfg: ModelConfig,
+    pub elem: StoreElem,
+    pub block: usize,
+    pub tensors: BTreeMap<String, StoredTensor>,
+}
+
+impl WeightStore {
+    /// Snapshot `params`: linear weights are MX-quantized square-blockwise
+    /// and bit-packed in the `elem` format; everything else stays f32.
+    pub fn from_params(
+        params: &Params,
+        cfg: &ModelConfig,
+        elem: StoreElem,
+        block: usize,
+    ) -> WeightStore {
+        assert!(block > 0, "block size must be positive");
+        let linears: std::collections::BTreeSet<String> =
+            Params::linear_names(cfg).into_iter().collect();
+        let mut tensors = BTreeMap::new();
+        for (name, m) in &params.tensors {
+            let st = match (&elem, linears.contains(name)) {
+                (StoreElem::Fp(fmt), true) => pack_matrix(m, fmt, block),
+                _ => StoredTensor {
+                    rows: m.rows,
+                    cols: m.cols,
+                    scales: Vec::new(),
+                    codes: Codes::F32(m.data.clone()),
+                },
+            };
+            tensors.insert(name.clone(), st);
+        }
+        WeightStore { cfg: cfg.clone(), elem, block, tensors }
+    }
+
+    /// Snapshot straight from a training checkpoint (the train→serve hop).
+    pub fn from_checkpoint(
+        ck: &crate::coordinator::Checkpoint,
+        cfg: &ModelConfig,
+        elem: StoreElem,
+        block: usize,
+    ) -> Result<WeightStore> {
+        let params = ck.to_params(cfg)?;
+        Ok(WeightStore::from_params(&params, cfg, elem, block))
+    }
+
+    /// Dequantize every tensor back to f32 [`Params`] (per block: decode the
+    /// element code, multiply by the block scale). For quantized linears the
+    /// result is bit-identical to `mx::quantize_square` of the original
+    /// weights cast to f32.
+    pub fn to_params(&self) -> Params {
+        let mut tensors = BTreeMap::new();
+        for (name, st) in &self.tensors {
+            tensors.insert(name.clone(), unpack_matrix(st, &self.elem, self.block));
+        }
+        Params { tensors }
+    }
+
+    /// Total payload bytes (scales + codes) across all tensors.
+    pub fn bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Bytes the same tensors occupy as master f32.
+    pub fn master_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.rows * t.cols * 4).sum()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &self.elem.name())?;
+        write_str(&mut f, self.cfg.arch.name())?;
+        for v in [
+            self.cfg.n_layer,
+            self.cfg.d_model,
+            self.cfg.n_head,
+            self.cfg.d_ff,
+            self.cfg.vocab,
+            self.cfg.seq_len,
+            self.block,
+        ] {
+            f.write_all(&(v as u64).to_le_bytes())?;
+        }
+        match &self.elem {
+            StoreElem::F32 => f.write_all(&[0u8])?,
+            StoreElem::Fp(fmt) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&[
+                    fmt.exp_bits as u8,
+                    fmt.man_bits as u8,
+                    fmt.has_inf_nan as u8,
+                    (fmt.overflow == Overflow::Saturate) as u8,
+                ])?;
+            }
+        }
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, st) in &self.tensors {
+            write_str(&mut f, name)?;
+            f.write_all(&(st.rows as u64).to_le_bytes())?;
+            f.write_all(&(st.cols as u64).to_le_bytes())?;
+            match &st.codes {
+                Codes::F32(v) => {
+                    f.write_all(&[0u8])?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Codes::U8(v) => {
+                    f.write_all(&[1u8])?;
+                    write_scales(&mut f, &st.scales)?;
+                    f.write_all(v)?;
+                }
+                Codes::U16(v) => {
+                    f.write_all(&[2u8])?;
+                    write_scales(&mut f, &st.scales)?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening weight store {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad weight-store magic (not a GWQS1 file)");
+        }
+        let label = read_str(&mut f)?;
+        let arch = Arch::parse(&read_str(&mut f)?)?;
+        let mut dims = [0usize; 7];
+        for d in dims.iter_mut() {
+            *d = read_u64(&mut f)? as usize;
+        }
+        let cfg = ModelConfig {
+            arch,
+            n_layer: dims[0],
+            d_model: dims[1],
+            n_head: dims[2],
+            d_ff: dims[3],
+            vocab: dims[4],
+            seq_len: dims[5],
+        };
+        cfg.validate()?;
+        let block = dims[6];
+        if block == 0 || block > 1 << 16 {
+            bail!("unreasonable block size {block} in weight store");
+        }
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let elem = match tag[0] {
+            0 => StoreElem::F32,
+            1 => {
+                let mut fb = [0u8; 4];
+                f.read_exact(&mut fb)?;
+                StoreElem::Fp(FpFormat {
+                    exp_bits: fb[0] as u32,
+                    man_bits: fb[1] as u32,
+                    has_inf_nan: fb[2] != 0,
+                    overflow: if fb[3] != 0 { Overflow::Saturate } else { Overflow::Infinity },
+                })
+            }
+            other => bail!("unknown elem tag {other} in weight store"),
+        };
+        if let StoreElem::Fp(f) = &elem {
+            if f.exp_bits == 0 || f.exp_bits > 8 || f.total_bits() > 16 {
+                bail!(
+                    "unsupported packed format e{}m{} in weight store",
+                    f.exp_bits,
+                    f.man_bits
+                );
+            }
+        }
+        if elem.name() != label {
+            bail!("weight store label '{label}' disagrees with format descriptor '{}'", elem.name());
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let n = u32::from_le_bytes(u32b);
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            f.read_exact(&mut tag)?;
+            let numel = rows * cols;
+            let (scales, codes) = match tag[0] {
+                0 => (Vec::new(), Codes::F32(read_f32s(&mut f, numel)?)),
+                1 => {
+                    let scales = read_scales(&mut f)?;
+                    let mut bytes = vec![0u8; numel];
+                    f.read_exact(&mut bytes)?;
+                    (scales, Codes::U8(bytes))
+                }
+                2 => {
+                    let scales = read_scales(&mut f)?;
+                    let mut bytes = vec![0u8; numel * 2];
+                    f.read_exact(&mut bytes)?;
+                    let v = bytes
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                        .collect();
+                    (scales, Codes::U16(v))
+                }
+                other => bail!("unknown tensor kind {other} in weight store"),
+            };
+            if elem == StoreElem::F32 && !matches!(codes, Codes::F32(_)) {
+                bail!("tensor '{name}': coded payload in an f32 store");
+            }
+            let expect_scales = if matches!(codes, Codes::F32(_)) {
+                0
+            } else {
+                rows.div_ceil(block) * cols.div_ceil(block)
+            };
+            if scales.len() != expect_scales {
+                bail!("tensor '{name}': {} scales, expected {expect_scales}", scales.len());
+            }
+            tensors.insert(name, StoredTensor { rows, cols, scales, codes });
+        }
+        Ok(WeightStore { cfg, elem, block, tensors })
+    }
+}
+
+/// Quantize + bit-pack one matrix.
+fn pack_matrix(m: &Mat, fmt: &FpFormat, block: usize) -> StoredTensor {
+    let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+    let q = quantize_square(&w64, m.rows, m.cols, block, &ElemType::Fp(*fmt));
+    let grid_c = m.cols.div_ceil(block);
+    let encode_at = |i: usize| -> u16 {
+        let (r, c) = (i / m.cols, i % m.cols);
+        let s = q.scales[(r / block) * grid_c + c / block];
+        encode_code(fmt, q.data[i] / s)
+    };
+    let codes = if fmt.total_bits() <= 8 {
+        Codes::U8((0..q.data.len()).map(|i| encode_at(i) as u8).collect())
+    } else {
+        Codes::U16((0..q.data.len()).map(encode_at).collect())
+    };
+    StoredTensor {
+        rows: m.rows,
+        cols: m.cols,
+        scales: q.scales.iter().map(|&s| s as f32).collect(),
+        codes,
+    }
+}
+
+/// Dequantize one stored tensor back to an f32 matrix (per-block decode).
+fn unpack_matrix(st: &StoredTensor, elem: &StoreElem, block: usize) -> Mat {
+    match (&st.codes, elem) {
+        (Codes::F32(v), _) => Mat::from_vec(st.rows, st.cols, v.clone()),
+        (codes, StoreElem::Fp(fmt)) => {
+            let grid_c = st.cols.div_ceil(block);
+            let mut data = vec![0f32; st.rows * st.cols];
+            for (i, out) in data.iter_mut().enumerate() {
+                let (r, c) = (i / st.cols, i % st.cols);
+                let s = st.scales[(r / block) * grid_c + c / block] as f64;
+                let code = match codes {
+                    Codes::U8(v) => v[i] as u16,
+                    Codes::U16(v) => v[i],
+                    Codes::F32(_) => unreachable!(),
+                };
+                *out = (decode_code(fmt, code) * s) as f32;
+            }
+            Mat::from_vec(st.rows, st.cols, data)
+        }
+        (_, StoreElem::F32) => {
+            unreachable!("coded tensor in an f32 store")
+        }
+    }
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let len = u32::from_le_bytes(u32b) as usize;
+    if len > 1 << 20 {
+        bail!("unreasonable string length {len} in weight store");
+    }
+    let mut bytes = vec![0u8; len];
+    f.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).context("weight-store string utf8")
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_scales(f: &mut impl Write, scales: &[f32]) -> Result<()> {
+    f.write_all(&(scales.len() as u64).to_le_bytes())?;
+    for s in scales {
+        f.write_all(&s.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_scales(f: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(f)? as usize;
+    read_f32s(f, n)
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::Arch;
+    use crate::nn::transformer::Transformer;
+    use crate::testing::prop::{check, Gen};
+
+    #[test]
+    fn codes_roundtrip_exhaustively_for_tiny_formats() {
+        for fmt in [formats::FP8_E3M4, formats::FP8_E4M3, formats::FP6_E3M2, formats::FP4_E2M1] {
+            let max_code = 1u32 << fmt.total_bits();
+            for v in fmt.enumerate_non_negative() {
+                for signed in [v, -v] {
+                    let code = encode_code(&fmt, signed);
+                    assert!((code as u32) < max_code, "{fmt:?}: code {code} overflows");
+                    let back = decode_code(&fmt, code);
+                    // -0.0 decodes to -0.0; compare bit-exactly via total order
+                    assert_eq!(back, signed, "{fmt:?}: {signed} -> {code} -> {back}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip_bf16_samples() {
+        check("bf16 code roundtrip", 50, |g: &mut Gen| {
+            let x = g.f64_in(-100.0, 100.0);
+            let v = formats::BF16.cast(x);
+            let code = encode_code(&formats::BF16, v);
+            let back = decode_code(&formats::BF16, code);
+            if back == v {
+                Ok(())
+            } else {
+                Err(format!("{v} -> {code} -> {back}"))
+            }
+        });
+    }
+
+    #[test]
+    fn store_matches_quantize_square_exactly() {
+        // dequantize-on-load must reproduce the fq_inference quantization
+        // path bit-for-bit (same blocks, same scales, same element cast)
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(5);
+        for fmt in [formats::BF16, formats::FP8_E3M4, formats::FP6_E3M2] {
+            let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(fmt), 32);
+            let served = store.to_params();
+            for name in Params::linear_names(&cfg) {
+                let m = params.get(&name);
+                let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+                let q = quantize_square(&w64, m.rows, m.cols, 32, &ElemType::Fp(fmt));
+                let got = served.get(&name);
+                for (i, (&g, &want)) in got.data.iter().zip(q.data.iter()).enumerate() {
+                    assert_eq!(g, want as f32, "{name}[{i}] under {fmt:?}");
+                }
+            }
+            // non-linear tensors pass through untouched
+            assert_eq!(served.get("embed").data, params.get("embed").data);
+        }
+    }
+
+    #[test]
+    fn store_compresses_linears() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(6);
+        let fp8 = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E3M4), 32);
+        let f32s = WeightStore::from_params(&params, &cfg, StoreElem::F32, 32);
+        assert!(fp8.bytes() < f32s.bytes(), "{} !< {}", fp8.bytes(), f32s.bytes());
+        assert_eq!(f32s.bytes(), f32s.master_bytes());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::tiny(Arch::Llama2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(7);
+        let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E4M3), 32);
+        let path = std::env::temp_dir().join("gaussws_store_test.gwqs");
+        store.save(&path).unwrap();
+        let back = WeightStore::load(&path).unwrap();
+        assert_eq!(back.cfg, cfg);
+        assert_eq!(back.elem, store.elem);
+        assert_eq!(back.block, 32);
+        assert_eq!(back.tensors, store.tensors);
+        let a = store.to_params();
+        let b = back.to_params();
+        for (name, m) in &a.tensors {
+            assert_eq!(m, b.get(name), "{name}");
+        }
+    }
+
+    #[test]
+    fn corrupt_store_rejected() {
+        let path = std::env::temp_dir().join("gaussws_store_bad.gwqs");
+        std::fs::write(&path, b"NOTGWQSjunk").unwrap();
+        assert!(WeightStore::load(&path).is_err());
+    }
+
+    #[test]
+    fn store_elem_parse_names() {
+        assert_eq!(StoreElem::parse("f32").unwrap(), StoreElem::F32);
+        // fp32 cannot be bit-packed into u16 codes: served unquantized
+        assert_eq!(StoreElem::parse("fp32").unwrap(), StoreElem::F32);
+        assert_eq!(StoreElem::parse("bf16").unwrap(), StoreElem::Fp(formats::BF16));
+        assert_eq!(StoreElem::parse("fp8_e3m4").unwrap(), StoreElem::Fp(formats::FP8_E3M4));
+        assert!(StoreElem::parse("fp99").is_err());
+        assert_eq!(StoreElem::Fp(formats::FP6_E3M2).name(), "fp6_e3m2");
+        assert_eq!(StoreElem::Fp(formats::BF16).name(), "fp16_e8m7");
+    }
+}

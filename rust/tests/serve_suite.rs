@@ -1,0 +1,255 @@
+//! Serve-layer integration + MX round-trip property tests: quantization
+//! error bounds per element type, quantized-snapshot fidelity against the
+//! `fq_inference` quantization path, KV-cache decode parity, end-to-end
+//! continuous-batching behaviour, and the Table C.1 degradation pattern of
+//! the FP weight-store modes. Pure rust — no artifacts or PJRT needed.
+
+use gaussws::config::schema::{Arch, ModelConfig};
+use gaussws::data::{SynthCorpus, SynthSpec};
+use gaussws::mx::{quantize_square, ElemType};
+use gaussws::nn::transformer::{DecodeCache, Params, Transformer};
+use gaussws::numerics::fpformat::formats;
+use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+use gaussws::testing::prop::{check, Gen};
+
+// ---------------------------------------------------------------- MX bounds
+
+/// Round-trip error bound of square-blockwise fake quantization for an FP
+/// element type: RNE casting gives relative error ≤ 2^-(m+1) in the normal
+/// range, and absolute error ≤ scale · min_subnormal / 2 below it. The po2
+/// scale maps each block's max into range, so nothing clips.
+fn assert_roundtrip_bounds(g: &mut Gen, fmt: gaussws::numerics::FpFormat) -> Result<(), String> {
+    let rows = g.usize_in(1, 70);
+    let cols = g.usize_in(1, 70);
+    let block = *g.choose(&[4usize, 16, 32]);
+    let w = g.normal_vec(rows * cols);
+    let q = quantize_square(&w, rows, cols, block, &ElemType::Fp(fmt));
+    let grid_c = cols.div_ceil(block);
+    let rel = 0.5 * (-(fmt.man_bits as f64)).exp2();
+    for (i, (&orig, &quant)) in w.iter().zip(q.data.iter()).enumerate() {
+        let (r, c) = (i / cols, i % cols);
+        let s = q.scales[(r / block) * grid_c + c / block];
+        let bound = (rel * orig.abs()).max(0.5 * s * fmt.min_subnormal()) * (1.0 + 1e-12) + 1e-300;
+        if (orig - quant).abs() > bound {
+            return Err(format!(
+                "({rows}x{cols} b{block}) elem {i}: |{orig} - {quant}| > {bound} (scale {s})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fp8_e3m4_roundtrip_bounded() {
+    check("fp8_e3m4 square roundtrip", 30, |g| assert_roundtrip_bounds(g, formats::FP8_E3M4));
+}
+
+#[test]
+fn prop_fp6_e3m2_roundtrip_bounded() {
+    check("fp6_e3m2 square roundtrip", 30, |g| assert_roundtrip_bounds(g, formats::FP6_E3M2));
+}
+
+#[test]
+fn prop_bf16_roundtrip_bounded() {
+    check("bf16 square roundtrip", 20, |g| assert_roundtrip_bounds(g, formats::BF16));
+}
+
+#[test]
+fn prop_bf16_exact_for_representable_values() {
+    // a block of already-bf16 values within the po2-scaled range must
+    // survive BF16 square-blockwise quantization untouched
+    check("bf16 exact on bf16 inputs", 30, |g| {
+        let n = 32usize;
+        let w: Vec<f64> = (0..n * n).map(|_| formats::BF16.cast(g.normal())).collect();
+        let q = quantize_square(&w, n, n, 32, &ElemType::Fp(formats::BF16));
+        for (i, (&a, &b)) in w.iter().zip(q.data.iter()).enumerate() {
+            if a != b {
+                return Err(format!("elem {i}: {a} != {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_error_decreases_with_precision() {
+    // Table C.1 shape: rms quantization error must grow as mantissas shrink
+    check("precision ladder", 15, |g| {
+        let n = 64usize;
+        let w = g.normal_vec(n * n);
+        let rms = |fmt| {
+            let q = quantize_square(&w, n, n, 32, &ElemType::Fp(fmt));
+            (w.iter().zip(q.data.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+                / w.len() as f64)
+                .sqrt()
+        };
+        let (e_bf16, e_fp8, e_fp6) =
+            (rms(formats::BF16), rms(formats::FP8_E3M4), rms(formats::FP6_E3M2));
+        if e_bf16 <= e_fp8 && e_fp8 <= e_fp6 {
+            Ok(())
+        } else {
+            Err(format!("not monotone: bf16 {e_bf16} fp8 {e_fp8} fp6 {e_fp6}"))
+        }
+    });
+}
+
+// ------------------------------------------------- snapshot fidelity
+
+fn tiny_model(arch: Arch, seed: u64) -> (ModelConfig, Transformer, Params) {
+    let cfg = ModelConfig::tiny(arch);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(seed);
+    (cfg, model, params)
+}
+
+/// The fq_inference-style quantization path: cast every linear in place.
+fn quantize_linears(params: &Params, cfg: &ModelConfig, elem: &ElemType) -> Params {
+    let mut out = params.clone();
+    for name in Params::linear_names(cfg) {
+        let m = out.get_mut(&name);
+        let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+        let q = quantize_square(&w64, m.rows, m.cols, 32, elem);
+        for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
+            *dst = src as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn snapshot_reproduces_fq_inference_logits() {
+    // the weight store's pack→unpack must land on the same weights as the
+    // direct quantize_square path, hence identical logits
+    for arch in [Arch::Gpt2, Arch::Llama2] {
+        let (cfg, model, params) = tiny_model(arch, 21);
+        for fmt in [formats::BF16, formats::FP8_E3M4, formats::FP6_E3M2] {
+            let direct = quantize_linears(&params, &cfg, &ElemType::Fp(fmt));
+            let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(fmt), 32);
+            let served = store.to_params();
+            let toks = [1usize, 9, 33, 7, 12];
+            let a = model.forward(&direct, &toks);
+            let b = model.forward(&served, &toks);
+            assert_eq!(a.data, b.data, "{arch:?}/{fmt:?}: logits diverge");
+        }
+    }
+}
+
+#[test]
+fn snapshot_eval_loss_follows_table_c1_degradation() {
+    // deployment check: FP stores keep the eval loss finite, BF16 tracks
+    // master f32 tightly, and lower-precision stores degrade gracefully
+    let (cfg, model, params) = tiny_model(Arch::Gpt2, 33);
+    let corpus = SynthCorpus::generate(SynthSpec {
+        vocab: cfg.vocab,
+        len: 1 << 15,
+        seed: 99,
+        ..Default::default()
+    });
+    let eval = |p: &Params| -> f64 {
+        let mut total = 0.0;
+        let n = 4;
+        for k in 0..n {
+            let start = 300 + k * 1200;
+            let toks: Vec<usize> =
+                corpus.tokens[start..start + 49].iter().map(|&t| t as usize).collect();
+            total += model.loss(p, &toks);
+        }
+        total / n as f64
+    };
+    let base = eval(&params);
+    assert!(base.is_finite());
+    let loss_of = |mode: &str| {
+        let store =
+            WeightStore::from_params(&params, &cfg, StoreElem::parse(mode).unwrap(), 32);
+        eval(&store.to_params())
+    };
+    let (l_bf16, l_fp8, l_fp6) = (loss_of("bf16"), loss_of("fp8_e3m4"), loss_of("fp6_e3m2"));
+    assert!(l_bf16.is_finite() && l_fp8.is_finite() && l_fp6.is_finite());
+    // bf16 is indistinguishable from master at model scale
+    assert!((l_bf16 - base).abs() < 0.02, "bf16 {l_bf16} vs f32 {base}");
+    // graceful degradation: fp8/fp6 stay within a loose band of master
+    assert!(l_fp8 < base + 0.5, "fp8 {l_fp8} vs {base}");
+    assert!(l_fp6 < base + 2.0, "fp6 {l_fp6} vs {base}");
+}
+
+#[test]
+fn snapshot_file_roundtrip_serves_identically() {
+    let (cfg, model, params) = tiny_model(Arch::Gpt2, 44);
+    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E3M4), 32);
+    let path = std::env::temp_dir().join("gaussws_serve_suite.gwqs");
+    store.save(&path).unwrap();
+    let loaded = WeightStore::load(&path).unwrap();
+    let toks = [5usize, 6, 7, 8];
+    let a = model.forward(&store.to_params(), &toks);
+    let b = model.forward(&loaded.to_params(), &toks);
+    assert_eq!(a.data, b.data);
+}
+
+// ----------------------------------------------- decode + engine end-to-end
+
+#[test]
+fn kv_decode_matches_forward_on_quantized_weights() {
+    // decode parity must hold on the served (quantized) weights too
+    let (cfg, model, params) = tiny_model(Arch::Llama2, 55);
+    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E4M3), 32);
+    let served = store.to_params();
+    let toks = [2usize, 40, 11, 3, 25];
+    let full = model.forward(&served, &toks);
+    let mut cache = DecodeCache::new(&cfg, toks.len());
+    for (i, &t) in toks.iter().enumerate() {
+        let logits = model.decode_step(&served, t, &mut cache);
+        for (c, &got) in logits.iter().enumerate() {
+            let want = full.at(i, c);
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "pos {i} col {c}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_batches_and_serves_all_store_modes() {
+    let (cfg, _model, params) = tiny_model(Arch::Gpt2, 66);
+    for mode in ["f32", "bf16", "fp8_e3m4", "fp6_e3m2"] {
+        let store =
+            WeightStore::from_params(&params, &cfg, StoreElem::parse(mode).unwrap(), 32);
+        let mut engine = Engine::from_store(
+            &store,
+            EngineConfig { max_batch: 4, kv_slots: 4, threads: 2, eos: None, capacity: usize::MAX },
+        );
+        for id in 0..6u64 {
+            engine
+                .enqueue(GenRequest::greedy(id, vec![1 + id as usize * 3, 8, 2], 5))
+                .unwrap();
+        }
+        let done = engine.run_to_completion();
+        assert_eq!(done.len(), 6, "{mode}");
+        assert!(done.iter().all(|r| r.tokens.len() == 5), "{mode}");
+        assert!(engine.stats.max_occupancy() > 1, "{mode}: no batching observed");
+        assert!(engine.stats.tokens_per_sec() >= 0.0);
+        let (in_use, _, high_water, _) = engine.kv_usage();
+        assert_eq!(in_use, 0, "{mode}: slots leaked");
+        assert!(high_water >= 4, "{mode}: pool never filled (high water {high_water})");
+    }
+}
+
+#[test]
+fn queue_drains_when_requests_exceed_slots() {
+    // more requests than KV slots: admission must throttle, slot reuse must
+    // recycle capacity, and every request must still complete
+    let (cfg, _model, params) = tiny_model(Arch::Gpt2, 77);
+    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::BF16), 32);
+    let mut engine = Engine::from_store(
+        &store,
+        EngineConfig { max_batch: 8, kv_slots: 2, threads: 1, eos: None, capacity: usize::MAX },
+    );
+    for id in 0..7u64 {
+        engine.enqueue(GenRequest::greedy(id, vec![4, 5], 3 + (id as usize % 3))).unwrap();
+    }
+    let done = engine.run_to_completion();
+    assert_eq!(done.len(), 7);
+    let (_, slots, high_water, _) = engine.kv_usage();
+    assert_eq!(slots, 2);
+    assert_eq!(high_water, 2);
+}

@@ -1,0 +1,223 @@
+//! Offline shim for the subset of the `anyhow` 1.x API used by this
+//! workspace: [`Error`], [`Result`], the [`Context`] extension trait and the
+//! `anyhow!` / `bail!` / `ensure!` macros. The container image has no crates
+//! registry, so the real crate cannot be fetched; this shim is std-only and
+//! keeps every call site source-compatible.
+//!
+//! Differences from the real crate: no backtraces, no downcasting — the
+//! error is a context chain of rendered strings. `Display` shows the
+//! outermost message; the `{:#}` alternate form shows the whole chain
+//! separated by `: `, matching anyhow's formatting contract.
+
+use std::fmt;
+
+/// An error: an outermost message plus the chain of underlying causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context, last entry the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single rendered message.
+    pub fn from_msg(msg: String) -> Error {
+        Error { chain: vec![msg] }
+    }
+
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error::from_msg(m.to_string())
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent next to `From<T> for T`
+// (the same trick the real anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::from_msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::from_msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from format arguments (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::from_msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key '{}'", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key 'x'");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root cause {}", 7);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root cause 7");
+        assert_eq!(e.root_cause(), "root cause 7");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("x = {x}, y = {}", 4);
+        assert_eq!(e.to_string(), "x = 3, y = 4");
+
+        fn ens(v: bool) -> Result<u32> {
+            ensure!(v, "v was false");
+            Ok(1)
+        }
+        assert!(ens(true).is_ok());
+        assert_eq!(ens(false).unwrap_err().to_string(), "v was false");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        fn inner() -> Result<()> {
+            Err(io_err()).context("layer1").context("layer0")
+        }
+        let msg = format!("{:?}", inner().unwrap_err());
+        assert!(msg.starts_with("layer0"));
+        assert!(msg.contains("Caused by:"));
+        assert!(msg.contains("file missing"));
+    }
+}
