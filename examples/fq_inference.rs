@@ -12,10 +12,9 @@
 
 use gaussws::config::schema::{Arch, ModelConfig, PqtMethod, TrainConfig};
 use gaussws::coordinator::Trainer;
-use gaussws::mx::{quantize_square, ElemType};
 use gaussws::nn::tensor::Mat;
 use gaussws::nn::transformer::{Params, Transformer};
-use gaussws::numerics::formats;
+use gaussws::quant::Scheme;
 use gaussws::runtime::Runtime;
 use gaussws::util::Args;
 use std::collections::BTreeMap;
@@ -68,16 +67,9 @@ fn eval_loss(model: &Transformer, params: &Params, vocab: usize, seq: usize) -> 
     total / n_windows as f64
 }
 
-fn quantize_linears(params: &Params, cfg: &ModelConfig, elem: &ElemType) -> Params {
+fn quantize_linears(params: &Params, cfg: &ModelConfig, scheme: &Scheme) -> Params {
     let mut out = params.clone();
-    for name in Params::linear_names(cfg) {
-        let m = out.get_mut(&name);
-        let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-        let q = quantize_square(&w64, m.rows, m.cols, 32, elem);
-        for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
-            *dst = src as f32;
-        }
-    }
+    out.quantize_linears(cfg, scheme, 0);
     out
 }
 
@@ -100,13 +92,10 @@ fn main() -> anyhow::Result<()> {
         ("gaussws", "tiny_gpt2.gaussws_all", PqtMethod::GaussWs),
         ("bf16", "tiny_gpt2.bf16", PqtMethod::None),
     ];
-    let formats_table: [(&str, ElemType); 5] = [
-        ("bf16 (e8m7)", ElemType::Fp(formats::BF16)),
-        ("fp12_e4m7", ElemType::Fp(formats::FP12_E4M7)),
-        ("fp8_e3m4", ElemType::Fp(formats::FP8_E3M4)),
-        ("fp6_e3m2", ElemType::Fp(formats::FP6_E3M2)),
-        ("fp4_e2m1", ElemType::Fp(formats::FP4_E2M1)),
-    ];
+    // Table C.1 datatypes, resolved through the quant registry
+    let labels = ["bf16", "fp12_e4m7", "fp8_e3m4", "fp6_e3m2", "fp4_e2m1"];
+    let schemes: Vec<Scheme> =
+        labels.iter().map(|l| gaussws::quant::resolve(l).expect("builtin scheme")).collect();
 
     println!("== fake-quantized inference (Table C.1 validation) ==");
     println!("training {} steps per arm...\n", steps);
@@ -119,8 +108,8 @@ fn main() -> anyhow::Result<()> {
         let params = to_rust_params(&t);
         let base = eval_loss(&model, &params, cfg.vocab, 48);
         let mut row = format!("{label:<14} {base:>10.4}");
-        for (_fname, elem) in &formats_table {
-            let q = quantize_linears(&params, &cfg, elem);
+        for scheme in &schemes {
+            let q = quantize_linears(&params, &cfg, scheme);
             let loss = eval_loss(&model, &q, cfg.vocab, 48);
             row.push_str(&format!(" {loss:>12.4}"));
         }

@@ -18,14 +18,14 @@ fn main() -> anyhow::Result<()> {
     let (rows, cols) = (64, 64);
     let mut rng = Philox4x32::new(0);
     let w: Vec<f32> = (0..rows * cols).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
-    let layer = PqtLinear::new(
+    // the default [pqt] config: gaussws method, 32x32 blocks, b 6→4, and
+    // the bf16 ŵ-operator cast resolved through the quant registry
+    // (set `pqt.cast = "fp8_e4m3"` in a run TOML for an FP8-operator arm)
+    let layer = PqtLinear::from_config(
         "demo.qkv",
         rows,
         cols,
-        32,
-        gaussws::config::schema::PqtMethod::GaussWs,
-        6.0,
-        4.0,
+        &gaussws::config::schema::PqtConfig::default(),
     );
     let mut w_hat = vec![0f32; w.len()];
     let state = layer.forward(&w, /*seed=*/ 42, &mut w_hat);

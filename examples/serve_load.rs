@@ -14,7 +14,7 @@
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
 use gaussws::nn::transformer::Transformer;
-use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::util::stats::percentile;
 use gaussws::util::Args;
 
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let clients = args.usize_or("clients", 8);
     let per_client = args.usize_or("requests-per-client", 4);
-    let store_mode = StoreElem::parse(args.get_or("store", "fp8_e3m4"))?;
+    let store_mode = gaussws::quant::resolve(args.get_or("store", "fp8_e3m4"))?;
     let max_batch = args.usize_or("max-batch", 8);
     let threads = args.usize_or("threads", 2);
     let prompt_len = args.usize_or("prompt-len", 12);
@@ -34,10 +34,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig::tiny(Arch::Gpt2);
     let model = Transformer::new(cfg.clone());
     let params = model.init_params(seed);
-    let store = WeightStore::from_params(&params, &cfg, store_mode, 32);
+    let store = WeightStore::from_params(&params, &cfg, store_mode, seed)?;
     println!(
         "store {}: {} -> {} bytes ({:.2}x)",
-        store.elem.name(),
+        store.label(),
         store.master_bytes(),
         store.bytes(),
         store.master_bytes() as f64 / store.bytes() as f64
@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
     let stats = handle.shutdown();
 
     println!();
-    println!("{}", stats.render(&store.elem.name()));
+    println!("{}", stats.render(store.label()));
     println!(
         "client-side latency p50/p95: {:.1} / {:.1} ms over {} calls",
         percentile(&client_lat, 50.0),

@@ -3,6 +3,7 @@
 //! times both quantizers (the square geometry costs nothing extra).
 
 use gaussws::mx::{measure_square, measure_vectorwise, ElemType};
+use gaussws::quant::QuantScheme;
 use gaussws::prng::gauss::box_muller_pair;
 use gaussws::prng::Philox4x32;
 use gaussws::util::bench::Bencher;
@@ -51,10 +52,14 @@ fn main() {
     let rs = b.run("square", || {
         gaussws::mx::quantize_square(&w, rows, cols, 32, &int4).data[0]
     });
+    // the registry-resolved scheme path must cost the same as the shim
+    let scheme = gaussws::quant::resolve("int4").expect("builtin scheme");
+    let rq = b.run("scheme int4", || scheme.quantize(&w, rows, cols, 0).data[0]);
     println!(
-        "  vectorwise {:>8.1}   square {:>8.1}   (ratio {:.2}x)",
+        "  vectorwise {:>8.1}   square {:>8.1}   scheme {:>8.1}   (vec/sq ratio {:.2}x)",
         rv.elems_per_sec(rows * cols) / 1e6,
         rs.elems_per_sec(rows * cols) / 1e6,
+        rq.elems_per_sec(rows * cols) / 1e6,
         rv.median_s / rs.median_s
     );
     println!(

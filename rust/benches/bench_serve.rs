@@ -11,7 +11,7 @@
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
 use gaussws::nn::transformer::Transformer;
-use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::util::json::{arr, num, obj, s, Json};
 use gaussws::util::Args;
 
@@ -42,9 +42,9 @@ fn run_arm(
         "batch={batch}: continuous batching inactive"
     );
     let record = engine.stats.bench_json(
-        &format!("{}/b{batch}", store.elem.name()),
+        &format!("{}/b{batch}", store.label()),
         vec![
-            ("store", s(&store.elem.name())),
+            ("store", s(store.label())),
             ("batch", num(batch as f64)),
             ("threads", num(threads as f64)),
             ("prompt_len", num(prompt_len as f64)),
@@ -73,9 +73,10 @@ fn main() {
     let store = WeightStore::from_params(
         &params,
         &cfg,
-        StoreElem::parse(args.get_or("store", "fp8_e3m4")).expect("store mode"),
-        32,
-    );
+        gaussws::quant::resolve(args.get_or("store", "fp8_e3m4")).expect("store mode"),
+        seed,
+    )
+    .expect("snapshot");
     let corpus = SynthCorpus::generate(SynthSpec {
         vocab: cfg.vocab,
         len: 1 << 16,
@@ -85,7 +86,7 @@ fn main() {
 
     println!(
         "bench_serve: tiny_gpt2, store {}, threads {threads}, {} req/slot, max_new {max_new}",
-        store.elem.name(),
+        store.label(),
         per_slot
     );
     let mut records = Vec::new();
@@ -97,7 +98,7 @@ fn main() {
     let aggregate = obj(vec![
         ("bench", s("serve")),
         ("model", s("tiny_gpt2")),
-        ("store", s(&store.elem.name())),
+        ("store", s(store.label())),
         ("status", s("measured")),
         ("threads", num(threads as f64)),
         ("arms", arr(records)),

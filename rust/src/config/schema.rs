@@ -127,6 +127,9 @@ pub struct PqtConfig {
     pub bi_weight_decay: f64,
     /// Optional λ for the Eq. 12 bitwidth loss (0 disables).
     pub lambda: f64,
+    /// ŵ cast scheme (the paper's "BF16 operator" by default), resolved
+    /// from `pqt.cast = "<label>"` through [`crate::quant::Registry`].
+    pub cast: crate::quant::Scheme,
 }
 
 impl Default for PqtConfig {
@@ -139,6 +142,7 @@ impl Default for PqtConfig {
             b_target: 4.0,
             bi_weight_decay: 0.1,
             lambda: 0.0,
+            cast: crate::quant::resolve("bf16").expect("builtin scheme"),
         }
     }
 }
@@ -268,6 +272,8 @@ impl RunConfig {
             b_target: doc.f64_or("pqt.b_target", pd.b_target),
             bi_weight_decay: doc.f64_or("pqt.bi_weight_decay", pd.bi_weight_decay),
             lambda: doc.f64_or("pqt.lambda", pd.lambda),
+            cast: crate::quant::resolve(&doc.str_or("pqt.cast", "bf16"))
+                .context("pqt.cast")?,
         };
         let td = TrainConfig::default();
         let train = TrainConfig {
@@ -315,6 +321,19 @@ mod tests {
         assert_eq!(c.pqt.b_init, 6.0);
         assert_eq!(c.pqt.b_target, 4.0);
         assert_eq!(c.train.optimizer, Optimizer::AdamW);
+        use crate::quant::QuantScheme;
+        assert_eq!(c.pqt.cast.label(), "bf16");
+    }
+
+    #[test]
+    fn pqt_cast_parses_through_registry() {
+        use crate::quant::QuantScheme;
+        let c = RunConfig::from_toml_str("[pqt]\ncast = \"fp8_e4m3\"").unwrap();
+        assert_eq!(c.pqt.cast.label(), "fp8_e4m3");
+        let err = RunConfig::from_toml_str("[pqt]\ncast = \"fp9_bogus\"").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown quant scheme"), "{msg}");
+        assert!(msg.contains("fp8_e3m4"), "error should list available labels: {msg}");
     }
 
     #[test]

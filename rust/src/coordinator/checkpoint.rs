@@ -76,6 +76,21 @@ impl Checkpoint {
         Ok(Params { tensors })
     }
 
+    /// [`Checkpoint::to_params`] with the linear weights fake-quantized
+    /// through a [`crate::quant::Scheme`] — the checkpoint-side snapshot
+    /// path of the train → low-precision-deploy hop (Table C.1 evals,
+    /// `gaussws quantize`). Non-linear tensors pass through at master
+    /// precision. Stochastic schemes use a deterministic per-tensor seed.
+    pub fn to_quantized_params(
+        &self,
+        cfg: &ModelConfig,
+        scheme: &crate::quant::Scheme,
+    ) -> Result<Params> {
+        let mut params = self.to_params(cfg)?;
+        params.quantize_linears(cfg, scheme, self.master_seed);
+        Ok(params)
+    }
+
     /// Capture transformer [`Params`] as `param.*` tensors (inverse of
     /// [`Checkpoint::to_params`], minus optimizer state).
     pub fn from_params(params: &Params, step: u64, master_seed: u64) -> Checkpoint {
@@ -161,6 +176,31 @@ mod tests {
         bigger.d_model = 128;
         bigger.n_head = 4;
         assert!(ck.to_params(&bigger).is_err());
+    }
+
+    #[test]
+    fn quantized_params_follow_the_scheme() {
+        use crate::config::schema::Arch;
+        use crate::quant::QuantScheme;
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(13);
+        let ck = Checkpoint::from_params(&params, 1, 13);
+        let scheme = crate::quant::resolve("fp6_e3m2").unwrap();
+        let q = ck.to_quantized_params(&cfg, &scheme).unwrap();
+        for name in Params::linear_names(&cfg) {
+            let m = params.get(&name);
+            let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+            let want = scheme.quantize(&w64, m.rows, m.cols, 0);
+            for (a, b) in q.get(&name).data.iter().zip(want.data.iter()) {
+                assert_eq!(*a, *b as f32);
+            }
+        }
+        // f32 scheme is a no-op
+        let raw = ck.to_quantized_params(&cfg, &crate::quant::resolve("f32").unwrap()).unwrap();
+        assert_eq!(raw.tensors, params.tensors);
+        // embeddings untouched under quantizing schemes
+        assert_eq!(q.get("embed").data, params.get("embed").data);
     }
 
     #[test]

@@ -14,11 +14,16 @@
 //!   harness reproducing every table and figure of the paper.
 //! * **L4 (this crate, [`serve`])** — the deployment side of the paper's
 //!   claim: checkpoints are snapshotted into a low-precision MX weight
-//!   store (BF16/FP8/FP6 square-blockwise, bit-packed, dequantize-on-load)
-//!   and served through a continuous-batching engine with per-sequence
-//!   KV-cache slots, a multi-threaded decode worker pool, and p50/p95
-//!   latency + tokens/sec accounting. `gaussws serve` and
+//!   store (BF16/FP8/FP6/FP4/INT square-blockwise, bit-packed,
+//!   dequantize-on-load) and served through a continuous-batching engine
+//!   with per-sequence KV-cache slots, a multi-threaded decode worker pool,
+//!   and p50/p95 latency + tokens/sec accounting. `gaussws serve` and
 //!   `examples/serve_load.rs` drive it end to end.
+//! * **[`quant`]** — the unified quantization seam underneath L3 and L4:
+//!   one `QuantScheme` trait (codec × rounding × scale geometry) plus a
+//!   label registry (`"bf16"`, `"fp8_e3m4"`, `"int8_sr"`, …) shared by
+//!   train-time fake-quant, checkpoint snapshots, and the packed serving
+//!   store, so every format/rounding scenario is a single registry entry.
 //!
 //! Python never runs on the training path; after `make artifacts` the rust
 //! binary is self-contained. The PJRT execution path itself sits behind the
@@ -34,6 +39,7 @@ pub mod nn;
 pub mod numerics;
 pub mod pqt;
 pub mod prng;
+pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod testing;

@@ -6,10 +6,11 @@
 //!   exp     fig1b|fig3a|fig3b|fig4|fig5|figf1  [--steps N --out runs]
 //!   tables  c1|b1
 //!   demo    figd1
-//!   quantize --checkpoint ck --artifact tag   (Table C.1 on a checkpoint)
+//!   quantize --checkpoint ck --artifact tag [--formats bf16,fp8_e3m4,...]
+//!           (Table C.1 on a checkpoint; labels resolve via quant::Registry)
 //!   serve   [--checkpoint ck | --snapshot s.gwqs] --store fp8_e3m4
 //!           (quantized-snapshot serving engine + self-driven load)
-//!   info    (list artifacts in the manifest)
+//!   info    (list artifacts in the manifest + registered quant schemes)
 
 use anyhow::{bail, Context, Result};
 use gaussws::config::schema::{Arch, ModelConfig, Optimizer, RunConfig, TrainConfig};
@@ -62,6 +63,7 @@ fn print_usage() {
          \x20 gaussws tables c1|b1\n\
          \x20 gaussws demo figd1\n\
          \x20 gaussws quantize --checkpoint runs/x.ck --artifact tiny_gpt2.gaussws_all\n\
+         \x20                  [--formats bf16,fp8_e3m4,int8_sr,...]   (see `gaussws info`)\n\
          \x20 gaussws serve [--checkpoint runs/x.ck | --snapshot w.gwqs] [--store fp8_e3m4]\n\
          \x20               [--arch gpt2 --n-layer 2 --d-model 64 --n-head 2 --d-ff 128\n\
          \x20                --vocab 256 --seq-len 64] [--save-snapshot w.gwqs]\n\
@@ -220,6 +222,9 @@ fn cmd_info(args: &Args) -> Result<()> {
             a.meta_str("method").map(|s| format!("  [{s}]")).unwrap_or_default()
         );
     }
+    println!();
+    println!("registered quant schemes (train ŵ cast / snapshot / serve --store):");
+    print!("{}", gaussws::quant::Registry::global().render_table());
     Ok(())
 }
 
@@ -231,12 +236,22 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     use gaussws::config::schema::{Arch, ModelConfig};
     use gaussws::coordinator::Checkpoint;
     use gaussws::data::{SynthCorpus, SynthSpec};
-    use gaussws::mx::{quantize_square, ElemType};
     use gaussws::nn::tensor::Mat;
     use gaussws::nn::transformer::{Params, Transformer};
-    use gaussws::numerics::formats;
+    use gaussws::quant::QuantScheme;
 
     let ck_path = args.get("checkpoint").context("--checkpoint required")?;
+    // resolve every requested scheme up front: an unknown label fails with
+    // the full list of registered labels before any heavy lifting
+    let mut schemes = Vec::new();
+    for label in args
+        .get_or("formats", "bf16,fp12_e4m7,fp8_e3m4,fp8_e4m3,fp6_e3m2,fp4_e2m1")
+        .split(',')
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+    {
+        schemes.push(gaussws::quant::resolve(label)?);
+    }
     let tag = args.get("artifact").context("--artifact required (for shapes/meta)")?;
     let m = gaussws::runtime::Manifest::load(artifacts_dir(args))?;
     let spec = m.get(&format!("{}.train", tag.trim_end_matches(".train")))?;
@@ -287,24 +302,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("checkpoint {ck_path} (step {}), {} params", ck.step, params.param_count());
     println!("{:<14} {:>10}", "datatype", "eval loss");
     println!("{:<14} {:>10.4}", "f32 (master)", eval(&params));
-    for (name, fmt) in [
-        ("bf16", formats::BF16),
-        ("fp12_e4m7", formats::FP12_E4M7),
-        ("fp8_e3m4", formats::FP8_E3M4),
-        ("fp8_e4m3", formats::FP8_E4M3),
-        ("fp6_e3m2", formats::FP6_E3M2),
-        ("fp4_e2m1", formats::FP4_E2M1),
-    ] {
+    for scheme in &schemes {
+        // same per-tensor seeding as Checkpoint::to_quantized_params, so SR
+        // labels quantize identically on every path
         let mut q = params.clone();
-        for lname in Params::linear_names(&cfg) {
-            let mat = q.get_mut(&lname);
-            let w64: Vec<f64> = mat.data.iter().map(|&x| x as f64).collect();
-            let qq = quantize_square(&w64, mat.rows, mat.cols, 32, &ElemType::Fp(fmt));
-            for (dst, &src) in mat.data.iter_mut().zip(qq.data.iter()) {
-                *dst = src as f32;
-            }
-        }
-        println!("{:<14} {:>10.4}", name, eval(&q));
+        q.quantize_linears(&cfg, scheme, ck.master_seed);
+        println!("{:<14} {:>10.4}", scheme.label(), eval(&q));
     }
     Ok(())
 }
@@ -340,11 +343,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use gaussws::coordinator::Checkpoint;
     use gaussws::data::{SynthCorpus, SynthSpec};
     use gaussws::nn::transformer::Transformer;
-    use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+    use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
     use gaussws::util::json::{num, s};
 
-    let elem = StoreElem::parse(args.get_or("store", "fp8_e3m4"))?;
     let block = args.usize_or("block", 32);
+    if block == 0 {
+        bail!("--block must be positive");
+    }
+    let scheme = gaussws::quant::resolve(args.get_or("store", "fp8_e3m4"))?.with_block(block);
     let seed = args.u64_or("seed", 1234);
 
     // ---- weights: snapshot > checkpoint > demo init ----
@@ -356,7 +362,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let ck = Checkpoint::load(ck_path)?;
             let step = ck.step;
             (
-                WeightStore::from_checkpoint(&ck, &cfg, elem, block)
+                WeightStore::from_checkpoint(&ck, &cfg, scheme)
                     .context("snapshotting checkpoint into the weight store")?,
                 format!("checkpoint {ck_path} (step {step})"),
             )
@@ -366,7 +372,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
             let model = Transformer::new(cfg.clone());
             let params = model.init_params(seed);
-            (WeightStore::from_params(&params, &cfg, elem, block), "random init (demo)".into())
+            (
+                WeightStore::from_params(&params, &cfg, scheme, seed)
+                    .context("snapshotting random weights into the weight store")?,
+                "random init (demo)".into(),
+            )
         }
     };
     if let Some(out) = args.get("save-snapshot") {
@@ -376,16 +386,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mcfg = store.cfg.clone();
     println!(
         "serving {} ({} arch, {} layers, d={}) from {source}",
-        store.elem.name(),
+        store.label(),
         mcfg.arch.name(),
         mcfg.n_layer,
         mcfg.d_model
     );
     println!(
-        "weight store: {} -> {} bytes ({:.2}x vs master f32), 32x32-block MX",
+        "weight store: {} -> {} bytes ({:.2}x vs master f32), {b}x{b}-block MX",
         store.master_bytes(),
         store.bytes(),
-        store.master_bytes() as f64 / store.bytes() as f64
+        store.master_bytes() as f64 / store.bytes() as f64,
+        b = store.block()
     );
 
     // ---- engine ----
@@ -452,7 +463,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let done = engine.run_to_completion();
     println!();
-    println!("{}", engine.stats.render(&store.elem.name()));
+    println!("{}", engine.stats.render(store.label()));
     let (_, slots, high_water, kv_bytes) = engine.kv_usage();
     println!("kv pool: {slots} slots, high water {high_water}, {kv_bytes} bytes");
     if done.len() != n_req {
@@ -460,9 +471,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let record = engine.stats.bench_json(
-        &format!("{}/b{max_batch}", store.elem.name()),
+        &format!("{}/b{max_batch}", store.label()),
         vec![
-            ("store", s(&store.elem.name())),
+            ("store", s(store.label())),
             ("arch", s(mcfg.arch.name())),
             ("max_batch", num(max_batch as f64)),
             ("threads", num(threads as f64)),

@@ -10,19 +10,24 @@
 //! * **square-blockwise** — 32×32 blocks, a special case of vector-wise
 //!   where adjacent vectors share the scale. Transpose-commutative, which is
 //!   why GaussWS groups parameters this way (§3.2).
+//!
+//! **Deprecation note (kept for one PR):** the quantization engine moved to
+//! [`crate::quant`] — schemes composed from codec × rounding × geometry,
+//! resolved by label through `quant::Registry`. The free functions here
+//! ([`quantize_square`], [`quantize_vectorwise`], [`po2_scale`]) and
+//! [`ElemType`] are thin compatibility shims over it and will be removed;
+//! new code should call `quant::resolve("<label>")` /
+//! [`crate::quant::fake_quantize`] directly.
 
-use crate::numerics::fpformat::FpFormat;
+use crate::numerics::fpformat::{FpFormat, Rounding};
+use crate::quant::{fake_quantize, Codec, Geometry};
 
-/// Which axis 1×`block` vectors run along.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Axis {
-    /// Blocks are contiguous within a row (along columns).
-    Row,
-    /// Blocks run down a column (along rows).
-    Col,
-}
+pub use crate::quant::{Axis, Quantized};
 
 /// Internal element datatype for quantization.
+///
+/// Shim over [`crate::quant::Codec`] (which adds the f32 passthrough arm);
+/// prefer building a [`crate::quant::Scheme`] through the registry.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ElemType {
     /// Signed integer with `bits` total (symmetric, no zero-point).
@@ -32,50 +37,33 @@ pub enum ElemType {
 }
 
 impl ElemType {
+    /// The equivalent [`crate::quant::Codec`].
+    pub fn to_codec(&self) -> Codec {
+        match self {
+            ElemType::Int { bits } => Codec::Int { bits: *bits },
+            ElemType::Fp(f) => Codec::Fp(*f),
+        }
+    }
+
     /// Largest representable magnitude at scale 1.
     pub fn max_code(&self) -> f64 {
-        match self {
-            ElemType::Int { bits } => ((1i64 << (bits - 1)) - 1) as f64,
-            ElemType::Fp(f) => f.max_finite(),
-        }
+        self.to_codec().max_code()
     }
 
     /// Quantize a pre-scaled value (RNE) and clamp to range.
     pub fn quantize(&self, x: f64) -> f64 {
-        match self {
-            ElemType::Int { .. } => {
-                let m = self.max_code();
-                crate::numerics::fpformat::round_ties_even(x).clamp(-m, m)
-            }
-            ElemType::Fp(f) => f.cast(x),
-        }
+        self.to_codec().quantize(x, Rounding::NearestEven, 0)
     }
 }
 
-/// Compute the power-of-two shared scale for a block with max-abs `amax`,
-/// mapping amax *within* the element type's range (MX convention): the
-/// smallest power of two such that `amax / scale <= max_code`, so the block
-/// maximum never clips.
+/// Compute the power-of-two shared scale for a block with max-abs `amax`
+/// (MX convention; see [`crate::quant::po2_scale`]).
 pub fn po2_scale(amax: f64, elem: &ElemType) -> f64 {
-    if amax == 0.0 {
-        return 1.0;
-    }
-    let target = elem.max_code();
-    (amax / target).log2().ceil().exp2()
+    crate::quant::po2_scale(amax, &elem.to_codec())
 }
 
-/// A matrix fake-quantized blockwise: values are dequantized back to f64 so
-/// downstream math can compare against the original.
-#[derive(Debug, Clone)]
-pub struct Quantized {
-    pub data: Vec<f64>,
-    pub rows: usize,
-    pub cols: usize,
-    /// one scale per block, row-major over the block grid
-    pub scales: Vec<f64>,
-}
-
-/// Vector-wise fake quantization with 1×`block` groups along `axis`.
+/// Vector-wise fake quantization with 1×`block` groups along `axis`
+/// (round-to-nearest-even). Shim over [`crate::quant::fake_quantize`].
 pub fn quantize_vectorwise(
     w: &[f64],
     rows: usize,
@@ -84,42 +72,20 @@ pub fn quantize_vectorwise(
     axis: Axis,
     elem: &ElemType,
 ) -> Quantized {
-    assert_eq!(w.len(), rows * cols);
-    let mut out = vec![0f64; w.len()];
-    let mut scales = Vec::new();
-    match axis {
-        Axis::Row => {
-            for r in 0..rows {
-                for b0 in (0..cols).step_by(block) {
-                    let b1 = (b0 + block).min(cols);
-                    let amax = (b0..b1).map(|c| w[r * cols + c].abs()).fold(0.0, f64::max);
-                    let s = po2_scale(amax, elem);
-                    scales.push(s);
-                    for c in b0..b1 {
-                        out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
-                    }
-                }
-            }
-        }
-        Axis::Col => {
-            for c in 0..cols {
-                for b0 in (0..rows).step_by(block) {
-                    let b1 = (b0 + block).min(rows);
-                    let amax = (b0..b1).map(|r| w[r * cols + c].abs()).fold(0.0, f64::max);
-                    let s = po2_scale(amax, elem);
-                    scales.push(s);
-                    for r in b0..b1 {
-                        out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
-                    }
-                }
-            }
-        }
-    }
-    Quantized { data: out, rows, cols, scales }
+    fake_quantize(
+        w,
+        rows,
+        cols,
+        Geometry::Vector { block, axis },
+        &elem.to_codec(),
+        Rounding::NearestEven,
+        0,
+    )
 }
 
 /// Square-blockwise fake quantization with `block`×`block` groups — the
-/// GaussWS geometry. Transpose-commutative (see tests).
+/// GaussWS geometry (round-to-nearest-even). Shim over
+/// [`crate::quant::fake_quantize`].
 pub fn quantize_square(
     w: &[f64],
     rows: usize,
@@ -127,31 +93,15 @@ pub fn quantize_square(
     block: usize,
     elem: &ElemType,
 ) -> Quantized {
-    assert_eq!(w.len(), rows * cols);
-    let mut out = vec![0f64; w.len()];
-    let grid_r = rows.div_ceil(block);
-    let grid_c = cols.div_ceil(block);
-    let mut scales = vec![0f64; grid_r * grid_c];
-    for br in 0..grid_r {
-        for bc in 0..grid_c {
-            let r1 = ((br + 1) * block).min(rows);
-            let c1 = ((bc + 1) * block).min(cols);
-            let mut amax = 0f64;
-            for r in br * block..r1 {
-                for c in bc * block..c1 {
-                    amax = amax.max(w[r * cols + c].abs());
-                }
-            }
-            let s = po2_scale(amax, elem);
-            scales[br * grid_c + bc] = s;
-            for r in br * block..r1 {
-                for c in bc * block..c1 {
-                    out[r * cols + c] = elem.quantize(w[r * cols + c] / s) * s;
-                }
-            }
-        }
-    }
-    Quantized { data: out, rows, cols, scales }
+    fake_quantize(
+        w,
+        rows,
+        cols,
+        Geometry::Square { block },
+        &elem.to_codec(),
+        Rounding::NearestEven,
+        0,
+    )
 }
 
 /// Square-blockwise max-abs of an f32 matrix — the `max_bl(|w|)` of Eq. 3.
@@ -193,6 +143,7 @@ pub fn transpose(w: &[f64], rows: usize, cols: usize) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::prng::Philox4x32;
+    use crate::quant::{QuantScheme, Scheme};
 
     fn randn(seed: u64, n: usize) -> Vec<f64> {
         let mut g = Philox4x32::new(seed);
@@ -260,6 +211,28 @@ mod tests {
         let q = quantize_square(&w, 64, 64, 32, &INT4);
         for &s in &q.scales {
             assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of two");
+        }
+    }
+
+    #[test]
+    fn shim_matches_scheme_quantize_bit_for_bit() {
+        // the deprecated shims must stay bit-identical to the quant engine
+        use crate::numerics::fpformat::formats::FP8_E3M4;
+        let w = randn(9, 48 * 40);
+        let shim = quantize_square(&w, 48, 40, 32, &ElemType::Fp(FP8_E3M4));
+        let scheme = crate::quant::resolve("fp8_e3m4").unwrap();
+        let direct = scheme.quantize(&w, 48, 40, 0);
+        assert_eq!(shim.data, direct.data);
+        assert_eq!(shim.scales, direct.scales);
+        // elementwise scheme helpers agree with the ElemType shim
+        let s = Scheme::new(
+            "int4",
+            INT4.to_codec(),
+            crate::numerics::Rounding::NearestEven,
+            crate::quant::Geometry::None,
+        );
+        for &x in w.iter().take(32) {
+            assert_eq!(INT4.quantize(x), s.codec.quantize(x, s.rounding, 0));
         }
     }
 

@@ -1,5 +1,9 @@
 //! Microscaling (MX) quantization substrate: blockwise scaling geometries
 //! and the forward/backward consistency analysis of §2.1 / Fig. D.1.
+//!
+//! The quantization engine itself lives in [`crate::quant`] now;
+//! `quantize_square` / `quantize_vectorwise` / `ElemType` here are thin
+//! deprecated shims kept for one PR (see `block` module docs).
 
 pub mod block;
 pub mod consistency;

@@ -47,6 +47,33 @@ impl Params {
         }
         out
     }
+
+    /// Fake-quantize every linear weight in place through a
+    /// [`crate::quant::Scheme`] — the single quantize-the-linears path
+    /// shared by `Checkpoint::to_quantized_params` and `gaussws quantize`.
+    /// Stochastic schemes draw per-tensor seeds via
+    /// [`crate::quant::tensor_seed`] salted with `master_seed`, so the same
+    /// checkpoint quantizes identically everywhere.
+    pub fn quantize_linears(
+        &mut self,
+        cfg: &ModelConfig,
+        scheme: &crate::quant::Scheme,
+        master_seed: u64,
+    ) {
+        use crate::quant::QuantScheme;
+        if !scheme.codec.is_packed() {
+            return;
+        }
+        for name in Params::linear_names(cfg) {
+            let m = self.get_mut(&name);
+            let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+            let seed = crate::quant::tensor_seed(&name, master_seed);
+            let q = scheme.quantize(&w64, m.rows, m.cols, seed);
+            for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
+                *dst = src as f32;
+            }
+        }
+    }
 }
 
 /// Per-sequence K/V cache for incremental decoding: one (capacity × d_model)
@@ -661,14 +688,14 @@ mod tests {
 
     #[test]
     fn quantized_params_still_produce_finite_loss() {
-        use crate::numerics::fpformat::formats::FP8_E3M4;
-        use crate::mx::{quantize_square, ElemType};
+        use crate::quant::QuantScheme;
+        let scheme = crate::quant::resolve("fp8_e3m4").unwrap();
         let (t, mut p) = tiny(Arch::Gpt2);
         let names = Params::linear_names(&t.cfg);
         for n in names {
             let m = p.get_mut(&n);
             let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-            let q = quantize_square(&w64, m.rows, m.cols, 32, &ElemType::Fp(FP8_E3M4));
+            let q = scheme.quantize(&w64, m.rows, m.cols, 0);
             for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
                 *dst = src as f32;
             }

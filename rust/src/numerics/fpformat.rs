@@ -245,23 +245,8 @@ pub mod formats {
     /// f32 emulation bound (identity for f32 inputs).
     pub const FP32: FpFormat = FpFormat::ieee(8, 23);
 
-    /// Look a format up by its conventional name (used by the CLI and
-    /// config files). Returns `None` for unknown names.
-    pub fn by_name(name: &str) -> Option<FpFormat> {
-        Some(match name.to_ascii_lowercase().as_str() {
-            "bf16" => BF16,
-            "fp16" | "f16" => FP16,
-            "fp8_e4m3" | "e4m3" => FP8_E4M3,
-            "fp8_e5m2" | "e5m2" => FP8_E5M2,
-            "fp8_e3m4" | "e3m4" => FP8_E3M4,
-            "fp6_e3m2" => FP6_E3M2,
-            "fp6_e2m3" => FP6_E2M3,
-            "fp4_e2m1" | "fp4" => FP4_E2M1,
-            "fp12_e4m7" => FP12_E4M7,
-            "fp32" | "f32" => FP32,
-            _ => return None,
-        })
-    }
+    // Name-based lookup lives in `crate::quant::Registry` — the one place
+    // format labels are parsed (`quant::resolve("fp8_e3m4")`, etc.).
 }
 
 #[cfg(test)]
@@ -378,11 +363,4 @@ mod tests {
         assert_eq!(FP8_E4M3.ulp(1.5), 0.125);
     }
 
-    #[test]
-    fn by_name_roundtrip() {
-        for name in ["bf16", "fp16", "fp8_e4m3", "fp8_e3m4", "fp6_e3m2", "fp4_e2m1", "fp12_e4m7"] {
-            assert!(formats::by_name(name).is_some(), "{name}");
-        }
-        assert!(formats::by_name("fp7_e9m9").is_none());
-    }
 }

@@ -82,6 +82,22 @@ pub fn forward(
     DiffqState { rows, cols, block, amax, scale, noise }
 }
 
+/// The PQN alone (`ŵ − w` before the bf16 cast): `noise ⊙ broadcast(scale)`.
+/// Mirror of [`super::gaussws::pqn`], used to re-cast ŵ under a non-BF16
+/// [`crate::quant::Scheme`] without double rounding.
+pub fn pqn(state: &DiffqState) -> Vec<f32> {
+    let grid_c = state.grid_cols();
+    let mut out = vec![0f32; state.rows * state.cols];
+    for r in 0..state.rows {
+        let br = r / state.block;
+        for c in 0..state.cols {
+            let i = r * state.cols + c;
+            out[i] = state.noise[i] * state.scale[br * grid_c + c / state.block];
+        }
+    }
+    out
+}
+
 /// Backward: ∂L/∂b_t per block (same Eq. 4 form, R = uniform noise).
 pub fn backward_bt(state: &DiffqState, g: &[f32]) -> Vec<f32> {
     assert_eq!(g.len(), state.rows * state.cols);

@@ -8,7 +8,33 @@
 use super::bitwidth::{bt_stats, BitwidthParam, BtStats};
 use super::gaussws::{self, NoiseGen, SampleState};
 use super::{diffq, diffq::DiffqState};
-use crate::config::schema::PqtMethod;
+use crate::config::schema::{PqtConfig, PqtMethod};
+use crate::numerics::fpformat::{formats, Rounding};
+use crate::prng::Philox4x32;
+use crate::quant::{Codec, Scheme};
+
+/// True iff `cast` is the paper's default ŵ operator (elementwise BF16
+/// round-to-nearest-even) — the fast path baked into the sampling kernels.
+fn is_bf16_rne(cast: &Scheme) -> bool {
+    cast.codec == Codec::Fp(formats::BF16) && cast.rounding == Rounding::NearestEven
+}
+
+/// Derived PRNG stream for stochastic ŵ casts, decorrelated from the noise
+/// generator's use of the same layer seed.
+fn cast_rng(seed: u64) -> Philox4x32 {
+    Philox4x32::new(seed ^ 0x00CA_5700_00CA_5700)
+}
+
+/// Re-cast `w + pqn` through a non-default scheme (no double rounding: the
+/// pre-cast sample is reconstructed from the saved noise state).
+fn recast(cast: &Scheme, w: &[f32], pqn: &[f32], seed: u64, w_hat: &mut [f32]) {
+    let stochastic = cast.rounding == Rounding::Stochastic;
+    let mut rng = cast_rng(seed);
+    for ((o, &x), &p) in w_hat.iter_mut().zip(w.iter()).zip(pqn.iter()) {
+        let rand = if stochastic { rng.next_u32() } else { 0 };
+        *o = cast.cast_f32(x + p, rand);
+    }
+}
 
 /// Per-step forward output state (consumed by `backward`).
 #[derive(Debug)]
@@ -52,6 +78,10 @@ pub struct PqtLinear {
     pub bw: BitwidthParam,
     /// Noise generator variant for the GaussWS arm.
     pub gen: NoiseGen,
+    /// The ŵ cast scheme (elementwise): the paper's "BF16 operator" by
+    /// default, swappable through the quant registry (e.g. `fp8_e4m3` for
+    /// an FP8-operator arm, `fp4_e2m1_sr` for FP4 FQT experiments).
+    pub cast: Scheme,
 }
 
 impl PqtLinear {
@@ -74,7 +104,24 @@ impl PqtLinear {
             method,
             bw: BitwidthParam::new(n_blocks, b_init, b_target),
             gen: NoiseGen::Fast,
+            cast: crate::quant::resolve("bf16").expect("builtin scheme").elementwise(),
         }
+    }
+
+    /// Build a layer straight from a parsed `[pqt]` config table — the
+    /// production path that consumes `pqt.cast` (the ŵ-operator scheme
+    /// resolved through the quant registry) alongside method/block/bitwidth
+    /// settings.
+    pub fn from_config(name: &str, rows: usize, cols: usize, pqt: &PqtConfig) -> Self {
+        PqtLinear::new(name, rows, cols, pqt.block, pqt.method, pqt.b_init, pqt.b_target)
+            .with_cast(pqt.cast.clone())
+    }
+
+    /// Replace the ŵ cast scheme (forced elementwise — the ŵ operator casts
+    /// values, block scaling belongs to the noise path).
+    pub fn with_cast(mut self, cast: Scheme) -> Self {
+        self.cast = cast.elementwise();
+        self
     }
 
     /// Number of square blocks in the grid.
@@ -87,24 +134,44 @@ impl PqtLinear {
     /// (the BF16 operator consumes bf16 weights either way).
     pub fn forward(&self, w: &[f32], seed: u64, w_hat: &mut [f32]) -> FwdState {
         assert_eq!(w.len(), self.rows * self.cols);
+        let default_cast = is_bf16_rne(&self.cast);
         match self.method {
             PqtMethod::None => {
-                for (o, &x) in w_hat.iter_mut().zip(w.iter()) {
-                    *o = crate::numerics::Bf16::from_f32(x).to_f32();
+                if default_cast {
+                    for (o, &x) in w_hat.iter_mut().zip(w.iter()) {
+                        *o = crate::numerics::Bf16::from_f32(x).to_f32();
+                    }
+                } else {
+                    let stochastic = self.cast.rounding == Rounding::Stochastic;
+                    let mut rng = cast_rng(seed);
+                    for (o, &x) in w_hat.iter_mut().zip(w.iter()) {
+                        let rand = if stochastic { rng.next_u32() } else { 0 };
+                        *o = self.cast.cast_f32(x, rand);
+                    }
                 }
                 FwdState::Baseline
             }
             PqtMethod::GaussWs => {
                 let bt = self.bw.bt();
-                FwdState::Gauss(gaussws::forward(
+                let st = gaussws::forward(
                     w, self.rows, self.cols, self.block, &bt, seed, self.gen, w_hat,
-                ))
+                );
+                if !default_cast {
+                    // Non-default operators pay one extra pass (rebuild the
+                    // PQN, overwrite the kernel's bf16 ŵ) — deliberate: the
+                    // default bf16 hot path stays kernel-shaped and untouched.
+                    recast(&self.cast, w, &gaussws::pqn(&st), seed, w_hat);
+                }
+                FwdState::Gauss(st)
             }
             PqtMethod::DiffQ => {
                 let bt = self.bw.bt();
-                FwdState::Diffq(diffq::forward(
-                    w, self.rows, self.cols, self.block, &bt, seed, w_hat,
-                ))
+                let st =
+                    diffq::forward(w, self.rows, self.cols, self.block, &bt, seed, w_hat);
+                if !default_cast {
+                    recast(&self.cast, w, &diffq::pqn(&st), seed, w_hat);
+                }
+                FwdState::Diffq(st)
             }
         }
     }
@@ -223,6 +290,63 @@ mod tests {
         let s = l.stats().unwrap();
         assert_eq!(s.mean, 6.0); // b_i = 1 -> b_t = b_init
         assert!(layer(PqtMethod::None).stats().is_none());
+    }
+
+    #[test]
+    fn non_default_cast_schemes_apply_elementwise() {
+        use crate::numerics::fpformat::formats::FP8_E4M3;
+        let mut g = Gen::new(5);
+        let w = g.normal_vec_f32(64 * 64);
+        let fp8 = crate::quant::resolve("fp8_e4m3").unwrap();
+        // baseline arm: ŵ is the plain fp8 cast of w
+        let l = layer(PqtMethod::None).with_cast(fp8.clone());
+        let mut what = vec![0f32; w.len()];
+        l.forward(&w, 11, &mut what);
+        for (i, (&a, &b)) in what.iter().zip(w.iter()).enumerate() {
+            assert_eq!(a as f64, FP8_E4M3.cast(b as f64), "{i}");
+        }
+        // gaussws arm: ŵ = fp8(w + pqn), not bf16 double-rounded
+        let l = layer(PqtMethod::GaussWs).with_cast(fp8);
+        let st = l.forward(&w, 12, &mut what);
+        if let FwdState::Gauss(s) = &st {
+            let p = super::gaussws::pqn(s);
+            for i in 0..w.len() {
+                let expect = FP8_E4M3.cast((w[i] + p[i]) as f64) as f32;
+                assert_eq!(what[i], expect, "{i}");
+            }
+        } else {
+            panic!("expected gauss state");
+        }
+    }
+
+    #[test]
+    fn from_config_wires_cast_and_bitwidths() {
+        use crate::config::schema::PqtConfig;
+        use crate::quant::QuantScheme;
+        let pqt = PqtConfig {
+            cast: crate::quant::resolve("fp8_e4m3").unwrap(),
+            b_init: 5.0,
+            ..PqtConfig::default()
+        };
+        let l = PqtLinear::from_config("blk0.out", 64, 64, &pqt);
+        assert_eq!(l.cast.label(), "fp8_e4m3");
+        assert_eq!(l.block, pqt.block);
+        assert_eq!(l.bw.bt()[0], 5.0);
+        assert!(!is_bf16_rne(&l.cast));
+    }
+
+    #[test]
+    fn stochastic_cast_reproduces_per_seed() {
+        let mut g = Gen::new(6);
+        let w = g.normal_vec_f32(32 * 32);
+        let l = layer(PqtMethod::None).with_cast(crate::quant::resolve("fp4_e2m1_sr").unwrap());
+        let mut a = vec![0f32; w.len()];
+        let mut b = vec![0f32; w.len()];
+        l.forward(&w, 42, &mut a);
+        l.forward(&w, 42, &mut b);
+        assert_eq!(a, b);
+        l.forward(&w, 43, &mut b);
+        assert_ne!(a, b);
     }
 
     #[test]

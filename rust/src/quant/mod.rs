@@ -1,0 +1,32 @@
+//! Unified quantization subsystem: one [`QuantScheme`] API for train-time
+//! fake-quant, MX snapshots, and serving.
+//!
+//! Before this layer existed, "format + block scale + rounding" was
+//! re-implemented four times (`numerics/fpformat`, `mx/block`,
+//! `pqt/gaussws`, `serve/weights`) and kept bit-compatible by convention
+//! only. Now:
+//!
+//! * [`Scheme`] composes a [`Codec`] (FP emulation / symmetric INT / f32
+//!   passthrough) × [`crate::numerics::Rounding`] (RNE / toward-zero /
+//!   stochastic) × [`Geometry`] (square-blockwise / vector-wise / plain
+//!   elementwise cast) behind the [`QuantScheme`] trait
+//!   (`quantize`, `quantize_block`, `encode`/`decode`, `scale`,
+//!   `bytes_per_elem`).
+//! * [`Registry`] resolves string labels (`"bf16"`, `"fp8_e3m4"`,
+//!   `"int8_sr"`, …) to scheme instances; the CLI, the TOML config, and the
+//!   GWQS snapshot loader all parse labels here and nowhere else.
+//! * `mx::quantize_square` / `mx::quantize_vectorwise` are thin deprecated
+//!   shims over [`fake_quantize`]; `serve::weights` packs/unpacks GWQS2
+//!   snapshots through the scheme's codec.
+//!
+//! A new (format × rounding × geometry) scenario — e.g. stochastic-rounded
+//! INT8 direct quantized training, or an FP4 serving store — is one
+//! `Registry::register` call, not a four-site change.
+
+pub mod registry;
+pub mod scheme;
+
+pub use registry::{labels, resolve, Registry, DEFAULT_BLOCK};
+pub use scheme::{
+    fake_quantize, po2_scale, tensor_seed, Axis, Codec, Geometry, QuantScheme, Quantized, Scheme,
+};

@@ -1,0 +1,227 @@
+//! Label → [`Scheme`] resolution: the single place format labels are
+//! parsed. The CLI (`quantize`, `serve`, `info`), the TOML config, and the
+//! serving snapshot loader all resolve through [`Registry::global`], so an
+//! unknown label fails once, with the full list of what *is* available.
+
+use super::scheme::{Axis, Codec, Geometry, QuantScheme, Scheme};
+use crate::numerics::fpformat::{formats, Rounding};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Default square block size for blockwise schemes (the paper's b_l = 32).
+pub const DEFAULT_BLOCK: usize = 32;
+
+/// A set of registered quantization schemes, addressable by canonical label
+/// or alias (case-insensitive).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    schemes: Vec<Scheme>,
+    /// lowercased label/alias → index into `schemes`
+    index: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    /// The process-wide registry of built-in schemes.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::builtin)
+    }
+
+    /// Register `scheme` under its canonical label plus `aliases`.
+    pub fn register(&mut self, scheme: Scheme, aliases: &[&str]) {
+        let idx = self.schemes.len();
+        let canonical = scheme.label().to_ascii_lowercase();
+        assert!(
+            !self.index.contains_key(&canonical),
+            "duplicate quant scheme label '{canonical}'"
+        );
+        self.index.insert(canonical, idx);
+        for a in aliases {
+            let a = a.to_ascii_lowercase();
+            assert!(!self.index.contains_key(&a), "duplicate quant scheme alias '{a}'");
+            self.index.insert(a, idx);
+        }
+        self.schemes.push(scheme);
+    }
+
+    /// Resolve `label` (canonical or alias, case-insensitive) to a scheme
+    /// instance. Unknown labels fail with the full list of registered
+    /// labels.
+    pub fn resolve(&self, label: &str) -> Result<Scheme> {
+        match self.index.get(&label.to_ascii_lowercase()) {
+            Some(&idx) => Ok(self.schemes[idx].clone()),
+            None => bail!(
+                "unknown quant scheme '{label}' (available: {})",
+                self.labels().join(", ")
+            ),
+        }
+    }
+
+    /// Canonical labels in registration order.
+    pub fn labels(&self) -> Vec<&str> {
+        self.schemes.iter().map(|s| s.label()).collect()
+    }
+
+    /// All registered schemes in registration order.
+    pub fn schemes(&self) -> &[Scheme] {
+        &self.schemes
+    }
+
+    /// Human-readable table of every registered scheme (used by
+    /// `gaussws info`).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:<22} {:>5}  aliases\n",
+            "label", "codec/rounding/geom", "B/el"
+        ));
+        for (i, s) in self.schemes.iter().enumerate() {
+            let aliases: Vec<&str> = self
+                .index
+                .iter()
+                .filter(|(k, &v)| v == i && k.as_str() != s.label())
+                .map(|(k, _)| k.as_str())
+                .collect();
+            let bytes = s.bytes_per_elem().to_string();
+            out.push_str(&format!(
+                "{:<14} {:<22} {:>5}  {}\n",
+                s.label(),
+                s.describe(),
+                bytes,
+                aliases.join(", ")
+            ));
+        }
+        out
+    }
+
+    /// The built-in scheme set. Square-blockwise schemes default to the
+    /// paper's b_l = 32; use [`Scheme::with_block`] to override.
+    fn builtin() -> Registry {
+        use Rounding::{NearestEven, Stochastic};
+        let sq = Geometry::Square { block: DEFAULT_BLOCK };
+        let mut r = Registry::default();
+        // master passthrough (serving fidelity baseline)
+        r.register(Scheme::new("f32", Codec::F32, NearestEven, Geometry::None), &[
+            "fp32", "master", "none",
+        ]);
+        // round-to-nearest-even FP schemes, square-blockwise (Table C.1)
+        r.register(Scheme::new("bf16", Codec::Fp(formats::BF16), NearestEven, sq), &[]);
+        r.register(Scheme::new("fp16", Codec::Fp(formats::FP16), NearestEven, sq), &["f16"]);
+        r.register(Scheme::new("fp12_e4m7", Codec::Fp(formats::FP12_E4M7), NearestEven, sq), &[]);
+        r.register(Scheme::new("fp8_e4m3", Codec::Fp(formats::FP8_E4M3), NearestEven, sq), &[
+            "e4m3",
+        ]);
+        r.register(Scheme::new("fp8_e5m2", Codec::Fp(formats::FP8_E5M2), NearestEven, sq), &[
+            "e5m2",
+        ]);
+        r.register(Scheme::new("fp8_e3m4", Codec::Fp(formats::FP8_E3M4), NearestEven, sq), &[
+            "e3m4",
+        ]);
+        r.register(Scheme::new("fp6_e3m2", Codec::Fp(formats::FP6_E3M2), NearestEven, sq), &[]);
+        r.register(Scheme::new("fp6_e2m3", Codec::Fp(formats::FP6_E2M3), NearestEven, sq), &[]);
+        r.register(Scheme::new("fp4_e2m1", Codec::Fp(formats::FP4_E2M1), NearestEven, sq), &[
+            "fp4",
+        ]);
+        // integer MX schemes
+        r.register(Scheme::new("int8", Codec::Int { bits: 8 }, NearestEven, sq), &[]);
+        r.register(Scheme::new("int4", Codec::Int { bits: 4 }, NearestEven, sq), &[]);
+        // stochastic-rounding arms: direct quantized training (Zhao et al.,
+        // 2024) and FP4 FQT (Chmiel et al., 2025)
+        r.register(Scheme::new("int8_sr", Codec::Int { bits: 8 }, Stochastic, sq), &[]);
+        r.register(Scheme::new("int4_sr", Codec::Int { bits: 4 }, Stochastic, sq), &[]);
+        r.register(Scheme::new("fp8_e4m3_sr", Codec::Fp(formats::FP8_E4M3), Stochastic, sq), &[]);
+        r.register(Scheme::new("fp4_e2m1_sr", Codec::Fp(formats::FP4_E2M1), Stochastic, sq), &[
+            "fp4_sr",
+        ]);
+        // vector-wise MX reference geometry (Fig. D.1 comparisons)
+        r.register(
+            Scheme::new(
+                "fp8_e3m4_vec",
+                Codec::Fp(formats::FP8_E3M4),
+                NearestEven,
+                Geometry::Vector { block: DEFAULT_BLOCK, axis: Axis::Row },
+            ),
+            &[],
+        );
+        r
+    }
+}
+
+/// Resolve `label` against the global registry.
+pub fn resolve(label: &str) -> Result<Scheme> {
+    Registry::global().resolve(label)
+}
+
+/// Canonical labels of the global registry.
+pub fn labels() -> Vec<&'static str> {
+    Registry::global().labels()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_labels_resolve() {
+        for label in [
+            "f32",
+            "bf16",
+            "fp16",
+            "fp12_e4m7",
+            "fp8_e4m3",
+            "fp8_e5m2",
+            "fp8_e3m4",
+            "fp6_e3m2",
+            "fp6_e2m3",
+            "fp4_e2m1",
+            "int8",
+            "int4",
+            "int8_sr",
+            "int4_sr",
+            "fp8_e4m3_sr",
+            "fp4_e2m1_sr",
+            "fp8_e3m4_vec",
+        ] {
+            let s = resolve(label).unwrap();
+            assert_eq!(s.label(), label);
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        assert_eq!(resolve("fp4").unwrap().label(), "fp4_e2m1");
+        assert_eq!(resolve("e3m4").unwrap().label(), "fp8_e3m4");
+        assert_eq!(resolve("master").unwrap().label(), "f32");
+        assert_eq!(resolve("FP8_E4M3").unwrap().label(), "fp8_e4m3");
+    }
+
+    #[test]
+    fn unknown_label_lists_available() {
+        let err = resolve("fp7_e9m9").unwrap_err().to_string();
+        assert!(err.contains("unknown quant scheme 'fp7_e9m9'"), "{err}");
+        assert!(err.contains("fp8_e3m4"), "error should list labels: {err}");
+        assert!(err.contains("int8_sr"), "error should list labels: {err}");
+    }
+
+    #[test]
+    fn blockwise_schemes_default_to_paper_block() {
+        assert_eq!(resolve("fp8_e3m4").unwrap().block(), Some(DEFAULT_BLOCK));
+        assert_eq!(resolve("f32").unwrap().block(), None);
+    }
+
+    #[test]
+    fn stochastic_arms_are_registered_as_sr() {
+        for label in ["int8_sr", "fp4_e2m1_sr", "fp8_e4m3_sr"] {
+            assert_eq!(resolve(label).unwrap().rounding(), Rounding::Stochastic);
+        }
+    }
+
+    #[test]
+    fn render_table_mentions_every_label() {
+        let table = Registry::global().render_table();
+        for label in labels() {
+            assert!(table.contains(label), "table missing {label}:\n{table}");
+        }
+    }
+}

@@ -1,0 +1,620 @@
+//! The [`QuantScheme`] abstraction: one (codec × rounding × scale-geometry)
+//! description of a quantization scheme, shared by train-time fake-quant
+//! (`pqt`), MX snapshot analysis (`mx`), and the packed serving store
+//! (`serve::weights`).
+//!
+//! The paper's whole pitch is that a single noise/cast abstraction
+//! (`ŵ = bf16(w + R·scale)`, then FP casting) spans training and
+//! low-precision deployment. A scheme captures the casting half of that
+//! claim as data:
+//!
+//! * **codec** — how one pre-scaled element is represented: a low-precision
+//!   float ([`crate::numerics::FpFormat`] emulation), a symmetric signed
+//!   integer, or master f32 passthrough; and how it bit-packs to a code.
+//! * **rounding** — RNE / toward-zero / stochastic
+//!   ([`crate::numerics::Rounding`]). Stochastic rounding is what the
+//!   direct-quantized-training arms (Zhao et al., 2024; Chmiel et al.,
+//!   2025) need.
+//! * **geometry** — which elements share a scale: square `b×b` blocks
+//!   (GaussWS §3.2, transpose-commutative), 1×b vectors (standard MX), or
+//!   no block scaling at all (a plain elementwise cast, e.g. the ŵ "BF16
+//!   operator").
+//!
+//! Schemes are resolved from string labels through [`super::Registry`]; new
+//! (format × rounding × geometry) combinations are one registry entry, not
+//! a fourth re-implementation of "format + block scale + rounding".
+
+use crate::numerics::fpformat::{round_ties_even, FpFormat, Rounding};
+use crate::prng::Philox4x32;
+
+/// Which axis 1×`block` vectors run along (vector-wise MX geometry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Blocks are contiguous within a row (along columns).
+    Row,
+    /// Blocks run down a column (along rows).
+    Col,
+}
+
+/// Element codec: how one (pre-scaled) element value is represented and how
+/// it packs into a code of at most 16 bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Codec {
+    /// Master f32 passthrough — no quantization, no packing.
+    F32,
+    /// Low-precision float elements (software [`FpFormat`] emulation).
+    Fp(FpFormat),
+    /// Symmetric signed integer with `bits` total bits (no zero point).
+    Int { bits: u32 },
+}
+
+impl Codec {
+    /// Largest representable magnitude at scale 1. Infinite for [`Codec::F32`]
+    /// (passthrough never clips).
+    pub fn max_code(&self) -> f64 {
+        match self {
+            Codec::F32 => f64::INFINITY,
+            Codec::Fp(f) => f.max_finite(),
+            Codec::Int { bits } => ((1i64 << (bits - 1)) - 1) as f64,
+        }
+    }
+
+    /// Bytes one packed element code occupies (4 for unpacked f32).
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            Codec::F32 => 4,
+            Codec::Fp(f) => {
+                if f.total_bits() <= 8 {
+                    1
+                } else {
+                    2
+                }
+            }
+            Codec::Int { bits } => {
+                if *bits <= 8 {
+                    1
+                } else {
+                    2
+                }
+            }
+        }
+    }
+
+    /// Total code bits (sign included). 32 for unpacked f32.
+    pub fn total_bits(&self) -> u32 {
+        match self {
+            Codec::F32 => 32,
+            Codec::Fp(f) => f.total_bits(),
+            Codec::Int { bits } => *bits,
+        }
+    }
+
+    /// True iff this codec bit-packs into u8/u16 element codes.
+    pub fn is_packed(&self) -> bool {
+        !matches!(self, Codec::F32)
+    }
+
+    /// Quantize a pre-scaled value to the nearest representable value under
+    /// `rounding`, clamping to range. `rand` is consumed only by
+    /// [`Rounding::Stochastic`]; pass 0 otherwise.
+    pub fn quantize(&self, x: f64, rounding: Rounding, rand: u32) -> f64 {
+        match self {
+            Codec::F32 => x,
+            Codec::Fp(f) => f.cast_mode(x, rounding, rand),
+            Codec::Int { .. } => {
+                let m = self.max_code();
+                let r = match rounding {
+                    Rounding::NearestEven => round_ties_even(x),
+                    Rounding::TowardZero => x.trunc(),
+                    Rounding::Stochastic => {
+                        let fl = x.floor();
+                        let frac = x - fl;
+                        // rand/2^32 uniform in [0,1)
+                        let u = (rand as f64) / 4294967296.0;
+                        if frac > u {
+                            fl + 1.0
+                        } else {
+                            fl
+                        }
+                    }
+                };
+                r.clamp(-m, m)
+            }
+        }
+    }
+
+    /// Encode a representable pre-scaled value into its packed code.
+    ///
+    /// FP codecs use sign/exp/mantissa bit layout; INT codecs use two's
+    /// complement masked to `bits`. Panics for [`Codec::F32`] (raw tensors
+    /// are stored unpacked).
+    pub fn encode(&self, v: f64) -> u16 {
+        match self {
+            Codec::F32 => panic!("Codec::F32 has no packed code (store raw f32)"),
+            Codec::Fp(fmt) => encode_fp(fmt, v),
+            Codec::Int { bits } => {
+                let mask = (1u32 << bits) - 1;
+                ((v as i64) as u32 & mask) as u16
+            }
+        }
+    }
+
+    /// Decode a code produced by [`Codec::encode`] back to its exact value.
+    pub fn decode(&self, code: u16) -> f64 {
+        match self {
+            Codec::F32 => panic!("Codec::F32 has no packed code (store raw f32)"),
+            Codec::Fp(fmt) => decode_fp(fmt, code),
+            Codec::Int { bits } => {
+                let raw = (code as u32 & ((1u32 << bits) - 1)) as i64;
+                let half = 1i64 << (bits - 1);
+                (if raw >= half { raw - (1i64 << bits) } else { raw }) as f64
+            }
+        }
+    }
+}
+
+/// Encode a value exactly representable in `fmt` into its sign/exp/mantissa
+/// code (at most 16 bits for every format this crate defines).
+fn encode_fp(fmt: &FpFormat, v: f64) -> u16 {
+    let m = fmt.man_bits;
+    let sign: u16 = if v.is_sign_negative() { 1 << (fmt.exp_bits + m) } else { 0 };
+    let a = v.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    if a.is_infinite() {
+        // only reachable for has_inf_nan formats
+        return sign | ((((1u32 << fmt.exp_bits) - 1) as u16) << m);
+    }
+    let e = a.log2().floor() as i32;
+    if e < fmt.min_normal_exp() {
+        // subnormal: mantissa counts the min-subnormal step
+        let man = (a / fmt.min_subnormal()).round() as u16;
+        sign | man
+    } else {
+        let exp_code = (e + fmt.bias()) as u16;
+        let frac = a / (e as f64).exp2() - 1.0; // in [0, 1)
+        let man = (frac * (1u64 << m) as f64).round() as u16;
+        sign | (exp_code << m) | man
+    }
+}
+
+/// Decode a code produced by [`encode_fp`] back to its exact value.
+fn decode_fp(fmt: &FpFormat, code: u16) -> f64 {
+    let m = fmt.man_bits;
+    let man = (code & ((1u16 << m) - 1)) as u32;
+    let exp_code = ((code >> m) as u32) & ((1u32 << fmt.exp_bits) - 1);
+    let sign = if (code >> (fmt.exp_bits + m)) & 1 == 1 { -1.0 } else { 1.0 };
+    if exp_code == 0 {
+        return sign * man as f64 * fmt.min_subnormal();
+    }
+    if fmt.has_inf_nan && exp_code == (1u32 << fmt.exp_bits) - 1 {
+        return if man == 0 { sign * f64::INFINITY } else { f64::NAN };
+    }
+    let e = exp_code as i32 - fmt.bias();
+    sign * (1.0 + man as f64 / (1u64 << m) as f64) * (e as f64).exp2()
+}
+
+/// Scale geometry: which elements share one power-of-two scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Geometry {
+    /// No block scaling — a plain elementwise cast at unit scale (the ŵ
+    /// "BF16 operator" of §3.3).
+    None,
+    /// Square `block`×`block` groups — the GaussWS geometry (§3.2),
+    /// transpose-commutative.
+    Square { block: usize },
+    /// 1×`block` vectors along `axis` — standard MX (not transpose-
+    /// commutative, Fig. D.1).
+    Vector { block: usize, axis: Axis },
+}
+
+impl Geometry {
+    /// The block size, if this geometry has one.
+    pub fn block(&self) -> Option<usize> {
+        match self {
+            Geometry::None => None,
+            Geometry::Square { block } | Geometry::Vector { block, .. } => Some(*block),
+        }
+    }
+
+    /// Number of shared scales for a `rows`×`cols` matrix.
+    pub fn n_scales(&self, rows: usize, cols: usize) -> usize {
+        match self {
+            Geometry::None => 1,
+            Geometry::Square { block } => rows.div_ceil(*block) * cols.div_ceil(*block),
+            Geometry::Vector { block, axis: Axis::Row } => rows * cols.div_ceil(*block),
+            Geometry::Vector { block, axis: Axis::Col } => cols * rows.div_ceil(*block),
+        }
+    }
+}
+
+/// Deterministic per-tensor seed for stochastic-rounding quantization
+/// (FNV-1a over the tensor name, xored with a caller salt): snapshots and
+/// checkpoint-side quantization stay reproducible byte-for-byte, and every
+/// consumer derives seeds the same way.
+pub fn tensor_seed(name: &str, salt: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ salt
+}
+
+/// Compute the power-of-two shared scale for a block with max-abs `amax`,
+/// mapping amax *within* the codec's range (MX convention): the smallest
+/// power of two such that `amax / scale <= max_code`, so the block maximum
+/// never clips.
+pub fn po2_scale(amax: f64, codec: &Codec) -> f64 {
+    if amax == 0.0 || !codec.is_packed() {
+        return 1.0;
+    }
+    let target = codec.max_code();
+    (amax / target).log2().ceil().exp2()
+}
+
+/// A matrix fake-quantized blockwise: values are dequantized back to f64 so
+/// downstream math can compare against the original. `scales` holds one
+/// scale per block, in the geometry's traversal order (row-major over the
+/// block grid for [`Geometry::Square`]).
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub data: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+    pub scales: Vec<f64>,
+}
+
+/// Fake-quantize `w` under an explicit (geometry × codec × rounding)
+/// triple. `seed` feeds the per-element stochastic-rounding draws and is
+/// ignored (no PRNG advance) for deterministic rounding modes, so RNE
+/// results do not depend on it.
+pub fn fake_quantize(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    geometry: Geometry,
+    codec: &Codec,
+    rounding: Rounding,
+    seed: u64,
+) -> Quantized {
+    assert_eq!(w.len(), rows * cols);
+    let stochastic = rounding == Rounding::Stochastic;
+    let mut rng = Philox4x32::new(seed);
+    let mut out = vec![0f64; w.len()];
+    let mut scales = Vec::with_capacity(geometry.n_scales(rows, cols));
+    match geometry {
+        Geometry::None => {
+            scales.push(1.0);
+            for (o, &x) in out.iter_mut().zip(w.iter()) {
+                let rand = if stochastic { rng.next_u32() } else { 0 };
+                *o = codec.quantize(x, rounding, rand);
+            }
+        }
+        Geometry::Square { block } => {
+            let grid_r = rows.div_ceil(block);
+            let grid_c = cols.div_ceil(block);
+            scales.resize(grid_r * grid_c, 0.0);
+            for br in 0..grid_r {
+                for bc in 0..grid_c {
+                    let r1 = ((br + 1) * block).min(rows);
+                    let c1 = ((bc + 1) * block).min(cols);
+                    let mut amax = 0f64;
+                    for r in br * block..r1 {
+                        for c in bc * block..c1 {
+                            amax = amax.max(w[r * cols + c].abs());
+                        }
+                    }
+                    let s = po2_scale(amax, codec);
+                    scales[br * grid_c + bc] = s;
+                    for r in br * block..r1 {
+                        for c in bc * block..c1 {
+                            let rand = if stochastic { rng.next_u32() } else { 0 };
+                            let i = r * cols + c;
+                            out[i] = codec.quantize(w[i] / s, rounding, rand) * s;
+                        }
+                    }
+                }
+            }
+        }
+        Geometry::Vector { block, axis: Axis::Row } => {
+            for r in 0..rows {
+                for b0 in (0..cols).step_by(block) {
+                    let b1 = (b0 + block).min(cols);
+                    let amax = (b0..b1).map(|c| w[r * cols + c].abs()).fold(0.0, f64::max);
+                    let s = po2_scale(amax, codec);
+                    scales.push(s);
+                    for c in b0..b1 {
+                        let rand = if stochastic { rng.next_u32() } else { 0 };
+                        out[r * cols + c] = codec.quantize(w[r * cols + c] / s, rounding, rand) * s;
+                    }
+                }
+            }
+        }
+        Geometry::Vector { block, axis: Axis::Col } => {
+            for c in 0..cols {
+                for b0 in (0..rows).step_by(block) {
+                    let b1 = (b0 + block).min(rows);
+                    let amax = (b0..b1).map(|r| w[r * cols + c].abs()).fold(0.0, f64::max);
+                    let s = po2_scale(amax, codec);
+                    scales.push(s);
+                    for r in b0..b1 {
+                        let rand = if stochastic { rng.next_u32() } else { 0 };
+                        out[r * cols + c] = codec.quantize(w[r * cols + c] / s, rounding, rand) * s;
+                    }
+                }
+            }
+        }
+    }
+    Quantized { data: out, rows, cols, scales }
+}
+
+/// One quantization scheme: a label plus the (codec × rounding × geometry)
+/// triple it names. Resolved from strings through [`super::Registry`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scheme {
+    label: String,
+    pub codec: Codec,
+    pub rounding: Rounding,
+    pub geometry: Geometry,
+}
+
+impl Scheme {
+    pub fn new(label: &str, codec: Codec, rounding: Rounding, geometry: Geometry) -> Scheme {
+        Scheme { label: label.to_string(), codec, rounding, geometry }
+    }
+
+    /// Same scheme with the block size replaced (no-op for
+    /// [`Geometry::None`]).
+    pub fn with_block(mut self, block: usize) -> Scheme {
+        assert!(block > 0, "block size must be positive");
+        self.geometry = match self.geometry {
+            Geometry::None => Geometry::None,
+            Geometry::Square { .. } => Geometry::Square { block },
+            Geometry::Vector { axis, .. } => Geometry::Vector { block, axis },
+        };
+        self
+    }
+
+    /// Same codec/rounding as an elementwise cast (geometry
+    /// [`Geometry::None`]) — the ŵ "BF16 operator" shape.
+    pub fn elementwise(mut self) -> Scheme {
+        self.geometry = Geometry::None;
+        self
+    }
+
+    /// The block size, if the geometry has one.
+    pub fn block(&self) -> Option<usize> {
+        self.geometry.block()
+    }
+
+    /// Elementwise scale-free cast of one value through the codec (ignores
+    /// the geometry). `rand` feeds stochastic rounding; pass 0 otherwise.
+    pub fn cast_f32(&self, x: f32, rand: u32) -> f32 {
+        self.codec.quantize(x as f64, self.rounding, rand) as f32
+    }
+
+    /// Short human description, e.g. `fp(e3m4) rne square32`.
+    pub fn describe(&self) -> String {
+        let codec = match &self.codec {
+            Codec::F32 => "f32".to_string(),
+            Codec::Fp(f) => format!("fp(e{}m{})", f.exp_bits, f.man_bits),
+            Codec::Int { bits } => format!("int{bits}"),
+        };
+        let rounding = match self.rounding {
+            Rounding::NearestEven => "rne",
+            Rounding::TowardZero => "tz",
+            Rounding::Stochastic => "sr",
+        };
+        let geometry = match self.geometry {
+            Geometry::None => "elementwise".to_string(),
+            Geometry::Square { block } => format!("square{block}"),
+            Geometry::Vector { block, axis: Axis::Row } => format!("vec{block}/row"),
+            Geometry::Vector { block, axis: Axis::Col } => format!("vec{block}/col"),
+        };
+        format!("{codec} {rounding} {geometry}")
+    }
+}
+
+/// The unified quantization interface: every consumer (train-time ŵ cast,
+/// MX snapshot, packed serving store) programs against this trait, so a new
+/// format/rounding/geometry combination plugs in as one registry entry.
+pub trait QuantScheme {
+    /// Canonical registry label, e.g. `"fp8_e3m4"`.
+    fn label(&self) -> &str;
+    fn codec(&self) -> &Codec;
+    fn rounding(&self) -> Rounding;
+    fn geometry(&self) -> Geometry;
+
+    /// Bytes one packed element code occupies (4 for unpacked f32).
+    fn bytes_per_elem(&self) -> usize {
+        self.codec().bytes_per_elem()
+    }
+
+    /// False for master-precision passthrough schemes.
+    fn is_quantizing(&self) -> bool {
+        self.codec().is_packed()
+    }
+
+    /// The shared power-of-two scale for a block with max-abs `amax`
+    /// (1.0 for elementwise geometry / passthrough codecs).
+    fn scale(&self, amax: f64) -> f64 {
+        match self.geometry() {
+            Geometry::None => 1.0,
+            _ => po2_scale(amax, self.codec()),
+        }
+    }
+
+    /// Fake-quantize one block of values sharing a single scale, in place;
+    /// returns the scale used. `rng` feeds stochastic rounding only.
+    fn quantize_block(&self, vals: &mut [f64], rng: &mut Philox4x32) -> f64 {
+        let amax = vals.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let s = self.scale(amax);
+        let stochastic = self.rounding() == Rounding::Stochastic;
+        for v in vals.iter_mut() {
+            let rand = if stochastic { rng.next_u32() } else { 0 };
+            *v = self.codec().quantize(*v / s, self.rounding(), rand) * s;
+        }
+        s
+    }
+
+    /// Encode a representable pre-scaled value into its packed code.
+    fn encode(&self, v: f64) -> u16 {
+        self.codec().encode(v)
+    }
+
+    /// Decode a packed code back to its exact pre-scaled value.
+    fn decode(&self, code: u16) -> f64 {
+        self.codec().decode(code)
+    }
+
+    /// Fake-quantize a full `rows`×`cols` matrix under this scheme's
+    /// geometry. `seed` feeds stochastic rounding and is ignored for
+    /// deterministic modes.
+    fn quantize(&self, w: &[f64], rows: usize, cols: usize, seed: u64) -> Quantized {
+        fake_quantize(w, rows, cols, self.geometry(), self.codec(), self.rounding(), seed)
+    }
+}
+
+impl QuantScheme for Scheme {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn codec(&self) -> &Codec {
+        &self.codec
+    }
+
+    fn rounding(&self) -> Rounding {
+        self.rounding
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::fpformat::formats;
+
+    #[test]
+    fn int_codes_roundtrip_two_complement() {
+        for bits in [2u32, 4, 8, 16] {
+            let codec = Codec::Int { bits };
+            let m = codec.max_code() as i64;
+            for v in -m..=m {
+                let code = codec.encode(v as f64);
+                assert!((code as u32) < (1u32 << bits) || bits == 16, "bits={bits} v={v}");
+                assert_eq!(codec.decode(code), v as f64, "bits={bits} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_codes_roundtrip_exhaustively_for_tiny_formats() {
+        for fmt in [formats::FP8_E3M4, formats::FP8_E4M3, formats::FP6_E3M2, formats::FP4_E2M1] {
+            let codec = Codec::Fp(fmt);
+            let max_code = 1u32 << fmt.total_bits();
+            for v in fmt.enumerate_non_negative() {
+                for signed in [v, -v] {
+                    let code = codec.encode(signed);
+                    assert!((code as u32) < max_code, "{fmt:?}: code {code} overflows");
+                    let back = codec.decode(code);
+                    assert_eq!(back, signed, "{fmt:?}: {signed} -> {code} -> {back}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn square_geometry_matches_scale_semantics() {
+        let codec = Codec::Int { bits: 4 };
+        let w: Vec<f64> = (0..64).map(|i| (i as f64 - 32.0) * 0.21).collect();
+        let geom = Geometry::Square { block: 4 };
+        let q = fake_quantize(&w, 8, 8, geom, &codec, Rounding::NearestEven, 0);
+        assert_eq!(q.scales.len(), 4);
+        for &s in &q.scales {
+            assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of two");
+        }
+        // max error bounded by half the largest step
+        for (a, b) in w.iter().zip(q.data.iter()) {
+            let s = q.scales.iter().cloned().fold(0.0f64, f64::max);
+            assert!((a - b).abs() <= 0.5 * s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn elementwise_geometry_is_plain_cast() {
+        let scheme =
+            Scheme::new("bf16", Codec::Fp(formats::BF16), Rounding::NearestEven, Geometry::None);
+        let w = [1.00001f64, -0.33333, 1e-30, 250.0];
+        let q = scheme.quantize(&w, 1, 4, 0);
+        assert_eq!(q.scales, vec![1.0]);
+        for (x, y) in w.iter().zip(q.data.iter()) {
+            assert_eq!(*y, formats::BF16.cast(*x));
+        }
+    }
+
+    #[test]
+    fn deterministic_rounding_ignores_seed() {
+        let scheme = Scheme::new(
+            "fp8_e3m4",
+            Codec::Fp(formats::FP8_E3M4),
+            Rounding::NearestEven,
+            Geometry::Square { block: 4 },
+        );
+        let w: Vec<f64> = (0..36).map(|i| (i as f64) * 0.173 - 3.0).collect();
+        let a = scheme.quantize(&w, 6, 6, 1);
+        let b = scheme.quantize(&w, 6, 6, 999);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn stochastic_rounding_depends_on_seed_but_reproduces() {
+        let scheme = Scheme::new(
+            "int8_sr",
+            Codec::Int { bits: 8 },
+            Rounding::Stochastic,
+            Geometry::Square { block: 8 },
+        );
+        let w: Vec<f64> = (0..64).map(|i| ((i * 37) % 19) as f64 * 0.073 - 0.6).collect();
+        let a = scheme.quantize(&w, 8, 8, 7);
+        let a2 = scheme.quantize(&w, 8, 8, 7);
+        let b = scheme.quantize(&w, 8, 8, 8);
+        assert_eq!(a.data, a2.data, "same seed must reproduce");
+        assert_ne!(a.data, b.data, "different seeds should differ");
+    }
+
+    #[test]
+    fn quantize_block_shares_one_scale() {
+        let scheme = Scheme::new(
+            "fp6_e3m2",
+            Codec::Fp(formats::FP6_E3M2),
+            Rounding::NearestEven,
+            Geometry::Square { block: 32 },
+        );
+        let mut vals: Vec<f64> = (0..32).map(|i| (i as f64 - 16.0) * 0.37).collect();
+        let orig = vals.clone();
+        let mut rng = Philox4x32::new(0);
+        let s = scheme.quantize_block(&mut vals, &mut rng);
+        assert!(s > 0.0 && s.log2().fract() == 0.0);
+        for (o, v) in orig.iter().zip(vals.iter()) {
+            assert!(formats::FP6_E3M2.is_representable(v / s), "{o} -> {v} (s={s})");
+        }
+    }
+
+    #[test]
+    fn with_block_and_elementwise_rewrite_geometry() {
+        let s = Scheme::new(
+            "fp4_e2m1",
+            Codec::Fp(formats::FP4_E2M1),
+            Rounding::NearestEven,
+            Geometry::Square { block: 32 },
+        );
+        assert_eq!(s.clone().with_block(16).block(), Some(16));
+        assert_eq!(s.elementwise().block(), None);
+    }
+}

@@ -297,7 +297,6 @@ impl EngineClient {
 mod tests {
     use super::*;
     use crate::config::schema::Arch;
-    use crate::serve::weights::StoreElem;
 
     fn tiny_engine(max_batch: usize, kv_slots: usize, threads: usize) -> Engine {
         let cfg = ModelConfig::tiny(Arch::Gpt2);
@@ -407,9 +406,10 @@ mod tests {
         let store = WeightStore::from_params(
             &params,
             &cfg,
-            StoreElem::parse("fp8_e3m4").unwrap(),
-            32,
-        );
+            crate::quant::resolve("fp8_e3m4").unwrap(),
+            4,
+        )
+        .unwrap();
         let mut e = Engine::from_store(&store, EngineConfig::default());
         e.enqueue(GenRequest::greedy(1, vec![2, 3, 4], 5)).unwrap();
         let out = e.run_to_completion();

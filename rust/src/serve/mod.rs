@@ -5,9 +5,10 @@
 //!
 //! 1. **snapshot** — [`weights::WeightStore`] captures a checkpoint's linear
 //!    weights as square-blockwise (32×32) MX groups: one power-of-two scale
-//!    per block plus bit-packed element codes in a low-precision FP format
-//!    (BF16 / FP8 / FP6 / FP4). Dequantize-on-load reproduces
-//!    `mx::quantize_square` bit-for-bit, so serving inherits the Table C.1
+//!    per block plus bit-packed element codes in the codec of a
+//!    [`crate::quant::Scheme`] resolved by label (BF16 / FP8 / FP6 / FP4 /
+//!    INT8 / INT4, RNE or stochastic). Dequantize-on-load reproduces the
+//!    scheme's fake-quant bit-for-bit, so serving inherits the Table C.1
 //!    graceful-degradation claims of the training-time grouping.
 //! 2. **decode** — `nn::transformer::decode_step` runs one token against a
 //!    per-sequence KV cache ([`kvcache::KvCachePool`] slots with free-list
@@ -34,4 +35,4 @@ pub use engine::{Engine, EngineClient, EngineConfig, EngineHandle};
 pub use kvcache::{KvCachePool, SlotId};
 pub use protocol::{FinishReason, GenRequest, GenResponse};
 pub use stats::ServeStats;
-pub use weights::{StoreElem, WeightStore};
+pub use weights::WeightStore;

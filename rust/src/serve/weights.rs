@@ -1,24 +1,33 @@
 //! Low-precision MX weight store for serving: linear weights are snapshotted
-//! as square-blockwise (32×32) groups with one power-of-two scale per block
-//! and *bit-packed element codes* in the target FP format (BF16 → 2 bytes,
-//! FP8/FP6/FP4 → 1 byte per element). Dequantization happens per block on
-//! load, reproducing exactly what `mx::quantize_square` would emit — so the
-//! serving path inherits the Table C.1 fidelity claims of the training-time
-//! grouping.
+//! as square-blockwise (default 32×32) groups with one power-of-two scale
+//! per block and *bit-packed element codes* in the target scheme's codec
+//! (BF16 → 2 bytes, FP8/FP6/FP4/INT8/INT4 → 1 byte per element).
+//! Dequantization happens per block on load, reproducing exactly what the
+//! scheme's [`QuantScheme::quantize`] (and therefore the deprecated
+//! `mx::quantize_square`) would emit — so the serving path inherits the
+//! Table C.1 fidelity claims of the training-time grouping.
+//!
+//! Which quantization applies is described by a [`crate::quant::Scheme`]
+//! resolved from a label through [`crate::quant::Registry`] — the same
+//! registry the trainer and the CLI parse labels with. Stochastic-rounding
+//! schemes (`int8_sr`, `fp4_e2m1_sr`, …) snapshot with a deterministic
+//! per-tensor seed so a store is reproducible byte-for-byte.
 //!
 //! Non-linear tensors (embeddings, norms) stay f32: they are a small
 //! fraction of the parameters and the paper's claim covers the PQT linears.
 //!
-//! On-disk format (`GWQS1`), little-endian:
+//! On-disk format (`GWQS2`), little-endian:
 //!
 //! ```text
-//! magic "GWQS1\n"
-//! u32 label_len | label bytes                 (store mode, e.g. "fp8_e3m4")
+//! magic "GWQS2\n"
+//! u32 label_len | label bytes                 (canonical scheme label)
+//! u8 codec tag: 0 = f32 | 1 = fp | 2 = int
+//!   fp:  u8 exp_bits | u8 man_bits | u8 has_inf_nan | u8 saturating
+//!   int: u8 bits
+//! u8 rounding: 0 = rne | 1 = toward-zero | 2 = stochastic
+//! u8 geometry: 0 = none | 1 = square (then u64 block)
 //! u32 arch_len  | arch bytes                  ("gpt2" | "llama2")
 //! u64 ×6: n_layer d_model n_head d_ff vocab seq_len
-//! u64 block
-//! u8 elem tag: 0 = f32 (no quantization), 1 = FP(e,m,inf,sat)
-//! if FP: u8 exp_bits | u8 man_bits | u8 has_inf_nan | u8 saturating
 //! u32 n_tensors
 //! per tensor:
 //!   u32 name_len | name | u64 rows | u64 cols
@@ -26,106 +35,31 @@
 //!   raw:   rows*cols × f32
 //!   coded: u64 n_scales | n_scales × f32 | rows*cols × (u8|u16)
 //! ```
+//!
+//! The previous `GWQS1` layout (PR 1: FP-only, RNE, square-blockwise) is
+//! still readable; [`WeightStore::save`] always writes GWQS2.
 
 use crate::config::schema::{Arch, ModelConfig};
-use crate::mx::{quantize_square, ElemType};
 use crate::nn::tensor::Mat;
 use crate::nn::transformer::Params;
-use crate::numerics::fpformat::{formats, FpFormat, Overflow};
+use crate::numerics::fpformat::{FpFormat, Overflow, Rounding};
+use crate::quant::{Codec, Geometry, QuantScheme, Scheme};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 6] = b"GWQS1\n";
-
-/// Encode a value exactly representable in `fmt` into its sign/exp/mantissa
-/// code (at most 16 bits for every format this crate defines).
-pub fn encode_code(fmt: &FpFormat, v: f64) -> u16 {
-    let m = fmt.man_bits;
-    let sign: u16 = if v.is_sign_negative() { 1 << (fmt.exp_bits + m) } else { 0 };
-    let a = v.abs();
-    if a == 0.0 {
-        return sign;
-    }
-    if a.is_infinite() {
-        // only reachable for has_inf_nan formats
-        return sign | ((((1u32 << fmt.exp_bits) - 1) as u16) << m);
-    }
-    let e = a.log2().floor() as i32;
-    if e < fmt.min_normal_exp() {
-        // subnormal: mantissa counts the min-subnormal step
-        let man = (a / fmt.min_subnormal()).round() as u16;
-        sign | man
-    } else {
-        let exp_code = (e + fmt.bias()) as u16;
-        let frac = a / (e as f64).exp2() - 1.0; // in [0, 1)
-        let man = (frac * (1u64 << m) as f64).round() as u16;
-        sign | (exp_code << m) | man
-    }
-}
-
-/// Decode a code produced by [`encode_code`] back to its exact value.
-pub fn decode_code(fmt: &FpFormat, code: u16) -> f64 {
-    let m = fmt.man_bits;
-    let man = (code & ((1u16 << m) - 1)) as u32;
-    let exp_code = ((code >> m) as u32) & ((1u32 << fmt.exp_bits) - 1);
-    let sign = if (code >> (fmt.exp_bits + m)) & 1 == 1 { -1.0 } else { 1.0 };
-    if exp_code == 0 {
-        return sign * man as f64 * fmt.min_subnormal();
-    }
-    if fmt.has_inf_nan && exp_code == (1u32 << fmt.exp_bits) - 1 {
-        return if man == 0 { sign * f64::INFINITY } else { f64::NAN };
-    }
-    let e = exp_code as i32 - fmt.bias();
-    sign * (1.0 + man as f64 / (1u64 << m) as f64) * (e as f64).exp2()
-}
-
-/// The element storage mode of a store.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum StoreElem {
-    /// Keep master f32 (no quantization) — the fidelity baseline.
-    F32,
-    /// Bit-packed low-precision FP elements with per-block po2 scales.
-    Fp(FpFormat),
-}
-
-impl StoreElem {
-    /// Parse a CLI/store-mode name: `f32`/`master`, or any
-    /// `numerics::formats::by_name` format of at most 16 total bits
-    /// (bf16, fp12_e4m7, fp8_e3m4, fp6_e3m2, ...). The packed code path
-    /// stores one `u16` per element, so wider formats (fp32) are only
-    /// servable unquantized via `f32`.
-    pub fn parse(name: &str) -> Result<StoreElem> {
-        match name.to_ascii_lowercase().as_str() {
-            "f32" | "fp32" | "master" | "none" => Ok(StoreElem::F32),
-            other => {
-                let fmt = formats::by_name(other)
-                    .with_context(|| format!("unknown weight-store mode '{other}'"))?;
-                if fmt.total_bits() > 16 {
-                    bail!("weight-store mode '{other}' is {} bits; max packed width is 16 (use 'f32' for unquantized serving)", fmt.total_bits());
-                }
-                Ok(StoreElem::Fp(fmt))
-            }
-        }
-    }
-
-    pub fn name(&self) -> String {
-        match self {
-            StoreElem::F32 => "f32".to_string(),
-            StoreElem::Fp(f) => format!("fp{}_e{}m{}", f.total_bits(), f.exp_bits, f.man_bits),
-        }
-    }
-}
+const MAGIC_V2: &[u8; 6] = b"GWQS2\n";
+const MAGIC_V1: &[u8; 6] = b"GWQS1\n";
 
 /// Packed element payload of one stored tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Codes {
     /// Unquantized master weights.
     F32(Vec<f32>),
-    /// One byte per element (formats with ≤ 8 total bits).
+    /// One byte per element (codecs with ≤ 8 total bits).
     U8(Vec<u8>),
-    /// Two bytes per element (BF16 and other 9–16 bit formats).
+    /// Two bytes per element (BF16 and other 9–16 bit codecs).
     U16(Vec<u16>),
 }
 
@@ -173,58 +107,99 @@ impl StoredTensor {
 #[derive(Debug, Clone)]
 pub struct WeightStore {
     pub cfg: ModelConfig,
-    pub elem: StoreElem,
-    pub block: usize,
+    /// The quantization scheme linear weights were packed with (geometry
+    /// carries the block size). `Codec::F32` schemes store everything raw.
+    pub scheme: Scheme,
     pub tensors: BTreeMap<String, StoredTensor>,
 }
 
 impl WeightStore {
-    /// Snapshot `params`: linear weights are MX-quantized square-blockwise
-    /// and bit-packed in the `elem` format; everything else stays f32.
+    /// Snapshot `params`: linear weights are quantized under `scheme` and
+    /// bit-packed through its codec; everything else stays f32. Packed
+    /// schemes must be square-blockwise (the serving store's scale layout);
+    /// vector-wise and elementwise packed schemes are rejected.
+    ///
+    /// `seed` salts the per-tensor stochastic-rounding draws (via
+    /// [`crate::quant::tensor_seed`], the same derivation
+    /// `Params::quantize_linears` uses) — pass the checkpoint's master seed
+    /// so an SR store serves exactly the weights `gaussws quantize`
+    /// evaluated. Ignored by deterministic schemes.
     pub fn from_params(
         params: &Params,
         cfg: &ModelConfig,
-        elem: StoreElem,
-        block: usize,
-    ) -> WeightStore {
-        assert!(block > 0, "block size must be positive");
+        scheme: Scheme,
+        seed: u64,
+    ) -> Result<WeightStore> {
+        if scheme.codec.is_packed() {
+            match scheme.geometry {
+                Geometry::Square { block } => {
+                    if block == 0 {
+                        bail!("block size must be positive");
+                    }
+                }
+                other => bail!(
+                    "weight store requires a square-blockwise scheme, got {other:?} \
+                     (vector-wise / elementwise stores are not supported yet)"
+                ),
+            }
+            if scheme.codec.total_bits() > 16 {
+                bail!(
+                    "scheme '{}' packs {} bits/element; max packed width is 16 \
+                     (use 'f32' for unquantized serving)",
+                    scheme.label(),
+                    scheme.codec.total_bits()
+                );
+            }
+        }
         let linears: std::collections::BTreeSet<String> =
             Params::linear_names(cfg).into_iter().collect();
         let mut tensors = BTreeMap::new();
         for (name, m) in &params.tensors {
-            let st = match (&elem, linears.contains(name)) {
-                (StoreElem::Fp(fmt), true) => pack_matrix(m, fmt, block),
-                _ => StoredTensor {
+            let st = if scheme.codec.is_packed() && linears.contains(name) {
+                pack_matrix(m, &scheme, crate::quant::tensor_seed(name, seed))
+            } else {
+                StoredTensor {
                     rows: m.rows,
                     cols: m.cols,
                     scales: Vec::new(),
                     codes: Codes::F32(m.data.clone()),
-                },
+                }
             };
             tensors.insert(name.clone(), st);
         }
-        WeightStore { cfg: cfg.clone(), elem, block, tensors }
+        Ok(WeightStore { cfg: cfg.clone(), scheme, tensors })
     }
 
     /// Snapshot straight from a training checkpoint (the train→serve hop).
+    /// SR draws are salted with the checkpoint's master seed, matching
+    /// [`crate::coordinator::Checkpoint::to_quantized_params`].
     pub fn from_checkpoint(
         ck: &crate::coordinator::Checkpoint,
         cfg: &ModelConfig,
-        elem: StoreElem,
-        block: usize,
+        scheme: Scheme,
     ) -> Result<WeightStore> {
         let params = ck.to_params(cfg)?;
-        Ok(WeightStore::from_params(&params, cfg, elem, block))
+        WeightStore::from_params(&params, cfg, scheme, ck.master_seed)
+    }
+
+    /// The square block size of the packing geometry (1 for raw-f32 stores).
+    pub fn block(&self) -> usize {
+        self.scheme.block().unwrap_or(1)
+    }
+
+    /// Canonical label of the packing scheme.
+    pub fn label(&self) -> &str {
+        self.scheme.label()
     }
 
     /// Dequantize every tensor back to f32 [`Params`] (per block: decode the
     /// element code, multiply by the block scale). For quantized linears the
-    /// result is bit-identical to `mx::quantize_square` of the original
+    /// result is bit-identical to the scheme's fake-quant of the original
     /// weights cast to f32.
     pub fn to_params(&self) -> Params {
         let mut tensors = BTreeMap::new();
         for (name, st) in &self.tensors {
-            tensors.insert(name.clone(), unpack_matrix(st, &self.elem, self.block));
+            tensors.insert(name.clone(), unpack_matrix(st, &self.scheme));
         }
         Params { tensors }
     }
@@ -246,23 +221,11 @@ impl WeightStore {
             }
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        write_str(&mut f, &self.elem.name())?;
-        write_str(&mut f, self.cfg.arch.name())?;
-        for v in [
-            self.cfg.n_layer,
-            self.cfg.d_model,
-            self.cfg.n_head,
-            self.cfg.d_ff,
-            self.cfg.vocab,
-            self.cfg.seq_len,
-            self.block,
-        ] {
-            f.write_all(&(v as u64).to_le_bytes())?;
-        }
-        match &self.elem {
-            StoreElem::F32 => f.write_all(&[0u8])?,
-            StoreElem::Fp(fmt) => {
+        f.write_all(MAGIC_V2)?;
+        write_str(&mut f, self.scheme.label())?;
+        match &self.scheme.codec {
+            Codec::F32 => f.write_all(&[0u8])?,
+            Codec::Fp(fmt) => {
                 f.write_all(&[1u8])?;
                 f.write_all(&[
                     fmt.exp_bits as u8,
@@ -271,6 +234,34 @@ impl WeightStore {
                     (fmt.overflow == Overflow::Saturate) as u8,
                 ])?;
             }
+            Codec::Int { bits } => f.write_all(&[2u8, *bits as u8])?,
+        }
+        let rounding = match self.scheme.rounding {
+            Rounding::NearestEven => 0u8,
+            Rounding::TowardZero => 1,
+            Rounding::Stochastic => 2,
+        };
+        f.write_all(&[rounding])?;
+        match self.scheme.geometry {
+            Geometry::None => f.write_all(&[0u8])?,
+            Geometry::Square { block } => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(block as u64).to_le_bytes())?;
+            }
+            Geometry::Vector { .. } => {
+                bail!("vector-wise schemes cannot be saved to a weight store")
+            }
+        }
+        write_str(&mut f, self.cfg.arch.name())?;
+        for v in [
+            self.cfg.n_layer,
+            self.cfg.d_model,
+            self.cfg.n_head,
+            self.cfg.d_ff,
+            self.cfg.vocab,
+            self.cfg.seq_len,
+        ] {
+            f.write_all(&(v as u64).to_le_bytes())?;
         }
         f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for (name, st) in &self.tensors {
@@ -308,115 +299,223 @@ impl WeightStore {
         );
         let mut magic = [0u8; 6];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad weight-store magic (not a GWQS1 file)");
+        match &magic {
+            m if m == MAGIC_V2 => load_v2(&mut f),
+            m if m == MAGIC_V1 => load_v1(&mut f),
+            _ => bail!("bad weight-store magic (not a GWQS1/GWQS2 file)"),
         }
-        let label = read_str(&mut f)?;
-        let arch = Arch::parse(&read_str(&mut f)?)?;
-        let mut dims = [0usize; 7];
-        for d in dims.iter_mut() {
-            *d = read_u64(&mut f)? as usize;
-        }
-        let cfg = ModelConfig {
-            arch,
-            n_layer: dims[0],
-            d_model: dims[1],
-            n_head: dims[2],
-            d_ff: dims[3],
-            vocab: dims[4],
-            seq_len: dims[5],
-        };
-        cfg.validate()?;
-        let block = dims[6];
-        if block == 0 || block > 1 << 16 {
-            bail!("unreasonable block size {block} in weight store");
-        }
-        let mut tag = [0u8; 1];
-        f.read_exact(&mut tag)?;
-        let elem = match tag[0] {
-            0 => StoreElem::F32,
-            1 => {
-                let mut fb = [0u8; 4];
-                f.read_exact(&mut fb)?;
-                StoreElem::Fp(FpFormat {
-                    exp_bits: fb[0] as u32,
-                    man_bits: fb[1] as u32,
-                    has_inf_nan: fb[2] != 0,
-                    overflow: if fb[3] != 0 { Overflow::Saturate } else { Overflow::Infinity },
-                })
-            }
-            other => bail!("unknown elem tag {other} in weight store"),
-        };
-        if let StoreElem::Fp(f) = &elem {
-            if f.exp_bits == 0 || f.exp_bits > 8 || f.total_bits() > 16 {
-                bail!(
-                    "unsupported packed format e{}m{} in weight store",
-                    f.exp_bits,
-                    f.man_bits
-                );
-            }
-        }
-        if elem.name() != label {
-            bail!("weight store label '{label}' disagrees with format descriptor '{}'", elem.name());
-        }
-        let mut u32b = [0u8; 4];
-        f.read_exact(&mut u32b)?;
-        let n = u32::from_le_bytes(u32b);
-        let mut tensors = BTreeMap::new();
-        for _ in 0..n {
-            let name = read_str(&mut f)?;
-            let rows = read_u64(&mut f)? as usize;
-            let cols = read_u64(&mut f)? as usize;
-            f.read_exact(&mut tag)?;
-            let numel = rows * cols;
-            let (scales, codes) = match tag[0] {
-                0 => (Vec::new(), Codes::F32(read_f32s(&mut f, numel)?)),
-                1 => {
-                    let scales = read_scales(&mut f)?;
-                    let mut bytes = vec![0u8; numel];
-                    f.read_exact(&mut bytes)?;
-                    (scales, Codes::U8(bytes))
-                }
-                2 => {
-                    let scales = read_scales(&mut f)?;
-                    let mut bytes = vec![0u8; numel * 2];
-                    f.read_exact(&mut bytes)?;
-                    let v = bytes
-                        .chunks_exact(2)
-                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
-                        .collect();
-                    (scales, Codes::U16(v))
-                }
-                other => bail!("unknown tensor kind {other} in weight store"),
-            };
-            if elem == StoreElem::F32 && !matches!(codes, Codes::F32(_)) {
-                bail!("tensor '{name}': coded payload in an f32 store");
-            }
-            let expect_scales = if matches!(codes, Codes::F32(_)) {
-                0
-            } else {
-                rows.div_ceil(block) * cols.div_ceil(block)
-            };
-            if scales.len() != expect_scales {
-                bail!("tensor '{name}': {} scales, expected {expect_scales}", scales.len());
-            }
-            tensors.insert(name, StoredTensor { rows, cols, scales, codes });
-        }
-        Ok(WeightStore { cfg, elem, block, tensors })
     }
 }
 
-/// Quantize + bit-pack one matrix.
-fn pack_matrix(m: &Mat, fmt: &FpFormat, block: usize) -> StoredTensor {
+fn read_codec(f: &mut impl Read) -> Result<Codec> {
+    let mut tag = [0u8; 1];
+    f.read_exact(&mut tag)?;
+    let codec = match tag[0] {
+        0 => Codec::F32,
+        1 => {
+            let mut fb = [0u8; 4];
+            f.read_exact(&mut fb)?;
+            Codec::Fp(FpFormat {
+                exp_bits: fb[0] as u32,
+                man_bits: fb[1] as u32,
+                has_inf_nan: fb[2] != 0,
+                overflow: if fb[3] != 0 { Overflow::Saturate } else { Overflow::Infinity },
+            })
+        }
+        2 => {
+            let mut b = [0u8; 1];
+            f.read_exact(&mut b)?;
+            Codec::Int { bits: b[0] as u32 }
+        }
+        other => bail!("unknown codec tag {other} in weight store"),
+    };
+    match &codec {
+        Codec::Fp(fmt) => {
+            if fmt.exp_bits == 0 || fmt.exp_bits > 8 || fmt.total_bits() > 16 {
+                bail!(
+                    "unsupported packed format e{}m{} in weight store",
+                    fmt.exp_bits,
+                    fmt.man_bits
+                );
+            }
+        }
+        Codec::Int { bits } => {
+            if *bits < 2 || *bits > 16 {
+                bail!("unsupported packed int{bits} in weight store");
+            }
+        }
+        Codec::F32 => {}
+    }
+    Ok(codec)
+}
+
+fn read_model_cfg(f: &mut impl Read) -> Result<ModelConfig> {
+    let arch = Arch::parse(&read_str(f)?)?;
+    let mut dims = [0usize; 6];
+    for d in dims.iter_mut() {
+        *d = read_u64(f)? as usize;
+    }
+    let cfg = ModelConfig {
+        arch,
+        n_layer: dims[0],
+        d_model: dims[1],
+        n_head: dims[2],
+        d_ff: dims[3],
+        vocab: dims[4],
+        seq_len: dims[5],
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn read_tensors(
+    f: &mut impl Read,
+    scheme: &Scheme,
+) -> Result<BTreeMap<String, StoredTensor>> {
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let n = u32::from_le_bytes(u32b);
+    let mut tag = [0u8; 1];
+    let mut tensors = BTreeMap::new();
+    for _ in 0..n {
+        let name = read_str(f)?;
+        let rows = read_u64(f)? as usize;
+        let cols = read_u64(f)? as usize;
+        f.read_exact(&mut tag)?;
+        let numel = rows * cols;
+        let (scales, codes) = match tag[0] {
+            0 => (Vec::new(), Codes::F32(read_f32s(f, numel)?)),
+            1 => {
+                let scales = read_scales(f)?;
+                let mut bytes = vec![0u8; numel];
+                f.read_exact(&mut bytes)?;
+                (scales, Codes::U8(bytes))
+            }
+            2 => {
+                let scales = read_scales(f)?;
+                let mut bytes = vec![0u8; numel * 2];
+                f.read_exact(&mut bytes)?;
+                let v = bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+                (scales, Codes::U16(v))
+            }
+            other => bail!("unknown tensor kind {other} in weight store"),
+        };
+        if !scheme.codec.is_packed() && !matches!(codes, Codes::F32(_)) {
+            bail!("tensor '{name}': coded payload in an f32 store");
+        }
+        let expect_scales = if matches!(codes, Codes::F32(_)) {
+            0
+        } else {
+            scheme.geometry.n_scales(rows, cols)
+        };
+        if scales.len() != expect_scales {
+            bail!("tensor '{name}': {} scales, expected {expect_scales}", scales.len());
+        }
+        tensors.insert(name, StoredTensor { rows, cols, scales, codes });
+    }
+    Ok(tensors)
+}
+
+/// GWQS2: self-describing scheme descriptor, label cross-checked against
+/// the registry when the label is a registered one.
+fn load_v2(f: &mut impl Read) -> Result<WeightStore> {
+    let label = read_str(f)?;
+    let codec = read_codec(f)?;
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    let rounding = match b[0] {
+        0 => Rounding::NearestEven,
+        1 => Rounding::TowardZero,
+        2 => Rounding::Stochastic,
+        other => bail!("unknown rounding tag {other} in weight store"),
+    };
+    f.read_exact(&mut b)?;
+    let geometry = match b[0] {
+        0 => Geometry::None,
+        1 => {
+            let block = read_u64(f)? as usize;
+            if block == 0 || block > 1 << 16 {
+                bail!("unreasonable block size {block} in weight store");
+            }
+            Geometry::Square { block }
+        }
+        other => bail!("unknown geometry tag {other} in weight store"),
+    };
+    if codec.is_packed() && !matches!(geometry, Geometry::Square { .. }) {
+        bail!(
+            "weight store has a packed codec but non-square geometry \
+             (corrupt or unsupported GWQS2 file)"
+        );
+    }
+    let scheme = Scheme::new(&label, codec, rounding, geometry);
+    // If the label is registered, its codec/rounding must agree with the
+    // file's descriptor (block size may legitimately differ via --block).
+    if let Ok(reg) = crate::quant::resolve(&label) {
+        if reg.codec != scheme.codec || reg.rounding != scheme.rounding {
+            bail!(
+                "weight store label '{label}' disagrees with its scheme descriptor \
+                 ({} vs registered {})",
+                scheme.describe(),
+                reg.describe()
+            );
+        }
+    }
+    let cfg = read_model_cfg(f)?;
+    let tensors = read_tensors(f, &scheme)?;
+    Ok(WeightStore { cfg, scheme, tensors })
+}
+
+/// GWQS1 (PR 1 layout): FP-only elem descriptor, RNE, square-blockwise,
+/// block size carried as a seventh dim. Mapped onto the scheme API; the
+/// canonical registry label is recovered when one matches.
+fn load_v1(f: &mut impl Read) -> Result<WeightStore> {
+    let label = read_str(f)?;
+    // GWQS1 layout after the label: arch + the same six dims as GWQS2,
+    // followed by the block size as a seventh u64
+    let cfg = read_model_cfg(f)?;
+    let block = read_u64(f)? as usize;
+    if block == 0 || block > 1 << 16 {
+        bail!("unreasonable block size {block} in weight store");
+    }
+    let codec = read_codec(f)?;
+    if let Codec::Int { .. } = codec {
+        bail!("GWQS1 stores cannot carry int codecs");
+    }
+    // GWQS1 wrote StoreElem::name(): "f32" or "fp{total}_e{e}m{m}"
+    let legacy_name = match &codec {
+        Codec::F32 => "f32".to_string(),
+        Codec::Fp(f) => format!("fp{}_e{}m{}", f.total_bits(), f.exp_bits, f.man_bits),
+        Codec::Int { .. } => unreachable!(),
+    };
+    if legacy_name != label {
+        bail!("weight store label '{label}' disagrees with format descriptor '{legacy_name}'");
+    }
+    let geometry =
+        if codec.is_packed() { Geometry::Square { block } } else { Geometry::None };
+    // recover the canonical label if this (codec, RNE, square) is registered
+    let canonical = crate::quant::Registry::global()
+        .schemes()
+        .iter()
+        .find(|s| s.codec == codec && s.rounding == Rounding::NearestEven && s.codec.is_packed())
+        .map(|s| s.label().to_string())
+        .unwrap_or(label);
+    let scheme = Scheme::new(&canonical, codec, Rounding::NearestEven, geometry);
+    let tensors = read_tensors(f, &scheme)?;
+    Ok(WeightStore { cfg, scheme, tensors })
+}
+
+/// Quantize + bit-pack one matrix through the scheme's codec.
+fn pack_matrix(m: &Mat, scheme: &Scheme, seed: u64) -> StoredTensor {
+    let block = scheme.block().expect("packed schemes are square-blockwise");
     let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-    let q = quantize_square(&w64, m.rows, m.cols, block, &ElemType::Fp(*fmt));
+    let q = scheme.quantize(&w64, m.rows, m.cols, seed);
     let grid_c = m.cols.div_ceil(block);
     let encode_at = |i: usize| -> u16 {
         let (r, c) = (i / m.cols, i % m.cols);
         let s = q.scales[(r / block) * grid_c + c / block];
-        encode_code(fmt, q.data[i] / s)
+        scheme.encode(q.data[i] / s)
     };
-    let codes = if fmt.total_bits() <= 8 {
+    let codes = if scheme.bytes_per_elem() == 1 {
         Codes::U8((0..q.data.len()).map(|i| encode_at(i) as u8).collect())
     } else {
         Codes::U16((0..q.data.len()).map(encode_at).collect())
@@ -430,10 +529,11 @@ fn pack_matrix(m: &Mat, fmt: &FpFormat, block: usize) -> StoredTensor {
 }
 
 /// Dequantize one stored tensor back to an f32 matrix (per-block decode).
-fn unpack_matrix(st: &StoredTensor, elem: &StoreElem, block: usize) -> Mat {
-    match (&st.codes, elem) {
-        (Codes::F32(v), _) => Mat::from_vec(st.rows, st.cols, v.clone()),
-        (codes, StoreElem::Fp(fmt)) => {
+fn unpack_matrix(st: &StoredTensor, scheme: &Scheme) -> Mat {
+    match &st.codes {
+        Codes::F32(v) => Mat::from_vec(st.rows, st.cols, v.clone()),
+        codes => {
+            let block = scheme.block().expect("packed schemes are square-blockwise");
             let grid_c = st.cols.div_ceil(block);
             let mut data = vec![0f32; st.rows * st.cols];
             for (i, out) in data.iter_mut().enumerate() {
@@ -444,12 +544,9 @@ fn unpack_matrix(st: &StoredTensor, elem: &StoreElem, block: usize) -> Mat {
                     Codes::U16(v) => v[i],
                     Codes::F32(_) => unreachable!(),
                 };
-                *out = (decode_code(fmt, code) * s) as f32;
+                *out = (scheme.decode(code) * s) as f32;
             }
             Mat::from_vec(st.rows, st.cols, data)
-        }
-        (_, StoreElem::F32) => {
-            unreachable!("coded tensor in an f32 store")
         }
     }
 }
@@ -494,10 +591,7 @@ fn read_scales(f: &mut impl Read) -> Result<Vec<f32>> {
 fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     f.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
 #[cfg(test)]
@@ -505,56 +599,28 @@ mod tests {
     use super::*;
     use crate::config::schema::Arch;
     use crate::nn::transformer::Transformer;
-    use crate::testing::prop::{check, Gen};
+    use crate::numerics::fpformat::formats;
+    use crate::quant::resolve;
 
     #[test]
-    fn codes_roundtrip_exhaustively_for_tiny_formats() {
-        for fmt in [formats::FP8_E3M4, formats::FP8_E4M3, formats::FP6_E3M2, formats::FP4_E2M1] {
-            let max_code = 1u32 << fmt.total_bits();
-            for v in fmt.enumerate_non_negative() {
-                for signed in [v, -v] {
-                    let code = encode_code(&fmt, signed);
-                    assert!((code as u32) < max_code, "{fmt:?}: code {code} overflows");
-                    let back = decode_code(&fmt, code);
-                    // -0.0 decodes to -0.0; compare bit-exactly via total order
-                    assert_eq!(back, signed, "{fmt:?}: {signed} -> {code} -> {back}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn codes_roundtrip_bf16_samples() {
-        check("bf16 code roundtrip", 50, |g: &mut Gen| {
-            let x = g.f64_in(-100.0, 100.0);
-            let v = formats::BF16.cast(x);
-            let code = encode_code(&formats::BF16, v);
-            let back = decode_code(&formats::BF16, code);
-            if back == v {
-                Ok(())
-            } else {
-                Err(format!("{v} -> {code} -> {back}"))
-            }
-        });
-    }
-
-    #[test]
-    fn store_matches_quantize_square_exactly() {
-        // dequantize-on-load must reproduce the fq_inference quantization
-        // path bit-for-bit (same blocks, same scales, same element cast)
+    fn store_matches_scheme_quantize_exactly() {
+        // dequantize-on-load must reproduce the scheme's fake-quant path
+        // bit-for-bit (same blocks, same scales, same element cast)
         let cfg = ModelConfig::tiny(Arch::Gpt2);
         let model = Transformer::new(cfg.clone());
         let params = model.init_params(5);
-        for fmt in [formats::BF16, formats::FP8_E3M4, formats::FP6_E3M2] {
-            let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(fmt), 32);
+        for label in ["bf16", "fp8_e3m4", "fp6_e3m2", "int8", "int4"] {
+            let scheme = resolve(label).unwrap();
+            let store = WeightStore::from_params(&params, &cfg, scheme.clone(), 5).unwrap();
             let served = store.to_params();
             for name in Params::linear_names(&cfg) {
                 let m = params.get(&name);
                 let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-                let q = quantize_square(&w64, m.rows, m.cols, 32, &ElemType::Fp(fmt));
+                let q =
+                    scheme.quantize(&w64, m.rows, m.cols, crate::quant::tensor_seed(&name, 5));
                 let got = served.get(&name);
                 for (i, (&g, &want)) in got.data.iter().zip(q.data.iter()).enumerate() {
-                    assert_eq!(g, want as f32, "{name}[{i}] under {fmt:?}");
+                    assert_eq!(g, want as f32, "{name}[{i}] under {label}");
                 }
             }
             // non-linear tensors pass through untouched
@@ -567,30 +633,134 @@ mod tests {
         let cfg = ModelConfig::tiny(Arch::Gpt2);
         let model = Transformer::new(cfg.clone());
         let params = model.init_params(6);
-        let fp8 = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E3M4), 32);
-        let f32s = WeightStore::from_params(&params, &cfg, StoreElem::F32, 32);
+        let fp8 =
+            WeightStore::from_params(&params, &cfg, resolve("fp8_e3m4").unwrap(), 6).unwrap();
+        let f32s = WeightStore::from_params(&params, &cfg, resolve("f32").unwrap(), 6).unwrap();
         assert!(fp8.bytes() < f32s.bytes(), "{} !< {}", fp8.bytes(), f32s.bytes());
         assert_eq!(f32s.bytes(), f32s.master_bytes());
     }
 
     #[test]
-    fn save_load_roundtrip() {
+    fn save_load_roundtrip_gwqs2() {
         let cfg = ModelConfig::tiny(Arch::Llama2);
         let model = Transformer::new(cfg.clone());
         let params = model.init_params(7);
-        let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E4M3), 32);
-        let path = std::env::temp_dir().join("gaussws_store_test.gwqs");
-        store.save(&path).unwrap();
-        let back = WeightStore::load(&path).unwrap();
-        assert_eq!(back.cfg, cfg);
-        assert_eq!(back.elem, store.elem);
-        assert_eq!(back.block, 32);
-        assert_eq!(back.tensors, store.tensors);
-        let a = store.to_params();
-        let b = back.to_params();
-        for (name, m) in &a.tensors {
-            assert_eq!(m, b.get(name), "{name}");
+        for label in ["fp8_e4m3", "int8", "int8_sr", "f32"] {
+            let store =
+                WeightStore::from_params(&params, &cfg, resolve(label).unwrap(), 7).unwrap();
+            let path = std::env::temp_dir().join(format!("gaussws_store_test_{label}.gwqs"));
+            store.save(&path).unwrap();
+            let back = WeightStore::load(&path).unwrap();
+            assert_eq!(back.cfg, cfg);
+            assert_eq!(back.scheme, store.scheme, "{label}");
+            assert_eq!(back.tensors, store.tensors, "{label}");
+            let a = store.to_params();
+            let b = back.to_params();
+            for (name, m) in &a.tensors {
+                assert_eq!(m, b.get(name), "{name}");
+            }
         }
+    }
+
+    #[test]
+    fn stochastic_store_is_reproducible() {
+        // per-tensor seeds make SR snapshots deterministic
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(8);
+        let a =
+            WeightStore::from_params(&params, &cfg, resolve("int8_sr").unwrap(), 8).unwrap();
+        let b =
+            WeightStore::from_params(&params, &cfg, resolve("int8_sr").unwrap(), 8).unwrap();
+        assert_eq!(a.tensors, b.tensors);
+        // a different SR seed draws a different snapshot
+        let c =
+            WeightStore::from_params(&params, &cfg, resolve("int8_sr").unwrap(), 9).unwrap();
+        assert_ne!(a.tensors, c.tensors);
+    }
+
+    #[test]
+    fn vectorwise_scheme_rejected() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(9);
+        let err = WeightStore::from_params(&params, &cfg, resolve("fp8_e3m4_vec").unwrap(), 9);
+        assert!(err.is_err());
+    }
+
+    /// Write the old GWQS1 layout for back-compat tests (the PR 1 writer,
+    /// kept verbatim in test code only).
+    fn write_gwqs1(store: &WeightStore, path: &Path) {
+        let fmt = match &store.scheme.codec {
+            Codec::Fp(f) => *f,
+            _ => panic!("gwqs1 test writer covers fp codecs"),
+        };
+        let legacy = format!("fp{}_e{}m{}", fmt.total_bits(), fmt.exp_bits, fmt.man_bits);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(MAGIC_V1).unwrap();
+        write_str(&mut f, &legacy).unwrap();
+        write_str(&mut f, store.cfg.arch.name()).unwrap();
+        for v in [
+            store.cfg.n_layer,
+            store.cfg.d_model,
+            store.cfg.n_head,
+            store.cfg.d_ff,
+            store.cfg.vocab,
+            store.cfg.seq_len,
+            store.block(),
+        ] {
+            f.write_all(&(v as u64).to_le_bytes()).unwrap();
+        }
+        f.write_all(&[1u8]).unwrap();
+        f.write_all(&[
+            fmt.exp_bits as u8,
+            fmt.man_bits as u8,
+            fmt.has_inf_nan as u8,
+            (fmt.overflow == Overflow::Saturate) as u8,
+        ])
+        .unwrap();
+        f.write_all(&(store.tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, st) in &store.tensors {
+            write_str(&mut f, name).unwrap();
+            f.write_all(&(st.rows as u64).to_le_bytes()).unwrap();
+            f.write_all(&(st.cols as u64).to_le_bytes()).unwrap();
+            match &st.codes {
+                Codes::F32(v) => {
+                    f.write_all(&[0u8]).unwrap();
+                    for x in v {
+                        f.write_all(&x.to_le_bytes()).unwrap();
+                    }
+                }
+                Codes::U8(v) => {
+                    f.write_all(&[1u8]).unwrap();
+                    write_scales(&mut f, &st.scales).unwrap();
+                    f.write_all(v).unwrap();
+                }
+                Codes::U16(v) => {
+                    f.write_all(&[2u8]).unwrap();
+                    write_scales(&mut f, &st.scales).unwrap();
+                    for x in v {
+                        f.write_all(&x.to_le_bytes()).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gwqs1_snapshots_still_load() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(10);
+        let store =
+            WeightStore::from_params(&params, &cfg, resolve("fp8_e3m4").unwrap(), 10).unwrap();
+        let path = std::env::temp_dir().join("gaussws_store_v1.gwqs");
+        write_gwqs1(&store, &path);
+        let back = WeightStore::load(&path).unwrap();
+        // the legacy label maps back to the canonical registry scheme
+        assert_eq!(back.scheme, store.scheme);
+        assert_eq!(back.tensors, store.tensors);
+        assert_eq!(back.cfg, cfg);
     }
 
     #[test]
@@ -601,14 +771,29 @@ mod tests {
     }
 
     #[test]
-    fn store_elem_parse_names() {
-        assert_eq!(StoreElem::parse("f32").unwrap(), StoreElem::F32);
-        // fp32 cannot be bit-packed into u16 codes: served unquantized
-        assert_eq!(StoreElem::parse("fp32").unwrap(), StoreElem::F32);
-        assert_eq!(StoreElem::parse("bf16").unwrap(), StoreElem::Fp(formats::BF16));
-        assert_eq!(StoreElem::parse("fp8_e3m4").unwrap(), StoreElem::Fp(formats::FP8_E3M4));
-        assert!(StoreElem::parse("fp99").is_err());
-        assert_eq!(StoreElem::Fp(formats::FP6_E3M2).name(), "fp6_e3m2");
-        assert_eq!(StoreElem::Fp(formats::BF16).name(), "fp16_e8m7");
+    fn packed_codec_with_non_square_geometry_rejected_cleanly() {
+        // a crafted GWQS2 header with an fp codec but geometry tag 0 must
+        // produce a clean error, not a panic at dequantize time
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&(4u32).to_le_bytes());
+        bytes.extend_from_slice(b"bf16");
+        bytes.extend_from_slice(&[1u8, 8, 7, 1, 0]); // fp e8m7, ieee
+        bytes.push(0); // rounding: rne
+        bytes.push(0); // geometry: none — invalid with a packed codec
+        let path = std::env::temp_dir().join("gaussws_store_badgeom.gwqs");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = WeightStore::load(&path).unwrap_err().to_string();
+        assert!(err.contains("non-square geometry"), "{err}");
+    }
+
+    #[test]
+    fn labels_resolve_like_the_old_store_parser() {
+        // the registry supersedes StoreElem::parse
+        assert!(!resolve("f32").unwrap().codec.is_packed());
+        assert!(!resolve("fp32").unwrap().codec.is_packed());
+        assert_eq!(resolve("bf16").unwrap().codec, Codec::Fp(formats::BF16));
+        assert_eq!(resolve("fp8_e3m4").unwrap().codec, Codec::Fp(formats::FP8_E3M4));
+        assert!(resolve("fp99").is_err());
     }
 }

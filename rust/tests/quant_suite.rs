@@ -1,0 +1,237 @@
+//! Unified-codec acceptance suite for the `quant` subsystem:
+//!
+//! * every registered packed scheme encode→decode round-trips *exactly*;
+//! * GWQS2 snapshots written through `QuantScheme` dequantize bit-for-bit
+//!   identical to the (deprecated) `mx::quantize_square` path for every
+//!   registered FP format — the serving store inherits the Table C.1
+//!   fidelity claims through the one shared engine;
+//! * stochastic rounding is unbiased in expectation (mean error → 0 over
+//!   many draws) for both FP and INT codecs.
+
+use gaussws::config::schema::{Arch, ModelConfig};
+use gaussws::mx::{quantize_square, ElemType};
+use gaussws::nn::transformer::{Params, Transformer};
+use gaussws::numerics::Rounding;
+use gaussws::quant::{Codec, Geometry, QuantScheme, Registry, Scheme};
+use gaussws::testing::prop::{check, Gen};
+
+/// Every registered scheme with a packed codec must encode→decode exactly.
+#[test]
+fn every_registered_scheme_roundtrips_codes_exactly() {
+    for scheme in Registry::global().schemes() {
+        match scheme.codec {
+            Codec::F32 => continue, // raw tensors, no codes
+            Codec::Fp(fmt) => {
+                for v in fmt.enumerate_non_negative() {
+                    for signed in [v, -v] {
+                        let code = scheme.encode(signed);
+                        assert!(
+                            (code as u32) < (1u32 << fmt.total_bits()),
+                            "{}: code {code} wider than {} bits",
+                            scheme.label(),
+                            fmt.total_bits()
+                        );
+                        assert_eq!(
+                            scheme.decode(code),
+                            signed,
+                            "{}: {signed} -> {code}",
+                            scheme.label()
+                        );
+                    }
+                }
+            }
+            Codec::Int { bits } => {
+                let m = (1i64 << (bits - 1)) - 1;
+                for v in -m..=m {
+                    let code = scheme.encode(v as f64);
+                    assert_eq!(scheme.decode(code), v as f64, "{}: {v}", scheme.label());
+                }
+            }
+        }
+    }
+}
+
+/// Random fake-quantized values must survive the pack→unpack codec hop at
+/// the block scale, for every registered square-blockwise scheme.
+#[test]
+fn prop_quantized_values_roundtrip_through_codes() {
+    check("scheme codes roundtrip at scale", 20, |g: &mut Gen| {
+        for scheme in Registry::global().schemes() {
+            if !scheme.codec.is_packed() || !matches!(scheme.geometry, Geometry::Square { .. }) {
+                continue;
+            }
+            let (rows, cols) = (g.usize_in(1, 40), g.usize_in(1, 40));
+            let w = g.normal_vec(rows * cols);
+            let q = scheme.quantize(&w, rows, cols, g.u64());
+            let block = scheme.block().unwrap();
+            let grid_c = cols.div_ceil(block);
+            for (i, &v) in q.data.iter().enumerate() {
+                let (r, c) = (i / cols, i % cols);
+                let s = q.scales[(r / block) * grid_c + c / block];
+                let back = scheme.decode(scheme.encode(v / s)) * s;
+                if back != v {
+                    return Err(format!("{}: elem {i}: {v} -> {back}", scheme.label()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance criterion: a GWQS2 snapshot written via `QuantScheme`
+/// must dequantize bit-for-bit identical to `mx::quantize_square` of the
+/// same weights, for every registered FP format (RNE, square-blockwise).
+#[test]
+fn gwqs2_snapshots_match_mx_quantize_square_bit_for_bit() {
+    use gaussws::serve::WeightStore;
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(2026);
+    let mut covered = 0;
+    for scheme in Registry::global().schemes() {
+        let fmt = match (&scheme.codec, scheme.rounding, scheme.geometry) {
+            (Codec::Fp(fmt), Rounding::NearestEven, Geometry::Square { .. }) => *fmt,
+            _ => continue,
+        };
+        covered += 1;
+        let block = scheme.block().unwrap();
+        let store = WeightStore::from_params(&params, &cfg, scheme.clone(), 0).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("gaussws_quant_suite_{}.gwqs", scheme.label()));
+        store.save(&path).unwrap();
+        let served = WeightStore::load(&path).unwrap().to_params();
+        for name in Params::linear_names(&cfg) {
+            let m = params.get(&name);
+            let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+            let q = quantize_square(&w64, m.rows, m.cols, block, &ElemType::Fp(fmt));
+            let got = served.get(&name);
+            for (i, (&g, &want)) in got.data.iter().zip(q.data.iter()).enumerate() {
+                assert_eq!(g, want as f32, "{}: {name}[{i}]", scheme.label());
+            }
+        }
+    }
+    // bf16, fp16, fp12_e4m7, fp8_{e4m3,e5m2,e3m4}, fp6_{e3m2,e2m3}, fp4_e2m1
+    assert!(covered >= 9, "only {covered} FP RNE square schemes covered");
+}
+
+/// Stochastic rounding must be unbiased: over many independent draws the
+/// mean quantized value converges to the input, for FP and INT codecs.
+#[test]
+fn stochastic_rounding_is_unbiased_in_expectation() {
+    let cases = [
+        (Codec::Fp(gaussws::numerics::formats::FP4_E2M1), 1.3f64),
+        (Codec::Fp(gaussws::numerics::formats::FP8_E4M3), -0.777),
+        (Codec::Int { bits: 8 }, 41.37),
+        (Codec::Int { bits: 4 }, -2.6),
+    ];
+    let mut state = 0x1234_5678u32;
+    for (codec, x) in cases {
+        let mut acc = 0.0;
+        let n = 40_000;
+        for _ in 0..n {
+            // xorshift32 as the random source
+            state ^= state << 13;
+            state ^= state >> 17;
+            state ^= state << 5;
+            acc += codec.quantize(x, Rounding::Stochastic, state);
+        }
+        let mean = acc / n as f64;
+        // the quantization step around x bounds the standard error
+        let step = match codec {
+            Codec::Fp(f) => f.ulp(x),
+            _ => 1.0,
+        };
+        let tol = 3.0 * step / (n as f64).sqrt() * 2.0 + 1e-12;
+        assert!(
+            (mean - x).abs() < tol.max(0.02 * step),
+            "{codec:?}: mean {mean} vs {x} (step {step})"
+        );
+    }
+}
+
+/// Scheme-level stochastic quantization: averaging fake-quantized matrices
+/// over many seeds converges to the original weights.
+#[test]
+fn stochastic_scheme_quantize_is_unbiased_elementwise() {
+    let scheme = gaussws::quant::resolve("int8_sr").unwrap();
+    let mut g = Gen::new(9);
+    let (rows, cols) = (16, 16);
+    let w = g.normal_vec(rows * cols);
+    let trials = 400;
+    let mut mean = vec![0f64; w.len()];
+    for t in 0..trials {
+        let q = scheme.quantize(&w, rows, cols, 1000 + t);
+        for (m, v) in mean.iter_mut().zip(q.data.iter()) {
+            *m += v / trials as f64;
+        }
+    }
+    // per-element step is the block scale; mean error should be far below it
+    let q0 = scheme.quantize(&w, rows, cols, 0);
+    let max_scale = q0.scales.iter().cloned().fold(0.0f64, f64::max);
+    for (i, (&m, &x)) in mean.iter().zip(w.iter()).enumerate() {
+        assert!(
+            (m - x).abs() < 0.25 * max_scale,
+            "elem {i}: mean {m} vs {x} (scale {max_scale})"
+        );
+    }
+}
+
+/// Deterministic schemes must agree with the deprecated mx shims on both
+/// geometries (the shims are defined to be thin wrappers).
+#[test]
+fn prop_shims_and_schemes_agree() {
+    check("mx shim == quant engine", 15, |g: &mut Gen| {
+        use gaussws::mx::{quantize_vectorwise, Axis};
+        let (rows, cols) = (g.usize_in(1, 50), g.usize_in(1, 50));
+        let block = *g.choose(&[4usize, 16, 32]);
+        let w = g.normal_vec(rows * cols);
+        let fmt = gaussws::numerics::formats::FP6_E3M2;
+        let sq_shim = quantize_square(&w, rows, cols, block, &ElemType::Fp(fmt));
+        let sq_scheme = Scheme::new(
+            "t",
+            Codec::Fp(fmt),
+            Rounding::NearestEven,
+            Geometry::Square { block },
+        )
+        .quantize(&w, rows, cols, 0);
+        if sq_shim.data != sq_scheme.data || sq_shim.scales != sq_scheme.scales {
+            return Err("square shim diverged".into());
+        }
+        let vec_shim = quantize_vectorwise(&w, rows, cols, block, Axis::Row, &ElemType::Fp(fmt));
+        let vec_scheme = Scheme::new(
+            "t",
+            Codec::Fp(fmt),
+            Rounding::NearestEven,
+            Geometry::Vector { block, axis: Axis::Row },
+        )
+        .quantize(&w, rows, cols, 0);
+        if vec_shim.data != vec_scheme.data || vec_shim.scales != vec_scheme.scales {
+            return Err("vectorwise shim diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// INT stores (including stochastic ones) survive the full
+/// snapshot→save→load→serve hop byte-for-byte.
+#[test]
+fn int_and_sr_stores_roundtrip_through_gwqs2() {
+    use gaussws::serve::WeightStore;
+    let cfg = ModelConfig::tiny(Arch::Llama2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(31);
+    for label in ["int8", "int4", "int8_sr", "fp4_e2m1_sr"] {
+        let store = WeightStore::from_params(
+            &params,
+            &cfg,
+            gaussws::quant::resolve(label).unwrap(),
+            31,
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join(format!("gaussws_quant_suite_{label}.gwqs"));
+        store.save(&path).unwrap();
+        let back = WeightStore::load(&path).unwrap();
+        assert_eq!(back.scheme, store.scheme, "{label}");
+        assert_eq!(back.tensors, store.tensors, "{label}");
+    }
+}

@@ -9,7 +9,8 @@ use gaussws::data::{SynthCorpus, SynthSpec};
 use gaussws::mx::{quantize_square, ElemType};
 use gaussws::nn::transformer::{DecodeCache, Params, Transformer};
 use gaussws::numerics::fpformat::formats;
-use gaussws::serve::{Engine, EngineConfig, GenRequest, StoreElem, WeightStore};
+use gaussws::quant::resolve;
+use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::testing::prop::{check, Gen};
 
 // ---------------------------------------------------------------- MX bounds
@@ -124,7 +125,13 @@ fn snapshot_reproduces_fq_inference_logits() {
         let (cfg, model, params) = tiny_model(arch, 21);
         for fmt in [formats::BF16, formats::FP8_E3M4, formats::FP6_E3M2] {
             let direct = quantize_linears(&params, &cfg, &ElemType::Fp(fmt));
-            let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(fmt), 32);
+            let scheme = gaussws::quant::Scheme::new(
+                "test",
+                gaussws::quant::Codec::Fp(fmt),
+                gaussws::numerics::Rounding::NearestEven,
+                gaussws::quant::Geometry::Square { block: 32 },
+            );
+            let store = WeightStore::from_params(&params, &cfg, scheme, 21).unwrap();
             let served = store.to_params();
             let toks = [1usize, 9, 33, 7, 12];
             let a = model.forward(&direct, &toks);
@@ -160,7 +167,7 @@ fn snapshot_eval_loss_follows_table_c1_degradation() {
     assert!(base.is_finite());
     let loss_of = |mode: &str| {
         let store =
-            WeightStore::from_params(&params, &cfg, StoreElem::parse(mode).unwrap(), 32);
+            WeightStore::from_params(&params, &cfg, resolve(mode).unwrap(), 33).unwrap();
         eval(&store.to_params())
     };
     let (l_bf16, l_fp8, l_fp6) = (loss_of("bf16"), loss_of("fp8_e3m4"), loss_of("fp6_e3m2"));
@@ -175,7 +182,8 @@ fn snapshot_eval_loss_follows_table_c1_degradation() {
 #[test]
 fn snapshot_file_roundtrip_serves_identically() {
     let (cfg, model, params) = tiny_model(Arch::Gpt2, 44);
-    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E3M4), 32);
+    let store =
+        WeightStore::from_params(&params, &cfg, resolve("fp8_e3m4").unwrap(), 44).unwrap();
     let path = std::env::temp_dir().join("gaussws_serve_suite.gwqs");
     store.save(&path).unwrap();
     let loaded = WeightStore::load(&path).unwrap();
@@ -191,7 +199,8 @@ fn snapshot_file_roundtrip_serves_identically() {
 fn kv_decode_matches_forward_on_quantized_weights() {
     // decode parity must hold on the served (quantized) weights too
     let (cfg, model, params) = tiny_model(Arch::Llama2, 55);
-    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::FP8_E4M3), 32);
+    let store =
+        WeightStore::from_params(&params, &cfg, resolve("fp8_e4m3").unwrap(), 55).unwrap();
     let served = store.to_params();
     let toks = [2usize, 40, 11, 3, 25];
     let full = model.forward(&served, &toks);
@@ -213,7 +222,7 @@ fn engine_batches_and_serves_all_store_modes() {
     let (cfg, _model, params) = tiny_model(Arch::Gpt2, 66);
     for mode in ["f32", "bf16", "fp8_e3m4", "fp6_e3m2"] {
         let store =
-            WeightStore::from_params(&params, &cfg, StoreElem::parse(mode).unwrap(), 32);
+            WeightStore::from_params(&params, &cfg, resolve(mode).unwrap(), 66).unwrap();
         let mut engine = Engine::from_store(
             &store,
             EngineConfig { max_batch: 4, kv_slots: 4, threads: 2, eos: None, capacity: usize::MAX },
@@ -239,7 +248,7 @@ fn queue_drains_when_requests_exceed_slots() {
     // more requests than KV slots: admission must throttle, slot reuse must
     // recycle capacity, and every request must still complete
     let (cfg, _model, params) = tiny_model(Arch::Gpt2, 77);
-    let store = WeightStore::from_params(&params, &cfg, StoreElem::Fp(formats::BF16), 32);
+    let store = WeightStore::from_params(&params, &cfg, resolve("bf16").unwrap(), 77).unwrap();
     let mut engine = Engine::from_store(
         &store,
         EngineConfig { max_batch: 8, kv_slots: 2, threads: 1, eos: None, capacity: usize::MAX },
