@@ -6,10 +6,17 @@
 //! With more than one client the reported batch occupancy should exceed 1 —
 //! the scheduler is merging independent request streams into shared decode
 //! waves — while per-request results stay identical to serial execution.
+//! `--shared-prefix N` makes every prompt start with the same N tokens (a
+//! system-prompt workload): with the prefix cache enabled the engine
+//! should report prefix hits and reuse K/V across clients. Sharing is
+//! block-granular, so hits need `shared-prefix >= kv-block` (the default
+//! kv-block here is 8 to match the default shared prefix).
 //!
 //! Run: cargo run --release --example serve_load -- \
 //!        [--clients 8] [--requests-per-client 4] [--store fp8_e3m4]
 //!        [--max-batch 8] [--threads 2] [--prompt-len 12] [--max-new 16]
+//!        [--kv-block 8] [--kv-blocks 0] [--prefill-chunk 8]
+//!        [--shared-prefix 8] [--no-prefix-cache]
 
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
@@ -28,6 +35,11 @@ fn main() -> anyhow::Result<()> {
     let prompt_len = args.usize_or("prompt-len", 12);
     let max_new = args.usize_or("max-new", 16);
     let seed = args.u64_or("seed", 2026);
+    let kv_block = args.usize_or("kv-block", 8);
+    let kv_blocks = args.usize_or("kv-blocks", 0);
+    let prefill_chunk = args.usize_or("prefill-chunk", 8);
+    let prefix_cache = !args.flag("no-prefix-cache");
+    let shared_prefix = args.usize_or("shared-prefix", 8).min(prompt_len.saturating_sub(1));
 
     // demo weights: random init snapshotted through the quantized store
     // (swap in `gaussws serve --checkpoint` for trained weights)
@@ -43,16 +55,18 @@ fn main() -> anyhow::Result<()> {
         store.master_bytes() as f64 / store.bytes() as f64
     );
 
-    let engine = Engine::from_store(
-        &store,
-        EngineConfig {
-            max_batch,
-            kv_slots: max_batch,
-            threads,
-            eos: None,
-            capacity: usize::MAX,
-        },
-    );
+    let ecfg = EngineConfig {
+        max_batch,
+        kv_block,
+        kv_blocks,
+        prefill_chunk,
+        prefix_cache,
+        threads,
+        eos: None,
+        capacity: usize::MAX,
+    };
+    ecfg.validate()?;
+    let engine = Engine::from_store(&store, ecfg);
     let handle = engine.spawn();
 
     let corpus = SynthCorpus::generate(SynthSpec {
@@ -62,15 +76,29 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     });
     let span = corpus.tokens.len() - prompt_len - 1;
+    // the shared head every prompt starts with (system-prompt workload)
+    let head: Vec<usize> =
+        corpus.tokens[29..29 + shared_prefix].iter().map(|&t| t as usize).collect();
 
-    println!("{clients} closed-loop clients × {per_client} requests, max_new {max_new}...");
+    println!(
+        "{clients} closed-loop clients × {per_client} requests, max_new {max_new}, \
+         shared prefix {shared_prefix}, prefix cache {}...",
+        if prefix_cache { "on" } else { "off" }
+    );
     let mut joins = Vec::new();
     for c in 0..clients {
         let client = handle.client();
+        let head = head.clone();
         let prompts: Vec<Vec<usize>> = (0..per_client)
             .map(|k| {
                 let start = ((c * per_client + k) * 1777 + 13) % span;
-                corpus.tokens[start..start + prompt_len].iter().map(|&t| t as usize).collect()
+                let mut p = head.clone();
+                p.extend(
+                    corpus.tokens[start..start + prompt_len - shared_prefix]
+                        .iter()
+                        .map(|&t| t as usize),
+                );
+                p
             })
             .collect();
         joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
@@ -106,6 +134,16 @@ fn main() -> anyhow::Result<()> {
             "continuous batching active: mean occupancy {:.2}, max {}",
             stats.mean_occupancy(),
             stats.max_occupancy()
+        );
+    }
+    if prefix_cache && shared_prefix > 0 && stats.prefix_hits == 0 {
+        println!("WARNING: shared-prefix workload produced no prefix hits");
+    } else if prefix_cache {
+        println!(
+            "prefix cache: {} hits ({:.0}% of lookups), {} K/V positions reused",
+            stats.prefix_hits,
+            stats.prefix_hit_rate() * 100.0,
+            stats.prefix_tokens_reused
         );
     }
     Ok(())

@@ -2,10 +2,11 @@
 //! geometries: vector-wise (standard MX) vs square 32×32 (GaussWS). Also
 //! times both quantizers (the square geometry costs nothing extra).
 
-use gaussws::mx::{measure_square, measure_vectorwise, ElemType};
-use gaussws::quant::QuantScheme;
+use gaussws::mx::{measure_square, measure_vectorwise};
+use gaussws::numerics::Rounding;
 use gaussws::prng::gauss::box_muller_pair;
 use gaussws::prng::Philox4x32;
+use gaussws::quant::{fake_quantize, Axis, Codec, Geometry, QuantScheme};
 use gaussws::util::bench::Bencher;
 
 fn randn(seed: u64, n: usize) -> Vec<f64> {
@@ -16,11 +17,11 @@ fn randn(seed: u64, n: usize) -> Vec<f64> {
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let b = if quick { Bencher::quick() } else { Bencher::default() };
-    let elems = [
-        ("INT4", ElemType::Int { bits: 4 }),
-        ("INT8", ElemType::Int { bits: 8 }),
-        ("FP8_e4m3", ElemType::Fp(gaussws::numerics::formats::FP8_E4M3)),
-        ("FP6_e3m2", ElemType::Fp(gaussws::numerics::formats::FP6_E3M2)),
+    let codecs = [
+        ("INT4", Codec::Int { bits: 4 }),
+        ("INT8", Codec::Int { bits: 8 }),
+        ("FP8_e4m3", Codec::Fp(gaussws::numerics::formats::FP8_E4M3)),
+        ("FP6_e3m2", Codec::Fp(gaussws::numerics::formats::FP6_E3M2)),
     ];
     let (rows, cols) = (512, 512);
     let w = randn(1, rows * cols);
@@ -30,9 +31,9 @@ fn main() {
         "{:<10} {:>17} {:>14} {:>17} {:>14}",
         "elem", "vec mismatch %", "vec rms err", "square mismatch %", "square rms err"
     );
-    for (name, elem) in &elems {
-        let rv = measure_vectorwise(&w, rows, cols, 32, elem);
-        let rs = measure_square(&w, rows, cols, 32, elem);
+    for (name, codec) in &codecs {
+        let rv = measure_vectorwise(&w, rows, cols, 32, codec);
+        let rs = measure_square(&w, rows, cols, 32, codec);
         println!(
             "{:<10} {:>16.2}% {:>14.5} {:>16.2}% {:>14.5}",
             name,
@@ -45,14 +46,33 @@ fn main() {
     }
 
     println!("\nquantizer cost (Melem/s):");
-    let int4 = ElemType::Int { bits: 4 };
+    let int4 = Codec::Int { bits: 4 };
     let rv = b.run("vectorwise", || {
-        gaussws::mx::quantize_vectorwise(&w, rows, cols, 32, gaussws::mx::Axis::Row, &int4).data[0]
+        fake_quantize(
+            &w,
+            rows,
+            cols,
+            Geometry::Vector { block: 32, axis: Axis::Row },
+            &int4,
+            Rounding::NearestEven,
+            0,
+        )
+        .data[0]
     });
     let rs = b.run("square", || {
-        gaussws::mx::quantize_square(&w, rows, cols, 32, &int4).data[0]
+        fake_quantize(
+            &w,
+            rows,
+            cols,
+            Geometry::Square { block: 32 },
+            &int4,
+            Rounding::NearestEven,
+            0,
+        )
+        .data[0]
     });
-    // the registry-resolved scheme path must cost the same as the shim
+    // the registry-resolved scheme path must cost the same as the explicit
+    // geometry/codec call
     let scheme = gaussws::quant::resolve("int4").expect("builtin scheme");
     let rq = b.run("scheme int4", || scheme.quantize(&w, rows, cols, 0).data[0]);
     println!(

@@ -1,10 +1,15 @@
-//! Serving-path throughput/latency benchmark: drives the continuous-
-//! batching engine at batch sizes 1/4/16 on the tiny GPT2 config and emits
-//! one `BENCH {json}` record per arm plus an aggregate written to
-//! `BENCH_serve.json` at the workspace root (or `--out <path>`), replacing
-//! the committed placeholder. This is the perf trajectory for the serving
-//! hot path — rerun after engine changes and compare `tokens_per_sec` /
-//! `p95_total_ms` per arm.
+//! Serving-path throughput/latency benchmark: drives the paged continuous-
+//! batching engine on the tiny GPT2 config and emits one `BENCH {json}`
+//! record per arm plus an aggregate written to `BENCH_serve.json` at the
+//! workspace root (or `--out <path>`), replacing the committed placeholder.
+//!
+//! Arms:
+//!   * batch scaling 1/4/16 (paged, block 16, prefix cache on);
+//!   * paged (block 16) vs contiguous-equivalent (one seq_len-sized block
+//!     per sequence — the PR-1 reservation strategy) at batch 8;
+//!   * shared-prefix workload with the prefix cache on vs off at batch 8 —
+//!     the "on" arm must show prefix_hit_rate > 0 AND lower mean block
+//!     occupancy (asserted).
 //!
 //! Run: cargo bench --bench bench_serve [-- --quick --out BENCH_serve.json]
 
@@ -15,44 +20,80 @@ use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::util::json::{arr, num, obj, s, Json};
 use gaussws::util::Args;
 
+struct Arm {
+    label: String,
+    batch: usize,
+    kv_block: usize,
+    prefix_cache: bool,
+    shared_prefix: usize,
+    requests: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_arm(
     store: &WeightStore,
     corpus: &SynthCorpus,
-    batch: usize,
+    arm: &Arm,
     threads: usize,
-    requests: usize,
     prompt_len: usize,
     max_new: usize,
-) -> Json {
+) -> (Json, f64, f64) {
     let mut engine = Engine::from_store(
         store,
-        EngineConfig { max_batch: batch, kv_slots: batch, threads, eos: None, capacity: usize::MAX },
+        EngineConfig {
+            max_batch: arm.batch,
+            kv_block: arm.kv_block,
+            kv_blocks: 0, // auto-size: admission is batch-bound, not block-bound
+            prefill_chunk: 8,
+            prefix_cache: arm.prefix_cache,
+            threads,
+            eos: None,
+            capacity: usize::MAX,
+        },
     );
     let span = corpus.tokens.len() - prompt_len - 1;
-    for id in 0..requests {
+    let head: Vec<usize> =
+        corpus.tokens[41..41 + arm.shared_prefix].iter().map(|&t| t as usize).collect();
+    if arm.shared_prefix > 0 {
+        // warmup request so the fan-out can hit the published chain
+        let mut p = head.clone();
+        p.extend(corpus.tokens[7..7 + prompt_len - arm.shared_prefix].iter().map(|&t| t as usize));
+        engine.enqueue(GenRequest::greedy(u64::MAX, p, max_new)).expect("warmup request");
+        let warm = engine.run_to_completion();
+        assert_eq!(warm.len(), 1, "{}: warmup must complete", arm.label);
+    }
+    for id in 0..arm.requests {
         let start = (id * 2311 + 97) % span;
-        let prompt: Vec<usize> =
-            corpus.tokens[start..start + prompt_len].iter().map(|&t| t as usize).collect();
+        let mut prompt = head.clone();
+        prompt.extend(
+            corpus.tokens[start..start + prompt_len - arm.shared_prefix]
+                .iter()
+                .map(|&t| t as usize),
+        );
         engine.enqueue(GenRequest::greedy(id as u64, prompt, max_new)).expect("valid request");
     }
     let done = engine.run_to_completion();
-    assert_eq!(done.len(), requests, "batch={batch}: all requests must complete");
+    assert_eq!(done.len(), arm.requests, "{}: all requests must complete", arm.label);
     assert!(
-        batch == 1 || engine.stats.max_occupancy() > 1,
-        "batch={batch}: continuous batching inactive"
+        arm.batch == 1 || engine.stats.max_occupancy() > 1,
+        "{}: continuous batching inactive",
+        arm.label
     );
     let record = engine.stats.bench_json(
-        &format!("{}/b{batch}", store.label()),
+        &arm.label,
         vec![
             ("store", s(store.label())),
-            ("batch", num(batch as f64)),
+            ("batch", num(arm.batch as f64)),
             ("threads", num(threads as f64)),
             ("prompt_len", num(prompt_len as f64)),
             ("max_new", num(max_new as f64)),
+            ("kv_block", num(arm.kv_block as f64)),
+            ("prefix_cache", Json::Bool(arm.prefix_cache)),
+            ("shared_prefix", num(arm.shared_prefix as f64)),
         ],
     );
     println!("BENCH {record}");
-    record
+    (record, engine.stats.prefix_hit_rate(), engine.stats.mean_blocks_live())
 }
 
 fn main() {
@@ -90,10 +131,59 @@ fn main() {
         per_slot
     );
     let mut records = Vec::new();
+
+    // ---- batch scaling (paged, block 16) ----
     for batch in [1usize, 4, 16] {
-        let requests = batch * per_slot;
-        records.push(run_arm(&store, &corpus, batch, threads, requests, prompt_len, max_new));
+        let arm = Arm {
+            label: format!("{}/b{batch}", store.label()),
+            batch,
+            kv_block: 16,
+            prefix_cache: true,
+            shared_prefix: 0,
+            requests: batch * per_slot,
+        };
+        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new).0);
     }
+
+    // ---- paged vs contiguous-equivalent reservation at equal batch ----
+    for (tag, kv_block) in [("paged16", 16usize), ("contig", cfg.seq_len)] {
+        let arm = Arm {
+            label: format!("{}/{tag}/b8", store.label()),
+            batch: 8,
+            kv_block,
+            prefix_cache: false,
+            shared_prefix: 0,
+            requests: 8 * per_slot,
+        };
+        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new).0);
+    }
+
+    // ---- shared-prefix workload: prefix cache on vs off at equal batch ----
+    let shared_prefix = prompt_len.saturating_sub(3);
+    let mk_prefix_arm = |on: bool| Arm {
+        label: format!(
+            "{}/prefix-{}/b8",
+            store.label(),
+            if on { "on" } else { "off" }
+        ),
+        batch: 8,
+        kv_block: 4,
+        prefix_cache: on,
+        shared_prefix,
+        requests: 8 * per_slot,
+    };
+    let (rec_on, hit_rate_on, occ_on) =
+        run_arm(&store, &corpus, &mk_prefix_arm(true), threads, prompt_len, max_new);
+    let (rec_off, hit_rate_off, occ_off) =
+        run_arm(&store, &corpus, &mk_prefix_arm(false), threads, prompt_len, max_new);
+    assert!(hit_rate_on > 0.0, "shared-prefix arm must hit the prefix cache");
+    assert_eq!(hit_rate_off, 0.0);
+    assert!(
+        occ_on < occ_off,
+        "prefix sharing must lower mean block occupancy: {occ_on} vs {occ_off}"
+    );
+    records.push(rec_on);
+    records.push(rec_off);
 
     let aggregate = obj(vec![
         ("bench", s("serve")),

@@ -16,9 +16,15 @@
 //!   claim: checkpoints are snapshotted into a low-precision MX weight
 //!   store (BF16/FP8/FP6/FP4/INT square-blockwise, bit-packed,
 //!   dequantize-on-load) and served through a continuous-batching engine
-//!   with per-sequence KV-cache slots, a multi-threaded decode worker pool,
-//!   and p50/p95 latency + tokens/sec accounting. `gaussws serve` and
-//!   `examples/serve_load.rs` drive it end to end.
+//!   with **paged KV-cache memory**: fixed-size position blocks in a
+//!   global refcounted arena ([`nn::kv::PagedKv`] +
+//!   `serve::BlockAllocator`), chunked prefill, cross-request prefix
+//!   caching with copy-on-write, preemption under memory pressure, a
+//!   multi-threaded decode worker pool, and p50/p95 latency + tokens/sec
+//!   + block-occupancy accounting. `gaussws serve` and
+//!   `examples/serve_load.rs` drive it end to end; the storage seam is
+//!   the [`nn::kv::KvStorage`] trait (contiguous `DecodeCache` for
+//!   standalone decode, paged for serving — bit-identical logits).
 //! * **[`quant`]** — the unified quantization seam underneath L3 and L4:
 //!   one `QuantScheme` trait (codec × rounding × scale geometry) plus a
 //!   label registry (`"bf16"`, `"fp8_e3m4"`, `"int8_sr"`, …) shared by

@@ -67,7 +67,9 @@ fn print_usage() {
          \x20 gaussws serve [--checkpoint runs/x.ck | --snapshot w.gwqs] [--store fp8_e3m4]\n\
          \x20               [--arch gpt2 --n-layer 2 --d-model 64 --n-head 2 --d-ff 128\n\
          \x20                --vocab 256 --seq-len 64] [--save-snapshot w.gwqs]\n\
-         \x20               [--requests 32 --max-batch 8 --kv-slots 8 --threads N]\n\
+         \x20               [--requests 32 --max-batch 8 --threads N]\n\
+         \x20               [--kv-block 16 --kv-blocks 0(auto) --prefill-chunk 8]\n\
+         \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
          \x20 gaussws info"
@@ -405,13 +407,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     );
+    let kv_block = args.usize_or("kv-block", 16);
+    let kv_blocks = args.usize_or("kv-blocks", 0);
+    let prefill_chunk = args.usize_or("prefill-chunk", 8);
+    let prefix_cache = !args.flag("no-prefix-cache");
     let ecfg = EngineConfig {
         max_batch,
-        kv_slots: args.usize_or("kv-slots", max_batch),
+        kv_block,
+        kv_blocks,
+        prefill_chunk,
+        prefix_cache,
         threads,
         eos: args.get("eos").and_then(|v| v.parse().ok()),
         capacity: usize::MAX,
     };
+    // degenerate paging configs fail here with a clean error, not a panic
+    ecfg.validate()?;
     let mut engine = Engine::from_store(&store, ecfg);
 
     // ---- optional deployment-quality eval (Table C.1 check) ----
@@ -441,6 +452,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 24).max(1);
     let temperature = args.f64_or("temperature", 0.0) as f32;
     let top_k = args.usize_or("top-k", 0);
+    // --shared-prefix N: every prompt starts with the same N tokens (a
+    // system-prompt-style workload; exercises the prefix cache)
+    let shared_prefix = args.usize_or("shared-prefix", 0).min(prompt_len.saturating_sub(1));
+    if prefix_cache && shared_prefix > 0 && shared_prefix < kv_block {
+        println!(
+            "note: --shared-prefix {shared_prefix} is smaller than --kv-block {kv_block}; \
+             prefix sharing is block-granular, so expect no hits (try --kv-block {shared_prefix})"
+        );
+    }
     let corpus = SynthCorpus::generate(SynthSpec {
         vocab: mcfg.vocab,
         len: 1 << 16,
@@ -448,10 +468,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     });
     let span = corpus.tokens.len() - prompt_len - 1;
+    let head: Vec<usize> =
+        corpus.tokens[17..17 + shared_prefix].iter().map(|&t| t as usize).collect();
     for id in 0..n_req {
         let start = (id * 2048 + 31) % span;
-        let prompt: Vec<usize> =
-            corpus.tokens[start..start + prompt_len].iter().map(|&t| t as usize).collect();
+        let mut prompt = head.clone();
+        prompt.extend(
+            corpus.tokens[start..start + prompt_len - shared_prefix]
+                .iter()
+                .map(|&t| t as usize),
+        );
         engine.enqueue(GenRequest {
             id: id as u64,
             prompt,
@@ -464,8 +490,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let done = engine.run_to_completion();
     println!();
     println!("{}", engine.stats.render(store.label()));
-    let (_, slots, high_water, kv_bytes) = engine.kv_usage();
-    println!("kv pool: {slots} slots, high water {high_water}, {kv_bytes} bytes");
+    let (live, blocks, high_water, kv_bytes) = engine.kv_usage();
+    println!(
+        "kv arena: {blocks} blocks x {} positions, live {live}, high water {high_water}, \
+         {kv_bytes} bytes budget, {} copy-on-write copies",
+        kv_block,
+        engine.cow_copies()
+    );
+    let pc = engine.prefix_cache_stats();
+    println!(
+        "prefix index: {} entries ({} insertions, {} evictions)",
+        pc.entries, pc.insertions, pc.evictions
+    );
     if done.len() != n_req {
         bail!("served {} of {n_req} requests", done.len());
     }
@@ -479,6 +515,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("threads", num(threads as f64)),
             ("prompt_len", num(prompt_len as f64)),
             ("max_new", num(max_new as f64)),
+            ("kv_block", num(kv_block as f64)),
+            ("prefill_chunk", num(prefill_chunk as f64)),
+            ("prefix_cache", gaussws::util::json::Json::Bool(prefix_cache)),
+            ("shared_prefix", num(shared_prefix as f64)),
         ],
     );
     println!("BENCH {record}");

@@ -1,4 +1,5 @@
-//! Microscaling (MX)-style blockwise quantization substrate.
+//! Microscaling (MX)-style blockwise substrate — the geometry helpers the
+//! PQT layers build on.
 //!
 //! MX (Rouhani et al., 2023) groups tensor elements into blocks of 32 that
 //! share one power-of-two scale; each element is stored in a narrow internal
@@ -11,98 +12,14 @@
 //!   where adjacent vectors share the scale. Transpose-commutative, which is
 //!   why GaussWS groups parameters this way (§3.2).
 //!
-//! **Deprecation note (kept for one PR):** the quantization engine moved to
-//! [`crate::quant`] — schemes composed from codec × rounding × geometry,
-//! resolved by label through `quant::Registry`. The free functions here
-//! ([`quantize_square`], [`quantize_vectorwise`], [`po2_scale`]) and
-//! [`ElemType`] are thin compatibility shims over it and will be removed;
-//! new code should call `quant::resolve("<label>")` /
-//! [`crate::quant::fake_quantize`] directly.
-
-use crate::numerics::fpformat::{FpFormat, Rounding};
-use crate::quant::{fake_quantize, Codec, Geometry};
+//! The quantization engine itself lives in [`crate::quant`] — schemes
+//! composed from codec × rounding × geometry, resolved by label through
+//! `quant::Registry`; call `quant::resolve("<label>")` or
+//! [`crate::quant::fake_quantize`] directly. (The PR-2 square/vector-wise
+//! quantizer compatibility shims are gone.) What remains here are the f32
+//! block-geometry helpers the training-side PQT path uses.
 
 pub use crate::quant::{Axis, Quantized};
-
-/// Internal element datatype for quantization.
-///
-/// Shim over [`crate::quant::Codec`] (which adds the f32 passthrough arm);
-/// prefer building a [`crate::quant::Scheme`] through the registry.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum ElemType {
-    /// Signed integer with `bits` total (symmetric, no zero-point).
-    Int { bits: u32 },
-    /// Low-precision float.
-    Fp(FpFormat),
-}
-
-impl ElemType {
-    /// The equivalent [`crate::quant::Codec`].
-    pub fn to_codec(&self) -> Codec {
-        match self {
-            ElemType::Int { bits } => Codec::Int { bits: *bits },
-            ElemType::Fp(f) => Codec::Fp(*f),
-        }
-    }
-
-    /// Largest representable magnitude at scale 1.
-    pub fn max_code(&self) -> f64 {
-        self.to_codec().max_code()
-    }
-
-    /// Quantize a pre-scaled value (RNE) and clamp to range.
-    pub fn quantize(&self, x: f64) -> f64 {
-        self.to_codec().quantize(x, Rounding::NearestEven, 0)
-    }
-}
-
-/// Compute the power-of-two shared scale for a block with max-abs `amax`
-/// (MX convention; see [`crate::quant::po2_scale`]).
-pub fn po2_scale(amax: f64, elem: &ElemType) -> f64 {
-    crate::quant::po2_scale(amax, &elem.to_codec())
-}
-
-/// Vector-wise fake quantization with 1×`block` groups along `axis`
-/// (round-to-nearest-even). Shim over [`crate::quant::fake_quantize`].
-pub fn quantize_vectorwise(
-    w: &[f64],
-    rows: usize,
-    cols: usize,
-    block: usize,
-    axis: Axis,
-    elem: &ElemType,
-) -> Quantized {
-    fake_quantize(
-        w,
-        rows,
-        cols,
-        Geometry::Vector { block, axis },
-        &elem.to_codec(),
-        Rounding::NearestEven,
-        0,
-    )
-}
-
-/// Square-blockwise fake quantization with `block`×`block` groups — the
-/// GaussWS geometry (round-to-nearest-even). Shim over
-/// [`crate::quant::fake_quantize`].
-pub fn quantize_square(
-    w: &[f64],
-    rows: usize,
-    cols: usize,
-    block: usize,
-    elem: &ElemType,
-) -> Quantized {
-    fake_quantize(
-        w,
-        rows,
-        cols,
-        Geometry::Square { block },
-        &elem.to_codec(),
-        Rounding::NearestEven,
-        0,
-    )
-}
 
 /// Square-blockwise max-abs of an f32 matrix — the `max_bl(|w|)` of Eq. 3.
 /// Returns the block grid row-major, `⌈rows/block⌉ × ⌈cols/block⌉`.
@@ -142,8 +59,9 @@ pub fn transpose(w: &[f64], rows: usize, cols: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::numerics::Rounding;
     use crate::prng::Philox4x32;
-    use crate::quant::{QuantScheme, Scheme};
+    use crate::quant::{fake_quantize, Codec, Geometry};
 
     fn randn(seed: u64, n: usize) -> Vec<f64> {
         let mut g = Philox4x32::new(seed);
@@ -161,24 +79,10 @@ mod tests {
         out
     }
 
-    const INT4: ElemType = ElemType::Int { bits: 4 };
+    const INT4: Codec = Codec::Int { bits: 4 };
 
-    #[test]
-    fn quantization_is_idempotent() {
-        let w = randn(1, 16 * 16);
-        let q = quantize_square(&w, 16, 16, 4, &INT4);
-        let q2 = quantize_square(&q.data, 16, 16, 4, &INT4);
-        assert_eq!(q.data, q2.data);
-    }
-
-    #[test]
-    fn error_bounded_by_half_scale() {
-        let w = randn(2, 32 * 32);
-        let q = quantize_square(&w, 32, 32, 32, &INT4);
-        let s = q.scales[0];
-        for (a, b) in w.iter().zip(q.data.iter()) {
-            assert!((a - b).abs() <= 0.5 * s + 1e-12, "{a} vs {b} (s={s})");
-        }
+    fn square(w: &[f64], rows: usize, cols: usize, block: usize, codec: &Codec) -> Quantized {
+        fake_quantize(w, rows, cols, Geometry::Square { block }, codec, Rounding::NearestEven, 0)
     }
 
     #[test]
@@ -186,10 +90,10 @@ mod tests {
         // quantize(W)^T == quantize(W^T) for square blocks — §2.1 claim.
         let (rows, cols) = (64, 96);
         let w = randn(3, rows * cols);
-        let q = quantize_square(&w, rows, cols, 32, &INT4);
+        let q = square(&w, rows, cols, 32, &INT4);
         let qt = transpose(&q.data, rows, cols);
         let wt = transpose(&w, rows, cols);
-        let q_of_t = quantize_square(&wt, cols, rows, 32, &INT4);
+        let q_of_t = square(&wt, cols, rows, 32, &INT4);
         assert_eq!(qt, q_of_t.data);
     }
 
@@ -198,42 +102,22 @@ mod tests {
         // The Fig. D.1 failure: vector-wise along rows != along cols.
         let (rows, cols) = (32, 32);
         let w = randn(4, rows * cols);
-        let q = quantize_vectorwise(&w, rows, cols, 2, Axis::Row, &INT4);
+        let vector = |w: &[f64], r: usize, c: usize| {
+            fake_quantize(
+                w,
+                r,
+                c,
+                Geometry::Vector { block: 2, axis: Axis::Row },
+                &INT4,
+                Rounding::NearestEven,
+                0,
+            )
+        };
+        let q = vector(&w, rows, cols);
         let qt = transpose(&q.data, rows, cols);
         let wt = transpose(&w, rows, cols);
-        let q_of_t = quantize_vectorwise(&wt, cols, rows, 2, Axis::Row, &INT4);
+        let q_of_t = vector(&wt, cols, rows);
         assert_ne!(qt, q_of_t.data, "vector-wise should NOT commute with transpose");
-    }
-
-    #[test]
-    fn po2_scales_are_powers_of_two() {
-        let w = randn(5, 64 * 64);
-        let q = quantize_square(&w, 64, 64, 32, &INT4);
-        for &s in &q.scales {
-            assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of two");
-        }
-    }
-
-    #[test]
-    fn shim_matches_scheme_quantize_bit_for_bit() {
-        // the deprecated shims must stay bit-identical to the quant engine
-        use crate::numerics::fpformat::formats::FP8_E3M4;
-        let w = randn(9, 48 * 40);
-        let shim = quantize_square(&w, 48, 40, 32, &ElemType::Fp(FP8_E3M4));
-        let scheme = crate::quant::resolve("fp8_e3m4").unwrap();
-        let direct = scheme.quantize(&w, 48, 40, 0);
-        assert_eq!(shim.data, direct.data);
-        assert_eq!(shim.scales, direct.scales);
-        // elementwise scheme helpers agree with the ElemType shim
-        let s = Scheme::new(
-            "int4",
-            INT4.to_codec(),
-            crate::numerics::Rounding::NearestEven,
-            crate::quant::Geometry::None,
-        );
-        for &x in w.iter().take(32) {
-            assert_eq!(INT4.quantize(x), s.codec.quantize(x, s.rounding, 0));
-        }
     }
 
     #[test]
@@ -259,24 +143,9 @@ mod tests {
     fn ragged_edges_handled() {
         // rows/cols not multiples of the block size
         let w = randn(7, 37 * 45);
-        let q = quantize_square(&w, 37, 45, 32, &INT4);
+        let q = square(&w, 37, 45, 32, &INT4);
         assert_eq!(q.scales.len(), 2 * 2);
-        let v = quantize_vectorwise(&w, 37, 45, 32, Axis::Row, &INT4);
-        assert_eq!(v.data.len(), w.len());
         let m = block_absmax_f32(&w.iter().map(|&x| x as f32).collect::<Vec<_>>(), 37, 45, 32);
         assert_eq!(m.len(), 4);
-    }
-
-    #[test]
-    fn fp_elem_type_quantizes_with_format() {
-        use crate::numerics::fpformat::formats::FP8_E4M3;
-        let e = ElemType::Fp(FP8_E4M3);
-        let w = randn(8, 32 * 32);
-        let q = quantize_square(&w, 32, 32, 32, &e);
-        // every dequantized value representable in e4m3 at its scale
-        for (i, &v) in q.data.iter().enumerate() {
-            let s = q.scales[0];
-            assert!(FP8_E4M3.is_representable(v / s), "elem {i}: {v}");
-        }
     }
 }

@@ -6,8 +6,13 @@
 //! Vector-wise scales therefore differ between the two passes, so the network
 //! effectively trains through a different weight matrix than it evaluates.
 //! Square 32×32 blocks make the two views identical.
+//!
+//! Measurements run through the [`crate::quant`] engine directly (RNE, an
+//! explicit [`Codec`] per element type).
 
-use super::block::{quantize_square, quantize_vectorwise, transpose, Axis, ElemType, Quantized};
+use super::block::transpose;
+use crate::numerics::Rounding;
+use crate::quant::{fake_quantize, Axis, Codec, Geometry, Quantized};
 
 /// Result of a consistency measurement on one matrix.
 #[derive(Debug, Clone)]
@@ -23,21 +28,37 @@ pub struct ConsistencyReport {
     pub rms_error_fwd: f64,
 }
 
-/// Quantize `w` for the forward pass (blocks along `fwd_axis`) and for the
-/// backward pass (quantize `wᵀ` along the same logical axis, transpose
+fn quantize_vec_col(w: &[f64], rows: usize, cols: usize, block: usize, codec: &Codec) -> Quantized {
+    fake_quantize(
+        w,
+        rows,
+        cols,
+        Geometry::Vector { block, axis: Axis::Col },
+        codec,
+        Rounding::NearestEven,
+        0,
+    )
+}
+
+fn fq_square(w: &[f64], rows: usize, cols: usize, block: usize, codec: &Codec) -> Quantized {
+    fake_quantize(w, rows, cols, Geometry::Square { block }, codec, Rounding::NearestEven, 0)
+}
+
+/// Quantize `w` for the forward pass (blocks along the inner dim) and for
+/// the backward pass (quantize `wᵀ` along the same logical axis, transpose
 /// back), then compare element-wise.
 pub fn measure_vectorwise(
     w: &[f64],
     rows: usize,
     cols: usize,
     block: usize,
-    elem: &ElemType,
+    codec: &Codec,
 ) -> ConsistencyReport {
     // Forward: inner dim = rows of W -> 1×block vectors down the columns.
-    let fwd = quantize_vectorwise(w, rows, cols, block, Axis::Col, elem);
+    let fwd = quantize_vec_col(w, rows, cols, block, codec);
     // Backward: W^T with inner dim = rows of W^T = cols of W.
     let wt = transpose(w, rows, cols);
-    let bwd_t = quantize_vectorwise(&wt, cols, rows, block, Axis::Col, elem);
+    let bwd_t = quantize_vec_col(&wt, cols, rows, block, codec);
     let bwd = transpose(&bwd_t.data, cols, rows);
     compare(w, &fwd, &bwd)
 }
@@ -49,11 +70,11 @@ pub fn measure_square(
     rows: usize,
     cols: usize,
     block: usize,
-    elem: &ElemType,
+    codec: &Codec,
 ) -> ConsistencyReport {
-    let fwd = quantize_square(w, rows, cols, block, elem);
+    let fwd = fq_square(w, rows, cols, block, codec);
     let wt = transpose(w, rows, cols);
-    let bwd_t = quantize_square(&wt, cols, rows, block, elem);
+    let bwd_t = fq_square(&wt, cols, rows, block, codec);
     let bwd = transpose(&bwd_t.data, cols, rows);
     compare(w, &fwd, &bwd)
 }
@@ -95,13 +116,13 @@ pub fn fig_d1_example(seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
         w[2 * i] = a;
         w[2 * i + 1] = b;
     }
-    let elem = ElemType::Int { bits: 4 };
+    let codec = Codec::Int { bits: 4 };
     let bwd = {
         let wt = transpose(&w, 4, 4);
-        let q = quantize_vectorwise(&wt, 4, 4, 2, Axis::Col, &elem);
+        let q = quantize_vec_col(&wt, 4, 4, 2, &codec);
         transpose(&q.data, 4, 4)
     };
-    let fwd = quantize_vectorwise(&w, 4, 4, 2, Axis::Col, &elem).data;
+    let fwd = quantize_vec_col(&w, 4, 4, 2, &codec).data;
     (w, bwd, fwd)
 }
 
@@ -116,7 +137,7 @@ mod tests {
         (0..n).map(|_| box_muller_pair(&mut g).0).collect()
     }
 
-    const INT4: ElemType = ElemType::Int { bits: 4 };
+    const INT4: Codec = Codec::Int { bits: 4 };
 
     #[test]
     fn square_blocks_are_always_consistent() {

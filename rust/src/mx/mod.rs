@@ -1,14 +1,15 @@
 //! Microscaling (MX) quantization substrate: blockwise scaling geometries
 //! and the forward/backward consistency analysis of §2.1 / Fig. D.1.
 //!
-//! The quantization engine itself lives in [`crate::quant`] now;
-//! `quantize_square` / `quantize_vectorwise` / `ElemType` here are thin
-//! deprecated shims kept for one PR (see `block` module docs).
+//! The quantization engine lives in [`crate::quant`] (schemes resolved by
+//! label through `quant::Registry`); this module keeps the f32 geometry
+//! helpers ([`block_absmax_f32`], [`transpose`]) and the consistency
+//! measurements. The PR-2 deprecation shims (the square/vector-wise
+//! quantizer free functions, the element-type enum, the po2 scale helper)
+//! have been deleted — call `quant::resolve`/`quant::fake_quantize`.
 
 pub mod block;
 pub mod consistency;
 
-pub use block::{
-    block_absmax_f32, quantize_square, quantize_vectorwise, transpose, Axis, ElemType, Quantized,
-};
+pub use block::{block_absmax_f32, transpose, Axis, Quantized};
 pub use consistency::{fig_d1_example, measure_square, measure_vectorwise, ConsistencyReport};

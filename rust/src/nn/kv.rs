@@ -1,0 +1,436 @@
+//! KV-cache storage substrate for incremental decode: the [`KvStorage`]
+//! trait abstracts *where* per-position K/V rows live so the transformer's
+//! decode math ([`crate::nn::transformer::Transformer::decode_step`] /
+//! `prefill_chunk`) is storage-agnostic.
+//!
+//! Two implementations:
+//!
+//! * [`crate::nn::transformer::DecodeCache`] — one contiguous
+//!   (capacity × d_model) K and V matrix per layer. Simple, exactly the
+//!   PR-1 layout; used by training-side eval and standalone decode.
+//! * [`PagedKv`] — the serving layout: positions are grouped into
+//!   fixed-size [`KvBlock`]s (e.g. 16 positions each, all layers) chained
+//!   through a per-sequence block table. Blocks are `Arc`-shared, so
+//!   identical prompt prefixes across requests can reference the *same*
+//!   physical block (cross-request prefix caching) and a sequence only
+//!   ever writes blocks it holds exclusively — the serve-side
+//!   [`crate::serve::kvcache::BlockAllocator`] copy-on-writes a shared
+//!   tail before any append.
+//!
+//! The paged layout exists for memory, not math: a contiguous cache
+//! reserves `capacity` positions per sequence up front regardless of how
+//! many a request actually uses, while paged allocation grows a sequence
+//! block-by-block, so arena admission can be bounded by *blocks actually
+//! in use*. Decode results are bit-identical between the two (see
+//! `tests/paged_suite.rs`).
+
+use crate::config::schema::ModelConfig;
+use std::sync::Arc;
+
+/// One fixed-size position block: the K and V rows of `block_size`
+/// consecutive sequence positions for *every* layer, laid out layer-major
+/// (`(layer * block_size + slot) * d_model`). This is the unit of KV-cache
+/// allocation, sharing, and copy-on-write in the serve layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvBlock {
+    /// Arena identity (block-table entry). Standalone [`PagedKv`]s number
+    /// their private blocks 0..; the serve arena assigns global ids.
+    pub id: u32,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    block_size: usize,
+    d_model: usize,
+}
+
+impl KvBlock {
+    pub fn new(id: u32, n_layer: usize, block_size: usize, d_model: usize) -> KvBlock {
+        assert!(block_size > 0 && d_model > 0 && n_layer > 0);
+        let n = n_layer * block_size * d_model;
+        KvBlock { id, k: vec![0.0; n], v: vec![0.0; n], block_size, d_model }
+    }
+
+    /// Positions this block can hold.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Bytes of K/V storage in this block.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn off(&self, layer: usize, slot: usize) -> usize {
+        debug_assert!(slot < self.block_size);
+        (layer * self.block_size + slot) * self.d_model
+    }
+
+    /// K row of `layer` at in-block position `slot`.
+    pub fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.off(layer, slot);
+        &self.k[o..o + self.d_model]
+    }
+
+    /// V row of `layer` at in-block position `slot`.
+    pub fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.off(layer, slot);
+        &self.v[o..o + self.d_model]
+    }
+
+    /// Write the K and V rows of `layer` at in-block position `slot`.
+    pub fn write(&mut self, layer: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let o = self.off(layer, slot);
+        self.k[o..o + self.d_model].copy_from_slice(k);
+        self.v[o..o + self.d_model].copy_from_slice(v);
+    }
+
+    /// Copy another block's K/V contents into this one (copy-on-write),
+    /// keeping this block's own `id`.
+    pub fn copy_contents_from(&mut self, other: &KvBlock) {
+        assert_eq!(self.k.len(), other.k.len(), "block geometry mismatch");
+        self.k.copy_from_slice(&other.k);
+        self.v.copy_from_slice(&other.v);
+    }
+}
+
+/// Storage interface for incremental decode: absolute sequence positions
+/// in, K/V rows out. The transformer stages the rows of each new position
+/// layer-by-layer with [`KvStorage::write`], reads any position `< len() +
+/// staged` during attention, and [`KvStorage::commit`]s once every layer
+/// of the wave's positions has been written.
+pub trait KvStorage {
+    /// Committed positions (== the next position to be decoded).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum positions this cache can hold.
+    fn capacity(&self) -> usize;
+
+    fn is_full(&self) -> bool {
+        self.len() >= self.capacity()
+    }
+
+    /// Stage the K/V rows of `layer` for absolute position `pos`
+    /// (`len() <= pos < capacity()`).
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// K row of `layer` at absolute position `pos` (committed or staged).
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32];
+
+    /// V row of `layer` at absolute position `pos` (committed or staged).
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32];
+
+    /// Commit `n` staged positions: `len()` advances by `n`.
+    fn commit(&mut self, n: usize);
+}
+
+/// Paged per-sequence KV cache: a chain of [`KvBlock`]s (the block table)
+/// mapping logical position `p` to block `p / block_size`, slot
+/// `p % block_size`. Blocks are `Arc`-shared; writes require the target
+/// block to be held exclusively (the serve scheduler copy-on-writes a
+/// shared tail via its allocator before every append wave).
+#[derive(Debug)]
+pub struct PagedKv {
+    n_layer: usize,
+    d_model: usize,
+    block_size: usize,
+    capacity: usize,
+    len: usize,
+    /// The block table: logical block `i` backs positions
+    /// `[i*block_size, (i+1)*block_size)`.
+    blocks: Vec<Arc<KvBlock>>,
+    /// Standalone mode allocates private blocks on demand; the serve path
+    /// disables this so every block goes through the arena budget.
+    auto_grow: bool,
+}
+
+impl PagedKv {
+    /// Standalone paged cache (private blocks, allocated on demand) — the
+    /// drop-in paged counterpart of
+    /// [`crate::nn::transformer::DecodeCache::new`].
+    pub fn new(cfg: &ModelConfig, block_size: usize, capacity: usize) -> PagedKv {
+        PagedKv::with_auto_grow(cfg, block_size, capacity, true)
+    }
+
+    /// A paged cache whose blocks must be provided externally
+    /// ([`PagedKv::push_block`] / [`PagedKv::adopt_prefix`]) — used by the
+    /// serve arena so allocation stays under its budget.
+    pub fn external(cfg: &ModelConfig, block_size: usize, capacity: usize) -> PagedKv {
+        PagedKv::with_auto_grow(cfg, block_size, capacity, false)
+    }
+
+    fn with_auto_grow(
+        cfg: &ModelConfig,
+        block_size: usize,
+        capacity: usize,
+        auto_grow: bool,
+    ) -> PagedKv {
+        assert!(block_size > 0, "kv block size must be positive");
+        PagedKv {
+            n_layer: cfg.n_layer,
+            d_model: cfg.d_model,
+            block_size,
+            capacity: capacity.min(cfg.seq_len),
+            len: 0,
+            blocks: Vec::new(),
+            auto_grow,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks currently in the chain.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The block table: physical block ids in logical order.
+    pub fn block_table(&self) -> Vec<u32> {
+        self.blocks.iter().map(|b| b.id).collect()
+    }
+
+    /// Positions the existing chain can still absorb without a new block.
+    pub fn staged_room(&self) -> usize {
+        let chain = (self.blocks.len() * self.block_size).saturating_sub(self.len);
+        chain.min(self.capacity.saturating_sub(self.len))
+    }
+
+    /// Blocks that must be appended to hold `n_tokens` more positions.
+    pub fn blocks_needed(&self, n_tokens: usize) -> usize {
+        let have = self.blocks.len() * self.block_size;
+        (self.len + n_tokens).saturating_sub(have).div_ceil(self.block_size)
+    }
+
+    /// The next append lands inside an existing block (as opposed to a
+    /// block not yet in the chain).
+    pub fn next_write_in_chain(&self) -> bool {
+        self.len / self.block_size < self.blocks.len()
+    }
+
+    /// The block the next append writes into, if already in the chain.
+    pub fn tail_block(&self) -> Option<&Arc<KvBlock>> {
+        if self.next_write_in_chain() {
+            Some(&self.blocks[self.len / self.block_size])
+        } else {
+            None
+        }
+    }
+
+    /// Append an externally-allocated (exclusively held) block.
+    pub fn push_block(&mut self, b: Arc<KvBlock>) {
+        assert_eq!(b.block_size, self.block_size, "block size mismatch");
+        assert_eq!(b.d_model, self.d_model, "d_model mismatch");
+        self.blocks.push(b);
+    }
+
+    /// Swap the block the next append writes into for `fresh`
+    /// (copy-on-write), returning the displaced block so the caller can
+    /// drop its reference.
+    pub fn replace_tail(&mut self, fresh: Arc<KvBlock>) -> Arc<KvBlock> {
+        let idx = self.len / self.block_size;
+        assert!(idx < self.blocks.len(), "replace_tail with no writable block in the chain");
+        std::mem::replace(&mut self.blocks[idx], fresh)
+    }
+
+    /// Adopt a shared prefix chain covering `positions` committed
+    /// positions (cross-request prefix reuse). The cache must be empty.
+    pub fn adopt_prefix(&mut self, blocks: &[Arc<KvBlock>], positions: usize) {
+        assert_eq!(self.len, 0, "adopt_prefix on a non-empty cache");
+        assert!(self.blocks.is_empty(), "adopt_prefix on a non-empty chain");
+        let covering = positions.div_ceil(self.block_size);
+        assert!(covering <= blocks.len(), "prefix chain too short for {positions} positions");
+        assert!(positions <= self.capacity, "prefix longer than cache capacity");
+        self.blocks.extend(blocks[..covering].iter().cloned());
+        self.len = positions;
+    }
+
+    /// Drain the chain for release back to the arena; the cache resets to
+    /// empty and can be re-armed (preemption → later re-prefill).
+    pub fn take_blocks(&mut self) -> Vec<Arc<KvBlock>> {
+        self.len = 0;
+        std::mem::take(&mut self.blocks)
+    }
+
+    /// The chain prefix covering the first `positions` positions (e.g. the
+    /// prompt's blocks, for prefix-index insertion).
+    pub fn blocks_covering(&self, positions: usize) -> &[Arc<KvBlock>] {
+        let covering = positions.div_ceil(self.block_size);
+        assert!(covering <= self.blocks.len(), "{positions} positions not materialized");
+        &self.blocks[..covering]
+    }
+
+    /// Bytes of K/V storage referenced by this chain (shared blocks count
+    /// fully; the arena tracks unique bytes).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum()
+    }
+}
+
+impl KvStorage for PagedKv {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(pos >= self.len, "rewriting a committed position");
+        assert!(pos < self.capacity, "position {pos} beyond capacity {}", self.capacity);
+        let lb = pos / self.block_size;
+        while lb >= self.blocks.len() {
+            assert!(
+                self.auto_grow,
+                "no block reserved for position {pos} (scheduler must reserve before the wave)"
+            );
+            let id = self.blocks.len() as u32;
+            self.blocks.push(Arc::new(KvBlock::new(
+                id,
+                self.n_layer,
+                self.block_size,
+                self.d_model,
+            )));
+        }
+        let block = Arc::get_mut(&mut self.blocks[lb])
+            .expect("append into a shared block (copy-on-write was skipped)");
+        block.write(layer, pos % self.block_size, k, v);
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.blocks[pos / self.block_size].k_row(layer, pos % self.block_size)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.blocks[pos / self.block_size].v_row(layer, pos % self.block_size)
+    }
+
+    fn commit(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(self.len <= self.blocks.len() * self.block_size);
+        debug_assert!(self.len <= self.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::Arch;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny(Arch::Gpt2)
+    }
+
+    #[test]
+    fn block_rows_roundtrip() {
+        let mut b = KvBlock::new(7, 2, 4, 8);
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        b.write(1, 3, &k, &v);
+        assert_eq!(b.k_row(1, 3), &k[..]);
+        assert_eq!(b.v_row(1, 3), &v[..]);
+        assert_eq!(b.k_row(0, 3), &[0.0; 8]);
+        assert!(b.bytes() > 0);
+        assert_eq!(b.id, 7);
+    }
+
+    #[test]
+    fn paged_write_read_commit_across_blocks() {
+        let c = cfg();
+        let mut kv = PagedKv::new(&c, 4, 10);
+        let row = vec![1.5f32; c.d_model];
+        for pos in 0..6 {
+            for l in 0..c.n_layer {
+                kv.write(l, pos, &row, &row);
+            }
+            kv.commit(1);
+        }
+        assert_eq!(kv.len(), 6);
+        assert_eq!(kv.n_blocks(), 2, "6 positions at block 4 => 2 blocks");
+        assert_eq!(kv.block_table(), vec![0, 1]);
+        assert_eq!(kv.k_row(1, 5), &row[..]);
+        assert_eq!(kv.staged_room(), 2);
+        assert_eq!(kv.blocks_needed(2), 0);
+        assert_eq!(kv.blocks_needed(3), 1);
+        assert!(kv.next_write_in_chain());
+    }
+
+    #[test]
+    fn external_paged_requires_reserved_blocks() {
+        let c = cfg();
+        let mut kv = PagedKv::external(&c, 4, 16);
+        assert!(!kv.next_write_in_chain());
+        let b = Arc::new(KvBlock::new(3, c.n_layer, 4, c.d_model));
+        kv.push_block(b);
+        let row = vec![0.5f32; c.d_model];
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &row, &row);
+        }
+        kv.commit(1);
+        assert_eq!(kv.block_table(), vec![3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no block reserved")]
+    fn external_paged_panics_without_reservation() {
+        let c = cfg();
+        let mut kv = PagedKv::external(&c, 4, 16);
+        let row = vec![0.0f32; c.d_model];
+        kv.write(0, 0, &row, &row);
+    }
+
+    #[test]
+    fn adopt_prefix_and_take_blocks() {
+        let c = cfg();
+        let shared: Vec<Arc<KvBlock>> =
+            (0..3).map(|i| Arc::new(KvBlock::new(i, c.n_layer, 4, c.d_model))).collect();
+        let mut kv = PagedKv::external(&c, 4, 32);
+        // 6 positions need only the first 2 of the 3 cached blocks
+        kv.adopt_prefix(&shared, 6);
+        assert_eq!(kv.len(), 6);
+        assert_eq!(kv.block_table(), vec![0, 1]);
+        assert!(Arc::strong_count(&shared[0]) == 2);
+        assert!(Arc::strong_count(&shared[2]) == 1);
+        let drained = kv.take_blocks();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.n_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared block")]
+    fn shared_tail_write_panics_without_cow() {
+        let c = cfg();
+        let block = Arc::new(KvBlock::new(0, c.n_layer, 4, c.d_model));
+        let _other_holder = block.clone();
+        let mut kv = PagedKv::external(&c, 4, 16);
+        kv.adopt_prefix(&[block], 2);
+        let row = vec![0.0f32; c.d_model];
+        kv.write(0, 2, &row, &row); // position 2 lives in the shared block
+    }
+
+    #[test]
+    fn replace_tail_swaps_for_exclusive_copy() {
+        let c = cfg();
+        let block = Arc::new(KvBlock::new(0, c.n_layer, 4, c.d_model));
+        let holder = block.clone();
+        let mut kv = PagedKv::external(&c, 4, 16);
+        kv.adopt_prefix(&[block], 2);
+        let mut fresh = KvBlock::new(9, c.n_layer, 4, c.d_model);
+        fresh.copy_contents_from(&holder);
+        let old = kv.replace_tail(Arc::new(fresh));
+        assert_eq!(old.id, 0);
+        assert_eq!(kv.block_table(), vec![9]);
+        let row = vec![2.0f32; c.d_model];
+        for l in 0..c.n_layer {
+            kv.write(l, 2, &row, &row); // now exclusive: append works
+        }
+        kv.commit(1);
+        assert_eq!(kv.len(), 3);
+    }
+}

@@ -1,12 +1,15 @@
 //! Neural-network substrate: f32 tensor ops, a GPT2/Llama2 transformer with
 //! both a train-shaped full forward (evaluation path) and an incremental
-//! KV-cache decode (serving path), and the rust-side optimizers that apply
-//! HLO-computed gradients.
+//! KV-cache decode (serving path, storage-generic over [`kv::KvStorage`]
+//! with contiguous and paged block-table implementations), and the
+//! rust-side optimizers that apply HLO-computed gradients.
 
+pub mod kv;
 pub mod optim;
 pub mod tensor;
 pub mod transformer;
 
+pub use kv::{KvBlock, KvStorage, PagedKv};
 pub use optim::{AdamMini, AdamW, LrSchedule, Opt};
 pub use tensor::Mat;
 pub use transformer::{DecodeCache, Params, Transformer};

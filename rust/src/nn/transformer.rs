@@ -1,14 +1,19 @@
 //! GPT2/Llama2-style transformer for the rust inference paths: the
 //! train-shaped full forward (perplexity of fake-quantized checkpoints,
 //! Table C.1 / FP6–FP12 claims, L3 overhead benchmarks) plus an
-//! incremental single-token decode over a per-sequence KV cache
-//! ([`DecodeCache`] / [`Transformer::decode_step`]) — the serving hot
-//! path. Training runs through the L2 HLO artifacts.
+//! incremental decode over a per-sequence KV cache — the serving hot
+//! path. Decode is storage-agnostic: [`Transformer::prefill_chunk`]
+//! advances a sequence by N positions per wave and
+//! [`Transformer::decode_step`] is its single-token special case, both
+//! generic over [`KvStorage`] (contiguous [`DecodeCache`] or the paged
+//! [`crate::nn::kv::PagedKv`]). Training runs through the L2 HLO
+//! artifacts.
 //!
 //! Weight layout matches `python/compile/model.py` exactly (see the
 //! manifest ordering in `runtime::artifact`), so HLO-trained parameters
 //! load directly.
 
+use super::kv::KvStorage;
 use super::tensor::{
     gelu, layer_norm, matmul_bt, rms_norm, rope, rope_row, silu, softmax_rows, Mat,
 };
@@ -76,10 +81,13 @@ impl Params {
     }
 }
 
-/// Per-sequence K/V cache for incremental decoding: one (capacity × d_model)
-/// K and V matrix per layer, filled row-by-row as tokens are decoded. This
-/// is what turns the O(t²) train-shaped forward into an O(t) per-token
-/// decode — the serving hot path.
+/// Contiguous per-sequence K/V cache for incremental decoding: one
+/// (capacity × d_model) K and V matrix per layer, filled row-by-row as
+/// tokens are decoded. This is what turns the O(t²) train-shaped forward
+/// into an O(t) per-token decode. The serving engine uses the paged
+/// [`crate::nn::kv::PagedKv`] instead (same [`KvStorage`] interface,
+/// block-granular memory); this contiguous layout remains for standalone
+/// decode and as the equivalence reference.
 #[derive(Debug, Clone)]
 pub struct DecodeCache {
     /// Cached keys per layer, rows `0..len` valid. For Llama the rotary
@@ -120,6 +128,34 @@ impl DecodeCache {
             .chain(self.v.iter())
             .map(|m| m.data.len() * std::mem::size_of::<f32>())
             .sum()
+    }
+}
+
+impl KvStorage for DecodeCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let d = self.k[layer].cols;
+        self.k[layer].data[pos * d..(pos + 1) * d].copy_from_slice(k);
+        self.v[layer].data[pos * d..(pos + 1) * d].copy_from_slice(v);
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.k[layer].row(pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.v[layer].row(pos)
+    }
+
+    fn commit(&mut self, n: usize) {
+        self.len += n;
     }
 }
 
@@ -406,26 +442,59 @@ impl Transformer {
         out
     }
 
-    /// Incremental decode: run ONE token at position `cache.len`, appending
-    /// its K/V to `cache` and attending over all cached positions. Returns
-    /// the logits row (vocab). Mirrors [`Transformer::forward`]'s op order
-    /// exactly, so for the same token prefix the logits agree with the full
-    /// forward's last row up to f32 rounding.
-    pub fn decode_step(&self, params: &Params, token: usize, cache: &mut DecodeCache) -> Vec<f32> {
+    /// Incremental decode: run ONE token at position `cache.len()`,
+    /// appending its K/V and attending over all cached positions. Returns
+    /// the logits row (vocab). The single-token special case of
+    /// [`Transformer::prefill_chunk`].
+    pub fn decode_step<C: KvStorage>(
+        &self,
+        params: &Params,
+        token: usize,
+        cache: &mut C,
+    ) -> Vec<f32> {
+        self.prefill_chunk(params, &[token], cache)
+    }
+
+    /// Chunked prefill: advance a sequence by `tokens.len()` positions in
+    /// one wave, appending each position's K/V to `cache` and attending
+    /// causally over everything cached so far. Returns the logits row of
+    /// the *last* position (the only one a scheduler samples from).
+    ///
+    /// Every per-position computation mirrors [`Transformer::forward`] /
+    /// the one-token decode exactly (same row-wise op order), so a prompt
+    /// prefilled in chunks of any size yields bit-identical cache contents
+    /// and logits to feeding it token-by-token — chunking is purely a
+    /// wave-amortization choice (fewer waves, batch-of-rows matmuls).
+    pub fn prefill_chunk<C: KvStorage>(
+        &self,
+        params: &Params,
+        tokens: &[usize],
+        cache: &mut C,
+    ) -> Vec<f32> {
         let cfg = &self.cfg;
         let d = cfg.d_model;
-        let pos = cache.len;
-        assert!(!cache.is_full(), "KV cache full (capacity {})", cache.capacity);
-        assert!(pos < cfg.seq_len, "decode position {pos} >= seq_len {}", cfg.seq_len);
-        assert!(token < cfg.vocab, "token {token} out of vocab");
-        assert_eq!(cache.k.len(), cfg.n_layer, "cache layer count mismatch");
+        let t = tokens.len();
+        assert!(t > 0, "prefill chunk must be non-empty");
+        let p0 = cache.len();
+        assert!(
+            p0 + t <= cache.capacity(),
+            "KV cache full: {p0}+{t} positions > capacity {}",
+            cache.capacity()
+        );
+        assert!(p0 + t <= cfg.seq_len, "decode past seq_len {}", cfg.seq_len);
 
         let embed = params.get("embed");
-        let mut x = Mat::from_vec(1, d, embed.row(token).to_vec());
+        let mut x = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            x.data[i * d..(i + 1) * d].copy_from_slice(embed.row(tok));
+        }
         if cfg.arch == Arch::Gpt2 {
             let pe = params.get("pos_embed");
-            for j in 0..d {
-                x.data[j] += pe.at(pos, j);
+            for i in 0..t {
+                for j in 0..d {
+                    x.data[i * d + j] += pe.at(p0 + i, j);
+                }
             }
         }
 
@@ -446,58 +515,71 @@ impl Transformer {
             }
             let (q, k, v) = match cfg.arch {
                 Arch::Gpt2 => {
-                    let mut qkv = Mat::zeros(1, 3 * d);
+                    let mut qkv = Mat::zeros(t, 3 * d);
                     matmul_bt(&h, params.get(&p("qkv")), &mut qkv);
-                    let q = Mat::from_vec(1, d, qkv.row(0)[..d].to_vec());
-                    let k = Mat::from_vec(1, d, qkv.row(0)[d..2 * d].to_vec());
-                    let v = Mat::from_vec(1, d, qkv.row(0)[2 * d..].to_vec());
+                    let mut q = Mat::zeros(t, d);
+                    let mut k = Mat::zeros(t, d);
+                    let mut v = Mat::zeros(t, d);
+                    for i in 0..t {
+                        q.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[..d]);
+                        k.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[d..2 * d]);
+                        v.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[2 * d..]);
+                    }
                     (q, k, v)
                 }
                 Arch::Llama2 => {
-                    let mut q = Mat::zeros(1, d);
-                    let mut k = Mat::zeros(1, d);
-                    let mut v = Mat::zeros(1, d);
+                    let mut q = Mat::zeros(t, d);
+                    let mut k = Mat::zeros(t, d);
+                    let mut v = Mat::zeros(t, d);
                     matmul_bt(&h, params.get(&p("q")), &mut q);
                     matmul_bt(&h, params.get(&p("k")), &mut k);
                     matmul_bt(&h, params.get(&p("v")), &mut v);
-                    // rotary at this absolute position, per head; K is
-                    // cached post-RoPE, matching `forward`
-                    for head in 0..cfg.n_head {
-                        rope_row(&mut q.data[head * hd..(head + 1) * hd], pos, 10000.0);
-                        rope_row(&mut k.data[head * hd..(head + 1) * hd], pos, 10000.0);
+                    // rotary at each row's absolute position, per head; K
+                    // is cached post-RoPE, matching `forward`
+                    for i in 0..t {
+                        for head in 0..cfg.n_head {
+                            let o = i * d + head * hd;
+                            rope_row(&mut q.data[o..o + hd], p0 + i, 10000.0);
+                            rope_row(&mut k.data[o..o + hd], p0 + i, 10000.0);
+                        }
                     }
                     (q, k, v)
                 }
             };
-            // append this position's K/V (K post-RoPE, matching forward)
-            let kc = &mut cache.k[l];
-            kc.data[pos * d..(pos + 1) * d].copy_from_slice(k.row(0));
-            let vc = &mut cache.v[l];
-            vc.data[pos * d..(pos + 1) * d].copy_from_slice(v.row(0));
-            let kc = &cache.k[l];
-            let vc = &cache.v[l];
+            // append the chunk's K/V rows (K post-RoPE, matching forward)
+            for i in 0..t {
+                cache.write(l, p0 + i, k.row(i), v.row(i));
+            }
 
-            // attention over cached positions 0..=pos
-            let mut att = Mat::zeros(1, d);
-            for head in 0..cfg.n_head {
-                let mut scores = Mat::zeros(1, pos + 1);
-                for j in 0..=pos {
-                    let mut acc = 0f32;
-                    for e in 0..hd {
-                        acc += q.at(0, head * hd + e) * kc.at(j, head * hd + e);
-                    }
-                    *scores.at_mut(0, j) = acc * scale;
-                }
-                softmax_rows(&mut scores, None);
-                for e in 0..hd {
-                    let mut acc = 0f32;
+            // causal attention: row i attends over cached positions 0..=p0+i
+            let mut att = Mat::zeros(t, d);
+            for i in 0..t {
+                let pos = p0 + i;
+                for head in 0..cfg.n_head {
+                    let mut scores = Mat::zeros(1, pos + 1);
                     for j in 0..=pos {
-                        acc += scores.at(0, j) * vc.at(j, head * hd + e);
+                        let kr = cache.k_row(l, j);
+                        let mut acc = 0f32;
+                        for e in 0..hd {
+                            acc += q.at(i, head * hd + e) * kr[head * hd + e];
+                        }
+                        *scores.at_mut(0, j) = acc * scale;
                     }
-                    *att.at_mut(0, head * hd + e) = acc;
+                    softmax_rows(&mut scores, None);
+                    // j-outer so v_row resolves once per attended position;
+                    // per-element adds stay in ascending-j order, so the
+                    // sum is bit-identical to the e-outer form
+                    let ar = &mut att.data[i * d + head * hd..i * d + (head + 1) * hd];
+                    for j in 0..=pos {
+                        let vr = cache.v_row(l, j);
+                        let s = scores.at(0, j);
+                        for e in 0..hd {
+                            ar[e] += s * vr[head * hd + e];
+                        }
+                    }
                 }
             }
-            let mut att_out = Mat::zeros(1, d);
+            let mut att_out = Mat::zeros(t, d);
             matmul_bt(&att, params.get(&p("out")), &mut att_out);
             for i in 0..x.data.len() {
                 x.data[i] += att_out.data[i];
@@ -513,7 +595,7 @@ impl Transformer {
                 ),
                 Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln2.g")).data, 1e-5),
             }
-            let mut mlp = Mat::zeros(1, cfg.d_ff);
+            let mut mlp = Mat::zeros(t, cfg.d_ff);
             match cfg.arch {
                 Arch::Gpt2 => {
                     matmul_bt(&h, params.get(&p("up")), &mut mlp);
@@ -522,7 +604,7 @@ impl Transformer {
                     }
                 }
                 Arch::Llama2 => {
-                    let mut gate = Mat::zeros(1, cfg.d_ff);
+                    let mut gate = Mat::zeros(t, cfg.d_ff);
                     matmul_bt(&h, params.get(&p("gate")), &mut gate);
                     matmul_bt(&h, params.get(&p("up")), &mut mlp);
                     for (m, g) in mlp.data.iter_mut().zip(gate.data.iter()) {
@@ -530,22 +612,24 @@ impl Transformer {
                     }
                 }
             }
-            let mut down = Mat::zeros(1, d);
+            let mut down = Mat::zeros(t, d);
             matmul_bt(&mlp, params.get(&p("down")), &mut down);
             for i in 0..x.data.len() {
                 x.data[i] += down.data[i];
             }
         }
 
+        // final norm over the chunk (row-wise), logits for the last row only
+        let mut last = Mat::from_vec(1, d, x.row(t - 1).to_vec());
         match cfg.arch {
             Arch::Gpt2 => {
-                layer_norm(&mut x, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+                layer_norm(&mut last, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
             }
-            Arch::Llama2 => rms_norm(&mut x, &params.get("lnf.g").data, 1e-5),
+            Arch::Llama2 => rms_norm(&mut last, &params.get("lnf.g").data, 1e-5),
         }
         let mut logits = Mat::zeros(1, cfg.vocab);
-        matmul_bt(&x, params.get("embed"), &mut logits);
-        cache.len = pos + 1;
+        matmul_bt(&last, params.get("embed"), &mut logits);
+        cache.commit(t);
         logits.data
     }
 
@@ -670,6 +754,51 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_matches_token_by_token_bit_for_bit() {
+        // chunked prefill must be a pure wave-amortization: same cache
+        // contents, same final logits as feeding one token at a time
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let tokens = [3usize, 17, 42, 5, 11, 29, 7];
+            let mut ref_cache = DecodeCache::new(&t.cfg, 16);
+            let mut ref_logits = Vec::new();
+            for &tok in &tokens {
+                ref_logits = t.decode_step(&p, tok, &mut ref_cache);
+            }
+            for chunk in [2usize, 3, 7] {
+                let mut cache = DecodeCache::new(&t.cfg, 16);
+                let mut logits = Vec::new();
+                for part in tokens.chunks(chunk) {
+                    logits = t.prefill_chunk(&p, part, &mut cache);
+                }
+                assert_eq!(logits, ref_logits, "{arch:?} chunk {chunk}: logits diverge");
+                assert_eq!(cache.len, ref_cache.len);
+                for l in 0..t.cfg.n_layer {
+                    assert_eq!(cache.k[l].data, ref_cache.k[l].data, "{arch:?} chunk {chunk} K{l}");
+                    assert_eq!(cache.v[l].data, ref_cache.v[l].data, "{arch:?} chunk {chunk} V{l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_decode_bit_identical_to_contiguous() {
+        use crate::nn::kv::PagedKv;
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let tokens = [9usize, 1, 30, 44, 2];
+            let mut contiguous = DecodeCache::new(&t.cfg, tokens.len());
+            let mut paged = PagedKv::new(&t.cfg, 2, tokens.len());
+            for &tok in &tokens {
+                let a = t.decode_step(&p, tok, &mut contiguous);
+                let b = t.decode_step(&p, tok, &mut paged);
+                assert_eq!(a, b, "{arch:?}: paged logits diverge from contiguous");
+            }
+            assert_eq!(paged.n_blocks(), 3, "5 positions at block 2");
         }
     }
 

@@ -15,9 +15,10 @@
 //! * [`Registry`] resolves string labels (`"bf16"`, `"fp8_e3m4"`,
 //!   `"int8_sr"`, …) to scheme instances; the CLI, the TOML config, and the
 //!   GWQS snapshot loader all parse labels here and nowhere else.
-//! * `mx::quantize_square` / `mx::quantize_vectorwise` are thin deprecated
-//!   shims over [`fake_quantize`]; `serve::weights` packs/unpacks GWQS2
-//!   snapshots through the scheme's codec.
+//! * every consumer — train-time ŵ cast, MX consistency analysis, the
+//!   GWQS2 snapshot pack/unpack in `serve::weights` — calls
+//!   [`fake_quantize`] / the scheme codec directly (the PR-2 `mx::` shims
+//!   are deleted).
 //!
 //! A new (format × rounding × geometry) scenario — e.g. stochastic-rounded
 //! INT8 direct quantized training, or an FP4 serving store — is one

@@ -1,17 +1,30 @@
-//! Continuous batching: a FIFO request queue feeding a bounded set of
-//! active sequences. Unlike static batching, sequences join and leave the
-//! batch *between decode waves* — a finished sequence's KV slot is recycled
-//! to the next queued request immediately, so the batch stays full under
-//! heterogeneous generation lengths (the property production schedulers
-//! like Orca/vLLM exploit).
+//! Budget-aware continuous-batching scheduler: a FIFO request queue
+//! feeding a bounded set of active sequences, with admission gated on
+//! *free arena blocks* (not slots), chunked prefill interleaved with
+//! decode waves, cross-request prefix adoption at admission, and
+//! preemption of the newest sequence back to the queue when the block
+//! arena runs dry.
 //!
-//! The batcher owns scheduling state only; the decode math lives in the
-//! engine, which advances every active sequence by one position per wave
-//! (prompt tokens first — prefill — then sampled continuation tokens).
+//! Scheduling state machine per sequence:
+//!
+//! ```text
+//!   pending ──admit──▶ prefill ──chunks──▶ decode ──EOS/len──▶ retired
+//!      ▲                  │                   │                  │
+//!      └──── preempt ◀────┴───────────────────┘        prompt chain
+//!        (blocks freed,                            published to the
+//!         tokens retained,                           prefix index
+//!         re-prefilled later)
+//! ```
+//!
+//! The scheduler owns ordering and lifecycle only; block accounting lives
+//! in [`BlockAllocator`] and the decode math in the engine, which
+//! advances every active sequence by its planned chunk each wave.
 
+use crate::config::schema::ModelConfig;
 use crate::prng::Philox4x32;
-use crate::serve::kvcache::{KvCachePool, SlotId};
+use crate::serve::kvcache::BlockAllocator;
 use crate::serve::protocol::{FinishReason, GenRequest, GenResponse};
+use crate::serve::stats::ServeStats;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -49,61 +62,95 @@ pub fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut P
     *idx.last().unwrap()
 }
 
-/// One admitted sequence: request + decode progress + its KV slot.
+/// One admitted sequence: request + decode progress + its paged KV chain.
+///
+/// The *feed stream* of a sequence is `prompt ++ generated` — every token
+/// that must pass through the model (each generated token except the very
+/// last is fed back to produce the next). `kv.len()` is the cursor into
+/// that stream: positions already cached. Prefill is simply the state
+/// where the cursor trails the stream by more than one (also true while
+/// re-prefilling after a preemption, when `generated` is non-empty).
 #[derive(Debug)]
 pub struct ActiveSeq {
     pub req: GenRequest,
-    pub slot: SlotId,
+    /// The sequence's paged KV chain (empty while preempted).
+    pub kv: crate::nn::kv::PagedKv,
     pub generated: Vec<usize>,
-    /// Prompt tokens fed so far (prefill progress).
-    prompt_cursor: usize,
     rng: Philox4x32,
     pub enqueued: Instant,
     pub admitted: Instant,
     pub first_token_at: Option<Instant>,
     pub finish: Option<FinishReason>,
+    /// Admission order stamp (re-stamped on re-admission); the preemption
+    /// victim is always the sequence with the highest stamp.
+    pub seq_no: u64,
 }
 
 impl ActiveSeq {
-    fn new(req: GenRequest, slot: SlotId, enqueued: Instant) -> ActiveSeq {
+    fn new(req: GenRequest, kv: crate::nn::kv::PagedKv, enqueued: Instant) -> ActiveSeq {
         let rng = Philox4x32::new(req.seed ^ 0x5E2E_F00D);
         ActiveSeq {
             req,
-            slot,
+            kv,
             generated: Vec::new(),
-            prompt_cursor: 0,
             rng,
             enqueued,
             admitted: Instant::now(),
             first_token_at: None,
             finish: None,
+            seq_no: 0,
         }
     }
 
-    /// The token to feed at the next decode wave.
-    pub fn next_input(&self) -> usize {
-        if self.prompt_cursor < self.req.prompt.len() {
-            self.req.prompt[self.prompt_cursor]
+    /// Length of the feed stream (`prompt ++ generated`).
+    pub fn stream_len(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+
+    /// The feed stream materialized (prefix-index lookups hash it).
+    pub fn stream_tokens(&self) -> Vec<usize> {
+        self.req.prompt.iter().chain(self.generated.iter()).copied().collect()
+    }
+
+    /// Token at feed-stream position `p`.
+    fn feed_token(&self, p: usize) -> usize {
+        if p < self.req.prompt.len() {
+            self.req.prompt[p]
         } else {
-            *self.generated.last().expect("active sequence past prefill has a last token")
+            self.generated[p - self.req.prompt.len()]
         }
     }
 
-    /// Still consuming prompt tokens (the wave after this input is prefill
-    /// unless it was the last prompt token)?
-    pub fn in_prefill(&self) -> bool {
-        self.prompt_cursor < self.req.prompt.len()
+    /// Tokens this sequence wants to feed next, capped at `prefill_chunk`
+    /// per wave. In steady-state decode this is exactly one token.
+    pub fn next_chunk_len(&self, prefill_chunk: usize) -> usize {
+        use crate::nn::kv::KvStorage;
+        (self.stream_len() - self.kv.len()).min(prefill_chunk.max(1))
     }
 
-    /// Consume the logits the engine produced for [`ActiveSeq::next_input`]:
-    /// advance prefill, or sample the next token and check termination.
+    /// The next `n` feed-stream tokens (n from [`ActiveSeq::next_chunk_len`]).
+    pub fn next_tokens(&self, n: usize) -> Vec<usize> {
+        use crate::nn::kv::KvStorage;
+        let start = self.kv.len();
+        (start..start + n).map(|p| self.feed_token(p)).collect()
+    }
+
+    /// Still catching the cache up to the feed stream (true during initial
+    /// prefill and during re-prefill after a preemption)?
+    pub fn in_prefill(&self) -> bool {
+        use crate::nn::kv::KvStorage;
+        self.kv.len() + 1 < self.stream_len()
+    }
+
+    /// Consume the last-position logits of the chunk the engine just ran
+    /// (`kv` already committed): mid-prefill they are discarded; once the
+    /// cache has caught up to the stream, sample the next token and check
+    /// termination.
     pub fn absorb(&mut self, logits: &[f32], eos: Option<usize>) {
+        use crate::nn::kv::KvStorage;
         debug_assert!(self.finish.is_none(), "absorbing into a finished sequence");
-        if self.prompt_cursor < self.req.prompt.len() {
-            self.prompt_cursor += 1;
-            if self.prompt_cursor < self.req.prompt.len() {
-                return; // mid-prefill: logits predict a token we already have
-            }
+        if self.kv.len() < self.stream_len() {
+            return; // mid-prefill: logits predict a token we already have
         }
         let tok = sample_logits(logits, self.req.temperature, self.req.top_k, &mut self.rng);
         if self.first_token_at.is_none() {
@@ -134,18 +181,37 @@ impl ActiveSeq {
     }
 }
 
-/// The continuous-batching scheduler.
+/// The budget-aware continuous-batching scheduler.
 #[derive(Debug)]
-pub struct Batcher {
+pub struct Scheduler {
     pub max_batch: usize,
+    /// Max prompt tokens fed per sequence per wave.
+    pub prefill_chunk: usize,
+    /// Cross-request prompt-prefix sharing on admission/retirement.
+    pub prefix_cache: bool,
     pending: VecDeque<(GenRequest, Instant)>,
+    /// Preempted sequences await re-admission ahead of fresh requests,
+    /// in preemption order.
+    preempted: VecDeque<ActiveSeq>,
+    /// Active set in admission order (the last element is the newest —
+    /// the preemption victim).
     pub active: Vec<ActiveSeq>,
+    next_seq_no: u64,
 }
 
-impl Batcher {
-    pub fn new(max_batch: usize) -> Batcher {
+impl Scheduler {
+    pub fn new(max_batch: usize, prefill_chunk: usize, prefix_cache: bool) -> Scheduler {
         assert!(max_batch > 0);
-        Batcher { max_batch, pending: VecDeque::new(), active: Vec::new() }
+        assert!(prefill_chunk > 0, "prefill chunk must be positive");
+        Scheduler {
+            max_batch,
+            prefill_chunk,
+            prefix_cache,
+            pending: VecDeque::new(),
+            preempted: VecDeque::new(),
+            active: Vec::new(),
+            next_seq_no: 0,
+        }
     }
 
     /// Queue a request (admission happens at the next wave boundary).
@@ -154,41 +220,119 @@ impl Batcher {
     }
 
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending.len() + self.preempted.len()
     }
 
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
 
-    /// Nothing queued and nothing in flight.
+    /// Nothing queued, nothing preempted, nothing in flight.
     pub fn is_idle(&self) -> bool {
-        self.pending.is_empty() && self.active.is_empty()
+        self.pending.is_empty() && self.preempted.is_empty() && self.active.is_empty()
     }
 
-    /// Admit queued requests while the batch has room AND the pool has a
-    /// free KV slot. Returns the number admitted this boundary.
-    pub fn admit(&mut self, pool: &mut KvCachePool) -> usize {
+    /// Admit sequences while the batch has room AND the arena has enough
+    /// free blocks for each sequence's first chunk. Preempted sequences
+    /// re-admit ahead of fresh requests. Admission adopts the longest
+    /// cached prompt prefix when the prefix cache is enabled. Returns the
+    /// number admitted this boundary.
+    pub fn admit(
+        &mut self,
+        cfg: &ModelConfig,
+        capacity: usize,
+        alloc: &mut BlockAllocator,
+        stats: &mut ServeStats,
+    ) -> usize {
         let mut admitted = 0;
-        while self.active.len() < self.max_batch && !self.pending.is_empty() {
-            let Some(slot) = pool.try_alloc() else { break };
-            let (req, enqueued) = self.pending.pop_front().unwrap();
-            self.active.push(ActiveSeq::new(req, slot, enqueued));
-            admitted += 1;
+        while self.active.len() < self.max_batch {
+            let (mut seq, from_preempted) = if let Some(s) = self.preempted.pop_front() {
+                (s, true)
+            } else if let Some((req, enqueued)) = self.pending.pop_front() {
+                (ActiveSeq::new(req, alloc.new_seq(cfg, capacity), enqueued), false)
+            } else {
+                break;
+            };
+            // prefix adoption: reuse the longest cached prefix of the feed
+            // stream (for re-admissions that includes generated tokens)
+            let mut reused = 0usize;
+            if self.prefix_cache {
+                let stream = seq.stream_tokens();
+                if let Some((chain, n)) = alloc.prefix_lookup(&stream) {
+                    seq.kv.adopt_prefix(&chain, n);
+                    reused = n;
+                    // the lookup's retain now belongs to the sequence; the
+                    // local clones just go away
+                    drop(chain);
+                }
+            }
+            // admission by free blocks: reserve the first chunk's blocks up
+            // front (including a possible copy-on-write of an adopted
+            // partial tail), so each admission genuinely shrinks the budget
+            loop {
+                let chunk = seq.next_chunk_len(self.prefill_chunk);
+                if alloc.reserve(&mut seq.kv, chunk) {
+                    seq.seq_no = self.next_seq_no;
+                    self.next_seq_no += 1;
+                    stats.record_admission(if self.prefix_cache { Some(reused) } else { None });
+                    self.active.push(seq);
+                    admitted += 1;
+                    break;
+                }
+                // arena dry: reclaim cached prefixes; if the index is empty
+                // too, put the sequence back and stop admitting
+                if alloc.prefix_evict_lru() {
+                    continue;
+                }
+                alloc.release_chain(seq.kv.take_blocks());
+                if from_preempted {
+                    self.preempted.push_front(seq);
+                } else {
+                    self.pending.push_front((seq.req, seq.enqueued));
+                }
+                return admitted;
+            }
         }
         admitted
     }
 
-    /// Remove finished sequences, recycling their KV slots; returns their
-    /// responses.
-    pub fn retire(&mut self, pool: &mut KvCachePool) -> Vec<GenResponse> {
+    /// Preempt the newest active sequence: its blocks are freed, its
+    /// tokens retained for a later re-prefill, and it rejoins the queue
+    /// ahead of fresh requests. Returns the index it held in `active`, or
+    /// `None` if the active set is empty.
+    pub fn preempt_newest(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        stats: &mut ServeStats,
+    ) -> Option<usize> {
+        let idx = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.seq_no)
+            .map(|(i, _)| i)?;
+        let mut seq = self.active.remove(idx);
+        alloc.release_chain(seq.kv.take_blocks());
+        stats.record_preemption();
+        self.preempted.push_back(seq);
+        Some(idx)
+    }
+
+    /// Remove finished sequences, publishing their prompt chains to the
+    /// prefix index and releasing their blocks; returns their responses.
+    pub fn retire(&mut self, alloc: &mut BlockAllocator) -> Vec<GenResponse> {
         let now = Instant::now();
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].finish.is_some() {
-                let seq = self.active.swap_remove(i);
-                pool.release(seq.slot);
+                // `remove` (not swap_remove) keeps admission order intact,
+                // so `active.last()` stays the newest sequence
+                let mut seq = self.active.remove(i);
+                if self.prefix_cache {
+                    alloc.prefix_insert(&seq.req.prompt, &seq.kv);
+                }
+                alloc.release_chain(seq.kv.take_blocks());
                 done.push(seq.into_response(now));
             } else {
                 i += 1;
@@ -202,9 +346,31 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::config::schema::{Arch, ModelConfig};
+    use crate::nn::kv::{KvStorage, PagedKv};
 
-    fn pool(n: usize) -> KvCachePool {
-        KvCachePool::new(&ModelConfig::tiny(Arch::Gpt2), n, 32)
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny(Arch::Gpt2)
+    }
+
+    fn arena(n_blocks: usize) -> BlockAllocator {
+        BlockAllocator::new(&cfg(), n_blocks, 4)
+    }
+
+    fn seq(req: GenRequest) -> ActiveSeq {
+        ActiveSeq::new(req, PagedKv::new(&cfg(), 4, 64), Instant::now())
+    }
+
+    /// Simulate the engine's side of a wave: commit `n` fed positions.
+    fn feed(s: &mut ActiveSeq, n: usize) {
+        let c = cfg();
+        let row = vec![0.0f32; c.d_model];
+        for _ in 0..n {
+            let pos = s.kv.len();
+            for l in 0..c.n_layer {
+                s.kv.write(l, pos, &row, &row);
+            }
+            s.kv.commit(1);
+        }
     }
 
     #[test]
@@ -238,50 +404,121 @@ mod tests {
     }
 
     #[test]
-    fn admission_respects_batch_and_slots() {
-        let mut b = Batcher::new(2);
-        let mut p = pool(1);
-        for id in 0..3 {
-            b.push(GenRequest::greedy(id, vec![1, 2], 4));
-        }
-        // slot-bound: only one admitted despite max_batch = 2
-        assert_eq!(b.admit(&mut p), 1);
-        assert_eq!(b.active_len(), 1);
-        assert_eq!(b.pending_len(), 2);
-        // finish it; retire frees the slot, next admit picks up the queue
-        b.active[0].finish = Some(FinishReason::Length);
-        let done = b.retire(&mut p);
-        assert_eq!(done.len(), 1);
-        assert_eq!(b.admit(&mut p), 1);
-        assert_eq!(b.pending_len(), 1);
-    }
-
-    #[test]
-    fn prefill_then_generate_state_machine() {
-        let mut seq = ActiveSeq::new(GenRequest::greedy(1, vec![10, 11, 12], 2), 0, Instant::now());
-        // feeding prompt: inputs are the prompt tokens in order
-        assert_eq!(seq.next_input(), 10);
-        seq.absorb(&[0.0, 1.0, 0.0], None); // logits ignored mid-prefill
-        assert!(seq.in_prefill());
-        assert_eq!(seq.next_input(), 11);
-        seq.absorb(&[0.0, 1.0, 0.0], None);
-        assert_eq!(seq.next_input(), 12);
-        // last prompt token: its logits produce the first generated token
-        seq.absorb(&[0.0, 0.0, 5.0], None);
-        assert_eq!(seq.generated, vec![2]);
-        assert!(seq.first_token_at.is_some());
-        assert!(seq.finish.is_none());
-        assert_eq!(seq.next_input(), 2);
-        seq.absorb(&[9.0, 0.0, 0.0], None);
-        assert_eq!(seq.generated, vec![2, 0]);
-        assert_eq!(seq.finish, Some(FinishReason::Length));
+    fn chunked_prefill_then_generate_state_machine() {
+        let mut s = seq(GenRequest::greedy(1, vec![10, 11, 12, 13, 14], 2));
+        // first wave: a chunk of 3 prompt tokens
+        assert_eq!(s.next_chunk_len(3), 3);
+        assert_eq!(s.next_tokens(3), vec![10, 11, 12]);
+        feed(&mut s, 3);
+        s.absorb(&[0.0, 1.0, 0.0], None); // mid-prefill: logits ignored
+        assert!(s.in_prefill());
+        assert!(s.generated.is_empty());
+        // second wave: the remaining 2 prompt tokens finish prefill
+        assert_eq!(s.next_chunk_len(3), 2);
+        assert_eq!(s.next_tokens(2), vec![13, 14]);
+        feed(&mut s, 2);
+        s.absorb(&[0.0, 0.0, 5.0], None); // caught up: sample
+        assert_eq!(s.generated, vec![2]);
+        assert!(s.first_token_at.is_some());
+        assert!(s.finish.is_none());
+        assert!(!s.in_prefill());
+        // steady-state decode: exactly one token per wave
+        assert_eq!(s.next_chunk_len(3), 1);
+        assert_eq!(s.next_tokens(1), vec![2]);
+        feed(&mut s, 1);
+        s.absorb(&[9.0, 0.0, 0.0], None);
+        assert_eq!(s.generated, vec![2, 0]);
+        assert_eq!(s.finish, Some(FinishReason::Length));
     }
 
     #[test]
     fn eos_stops_generation() {
-        let mut seq = ActiveSeq::new(GenRequest::greedy(1, vec![3], 10), 0, Instant::now());
-        seq.absorb(&[0.0, 7.0, 0.0], Some(1));
-        assert_eq!(seq.finish, Some(FinishReason::Eos));
-        assert_eq!(seq.generated, vec![1]);
+        let mut s = seq(GenRequest::greedy(1, vec![3], 10));
+        feed(&mut s, 1);
+        s.absorb(&[0.0, 7.0, 0.0], Some(1));
+        assert_eq!(s.finish, Some(FinishReason::Eos));
+        assert_eq!(s.generated, vec![1]);
+    }
+
+    #[test]
+    fn admission_is_block_bound_not_slot_bound() {
+        let c = cfg();
+        let mut stats = ServeStats::new();
+        // 2 blocks of 4 positions; prompts of 5 need 2 blocks each
+        let mut alloc = arena(2);
+        let mut sched = Scheduler::new(4, 8, false);
+        for id in 0..3 {
+            sched.push(GenRequest::greedy(id, vec![1, 2, 3, 4, 5], 2));
+        }
+        // block-bound: only one admitted despite max_batch = 4 (admission
+        // reserved its first chunk's blocks, draining the arena)
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
+        assert_eq!(sched.active_len(), 1);
+        assert_eq!(sched.pending_len(), 2);
+        assert_eq!(alloc.free_blocks(), 0);
+        // finish it; retire frees both blocks, next admit takes the queue
+        sched.active[0].finish = Some(FinishReason::Length);
+        let done = sched.retire(&mut alloc);
+        assert_eq!(done.len(), 1);
+        assert_eq!(alloc.free_blocks(), 2);
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
+        assert_eq!(sched.pending_len(), 1);
+        assert_eq!(stats.admissions, 2);
+    }
+
+    #[test]
+    fn preemption_releases_blocks_and_requeues() {
+        let c = cfg();
+        let mut stats = ServeStats::new();
+        let mut alloc = arena(4);
+        let mut sched = Scheduler::new(4, 8, false);
+        sched.push(GenRequest::greedy(0, vec![1, 2, 3], 4));
+        sched.push(GenRequest::greedy(1, vec![4, 5, 6], 4));
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 2);
+        assert!(alloc.reserve(&mut sched.active[0].kv, 3));
+        assert!(alloc.reserve(&mut sched.active[1].kv, 3));
+        feed(&mut sched.active[0], 3);
+        feed(&mut sched.active[1], 3);
+        sched.active[1].absorb(&[0.0, 1.0], None); // seq 1 samples a token
+        let live_before = alloc.live_blocks();
+        let idx = sched.preempt_newest(&mut alloc, &mut stats).unwrap();
+        assert_eq!(idx, 1, "victim is the newest admission");
+        assert_eq!(sched.active_len(), 1);
+        assert_eq!(sched.pending_len(), 1, "victim waits for re-admission");
+        assert!(alloc.live_blocks() < live_before);
+        assert_eq!(stats.preemptions, 1);
+        // re-admission keeps its progress: stream = prompt ++ generated
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
+        let re = sched.active.last().unwrap();
+        assert_eq!(re.req.id, 1);
+        assert_eq!(re.generated, vec![1]);
+        assert_eq!(re.kv.len(), 0, "re-prefills from scratch");
+        assert_eq!(re.next_chunk_len(8), 4, "prompt(3) + generated(1) to re-feed");
+    }
+
+    #[test]
+    fn admission_adopts_cached_prefix() {
+        let c = cfg();
+        let mut stats = ServeStats::new();
+        let mut alloc = arena(8);
+        let mut sched = Scheduler::new(4, 8, true);
+        let prompt: Vec<usize> = (1..=10).collect();
+        // run one sequence to retirement so its prompt chain is published
+        sched.push(GenRequest::greedy(0, prompt.clone(), 1));
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
+        assert!(alloc.reserve(&mut sched.active[0].kv, 10));
+        feed(&mut sched.active[0], 10);
+        sched.active[0].absorb(&[1.0, 0.0], None);
+        assert!(sched.active[0].finish.is_some());
+        sched.retire(&mut alloc);
+        assert!(alloc.prefix_stats().entries > 0);
+        // an identical prompt admits with most of its prefill skipped
+        sched.push(GenRequest::greedy(1, prompt.clone(), 1));
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
+        assert_eq!(stats.prefix_hits, 1);
+        let re = sched.active.last().unwrap();
+        assert_eq!(re.kv.len(), 8, "block-aligned prefix of 10-1 positions");
+        assert_eq!(re.next_chunk_len(8), 2, "only the unshared tail re-feeds");
+        assert_eq!(stats.prefix_tokens_reused, 8);
     }
 }

@@ -1,18 +1,32 @@
-//! The serving engine: glues the quantized weight store, the KV-cache pool,
-//! the continuous batcher and the stats sink around the transformer's
-//! incremental decode. Two fronts:
+//! The serving engine: glues the quantized weight store, the paged
+//! KV-block arena, the budget-aware scheduler and the stats sink around
+//! the transformer's chunked incremental decode. Two fronts:
 //!
 //! * [`Engine`] — synchronous: `enqueue` + `step`/`run_to_completion`, used
 //!   by tests, benches and the CLI's self-driven load mode;
 //! * [`Engine::spawn`] — a server thread + cloneable [`EngineClient`]s with
 //!   a blocking `generate` RPC, used by the closed-loop load generator
-//!   (`examples/serve_load.rs`). Worker parallelism *within* a decode wave
-//!   splits the active sequences across scoped threads.
+//!   (`examples/serve_load.rs`). Worker parallelism *within* a wave splits
+//!   the active sequences across scoped threads — safe because every
+//!   sequence owns its paged KV chain (`Arc`-shared blocks are read-only
+//!   by construction; writable tails are exclusive).
+//!
+//! One engine iteration ([`Engine::step`]):
+//!
+//! 1. **retire/admit** — finished sequences publish their prompt chains to
+//!    the prefix index and free their blocks; queued sequences admit while
+//!    free blocks last (adopting cached prefixes).
+//! 2. **plan** — each active sequence is assigned this wave's chunk
+//!    (prefill chunk or one decode token) and its blocks are reserved;
+//!    when the arena runs dry the engine first evicts LRU prefix entries,
+//!    then preempts the newest sequence back to the queue.
+//! 3. **wave** — workers advance every sequence by its chunk via
+//!    `Transformer::prefill_chunk` and sample where prefill completed.
 
 use crate::config::schema::ModelConfig;
-use crate::nn::transformer::{DecodeCache, Params, Transformer};
-use crate::serve::batcher::{ActiveSeq, Batcher};
-use crate::serve::kvcache::KvCachePool;
+use crate::nn::transformer::{Params, Transformer};
+use crate::serve::batcher::{ActiveSeq, Scheduler};
+use crate::serve::kvcache::{BlockAllocator, PrefixCacheStats};
 use crate::serve::protocol::{GenRequest, GenResponse};
 use crate::serve::stats::ServeStats;
 use crate::serve::weights::WeightStore;
@@ -24,8 +38,15 @@ use std::sync::mpsc;
 pub struct EngineConfig {
     /// Max sequences advanced per decode wave.
     pub max_batch: usize,
-    /// KV-cache slots (≥ max_batch is typical; fewer throttles admission).
-    pub kv_slots: usize,
+    /// Positions per KV block (the paging granularity).
+    pub kv_block: usize,
+    /// Total KV-block arena budget; `0` sizes it for `max_batch` sequences
+    /// at full per-sequence capacity (no admission throttling).
+    pub kv_blocks: usize,
+    /// Max prompt tokens fed per sequence per wave (1 = PR-1 behaviour).
+    pub prefill_chunk: usize,
+    /// Cross-request prompt-prefix sharing (block-granular, copy-on-write).
+    pub prefix_cache: bool,
     /// Worker threads per decode wave (1 = serial).
     pub threads: usize,
     /// Optional end-of-sequence token id.
@@ -38,10 +59,43 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             max_batch: 8,
-            kv_slots: 8,
+            kv_block: 16,
+            kv_blocks: 0,
+            prefill_chunk: 8,
+            prefix_cache: true,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             eos: None,
             capacity: usize::MAX,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Reject degenerate paging configurations with a descriptive error
+    /// (the CLI calls this before building an engine, so `--kv-block 0`
+    /// and friends fail cleanly instead of panicking).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("--max-batch must be positive");
+        }
+        if self.kv_block == 0 {
+            bail!("--kv-block must be positive (positions per KV block)");
+        }
+        if self.prefill_chunk == 0 {
+            bail!("--prefill-chunk must be positive (use 1 for token-at-a-time prefill)");
+        }
+        if self.capacity == 0 {
+            bail!("per-sequence KV capacity must be positive");
+        }
+        Ok(())
+    }
+
+    /// The arena budget in blocks for a given per-sequence capacity.
+    fn resolved_blocks(&self, capacity: usize) -> usize {
+        if self.kv_blocks > 0 {
+            self.kv_blocks
+        } else {
+            self.max_batch.max(1) * capacity.div_ceil(self.kv_block.max(1))
         }
     }
 }
@@ -50,8 +104,8 @@ impl Default for EngineConfig {
 pub struct Engine {
     pub model: Transformer,
     pub params: Params,
-    pool: KvCachePool,
-    batcher: Batcher,
+    alloc: BlockAllocator,
+    sched: Scheduler,
     pub stats: ServeStats,
     cfg: EngineConfig,
     capacity: usize,
@@ -59,13 +113,16 @@ pub struct Engine {
 
 impl Engine {
     /// Build from already-materialized params (e.g. a freshly initialized
-    /// model, or `WeightStore::to_params`).
+    /// model, or `WeightStore::to_params`). Degenerate configs panic here;
+    /// use [`EngineConfig::validate`] first for a clean error.
     pub fn new(model_cfg: ModelConfig, params: Params, cfg: EngineConfig) -> Engine {
+        cfg.validate().expect("invalid engine config");
         let model = Transformer::new(model_cfg.clone());
         let capacity = cfg.capacity.min(model_cfg.seq_len);
-        let pool = KvCachePool::new(&model_cfg, cfg.kv_slots.max(1), capacity);
-        let batcher = Batcher::new(cfg.max_batch.max(1));
-        Engine { model, params, pool, batcher, stats: ServeStats::new(), cfg, capacity }
+        let alloc =
+            BlockAllocator::new(&model_cfg, cfg.resolved_blocks(capacity), cfg.kv_block);
+        let sched = Scheduler::new(cfg.max_batch, cfg.prefill_chunk, cfg.prefix_cache);
+        Engine { model, params, alloc, sched, stats: ServeStats::new(), cfg, capacity }
     }
 
     /// Build from a quantized snapshot: dequantize-on-load, then serve.
@@ -95,71 +152,136 @@ impl Engine {
                 self.capacity
             );
         }
-        self.batcher.push(req);
+        // even with every other sequence preempted and the prefix index
+        // drained, the request must fit the arena alone
+        let blocks = self.alloc.blocks_for(need);
+        if blocks > self.alloc.total_blocks() {
+            bail!(
+                "request {}: needs {blocks} KV blocks of {}, arena has {} (raise --kv-blocks)",
+                req.id,
+                self.alloc.block_size(),
+                self.alloc.total_blocks()
+            );
+        }
+        self.sched.push(req);
         Ok(())
     }
 
     pub fn queued(&self) -> usize {
-        self.batcher.pending_len()
+        self.sched.pending_len()
     }
 
     pub fn active(&self) -> usize {
-        self.batcher.active_len()
+        self.sched.active_len()
     }
 
     pub fn is_idle(&self) -> bool {
-        self.batcher.is_idle()
+        self.sched.is_idle()
     }
 
-    /// KV pool occupancy diagnostics: (in_use, slots, high_water, bytes).
+    /// KV arena diagnostics: (live blocks, total blocks, high water, bytes).
     pub fn kv_usage(&self) -> (usize, usize, usize, usize) {
-        (self.pool.in_use(), self.pool.n_slots(), self.pool.high_water(), self.pool.bytes())
+        (
+            self.alloc.live_blocks(),
+            self.alloc.total_blocks(),
+            self.alloc.high_water(),
+            self.alloc.bytes(),
+        )
     }
 
-    /// One engine iteration: admit from the queue, advance every active
-    /// sequence by one position (parallel across workers), retire finished
-    /// sequences. Returns completions.
+    /// Prefix-index diagnostics (entries / insertions / evictions).
+    pub fn prefix_cache_stats(&self) -> PrefixCacheStats {
+        self.alloc.prefix_stats()
+    }
+
+    /// Copy-on-write block copies performed so far.
+    pub fn cow_copies(&self) -> usize {
+        self.alloc.cow_copies
+    }
+
+    /// One engine iteration: admit from the queue, plan and reserve each
+    /// active sequence's chunk (evicting cached prefixes / preempting the
+    /// newest sequence if the arena runs dry), advance every sequence by
+    /// its chunk (parallel across workers), retire finished sequences.
+    /// Returns completions.
     pub fn step(&mut self) -> Vec<GenResponse> {
-        self.batcher.admit(&mut self.pool);
-        let n = self.batcher.active.len();
-        if n == 0 {
+        self.sched.admit(&self.model.cfg, self.capacity, &mut self.alloc, &mut self.stats);
+        if self.sched.active.is_empty() {
             return Vec::new();
+        }
+        // ---- plan: pick + reserve this wave's chunk per sequence ----
+        // Active order is admission order, so preempting the newest only
+        // ever removes the tail — already-planned chunks stay valid.
+        let prefill_chunk = self.sched.prefill_chunk;
+        let mut chunks: Vec<usize> = Vec::with_capacity(self.sched.active.len());
+        let mut w = 0;
+        'plan: while w < self.sched.active.len() {
+            let mut chunk = self.sched.active[w].next_chunk_len(prefill_chunk);
+            loop {
+                let fit = self.alloc.max_appendable(&self.sched.active[w].kv);
+                if fit > 0 {
+                    chunk = chunk.min(fit);
+                    if self.alloc.reserve(&mut self.sched.active[w].kv, chunk) {
+                        chunks.push(chunk);
+                        w += 1;
+                        continue 'plan;
+                    }
+                }
+                // arena dry: reclaim cached prefixes first, then preempt
+                if self.alloc.prefix_evict_lru() {
+                    continue;
+                }
+                match self.sched.preempt_newest(&mut self.alloc, &mut self.stats) {
+                    Some(idx) if idx == w => continue 'plan, // victim was us
+                    Some(idx) => {
+                        debug_assert!(idx > w, "victim must be unplanned");
+                        continue;
+                    }
+                    None => unreachable!(
+                        "arena cannot advance any sequence (enqueue bounds each request)"
+                    ),
+                }
+            }
+        }
+        let n = self.sched.active.len();
+        if n == 0 {
+            return Vec::new(); // everything preempted (arena momentarily dry)
         }
         // stamp the wave BEFORE the compute so wall-clock throughput
         // includes the first wave's work
         self.stats.record_wave(n);
-        // check the active slots' caches out of the pool so each worker
-        // thread gets exclusive &mut access to its sequences' state
-        let slots: Vec<usize> = self.batcher.active.iter().map(|s| s.slot).collect();
-        let mut caches: Vec<DecodeCache> = slots.iter().map(|&id| self.pool.take(id)).collect();
+        for &c in &chunks {
+            if c > 1 {
+                self.stats.record_prefill_chunk(c);
+            }
+        }
+        self.stats.record_blocks(self.alloc.live_blocks(), self.alloc.total_blocks());
+        // ---- wave: advance every sequence by its chunk ----
         {
             let model = &self.model;
             let params = &self.params;
             let eos = self.cfg.eos;
-            let mut work: Vec<(&mut ActiveSeq, &mut DecodeCache)> =
-                self.batcher.active.iter_mut().zip(caches.iter_mut()).collect();
+            let mut work: Vec<(&mut ActiveSeq, usize)> =
+                self.sched.active.iter_mut().zip(chunks).collect();
             let n_threads = self.cfg.threads.clamp(1, work.len());
             if n_threads == 1 {
-                for (seq, cache) in work.iter_mut() {
-                    advance(model, params, seq, cache, eos);
+                for (seq, chunk) in work.iter_mut() {
+                    advance(model, params, seq, *chunk, eos);
                 }
             } else {
-                let chunk = work.len().div_ceil(n_threads);
+                let per = work.len().div_ceil(n_threads);
                 std::thread::scope(|sc| {
-                    for part in work.chunks_mut(chunk) {
+                    for part in work.chunks_mut(per) {
                         sc.spawn(move || {
-                            for (seq, cache) in part.iter_mut() {
-                                advance(model, params, seq, cache, eos);
+                            for (seq, chunk) in part.iter_mut() {
+                                advance(model, params, seq, *chunk, eos);
                             }
                         });
                     }
                 });
             }
         }
-        for (id, cache) in slots.into_iter().zip(caches) {
-            self.pool.put_back(id, cache);
-        }
-        let done = self.batcher.retire(&mut self.pool);
+        let done = self.sched.retire(&mut self.alloc);
         for r in &done {
             self.stats.record_completion(r);
         }
@@ -186,16 +308,16 @@ impl Engine {
     }
 }
 
-/// Advance one sequence by one decode position.
+/// Advance one sequence by its planned chunk (its blocks are reserved).
 fn advance(
     model: &Transformer,
     params: &Params,
     seq: &mut ActiveSeq,
-    cache: &mut DecodeCache,
+    chunk: usize,
     eos: Option<usize>,
 ) {
-    let token = seq.next_input();
-    let logits = model.decode_step(params, token, cache);
+    let tokens = seq.next_tokens(chunk);
+    let logits = model.prefill_chunk(params, &tokens, &mut seq.kv);
     seq.absorb(&logits, eos);
 }
 
@@ -297,21 +419,30 @@ impl EngineClient {
 mod tests {
     use super::*;
     use crate::config::schema::Arch;
+    use crate::nn::transformer::DecodeCache;
 
-    fn tiny_engine(max_batch: usize, kv_slots: usize, threads: usize) -> Engine {
+    fn tiny_engine(max_batch: usize, kv_blocks: usize, threads: usize) -> Engine {
         let cfg = ModelConfig::tiny(Arch::Gpt2);
         let model = Transformer::new(cfg.clone());
         let params = model.init_params(3);
         Engine::new(
             cfg,
             params,
-            EngineConfig { max_batch, kv_slots, threads, eos: None, capacity: usize::MAX },
+            EngineConfig {
+                max_batch,
+                kv_block: 8,
+                kv_blocks,
+                prefill_chunk: 4,
+                prefix_cache: false,
+                threads,
+                ..EngineConfig::default()
+            },
         )
     }
 
     #[test]
     fn single_request_greedy_matches_direct_decode() {
-        let mut e = tiny_engine(4, 4, 1);
+        let mut e = tiny_engine(4, 0, 1);
         let prompt = vec![5usize, 9, 23];
         e.enqueue(GenRequest::greedy(1, prompt.clone(), 6)).unwrap();
         let out = e.run_to_completion();
@@ -344,7 +475,7 @@ mod tests {
 
     #[test]
     fn concurrent_requests_batch_and_all_complete() {
-        let mut e = tiny_engine(4, 4, 2);
+        let mut e = tiny_engine(4, 0, 2);
         for id in 0..6 {
             e.enqueue(GenRequest::greedy(id, vec![(id as usize) % 50 + 1, 2, 3], 4 + id as usize % 3))
                 .unwrap();
@@ -357,10 +488,10 @@ mod tests {
         }
         assert!(e.stats.max_occupancy() > 1, "continuous batching never batched");
         assert_eq!(e.stats.completed, 6);
-        let (in_use, slots, high_water, bytes) = e.kv_usage();
-        assert_eq!(in_use, 0);
-        assert_eq!(slots, 4);
-        assert!(high_water > 1);
+        let (live, total, high_water, bytes) = e.kv_usage();
+        assert_eq!(live, 0, "blocks leaked");
+        assert_eq!(total, 4 * 64usize.div_ceil(8));
+        assert!(high_water >= 2);
         assert!(bytes > 0);
     }
 
@@ -370,8 +501,8 @@ mod tests {
         // served one-at-a-time or continuously batched on worker threads
         let reqs: Vec<GenRequest> =
             (0..5).map(|id| GenRequest::greedy(id, vec![1 + id as usize * 7, 4], 5)).collect();
-        let mut serial = tiny_engine(1, 1, 1);
-        let mut batched = tiny_engine(4, 4, 2);
+        let mut serial = tiny_engine(1, 0, 1);
+        let mut batched = tiny_engine(4, 0, 2);
         for r in &reqs {
             serial.enqueue(r.clone()).unwrap();
             batched.enqueue(r.clone()).unwrap();
@@ -389,13 +520,29 @@ mod tests {
 
     #[test]
     fn invalid_requests_rejected() {
-        let mut e = tiny_engine(2, 2, 1);
+        let mut e = tiny_engine(2, 4, 1);
         assert!(e.enqueue(GenRequest::greedy(1, vec![], 4)).is_err());
         assert!(e.enqueue(GenRequest::greedy(2, vec![9999], 4)).is_err());
         assert!(e.enqueue(GenRequest::greedy(3, vec![1], 0)).is_err());
         let too_long = vec![1usize; 200]; // tiny seq_len is 64
         assert!(e.enqueue(GenRequest::greedy(4, too_long, 4)).is_err());
+        // fits the position capacity but not the 4-block arena
+        let too_wide = vec![1usize; 40];
+        let err = e.enqueue(GenRequest::greedy(5, too_wide, 4)).unwrap_err();
+        assert!(err.to_string().contains("kv-blocks"), "{err}");
         assert!(e.is_idle());
+    }
+
+    #[test]
+    fn degenerate_configs_fail_validation_cleanly() {
+        let ok = EngineConfig::default();
+        assert!(ok.validate().is_ok());
+        let zero_block = EngineConfig { kv_block: 0, ..EngineConfig::default() };
+        assert!(zero_block.validate().unwrap_err().to_string().contains("kv-block"));
+        let zero_chunk = EngineConfig { prefill_chunk: 0, ..EngineConfig::default() };
+        assert!(zero_chunk.validate().unwrap_err().to_string().contains("prefill-chunk"));
+        let zero_batch = EngineConfig { max_batch: 0, ..EngineConfig::default() };
+        assert!(zero_batch.validate().is_err());
     }
 
     #[test]
@@ -419,7 +566,7 @@ mod tests {
 
     #[test]
     fn spawned_engine_serves_concurrent_clients() {
-        let handle = tiny_engine(4, 4, 2).spawn();
+        let handle = tiny_engine(4, 0, 2).spawn();
         let mut joins = Vec::new();
         for c in 0..3u64 {
             let client = handle.client();
@@ -446,7 +593,7 @@ mod tests {
     #[test]
     fn temperature_sampling_reproducible_per_seed() {
         let mk = || {
-            let mut e = tiny_engine(2, 2, 1);
+            let mut e = tiny_engine(2, 0, 1);
             let req = GenRequest {
                 id: 1,
                 prompt: vec![4, 5],
@@ -459,5 +606,102 @@ mod tests {
             e.run_to_completion().remove(0).tokens
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn tight_arena_preempts_and_still_completes_everything() {
+        // 6 requests of 12+5 positions (3 blocks each) against a 4-block
+        // arena: sequences must take turns via preemption, and every
+        // completion must match an uncontended engine's output
+        let mk_reqs = || -> Vec<GenRequest> {
+            (0..6)
+                .map(|id| {
+                    let prompt: Vec<usize> =
+                        (0..12).map(|k| (id as usize * 5 + k * 3) % 50).collect();
+                    GenRequest::greedy(id, prompt, 6)
+                })
+                .collect()
+        };
+        let mut tight = tiny_engine(4, 4, 1);
+        let mut roomy = tiny_engine(4, 0, 1);
+        for r in mk_reqs() {
+            tight.enqueue(r.clone()).unwrap();
+            roomy.enqueue(r).unwrap();
+        }
+        let mut a = tight.run_to_completion();
+        let mut b = roomy.run_to_completion();
+        assert_eq!(a.len(), 6);
+        assert!(
+            tight.stats.preemptions > 0,
+            "4-block arena with 3-block sequences must preempt"
+        );
+        assert_eq!(roomy.stats.preemptions, 0);
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens, "req {}: preemption changed the output", x.id);
+        }
+        let (live, ..) = tight.kv_usage();
+        assert_eq!(live, 0, "blocks leaked through preemption");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompts() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(3);
+        let mk_engine = |prefix_cache: bool| {
+            Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 8,
+                    kv_block: 4,
+                    kv_blocks: 64,
+                    prefill_chunk: 16,
+                    prefix_cache,
+                    threads: 1,
+                    ..EngineConfig::default()
+                },
+            )
+        };
+        // 17 shared tokens: deliberately NOT block-aligned so adopters of
+        // the cached full prompt append mid-block, exercising copy-on-write
+        let shared: Vec<usize> = (0..17).map(|k| (k * 7 + 1) % 50).collect();
+        let run = |prefix_cache: bool| -> (Engine, Vec<GenResponse>) {
+            let mut e = mk_engine(prefix_cache);
+            // warmup: one request with the bare shared prompt retires and
+            // publishes its chain
+            e.enqueue(GenRequest::greedy(100, shared.clone(), 4)).unwrap();
+            let mut out = e.run_to_completion();
+            // fan-out: 8 concurrent requests diverging after the prefix
+            for id in 0..8u64 {
+                let mut prompt = shared.clone();
+                prompt.push(20 + id as usize);
+                e.enqueue(GenRequest::greedy(id, prompt, 4)).unwrap();
+            }
+            out.extend(e.run_to_completion());
+            (e, out)
+        };
+        let (cached, mut a) = run(true);
+        let (plain, mut b) = run(false);
+        assert_eq!(a.len(), 9);
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "req {}: prefix sharing changed the output", x.id);
+        }
+        assert!(cached.stats.prefix_hits >= 8, "fan-out admissions must hit the cached prefix");
+        assert!(cached.stats.prefix_tokens_reused >= 8 * 17);
+        assert_eq!(plain.stats.prefix_hits, 0);
+        assert!(cached.cow_copies() > 0, "divergent mid-block tails must copy-on-write");
+        // shared chains mean fewer live blocks for the same concurrent load
+        assert!(
+            cached.stats.mean_blocks_live() < plain.stats.mean_blocks_live(),
+            "prefix sharing should lower block occupancy: {} vs {}",
+            cached.stats.mean_blocks_live(),
+            plain.stats.mean_blocks_live()
+        );
     }
 }

@@ -1,100 +1,419 @@
-//! Slot-pooled KV cache: a fixed set of preallocated per-sequence
-//! [`DecodeCache`]s with free-list reuse. The pool size bounds serving
-//! memory (`slots × 2 × n_layer × capacity × d_model × 4 B`); when every
-//! slot is busy, admission control in the batcher holds new sequences in
-//! the queue until a sequence retires and its slot is recycled.
+//! Paged KV-cache memory management: one global block arena shared by all
+//! sequences, replacing the PR-1 slot pool (which preallocated
+//! `slots × 2 × n_layer × capacity × d_model` floats per sequence and
+//! stranded most of it for short requests).
+//!
+//! * [`BlockAllocator`] — a budget of `n_blocks` fixed-size
+//!   [`KvBlock`]s. Buffers are recycled through a free list; every block
+//!   id carries a [`BlockState`] (free / live-with-refcount), so double
+//!   release and retain-after-free are O(1) checks instead of the old
+//!   pool's O(n) `free.contains` scan (and the misleading
+//!   checked-out-slot assert is gone — blocks have no checkout state).
+//! * **Copy-on-write append** — a sequence whose next write lands in a
+//!   *shared* block (adopted from the prefix index) gets an exclusive
+//!   copy first ([`BlockAllocator::reserve`]); the shared original stays
+//!   frozen for its other holders.
+//! * [`PrefixIndex`] (internal) — hash of token-prefix → cached block
+//!   chain. Retiring sequences publish their prompt's blocks; admission
+//!   looks up the longest cached prefix of a new prompt and adopts the
+//!   chain (refcount bump, zero copies), so identical prompt prefixes
+//!   across requests share physical memory AND skip recomputing their
+//!   K/V. Entries are LRU-evicted when the arena runs dry.
+//!
+//! The scheduler side (admission by free blocks, chunked prefill,
+//! preemption) lives in [`crate::serve::batcher`].
 
 use crate::config::schema::ModelConfig;
-use crate::nn::transformer::DecodeCache;
+use crate::nn::kv::{KvBlock, KvStorage, PagedKv};
+use std::collections::HashMap;
+use std::sync::Arc;
 
-/// Identifier of one pool slot.
-pub type SlotId = usize;
+/// Identifier of one arena block (the block-table entry type).
+pub type BlockId = u32;
 
-/// A pool of reusable KV-cache slots.
-#[derive(Debug)]
-pub struct KvCachePool {
-    /// `None` while a slot is checked out to a decode wave.
-    slots: Vec<Option<DecodeCache>>,
-    free: Vec<SlotId>,
-    /// Allocations served since construction.
-    pub allocs: usize,
-    /// Slot recycles (a previously-used slot handed to a new sequence).
-    pub reuses: usize,
-    /// Per-slot flag: has this slot served a sequence before?
-    used_before: Vec<bool>,
-    high_water: usize,
-    slot_bytes: usize,
+/// Lifecycle state of one arena block id. A separate enum (rather than an
+/// `Option<..>` slot) so release/retain misuse is detected in O(1): the
+/// old pool's `free.contains(&id)` double-free scan was O(n) per release,
+/// and its `slots[id].is_some()` assert fired misleadingly while a cache
+/// was merely checked out to a decode wave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockState {
+    /// Recyclable: not referenced by any sequence or prefix entry.
+    Free,
+    /// Referenced by `refs` holders (sequences and/or prefix entries).
+    /// `refs > 1` means the block is shared and must be copy-on-written
+    /// before any append.
+    Live { refs: u32 },
 }
 
-impl KvCachePool {
-    /// `n_slots` caches, each holding up to `capacity` positions (clamped to
-    /// the model's `seq_len` by [`DecodeCache::new`]).
-    pub fn new(cfg: &ModelConfig, n_slots: usize, capacity: usize) -> KvCachePool {
-        assert!(n_slots > 0, "pool needs at least one slot");
-        let slots: Vec<Option<DecodeCache>> =
-            (0..n_slots).map(|_| Some(DecodeCache::new(cfg, capacity))).collect();
-        let slot_bytes = slots[0].as_ref().map(|c| c.bytes()).unwrap_or(0);
-        KvCachePool {
-            slots,
-            free: (0..n_slots).rev().collect(),
+/// Aggregate prefix-cache counters (reported through `ServeStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixCacheStats {
+    pub entries: usize,
+    pub insertions: usize,
+    pub evictions: usize,
+}
+
+/// One cached prompt prefix: the exact tokens it covers plus the block
+/// chain holding their K/V (tokens are kept so a hash collision can never
+/// alias two different prefixes).
+#[derive(Debug)]
+struct PrefixEntry {
+    tokens: Vec<usize>,
+    blocks: Vec<Arc<KvBlock>>,
+    last_used: u64,
+}
+
+/// Hash of a token prefix (FNV-1a over the token values).
+fn prefix_hash(tokens: &[usize]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in tokens {
+        h = fnv_step(h, t);
+    }
+    h ^ tokens.len() as u64
+}
+
+#[inline]
+fn fnv_step(mut h: u64, token: usize) -> u64 {
+    for b in (token as u64).to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[derive(Debug, Default)]
+struct PrefixIndex {
+    map: HashMap<u64, PrefixEntry>,
+    insertions: usize,
+    evictions: usize,
+}
+
+/// The global paged KV arena: block budget, buffer free list, per-block
+/// refcounted states, copy-on-write support, and the cross-request prefix
+/// index.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    n_layer: usize,
+    d_model: usize,
+    block_size: usize,
+    total: usize,
+    /// Per-id lifecycle state; indexed by [`BlockId`].
+    states: Vec<BlockState>,
+    /// Recyclable ids (their buffers live in `spare` or were dropped).
+    free_ids: Vec<BlockId>,
+    /// Recycled buffers awaiting reuse.
+    spare: Vec<KvBlock>,
+    /// Unique live blocks (each shared block counts once).
+    live: usize,
+    block_bytes: usize,
+    /// Blocks handed out since construction.
+    pub allocs: usize,
+    /// Allocations served from a recycled buffer.
+    pub reuses: usize,
+    /// Copy-on-write block copies performed.
+    pub cow_copies: usize,
+    high_water: usize,
+    prefix: PrefixIndex,
+    tick: u64,
+}
+
+impl BlockAllocator {
+    /// An arena of `n_blocks` blocks of `block_size` positions each.
+    pub fn new(cfg: &ModelConfig, n_blocks: usize, block_size: usize) -> BlockAllocator {
+        assert!(n_blocks > 0, "arena needs at least one block");
+        assert!(block_size > 0, "kv block size must be positive");
+        let probe = KvBlock::new(0, cfg.n_layer, block_size, cfg.d_model);
+        BlockAllocator {
+            n_layer: cfg.n_layer,
+            d_model: cfg.d_model,
+            block_size,
+            total: n_blocks,
+            states: Vec::new(),
+            free_ids: Vec::new(),
+            spare: Vec::new(),
+            live: 0,
+            block_bytes: probe.bytes(),
             allocs: 0,
             reuses: 0,
-            used_before: vec![false; n_slots],
+            cow_copies: 0,
             high_water: 0,
-            slot_bytes,
+            prefix: PrefixIndex::default(),
+            tick: 0,
         }
     }
 
-    pub fn n_slots(&self) -> usize {
-        self.slots.len()
+    pub fn block_size(&self) -> usize {
+        self.block_size
     }
 
-    pub fn in_use(&self) -> usize {
-        self.slots.len() - self.free.len()
+    /// Total block budget.
+    pub fn total_blocks(&self) -> usize {
+        self.total
     }
 
-    /// Peak concurrent slot usage.
+    /// Unique blocks currently referenced.
+    pub fn live_blocks(&self) -> usize {
+        self.live
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.total - self.live
+    }
+
+    /// Peak concurrent live blocks.
     pub fn high_water(&self) -> usize {
         self.high_water
     }
 
-    /// Bytes of K/V storage across all slots.
+    /// Bytes of the full arena budget.
     pub fn bytes(&self) -> usize {
-        self.slot_bytes * self.slots.len()
+        self.block_bytes * self.total
     }
 
-    /// Claim a free slot (its cache is reset), or `None` if all are busy.
-    pub fn try_alloc(&mut self) -> Option<SlotId> {
-        let id = self.free.pop()?;
-        if self.used_before[id] {
-            self.reuses += 1;
+    /// Bytes of K/V currently live.
+    pub fn live_bytes(&self) -> usize {
+        self.block_bytes * self.live
+    }
+
+    /// Blocks needed to hold `positions` sequence positions.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// An empty paged cache wired to this arena's geometry (blocks must be
+    /// reserved through the allocator before writes).
+    pub fn new_seq(&self, cfg: &ModelConfig, capacity: usize) -> PagedKv {
+        PagedKv::external(cfg, self.block_size, capacity)
+    }
+
+    fn state(&self, id: BlockId) -> BlockState {
+        self.states[id as usize]
+    }
+
+    /// The block is referenced by more than one holder.
+    pub fn is_shared(&self, id: BlockId) -> bool {
+        matches!(self.state(id), BlockState::Live { refs } if refs > 1)
+    }
+
+    /// Claim one exclusive block, or `None` if the budget is exhausted.
+    pub fn try_alloc(&mut self) -> Option<Arc<KvBlock>> {
+        if self.live >= self.total {
+            return None;
         }
-        self.used_before[id] = true;
-        if let Some(c) = self.slots[id].as_mut() {
-            c.reset();
-        }
+        let mut buf = match self.spare.pop() {
+            Some(b) => {
+                self.reuses += 1;
+                b
+            }
+            None => KvBlock::new(0, self.n_layer, self.block_size, self.d_model),
+        };
+        let id = match self.free_ids.pop() {
+            Some(id) => id,
+            None => {
+                self.states.push(BlockState::Free);
+                (self.states.len() - 1) as BlockId
+            }
+        };
+        buf.id = id;
+        debug_assert_eq!(self.states[id as usize], BlockState::Free);
+        self.states[id as usize] = BlockState::Live { refs: 1 };
+        self.live += 1;
         self.allocs += 1;
-        self.high_water = self.high_water.max(self.in_use());
-        Some(id)
+        self.high_water = self.high_water.max(self.live);
+        Some(Arc::new(buf))
     }
 
-    /// Return a retired sequence's slot to the free list.
-    pub fn release(&mut self, id: SlotId) {
-        debug_assert!(self.slots[id].is_some(), "releasing a checked-out slot");
-        debug_assert!(!self.free.contains(&id), "double release of slot {id}");
-        self.free.push(id);
+    /// Register an additional holder of each block (sharing a chain).
+    pub fn retain(&mut self, blocks: &[Arc<KvBlock>]) {
+        for b in blocks {
+            match self.states[b.id as usize] {
+                BlockState::Live { refs } => {
+                    self.states[b.id as usize] = BlockState::Live { refs: refs + 1 }
+                }
+                BlockState::Free => unreachable!("retain of freed block {}", b.id),
+            }
+        }
     }
 
-    /// Check a slot's cache out for a decode wave (the caller gets owned
-    /// mutable access with no aliasing, so waves can run on worker threads).
-    pub fn take(&mut self, id: SlotId) -> DecodeCache {
-        self.slots[id].take().expect("slot already checked out")
+    /// Drop one holder's reference. When the last holder releases, the id
+    /// and (if no stray `Arc` remains) the buffer are recycled. A double
+    /// release is caught in O(1) by the state enum.
+    pub fn release(&mut self, block: Arc<KvBlock>) {
+        let id = block.id as usize;
+        match self.states[id] {
+            BlockState::Free => {
+                debug_assert!(false, "double release of block {id}");
+            }
+            BlockState::Live { refs: 1 } => {
+                self.states[id] = BlockState::Free;
+                self.free_ids.push(id as BlockId);
+                self.live -= 1;
+                if let Ok(buf) = Arc::try_unwrap(block) {
+                    self.spare.push(buf);
+                }
+            }
+            BlockState::Live { refs } => {
+                self.states[id] = BlockState::Live { refs: refs - 1 };
+            }
+        }
     }
 
-    /// Return a checked-out cache.
-    pub fn put_back(&mut self, id: SlotId, cache: DecodeCache) {
-        debug_assert!(self.slots[id].is_none(), "slot was not checked out");
-        self.slots[id] = Some(cache);
+    /// Release every block of a chain (sequence retirement / preemption).
+    pub fn release_chain(&mut self, blocks: Vec<Arc<KvBlock>>) {
+        for b in blocks {
+            self.release(b);
+        }
+    }
+
+    /// Positions `kv` could absorb right now given the free budget (counting
+    /// the copy-on-write block its shared tail would need), capped by the
+    /// cache's own position capacity.
+    pub fn max_appendable(&self, kv: &PagedKv) -> usize {
+        let mut free = self.free_blocks();
+        let room = kv.staged_room();
+        if room > 0 {
+            if let Some(tail) = kv.tail_block() {
+                if self.is_shared(tail.id) {
+                    if free == 0 {
+                        return 0;
+                    }
+                    free -= 1; // the CoW copy consumes one block
+                }
+            }
+        }
+        let positions = room + free * self.block_size;
+        positions.min(kv.capacity().saturating_sub(kv.len()))
+    }
+
+    /// Make `kv` writable for `n_tokens` more positions: copy-on-write a
+    /// shared tail, then attach fresh blocks. Returns `false` when the
+    /// arena runs dry (already-attached blocks stay with `kv`; the caller
+    /// evicts prefix entries or preempts a sequence and retries).
+    pub fn reserve(&mut self, kv: &mut PagedKv, n_tokens: usize) -> bool {
+        if !self.make_tail_exclusive(kv) {
+            return false;
+        }
+        for _ in 0..kv.blocks_needed(n_tokens) {
+            match self.try_alloc() {
+                Some(b) => kv.push_block(b),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Copy-on-write: if `kv`'s next append lands in a shared block,
+    /// replace that block with an exclusive copy. `false` = out of blocks.
+    pub fn make_tail_exclusive(&mut self, kv: &mut PagedKv) -> bool {
+        let Some(tail) = kv.tail_block() else { return true };
+        if !self.is_shared(tail.id) {
+            return true;
+        }
+        let Some(mut fresh) = self.try_alloc() else { return false };
+        let src = tail.clone();
+        Arc::get_mut(&mut fresh).expect("fresh block is exclusive").copy_contents_from(&src);
+        drop(src);
+        let old = kv.replace_tail(fresh);
+        self.release(old);
+        self.cow_copies += 1;
+        true
+    }
+
+    // ---------------------------------------------------- prefix caching
+
+    /// Publish `tokens`' K/V chain (a retired sequence's prompt) under the
+    /// full prefix and every block-aligned sub-prefix, so future prompts
+    /// can share from any of those cut points. No-op for already-cached
+    /// prefixes (their LRU stamp refreshes).
+    pub fn prefix_insert(&mut self, tokens: &[usize], kv: &PagedKv) {
+        if tokens.len() < 2 {
+            return; // reuse feeds at most len-1 positions; nothing to share
+        }
+        self.tick += 1;
+        let mut lengths: Vec<usize> = (1..)
+            .map(|i| i * self.block_size)
+            .take_while(|&l| l < tokens.len())
+            .collect();
+        lengths.push(tokens.len());
+        for l in lengths {
+            let key = prefix_hash(&tokens[..l]);
+            let tick = self.tick;
+            if let Some(e) = self.prefix.map.get_mut(&key) {
+                if e.tokens.as_slice() == &tokens[..l] {
+                    e.last_used = tick;
+                }
+                continue; // cached already (or a collision: keep the old entry)
+            }
+            let blocks: Vec<Arc<KvBlock>> = kv.blocks_covering(l).to_vec();
+            self.retain(&blocks);
+            self.prefix.map.insert(
+                key,
+                PrefixEntry { tokens: tokens[..l].to_vec(), blocks, last_used: self.tick },
+            );
+            self.prefix.insertions += 1;
+        }
+    }
+
+    /// Longest cached prefix of `tokens` usable by a new sequence (at most
+    /// `tokens.len() - 1` positions — the final token must still be fed to
+    /// produce logits). Every length is probed, longest first, via one
+    /// pass of running FNV hashes, so non-block-aligned entries (cached
+    /// full prompts) are found too — adopting one mid-block is what makes
+    /// the copy-on-write append path live. Returns the retained chain and
+    /// the number of positions it covers.
+    pub fn prefix_lookup(&mut self, tokens: &[usize]) -> Option<(Vec<Arc<KvBlock>>, usize)> {
+        let usable = tokens.len().saturating_sub(1);
+        if usable == 0 {
+            return None;
+        }
+        self.tick += 1;
+        let mut running = Vec::with_capacity(usable);
+        let mut h = 0xcbf29ce484222325u64;
+        for (i, &t) in tokens[..usable].iter().enumerate() {
+            h = fnv_step(h, t);
+            running.push(h ^ (i as u64 + 1));
+        }
+        for l in (1..=usable).rev() {
+            let key = running[l - 1];
+            let tick = self.tick;
+            let Some(e) = self.prefix.map.get_mut(&key) else { continue };
+            if e.tokens.as_slice() != &tokens[..l] {
+                continue;
+            }
+            e.last_used = tick;
+            let blocks = e.blocks.clone();
+            self.retain(&blocks);
+            return Some((blocks, l));
+        }
+        None
+    }
+
+    /// Evict the least-recently-used prefix entry, releasing its blocks.
+    /// Returns `false` when the index is empty.
+    pub fn prefix_evict_lru(&mut self) -> bool {
+        let Some((&key, _)) =
+            self.prefix.map.iter().min_by_key(|(_, e)| e.last_used)
+        else {
+            return false;
+        };
+        let entry = self.prefix.map.remove(&key).expect("key just found");
+        self.release_chain(entry.blocks);
+        self.prefix.evictions += 1;
+        true
+    }
+
+    /// Drop every prefix entry (e.g. at shutdown or for tests).
+    pub fn prefix_clear(&mut self) {
+        while self.prefix_evict_lru() {}
+    }
+
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            entries: self.prefix.map.len(),
+            insertions: self.prefix.insertions,
+            evictions: self.prefix.evictions,
+        }
     }
 }
 
@@ -102,57 +421,165 @@ impl KvCachePool {
 mod tests {
     use super::*;
     use crate::config::schema::Arch;
+    use crate::nn::kv::KvStorage;
 
-    fn pool(n: usize) -> KvCachePool {
-        KvCachePool::new(&ModelConfig::tiny(Arch::Gpt2), n, 16)
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny(Arch::Gpt2)
+    }
+
+    fn arena(n: usize, bs: usize) -> BlockAllocator {
+        BlockAllocator::new(&cfg(), n, bs)
     }
 
     #[test]
-    fn alloc_release_cycle() {
-        let mut p = pool(2);
-        let a = p.try_alloc().unwrap();
-        let b = p.try_alloc().unwrap();
-        assert_ne!(a, b);
-        assert_eq!(p.in_use(), 2);
-        assert!(p.try_alloc().is_none(), "exhausted pool must refuse");
-        p.release(a);
-        assert_eq!(p.in_use(), 1);
-        let c = p.try_alloc().unwrap();
-        assert_eq!(c, a, "free list reuses the released slot");
-        assert_eq!(p.reuses, 1);
-        assert_eq!(p.high_water(), 2);
-        p.release(b);
-        p.release(c);
+    fn alloc_release_cycle_recycles_ids_and_buffers() {
+        let mut a = arena(2, 4);
+        let b0 = a.try_alloc().unwrap();
+        let b1 = a.try_alloc().unwrap();
+        assert_ne!(b0.id, b1.id);
+        assert_eq!(a.live_blocks(), 2);
+        assert_eq!(a.free_blocks(), 0);
+        assert!(a.try_alloc().is_none(), "exhausted arena must refuse");
+        let id0 = b0.id;
+        a.release(b0);
+        assert_eq!(a.free_blocks(), 1);
+        let b2 = a.try_alloc().unwrap();
+        assert_eq!(b2.id, id0, "freed id is recycled");
+        assert_eq!(a.reuses, 1, "freed buffer is recycled");
+        assert_eq!(a.high_water(), 2);
+        a.release(b1);
+        a.release(b2);
+        assert_eq!(a.live_blocks(), 0);
+        assert!(a.bytes() > 0 && a.live_bytes() == 0);
     }
 
     #[test]
-    fn reused_slot_cache_is_reset() {
-        let mut p = pool(1);
-        let id = p.try_alloc().unwrap();
-        let mut c = p.take(id);
-        c.len = 5; // simulate use
-        p.put_back(id, c);
-        p.release(id);
-        let id2 = p.try_alloc().unwrap();
-        assert_eq!(id, id2);
-        assert_eq!(p.take(id2).len, 0, "alloc must hand out a reset cache");
+    fn shared_blocks_release_once_per_holder() {
+        let mut a = arena(4, 4);
+        let b = a.try_alloc().unwrap();
+        let clone = b.clone();
+        a.retain(std::slice::from_ref(&clone));
+        assert!(a.is_shared(b.id));
+        a.release(b);
+        assert_eq!(a.live_blocks(), 1, "still held by the clone");
+        assert!(!a.is_shared(clone.id));
+        a.release(clone);
+        assert_eq!(a.live_blocks(), 0);
     }
 
     #[test]
-    fn take_put_back_preserves_contents() {
-        let mut p = pool(2);
-        let id = p.try_alloc().unwrap();
-        let mut c = p.take(id);
-        c.len = 3;
-        p.put_back(id, c);
-        let c = p.take(id);
-        assert_eq!(c.len, 3);
-        p.put_back(id, c);
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double release")]
+    fn double_release_detected_in_o1() {
+        let mut a = arena(2, 4);
+        let b = a.try_alloc().unwrap();
+        let dup = b.clone();
+        a.release(b);
+        a.release(dup); // second release of the same id: state is Free
     }
 
     #[test]
-    fn pool_reports_bytes() {
-        let p = pool(3);
-        assert!(p.bytes() > 0);
+    fn reserve_attaches_blocks_and_respects_budget() {
+        let c = cfg();
+        let mut a = arena(3, 4);
+        let mut kv = a.new_seq(&c, 64);
+        assert_eq!(a.max_appendable(&kv), 12);
+        assert!(a.reserve(&mut kv, 9)); // 3 blocks
+        assert_eq!(kv.n_blocks(), 3);
+        assert_eq!(a.free_blocks(), 0);
+        let row = vec![0.0f32; c.d_model];
+        for pos in 0..9 {
+            for l in 0..c.n_layer {
+                kv.write(l, pos, &row, &row);
+            }
+            kv.commit(1);
+        }
+        assert_eq!(a.max_appendable(&kv), 3, "room left in the third block");
+        assert!(a.reserve(&mut kv, 3), "in-chain room needs no new block");
+        assert!(!a.reserve(&mut kv, 4), "fourth block exceeds the budget");
+        a.release_chain(kv.take_blocks());
+        assert_eq!(a.free_blocks(), 3);
+    }
+
+    #[test]
+    fn cow_append_copies_shared_tail() {
+        let c = cfg();
+        let mut a = arena(4, 4);
+        // sequence 1 writes 6 positions (2 blocks), publishes its chain
+        let mut kv1 = a.new_seq(&c, 64);
+        assert!(a.reserve(&mut kv1, 6));
+        let row = vec![1.0f32; c.d_model];
+        for pos in 0..6 {
+            for l in 0..c.n_layer {
+                kv1.write(l, pos, &row, &row);
+            }
+            kv1.commit(1);
+        }
+        let chain = kv1.take_blocks();
+        a.retain(&chain); // simulate an index holding the chain
+        // sequence 2 adopts the chain (positions 0..6) and appends
+        let mut kv2 = a.new_seq(&c, 64);
+        kv2.adopt_prefix(&chain, 6);
+        a.retain(kv2.blocks_covering(6));
+        a.release_chain(chain); // original holder leaves; index copy stays
+        assert!(a.is_shared(kv2.block_table()[1]));
+        assert!(a.reserve(&mut kv2, 1), "CoW within budget");
+        assert_eq!(a.cow_copies, 1);
+        assert!(
+            !a.is_shared(kv2.tail_block().unwrap().id),
+            "tail is now exclusive"
+        );
+        let row2 = vec![2.0f32; c.d_model];
+        for l in 0..c.n_layer {
+            kv2.write(l, 6, &row2, &row2);
+        }
+        kv2.commit(1);
+        // the frozen shared copy kept sequence 1's data
+        assert_eq!(kv2.k_row(0, 6), &row2[..]);
+        assert_eq!(kv2.k_row(0, 5), &row[..]);
+    }
+
+    #[test]
+    fn prefix_index_roundtrip_and_lru_eviction() {
+        let c = cfg();
+        let mut a = arena(8, 4);
+        let prompt: Vec<usize> = (0..10).collect();
+        let mut kv = a.new_seq(&c, 64);
+        assert!(a.reserve(&mut kv, 10));
+        let row = vec![0.5f32; c.d_model];
+        for pos in 0..10 {
+            for l in 0..c.n_layer {
+                kv.write(l, pos, &row, &row);
+            }
+            kv.commit(1);
+        }
+        a.prefix_insert(&prompt, &kv);
+        // full prefix (10) + block-aligned cuts (4, 8)
+        assert_eq!(a.prefix_stats().insertions, 3);
+        a.release_chain(kv.take_blocks());
+        assert_eq!(a.live_blocks(), 3, "index keeps the chain alive");
+
+        // identical prompt: reuse covers len-1 = 9 positions? no entry at 9,
+        // so the block-aligned 8 wins
+        let (chain, reused) = a.prefix_lookup(&prompt).unwrap();
+        assert_eq!(reused, 8);
+        assert_eq!(chain.len(), 2);
+        a.release_chain(chain);
+
+        // a prompt sharing only the first 4 tokens
+        let mut other: Vec<usize> = (0..10).collect();
+        other[5] = 40;
+        let (chain, reused) = a.prefix_lookup(&other).unwrap();
+        assert_eq!(reused, 4);
+        a.release_chain(chain);
+
+        // unknown prompt misses
+        assert!(a.prefix_lookup(&[30, 31, 32]).is_none());
+
+        // eviction drains the index and frees the blocks
+        assert!(a.prefix_evict_lru());
+        a.prefix_clear();
+        assert_eq!(a.prefix_stats().entries, 0);
+        assert_eq!(a.live_blocks(), 0);
     }
 }

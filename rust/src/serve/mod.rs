@@ -1,5 +1,5 @@
 //! L4 — the serving layer: batched fake-quantized inference over
-//! GaussWS-trained checkpoints.
+//! GaussWS-trained checkpoints, with paged KV-cache memory.
 //!
 //! The train→serve lifecycle this layer closes:
 //!
@@ -10,18 +10,31 @@
 //!    INT8 / INT4, RNE or stochastic). Dequantize-on-load reproduces the
 //!    scheme's fake-quant bit-for-bit, so serving inherits the Table C.1
 //!    graceful-degradation claims of the training-time grouping.
-//! 2. **decode** — `nn::transformer::decode_step` runs one token against a
-//!    per-sequence KV cache ([`kvcache::KvCachePool`] slots with free-list
-//!    reuse) instead of recomputing the full train-shaped forward.
-//! 3. **schedule** — [`batcher::Batcher`] continuously batches: sequences
-//!    join and leave the active set at wave boundaries, so a retiring
-//!    sequence's KV slot is immediately recycled to the queue.
-//! 4. **serve** — [`engine::Engine`] advances every active sequence one
-//!    position per wave, splitting the batch across worker threads; a
-//!    spawned engine front exposes blocking [`engine::EngineClient`]s.
-//! 5. **account** — [`stats::ServeStats`] tracks p50/p95 latency, TTFT,
-//!    queue time, tokens/sec and batch occupancy, and emits the
-//!    `BENCH_serve.json` throughput record.
+//! 2. **decode** — `nn::transformer::prefill_chunk` advances a sequence by
+//!    N positions per wave (`decode_step` is its 1-token case) against a
+//!    paged per-sequence KV chain ([`crate::nn::kv::PagedKv`]): fixed-size
+//!    position blocks resolved through a block table, bit-identical to the
+//!    contiguous cache.
+//! 3. **allocate** — [`kvcache::BlockAllocator`] owns the global block
+//!    arena: free-list recycling, per-block refcounted states (O(1)
+//!    double-free detection), copy-on-write for shared tails, and a
+//!    prefix index (token-prefix hash → block chain) so identical prompt
+//!    prefixes across requests share physical blocks *and* skip their
+//!    prefill compute.
+//! 4. **schedule** — [`batcher::Scheduler`] continuously batches with a
+//!    block budget: admission waits on free blocks (not slots), prefill
+//!    runs in chunks interleaved with decode waves, and when the arena
+//!    runs dry the newest sequence is preempted back to the queue (blocks
+//!    freed, tokens retained, re-prefilled later).
+//! 5. **serve** — [`engine::Engine`] plans + reserves each sequence's
+//!    chunk, advances the wave across worker threads (safe: blocks are
+//!    `Arc`-shared read-only, writable tails exclusive), and retires
+//!    finished sequences into the prefix index; a spawned engine front
+//!    exposes blocking [`engine::EngineClient`]s.
+//! 6. **account** — [`stats::ServeStats`] tracks p50/p95 latency, TTFT,
+//!    tokens/sec, batch occupancy, block occupancy, prefix-hit rate,
+//!    preemptions and prefill chunks, and emits the `BENCH_serve.json`
+//!    record.
 
 pub mod batcher;
 pub mod engine;
@@ -30,9 +43,9 @@ pub mod protocol;
 pub mod stats;
 pub mod weights;
 
-pub use batcher::{sample_logits, Batcher};
+pub use batcher::{sample_logits, ActiveSeq, Scheduler};
 pub use engine::{Engine, EngineClient, EngineConfig, EngineHandle};
-pub use kvcache::{KvCachePool, SlotId};
+pub use kvcache::{BlockAllocator, BlockId, BlockState, PrefixCacheStats};
 pub use protocol::{FinishReason, GenRequest, GenResponse};
 pub use stats::ServeStats;
 pub use weights::WeightStore;

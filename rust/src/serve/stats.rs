@@ -19,8 +19,29 @@ pub struct ServeStats {
     pub gen_tokens: usize,
     /// Decode waves executed.
     pub waves: usize,
+    /// Sequences admitted into the active batch (re-admissions after
+    /// preemption count again).
+    pub admissions: usize,
+    /// Multi-token prefill chunks executed (waves where a sequence
+    /// advanced by more than one position).
+    pub prefill_chunks: usize,
+    /// Prompt positions fed through multi-token chunks.
+    pub prefill_chunk_tokens: usize,
+    /// Admissions that adopted a cached prompt-prefix chain.
+    pub prefix_hits: usize,
+    /// Admissions that looked up the prefix index and missed.
+    pub prefix_misses: usize,
+    /// KV positions skipped (neither recomputed nor re-stored) thanks to
+    /// prefix reuse.
+    pub prefix_tokens_reused: usize,
+    /// Sequences pushed back to the queue because the arena ran dry.
+    pub preemptions: usize,
+    /// Arena block budget (set once by the engine).
+    pub kv_blocks_total: usize,
     /// Sequences advanced per wave (the continuous-batching occupancy).
     occupancy: Vec<usize>,
+    /// Live arena blocks sampled per wave.
+    block_live: Vec<usize>,
     total_s: Vec<f64>,
     ttft_s: Vec<f64>,
     queue_s: Vec<f64>,
@@ -43,6 +64,77 @@ impl ServeStats {
         self.occupancy.push(n_seqs);
         if self.first_wave.is_none() {
             self.first_wave = Some(Instant::now());
+        }
+    }
+
+    /// Sample the arena's live-block count for the current wave.
+    pub fn record_blocks(&mut self, live: usize, total: usize) {
+        self.kv_blocks_total = total;
+        self.block_live.push(live);
+    }
+
+    /// Record one multi-token prefill chunk of `tokens` positions.
+    pub fn record_prefill_chunk(&mut self, tokens: usize) {
+        self.prefill_chunks += 1;
+        self.prefill_chunk_tokens += tokens;
+    }
+
+    /// Record an admission; `reused` is the prefix positions adopted from
+    /// the prefix index (`None` when the prefix cache is disabled).
+    pub fn record_admission(&mut self, reused: Option<usize>) {
+        self.admissions += 1;
+        match reused {
+            Some(0) => self.prefix_misses += 1,
+            Some(n) => {
+                self.prefix_hits += 1;
+                self.prefix_tokens_reused += n;
+            }
+            None => {}
+        }
+    }
+
+    pub fn record_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Fraction of prefix-index lookups that found a reusable chain.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_hits + self.prefix_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Mean live arena blocks per wave.
+    pub fn mean_blocks_live(&self) -> f64 {
+        if self.block_live.is_empty() {
+            return 0.0;
+        }
+        self.block_live.iter().sum::<usize>() as f64 / self.block_live.len() as f64
+    }
+
+    /// Peak live arena blocks in any wave.
+    pub fn max_blocks_live(&self) -> usize {
+        self.block_live.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean fraction of the arena budget live per wave.
+    pub fn block_occupancy_mean(&self) -> f64 {
+        if self.kv_blocks_total == 0 {
+            0.0
+        } else {
+            self.mean_blocks_live() / self.kv_blocks_total as f64
+        }
+    }
+
+    /// Peak fraction of the arena budget live in any wave.
+    pub fn block_occupancy_max(&self) -> f64 {
+        if self.kv_blocks_total == 0 {
+            0.0
+        } else {
+            self.max_blocks_live() as f64 / self.kv_blocks_total as f64
         }
     }
 
@@ -127,6 +219,15 @@ impl ServeStats {
             ("mean_queue_ms", num(self.mean_queue_ms())),
             ("mean_batch_occupancy", num(self.mean_occupancy())),
             ("max_batch_occupancy", num(self.max_occupancy() as f64)),
+            ("prefill_chunks", num(self.prefill_chunks as f64)),
+            ("prefill_chunk_tokens", num(self.prefill_chunk_tokens as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefix_hit_rate", num(self.prefix_hit_rate())),
+            ("prefix_tokens_reused", num(self.prefix_tokens_reused as f64)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("kv_blocks_total", num(self.kv_blocks_total as f64)),
+            ("block_occupancy_mean", num(self.block_occupancy_mean())),
+            ("block_occupancy_max", num(self.block_occupancy_max())),
         ];
         pairs.extend(extra);
         obj(pairs)
@@ -144,7 +245,11 @@ impl ServeStats {
              latency p50/p95 {:>7.1} / {:.1} ms\n\
              ttft    p50/p95 {:>7.1} / {:.1} ms\n\
              queue mean      {:>10.2} ms\n\
-             occupancy mean  {:>10.2}  (max {})",
+             occupancy mean  {:>10.2}  (max {})\n\
+             prefill chunks  {:>10}  ({} tokens)\n\
+             prefix hits     {:>10}  ({:.0}% rate, {} positions reused)\n\
+             preemptions     {:>10}\n\
+             kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)",
             self.completed,
             self.prompt_tokens,
             self.gen_tokens,
@@ -157,6 +262,16 @@ impl ServeStats {
             self.mean_queue_ms(),
             self.mean_occupancy(),
             self.max_occupancy(),
+            self.prefill_chunks,
+            self.prefill_chunk_tokens,
+            self.prefix_hits,
+            self.prefix_hit_rate() * 100.0,
+            self.prefix_tokens_reused,
+            self.preemptions,
+            self.mean_blocks_live(),
+            self.kv_blocks_total,
+            self.block_occupancy_mean() * 100.0,
+            self.block_occupancy_max() * 100.0,
         )
     }
 }
@@ -227,5 +342,36 @@ mod tests {
         let text = st.render("test");
         assert!(text.contains("occupancy"));
         assert!(text.contains("tokens/sec"));
+        assert!(text.contains("prefix hits"));
+        assert!(text.contains("kv blocks"));
+    }
+
+    #[test]
+    fn paged_metrics_aggregate() {
+        let mut st = ServeStats::new();
+        st.record_blocks(4, 16);
+        st.record_blocks(12, 16);
+        st.record_prefill_chunk(8);
+        st.record_prefill_chunk(3);
+        st.record_admission(Some(0));
+        st.record_admission(Some(10));
+        st.record_admission(None); // prefix cache disabled: no lookup
+        st.record_preemption();
+        assert_eq!(st.admissions, 3);
+        assert_eq!(st.prefill_chunks, 2);
+        assert_eq!(st.prefill_chunk_tokens, 11);
+        assert_eq!(st.prefix_hits, 1);
+        assert_eq!(st.prefix_misses, 1);
+        assert_eq!(st.prefix_tokens_reused, 10);
+        assert!((st.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(st.preemptions, 1);
+        assert!((st.mean_blocks_live() - 8.0).abs() < 1e-12);
+        assert_eq!(st.max_blocks_live(), 12);
+        assert!((st.block_occupancy_mean() - 0.5).abs() < 1e-12);
+        assert!((st.block_occupancy_max() - 0.75).abs() < 1e-12);
+        let j = st.bench_json("paged", vec![]);
+        assert_eq!(j.get("preemptions").as_usize(), Some(1));
+        assert_eq!(j.get("prefix_hits").as_usize(), Some(1));
+        assert_eq!(j.get("kv_blocks_total").as_usize(), Some(16));
     }
 }

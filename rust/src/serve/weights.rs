@@ -3,9 +3,8 @@
 //! per block and *bit-packed element codes* in the target scheme's codec
 //! (BF16 → 2 bytes, FP8/FP6/FP4/INT8/INT4 → 1 byte per element).
 //! Dequantization happens per block on load, reproducing exactly what the
-//! scheme's [`QuantScheme::quantize`] (and therefore the deprecated
-//! `mx::quantize_square`) would emit — so the serving path inherits the
-//! Table C.1 fidelity claims of the training-time grouping.
+//! scheme's [`QuantScheme::quantize`] would emit — so the serving path
+//! inherits the Table C.1 fidelity claims of the training-time grouping.
 //!
 //! Which quantization applies is described by a [`crate::quant::Scheme`]
 //! resolved from a label through [`crate::quant::Registry`] — the same

@@ -2,10 +2,12 @@
 //! invariants that span substrates rather than living inside one module.
 
 use gaussws::config::schema::PqtMethod;
-use gaussws::mx::{quantize_square, transpose, ElemType};
+use gaussws::mx::transpose;
 use gaussws::numerics::fpformat::{formats, FpFormat};
+use gaussws::numerics::Rounding;
 use gaussws::pqt::gaussws::{backward_bt, forward, pqn, NoiseGen};
 use gaussws::pqt::PqtLinear;
+use gaussws::quant::{fake_quantize, Codec, Geometry};
 use gaussws::testing::prop::{check, Gen};
 
 #[test]
@@ -56,11 +58,14 @@ fn prop_square_quant_commutes_with_transpose_for_any_block() {
         let cols = g.usize_in(1, 3) * 32;
         let block = *g.choose(&[8usize, 16, 32]);
         let w = g.normal_vec(rows * cols);
-        let elem = ElemType::Int { bits: g.i32_in(2, 8) as u32 };
-        let q = quantize_square(&w, rows, cols, block, &elem);
+        let codec = Codec::Int { bits: g.i32_in(2, 8) as u32 };
+        let sq = |w: &[f64], r: usize, c: usize| {
+            fake_quantize(w, r, c, Geometry::Square { block }, &codec, Rounding::NearestEven, 0)
+        };
+        let q = sq(&w, rows, cols);
         let qt = transpose(&q.data, rows, cols);
         let wt = transpose(&w, rows, cols);
-        let q2 = quantize_square(&wt, cols, rows, block, &elem);
+        let q2 = sq(&wt, cols, rows);
         if qt == q2.data {
             Ok(())
         } else {

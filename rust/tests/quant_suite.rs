@@ -2,17 +2,16 @@
 //!
 //! * every registered packed scheme encode→decode round-trips *exactly*;
 //! * GWQS2 snapshots written through `QuantScheme` dequantize bit-for-bit
-//!   identical to the (deprecated) `mx::quantize_square` path for every
-//!   registered FP format — the serving store inherits the Table C.1
-//!   fidelity claims through the one shared engine;
+//!   identical to a direct square-blockwise `fake_quantize` of the same
+//!   weights for every registered FP format — the serving store inherits
+//!   the Table C.1 fidelity claims through the one shared engine;
 //! * stochastic rounding is unbiased in expectation (mean error → 0 over
 //!   many draws) for both FP and INT codecs.
 
 use gaussws::config::schema::{Arch, ModelConfig};
-use gaussws::mx::{quantize_square, ElemType};
 use gaussws::nn::transformer::{Params, Transformer};
 use gaussws::numerics::Rounding;
-use gaussws::quant::{Codec, Geometry, QuantScheme, Registry, Scheme};
+use gaussws::quant::{fake_quantize, Codec, Geometry, QuantScheme, Registry, Scheme};
 use gaussws::testing::prop::{check, Gen};
 
 /// Every registered scheme with a packed codec must encode→decode exactly.
@@ -79,10 +78,10 @@ fn prop_quantized_values_roundtrip_through_codes() {
 }
 
 /// The acceptance criterion: a GWQS2 snapshot written via `QuantScheme`
-/// must dequantize bit-for-bit identical to `mx::quantize_square` of the
-/// same weights, for every registered FP format (RNE, square-blockwise).
+/// must dequantize bit-for-bit identical to a direct square-blockwise RNE
+/// `fake_quantize` of the same weights, for every registered FP format.
 #[test]
-fn gwqs2_snapshots_match_mx_quantize_square_bit_for_bit() {
+fn gwqs2_snapshots_match_square_fake_quantize_bit_for_bit() {
     use gaussws::serve::WeightStore;
     let cfg = ModelConfig::tiny(Arch::Gpt2);
     let model = Transformer::new(cfg.clone());
@@ -103,7 +102,15 @@ fn gwqs2_snapshots_match_mx_quantize_square_bit_for_bit() {
         for name in Params::linear_names(&cfg) {
             let m = params.get(&name);
             let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-            let q = quantize_square(&w64, m.rows, m.cols, block, &ElemType::Fp(fmt));
+            let q = fake_quantize(
+                &w64,
+                m.rows,
+                m.cols,
+                Geometry::Square { block },
+                &Codec::Fp(fmt),
+                Rounding::NearestEven,
+                0,
+            );
             let got = served.get(&name);
             for (i, (&g, &want)) in got.data.iter().zip(q.data.iter()).enumerate() {
                 assert_eq!(g, want as f32, "{}: {name}[{i}]", scheme.label());
@@ -176,37 +183,34 @@ fn stochastic_scheme_quantize_is_unbiased_elementwise() {
     }
 }
 
-/// Deterministic schemes must agree with the deprecated mx shims on both
-/// geometries (the shims are defined to be thin wrappers).
+/// `Scheme::quantize` must be exactly the explicit
+/// (geometry × codec × rounding) `fake_quantize` call it names, on both
+/// geometries — the one-engine guarantee the deleted mx shims used to pin.
 #[test]
-fn prop_shims_and_schemes_agree() {
-    check("mx shim == quant engine", 15, |g: &mut Gen| {
-        use gaussws::mx::{quantize_vectorwise, Axis};
+fn prop_scheme_quantize_matches_explicit_fake_quantize() {
+    check("scheme == explicit fake_quantize", 15, |g: &mut Gen| {
+        use gaussws::quant::Axis;
         let (rows, cols) = (g.usize_in(1, 50), g.usize_in(1, 50));
         let block = *g.choose(&[4usize, 16, 32]);
         let w = g.normal_vec(rows * cols);
         let fmt = gaussws::numerics::formats::FP6_E3M2;
-        let sq_shim = quantize_square(&w, rows, cols, block, &ElemType::Fp(fmt));
-        let sq_scheme = Scheme::new(
-            "t",
-            Codec::Fp(fmt),
-            Rounding::NearestEven,
-            Geometry::Square { block },
-        )
-        .quantize(&w, rows, cols, 0);
-        if sq_shim.data != sq_scheme.data || sq_shim.scales != sq_scheme.scales {
-            return Err("square shim diverged".into());
-        }
-        let vec_shim = quantize_vectorwise(&w, rows, cols, block, Axis::Row, &ElemType::Fp(fmt));
-        let vec_scheme = Scheme::new(
-            "t",
-            Codec::Fp(fmt),
-            Rounding::NearestEven,
-            Geometry::Vector { block, axis: Axis::Row },
-        )
-        .quantize(&w, rows, cols, 0);
-        if vec_shim.data != vec_scheme.data || vec_shim.scales != vec_scheme.scales {
-            return Err("vectorwise shim diverged".into());
+        for geometry in
+            [Geometry::Square { block }, Geometry::Vector { block, axis: Axis::Row }]
+        {
+            let direct = fake_quantize(
+                &w,
+                rows,
+                cols,
+                geometry,
+                &Codec::Fp(fmt),
+                Rounding::NearestEven,
+                0,
+            );
+            let scheme = Scheme::new("t", Codec::Fp(fmt), Rounding::NearestEven, geometry)
+                .quantize(&w, rows, cols, 0);
+            if direct.data != scheme.data || direct.scales != scheme.scales {
+                return Err(format!("{geometry:?} diverged"));
+            }
         }
         Ok(())
     });

@@ -6,12 +6,32 @@
 
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
-use gaussws::mx::{quantize_square, ElemType};
 use gaussws::nn::transformer::{DecodeCache, Params, Transformer};
 use gaussws::numerics::fpformat::formats;
-use gaussws::quant::resolve;
+use gaussws::numerics::Rounding;
+use gaussws::quant::{fake_quantize, resolve, Codec, Geometry, Quantized};
 use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::testing::prop::{check, Gen};
+
+/// Square-blockwise RNE fake quantization through the quant engine (what
+/// the deleted `mx::quantize_square` shim used to wrap).
+fn fq_square(
+    w: &[f64],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    fmt: gaussws::numerics::FpFormat,
+) -> Quantized {
+    fake_quantize(
+        w,
+        rows,
+        cols,
+        Geometry::Square { block },
+        &Codec::Fp(fmt),
+        Rounding::NearestEven,
+        0,
+    )
+}
 
 // ---------------------------------------------------------------- MX bounds
 
@@ -24,7 +44,7 @@ fn assert_roundtrip_bounds(g: &mut Gen, fmt: gaussws::numerics::FpFormat) -> Res
     let cols = g.usize_in(1, 70);
     let block = *g.choose(&[4usize, 16, 32]);
     let w = g.normal_vec(rows * cols);
-    let q = quantize_square(&w, rows, cols, block, &ElemType::Fp(fmt));
+    let q = fq_square(&w, rows, cols, block, fmt);
     let grid_c = cols.div_ceil(block);
     let rel = 0.5 * (-(fmt.man_bits as f64)).exp2();
     for (i, (&orig, &quant)) in w.iter().zip(q.data.iter()).enumerate() {
@@ -62,7 +82,7 @@ fn prop_bf16_exact_for_representable_values() {
     check("bf16 exact on bf16 inputs", 30, |g| {
         let n = 32usize;
         let w: Vec<f64> = (0..n * n).map(|_| formats::BF16.cast(g.normal())).collect();
-        let q = quantize_square(&w, n, n, 32, &ElemType::Fp(formats::BF16));
+        let q = fq_square(&w, n, n, 32, formats::BF16);
         for (i, (&a, &b)) in w.iter().zip(q.data.iter()).enumerate() {
             if a != b {
                 return Err(format!("elem {i}: {a} != {b}"));
@@ -79,7 +99,7 @@ fn prop_quantization_error_decreases_with_precision() {
         let n = 64usize;
         let w = g.normal_vec(n * n);
         let rms = |fmt| {
-            let q = quantize_square(&w, n, n, 32, &ElemType::Fp(fmt));
+            let q = fq_square(&w, n, n, 32, fmt);
             (w.iter().zip(q.data.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
                 / w.len() as f64)
                 .sqrt()
@@ -104,12 +124,12 @@ fn tiny_model(arch: Arch, seed: u64) -> (ModelConfig, Transformer, Params) {
 }
 
 /// The fq_inference-style quantization path: cast every linear in place.
-fn quantize_linears(params: &Params, cfg: &ModelConfig, elem: &ElemType) -> Params {
+fn quantize_linears(params: &Params, cfg: &ModelConfig, fmt: gaussws::numerics::FpFormat) -> Params {
     let mut out = params.clone();
     for name in Params::linear_names(cfg) {
         let m = out.get_mut(&name);
         let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
-        let q = quantize_square(&w64, m.rows, m.cols, 32, elem);
+        let q = fq_square(&w64, m.rows, m.cols, 32, fmt);
         for (dst, &src) in m.data.iter_mut().zip(q.data.iter()) {
             *dst = src as f32;
         }
@@ -120,11 +140,11 @@ fn quantize_linears(params: &Params, cfg: &ModelConfig, elem: &ElemType) -> Para
 #[test]
 fn snapshot_reproduces_fq_inference_logits() {
     // the weight store's pack→unpack must land on the same weights as the
-    // direct quantize_square path, hence identical logits
+    // direct square fake-quantize path, hence identical logits
     for arch in [Arch::Gpt2, Arch::Llama2] {
         let (cfg, model, params) = tiny_model(arch, 21);
         for fmt in [formats::BF16, formats::FP8_E3M4, formats::FP6_E3M2] {
-            let direct = quantize_linears(&params, &cfg, &ElemType::Fp(fmt));
+            let direct = quantize_linears(&params, &cfg, fmt);
             let scheme = gaussws::quant::Scheme::new(
                 "test",
                 gaussws::quant::Codec::Fp(fmt),
@@ -225,7 +245,13 @@ fn engine_batches_and_serves_all_store_modes() {
             WeightStore::from_params(&params, &cfg, resolve(mode).unwrap(), 66).unwrap();
         let mut engine = Engine::from_store(
             &store,
-            EngineConfig { max_batch: 4, kv_slots: 4, threads: 2, eos: None, capacity: usize::MAX },
+            EngineConfig {
+                max_batch: 4,
+                kv_block: 8,
+                prefix_cache: false,
+                threads: 2,
+                ..EngineConfig::default()
+            },
         );
         for id in 0..6u64 {
             engine
@@ -237,28 +263,37 @@ fn engine_batches_and_serves_all_store_modes() {
         assert!(done.iter().all(|r| r.tokens.len() == 5), "{mode}");
         assert!(engine.stats.max_occupancy() > 1, "{mode}: no batching observed");
         assert!(engine.stats.tokens_per_sec() >= 0.0);
-        let (in_use, _, high_water, _) = engine.kv_usage();
-        assert_eq!(in_use, 0, "{mode}: slots leaked");
-        assert!(high_water >= 4, "{mode}: pool never filled (high water {high_water})");
+        let (live, _, high_water, _) = engine.kv_usage();
+        assert_eq!(live, 0, "{mode}: blocks leaked");
+        assert!(high_water >= 4, "{mode}: arena never filled (high water {high_water})");
     }
 }
 
 #[test]
-fn queue_drains_when_requests_exceed_slots() {
-    // more requests than KV slots: admission must throttle, slot reuse must
-    // recycle capacity, and every request must still complete
+fn queue_drains_when_requests_exceed_blocks() {
+    // more demand than KV blocks: admission must throttle on the block
+    // budget, retirement must recycle blocks, and every request must still
+    // complete. 2 blocks of 8 positions; each request needs 1 block.
     let (cfg, _model, params) = tiny_model(Arch::Gpt2, 77);
     let store = WeightStore::from_params(&params, &cfg, resolve("bf16").unwrap(), 77).unwrap();
     let mut engine = Engine::from_store(
         &store,
-        EngineConfig { max_batch: 8, kv_slots: 2, threads: 1, eos: None, capacity: usize::MAX },
+        EngineConfig {
+            max_batch: 8,
+            kv_block: 8,
+            kv_blocks: 2,
+            prefix_cache: false,
+            threads: 1,
+            ..EngineConfig::default()
+        },
     );
     for id in 0..7u64 {
         engine.enqueue(GenRequest::greedy(id, vec![4, 5], 3 + (id as usize % 3))).unwrap();
     }
     let done = engine.run_to_completion();
     assert_eq!(done.len(), 7);
-    let (_, slots, high_water, _) = engine.kv_usage();
-    assert_eq!(slots, 2);
+    let (_, blocks, high_water, _) = engine.kv_usage();
+    assert_eq!(blocks, 2);
     assert_eq!(high_water, 2);
+    assert!(engine.stats.max_occupancy() <= 2, "at most 2 one-block sequences fit");
 }
