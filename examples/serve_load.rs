@@ -12,11 +12,15 @@
 //! block-granular, so hits need `shared-prefix >= kv-block` (the default
 //! kv-block here is 8 to match the default shared prefix).
 //!
+//! `--kv-store <label>` additionally quantizes the KV arena itself
+//! (block-granular codes + po2 scales through the quant registry, e.g.
+//! `fp8_e3m4` or `int8_sr`); the default `f32` keeps today's exact path.
+//!
 //! Run: cargo run --release --example serve_load -- \
 //!        [--clients 8] [--requests-per-client 4] [--store fp8_e3m4]
 //!        [--max-batch 8] [--threads 2] [--prompt-len 12] [--max-new 16]
 //!        [--kv-block 8] [--kv-blocks 0] [--prefill-chunk 8]
-//!        [--shared-prefix 8] [--no-prefix-cache]
+//!        [--kv-store f32] [--shared-prefix 8] [--no-prefix-cache]
 
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
@@ -55,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         store.master_bytes() as f64 / store.bytes() as f64
     );
 
+    let kv_scheme = gaussws::quant::resolve(args.get_or("kv-store", "f32"))?;
     let ecfg = EngineConfig {
         max_batch,
         kv_block,
@@ -64,9 +69,16 @@ fn main() -> anyhow::Result<()> {
         threads,
         eos: None,
         capacity: usize::MAX,
+        kv_scheme,
+        kv_seed: seed,
     };
-    ecfg.validate()?;
+    ecfg.validate_for(&cfg)?;
     let engine = Engine::from_store(&store, ecfg);
+    println!(
+        "kv store: {} ({} B/position encoded)",
+        engine.kv_store(),
+        engine.kv_bytes_per_position()
+    );
     let handle = engine.spawn();
 
     let corpus = SynthCorpus::generate(SynthSpec {

@@ -9,7 +9,12 @@
 //!     per sequence — the PR-1 reservation strategy) at batch 8;
 //!   * shared-prefix workload with the prefix cache on vs off at batch 8 —
 //!     the "on" arm must show prefix_hit_rate > 0 AND lower mean block
-//!     occupancy (asserted).
+//!     occupancy (asserted);
+//!   * KV-store scaling on the shared-prefix workload at batch 8: `f32`
+//!     vs `fp8_e3m4` vs `int8_sr` KV arenas, reporting tokens/sec,
+//!     encoded bytes/position, and the perplexity-proxy max-abs logit
+//!     drift vs the f32 reference (asserted zero for f32, bounded for the
+//!     quantized arms).
 //!
 //! Run: cargo bench --bench bench_serve [-- --quick --out BENCH_serve.json]
 
@@ -17,6 +22,7 @@ use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
 use gaussws::nn::transformer::Transformer;
 use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
+use gaussws::testing::fuzz::{kv_logit_drift, FUZZ_DRIFT_BOUND};
 use gaussws::util::json::{arr, num, obj, s, Json};
 use gaussws::util::Args;
 
@@ -27,6 +33,7 @@ struct Arm {
     prefix_cache: bool,
     shared_prefix: usize,
     requests: usize,
+    kv_store: String,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -37,6 +44,8 @@ fn run_arm(
     threads: usize,
     prompt_len: usize,
     max_new: usize,
+    kv_seed: u64,
+    extra: Vec<(&'static str, Json)>,
 ) -> (Json, f64, f64) {
     let mut engine = Engine::from_store(
         store,
@@ -47,8 +56,11 @@ fn run_arm(
             prefill_chunk: 8,
             prefix_cache: arm.prefix_cache,
             threads,
-            eos: None,
-            capacity: usize::MAX,
+            kv_scheme: gaussws::quant::resolve(&arm.kv_store).expect("kv store label"),
+            // same SR streams as the drift probe, so the recorded
+            // kv_logit_drift_max describes this arm's actual quantization
+            kv_seed,
+            ..EngineConfig::default()
         },
     );
     let span = corpus.tokens.len() - prompt_len - 1;
@@ -79,19 +91,18 @@ fn run_arm(
         "{}: continuous batching inactive",
         arm.label
     );
-    let record = engine.stats.bench_json(
-        &arm.label,
-        vec![
-            ("store", s(store.label())),
-            ("batch", num(arm.batch as f64)),
-            ("threads", num(threads as f64)),
-            ("prompt_len", num(prompt_len as f64)),
-            ("max_new", num(max_new as f64)),
-            ("kv_block", num(arm.kv_block as f64)),
-            ("prefix_cache", Json::Bool(arm.prefix_cache)),
-            ("shared_prefix", num(arm.shared_prefix as f64)),
-        ],
-    );
+    let mut extras = vec![
+        ("store", s(store.label())),
+        ("batch", num(arm.batch as f64)),
+        ("threads", num(threads as f64)),
+        ("prompt_len", num(prompt_len as f64)),
+        ("max_new", num(max_new as f64)),
+        ("kv_block", num(arm.kv_block as f64)),
+        ("prefix_cache", Json::Bool(arm.prefix_cache)),
+        ("shared_prefix", num(arm.shared_prefix as f64)),
+    ];
+    extras.extend(extra);
+    let record = engine.stats.bench_json(&arm.label, extras);
     println!("BENCH {record}");
     (record, engine.stats.prefix_hit_rate(), engine.stats.mean_blocks_live())
 }
@@ -141,8 +152,9 @@ fn main() {
             prefix_cache: true,
             shared_prefix: 0,
             requests: batch * per_slot,
+            kv_store: "f32".into(),
         };
-        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new).0);
+        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, vec![]).0);
     }
 
     // ---- paged vs contiguous-equivalent reservation at equal batch ----
@@ -154,8 +166,9 @@ fn main() {
             prefix_cache: false,
             shared_prefix: 0,
             requests: 8 * per_slot,
+            kv_store: "f32".into(),
         };
-        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new).0);
+        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, vec![]).0);
     }
 
     // ---- shared-prefix workload: prefix cache on vs off at equal batch ----
@@ -171,11 +184,12 @@ fn main() {
         prefix_cache: on,
         shared_prefix,
         requests: 8 * per_slot,
+        kv_store: "f32".into(),
     };
     let (rec_on, hit_rate_on, occ_on) =
-        run_arm(&store, &corpus, &mk_prefix_arm(true), threads, prompt_len, max_new);
+        run_arm(&store, &corpus, &mk_prefix_arm(true), threads, prompt_len, max_new, seed, vec![]);
     let (rec_off, hit_rate_off, occ_off) =
-        run_arm(&store, &corpus, &mk_prefix_arm(false), threads, prompt_len, max_new);
+        run_arm(&store, &corpus, &mk_prefix_arm(false), threads, prompt_len, max_new, seed, vec![]);
     assert!(hit_rate_on > 0.0, "shared-prefix arm must hit the prefix cache");
     assert_eq!(hit_rate_off, 0.0);
     assert!(
@@ -184,6 +198,44 @@ fn main() {
     );
     records.push(rec_on);
     records.push(rec_off);
+
+    // ---- KV-store scaling on the shared-prefix workload at equal batch ----
+    // tokens/sec per scheme + perplexity-proxy logit drift vs the f32 KV
+    // reference over a fixed probe prompt set (decoded with the *served*
+    // dequantized weights, so the drift isolates the KV arena's rounding)
+    let model_for_drift = Transformer::new(cfg.clone());
+    let served_params = store.to_params();
+    let drift_prompts: Vec<Vec<usize>> = (0..4)
+        .map(|k| {
+            let start = 900 + k * 3100;
+            corpus.tokens[start..start + 24].iter().map(|&t| t as usize).collect()
+        })
+        .collect();
+    for kv_store in ["f32", "fp8_e3m4", "int8_sr"] {
+        let drift = drift_prompts
+            .iter()
+            .map(|p| kv_logit_drift(&model_for_drift, &served_params, p, kv_store, 4, seed))
+            .fold(0f32, f32::max);
+        if kv_store == "f32" {
+            assert_eq!(drift, 0.0, "f32 KV passthrough must be drift-free");
+        } else {
+            assert!(
+                drift.is_finite() && drift < FUZZ_DRIFT_BOUND,
+                "{kv_store}: KV logit drift {drift} out of bound"
+            );
+        }
+        let arm = Arm {
+            label: format!("{}/kv-{kv_store}/b8", store.label()),
+            batch: 8,
+            kv_block: 4,
+            prefix_cache: true,
+            shared_prefix,
+            requests: 8 * per_slot,
+            kv_store: kv_store.into(),
+        };
+        let extra = vec![("kv_logit_drift_max", num(drift as f64))];
+        records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, extra).0);
+    }
 
     let aggregate = obj(vec![
         ("bench", s("serve")),

@@ -21,10 +21,24 @@
 //!   `serve::BlockAllocator`), chunked prefill, cross-request prefix
 //!   caching with copy-on-write, preemption under memory pressure, a
 //!   multi-threaded decode worker pool, and p50/p95 latency + tokens/sec
-//!   + block-occupancy accounting. `gaussws serve` and
+//!   + block-occupancy accounting. The KV arena itself can be
+//!   **quantized block-by-block** through any blockwise quant scheme
+//!   ([`nn::kv::KvQuant`], `serve --kv-store fp8_e3m4|int8_sr|…`):
+//!   packed codes + per-group po2 scales are canonical, an f32 decode
+//!   mirror keeps reads zero-copy, and `--kv-store f32` preserves the
+//!   bit-identical passthrough path. `gaussws serve` and
 //!   `examples/serve_load.rs` drive it end to end; the storage seam is
 //!   the [`nn::kv::KvStorage`] trait (contiguous `DecodeCache` for
 //!   standalone decode, paged for serving — bit-identical logits).
+//! * **[`testing`]** — the in-crate test substrate: `testing::prop` is the
+//!   mini property-testing framework (deterministic per-seed `Gen` +
+//!   `check` runner), and `testing::fuzz` is the serving
+//!   fuzz/conformance harness — `FuzzCase::generate(seed)` derives a
+//!   random request mix + engine config, `check_case(seed)` asserts the
+//!   serving invariants (leak-free drain, determinism, prefix-cache
+//!   transparency, paged-f32 == contiguous, bounded quantized-KV logit
+//!   drift), and `tests/fuzz_serve.rs` runs the fixed 8-seed matrix in a
+//!   dedicated release-mode CI job.
 //! * **[`quant`]** — the unified quantization seam underneath L3 and L4:
 //!   one `QuantScheme` trait (codec × rounding × scale geometry) plus a
 //!   label registry (`"bf16"`, `"fp8_e3m4"`, `"int8_sr"`, …) shared by

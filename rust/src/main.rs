@@ -69,6 +69,7 @@ fn print_usage() {
          \x20                --vocab 256 --seq-len 64] [--save-snapshot w.gwqs]\n\
          \x20               [--requests 32 --max-batch 8 --threads N]\n\
          \x20               [--kv-block 16 --kv-blocks 0(auto) --prefill-chunk 8]\n\
+         \x20               [--kv-store f32|fp8_e3m4|int8_sr|... (KV arena quantization)]\n\
          \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
@@ -411,6 +412,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let kv_blocks = args.usize_or("kv-blocks", 0);
     let prefill_chunk = args.usize_or("prefill-chunk", 8);
     let prefix_cache = !args.flag("no-prefix-cache");
+    // --kv-store: how the KV arena stores K/V rows — "f32" passthrough
+    // (bit-identical to pre-quantization serving) or any blockwise
+    // registry scheme (packed codes + per-group po2 scales)
+    let kv_store_label = args.get_or("kv-store", "f32");
+    let kv_scheme = gaussws::quant::resolve(kv_store_label)?;
     let ecfg = EngineConfig {
         max_batch,
         kv_block,
@@ -420,10 +426,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads,
         eos: args.get("eos").and_then(|v| v.parse().ok()),
         capacity: usize::MAX,
+        kv_scheme,
+        kv_seed: seed,
     };
-    // degenerate paging configs fail here with a clean error, not a panic
-    ecfg.validate()?;
+    // degenerate paging configs (including an unhostable --kv-store
+    // geometry for this model) fail here with a clean error, not a panic
+    ecfg.validate_for(&mcfg)?;
     let mut engine = Engine::from_store(&store, ecfg);
+    println!(
+        "kv store: {} — {} B/position encoded vs {} B f32 ({:.2}x)",
+        engine.kv_store(),
+        engine.kv_bytes_per_position(),
+        2 * mcfg.n_layer * mcfg.d_model * 4,
+        (2 * mcfg.n_layer * mcfg.d_model * 4) as f64 / engine.kv_bytes_per_position() as f64
+    );
 
     // ---- optional deployment-quality eval (Table C.1 check) ----
     if args.flag("eval") {

@@ -23,14 +23,186 @@
 //! block-by-block, so arena admission can be bounded by *blocks actually
 //! in use*. Decode results are bit-identical between the two (see
 //! `tests/paged_suite.rs`).
+//!
+//! # Quantized KV blocks ([`KvQuant`])
+//!
+//! The paged arena can additionally store K/V rows *through a
+//! [`crate::quant::Scheme`]*: each row is split into `block`-element groups
+//! sharing one power-of-two scale, and elements are encoded as packed codes
+//! (FP emulation or symmetric INT, RNE or stochastic rounding). The codes +
+//! scales are the canonical storage — a resident f32 *decode mirror* backs
+//! the zero-copy [`KvStorage::k_row`]/[`KvStorage::v_row`] reads, and is
+//! kept exactly equal to `decode(code) × scale` at all times. Memory
+//! accounting ([`KvQuant::bytes_per_position`]) reports the encoded
+//! footprint a deployment layout would cost; the mirror is the emulation
+//! overhead, same trade as the `serve::WeightStore` dequantize-on-load
+//! path.
+//!
+//! Rows are encoded at **stage time** ([`KvStorage::write`]), not at
+//! commit: a position staged earlier in the same prefill chunk must read
+//! identically to one committed in a previous wave, otherwise splitting a
+//! prompt into different chunk sizes would change the logits. With
+//! stage-time encoding, chunked prefill stays bit-identical for any split
+//! under every scheme (fuzzed in `tests/fuzz_serve.rs`); `commit` remains a
+//! pure cursor advance. Stochastic rounding draws are keyed per
+//! (seed, layer, absolute position), so a preempted sequence re-prefilling
+//! from scratch — or a second request recomputing a shared prefix —
+//! reproduces the exact same codes, which is what keeps greedy outputs
+//! independent of preemption and prefix-cache hits.
+//! The `"f32"` passthrough scheme stores raw rows with no codes: that path
+//! is byte-identical to the pre-quantization behaviour.
 
 use crate::config::schema::ModelConfig;
+use crate::numerics::fpformat::Rounding;
+use crate::prng::Philox4x32;
+use crate::quant::{po2_scale, QuantScheme, Scheme};
+use anyhow::{bail, Result};
 use std::sync::Arc;
+
+/// Row-granular KV quantization policy: how the K/V rows inside a
+/// [`KvBlock`] are encoded. Wraps a [`crate::quant::Scheme`]; the scheme's
+/// block size becomes the per-row scale-group size (each `d_model`-element
+/// row holds `d_model / group` groups, one po2 scale each).
+///
+/// Construction rejects schemes the row layout cannot host: a packed codec
+/// with elementwise geometry (no block, so no shared scale), or a block
+/// size that does not divide `d_model` (ragged tail groups are not
+/// supported — see [`crate::serve::EngineConfig::validate_for`]).
+#[derive(Debug, Clone)]
+pub struct KvQuant {
+    scheme: Scheme,
+    /// Elements per shared po2 scale; 0 for the f32 passthrough.
+    group: usize,
+    d_model: usize,
+    /// Base seed for stochastic-rounding draws (mixed per layer/position).
+    seed: u64,
+}
+
+impl KvQuant {
+    /// The f32 passthrough policy (raw rows, no codes) — today's
+    /// bit-identical path.
+    pub fn passthrough(d_model: usize) -> KvQuant {
+        let scheme = crate::quant::resolve("f32").expect("f32 scheme is registered");
+        KvQuant { scheme, group: 0, d_model, seed: 0 }
+    }
+
+    /// Build a KV quantizer for `scheme` over `d_model`-wide rows. `seed`
+    /// feeds stochastic rounding (deterministic per layer/position).
+    pub fn new(scheme: Scheme, d_model: usize, seed: u64) -> Result<KvQuant> {
+        if !scheme.codec.is_packed() {
+            return Ok(KvQuant { scheme, group: 0, d_model, seed });
+        }
+        let Some(group) = scheme.block() else {
+            bail!(
+                "kv-store scheme '{}' is an elementwise cast (no block scale); \
+                 KV quantization is block-granular — pick a blockwise label such as 'fp8_e3m4'",
+                scheme.label()
+            );
+        };
+        if d_model % group != 0 {
+            bail!(
+                "kv-store scheme '{}' block {group} does not divide d_model {d_model}; \
+                 KV rows need row-divisible block geometry",
+                scheme.label()
+            );
+        }
+        Ok(KvQuant { scheme, group, d_model, seed })
+    }
+
+    /// Canonical scheme label, e.g. `"fp8_e3m4"` (`"f32"` for passthrough).
+    pub fn label(&self) -> &str {
+        self.scheme.label()
+    }
+
+    /// False for the f32 passthrough (raw rows, no codes).
+    pub fn is_quantizing(&self) -> bool {
+        self.scheme.codec.is_packed()
+    }
+
+    /// Scale groups per K (or V) row; 0 for passthrough.
+    pub fn groups_per_row(&self) -> usize {
+        if self.group == 0 {
+            0
+        } else {
+            self.d_model / self.group
+        }
+    }
+
+    /// Encoded bytes one sequence position costs (K + V rows of every
+    /// layer): packed element codes plus one f32 scale per group, or plain
+    /// f32 rows for the passthrough. This is the deployment-layout number
+    /// `ServeStats` reports as `kv_bytes_per_position`.
+    pub fn bytes_per_position(&self, n_layer: usize) -> usize {
+        let per_row = if self.is_quantizing() {
+            self.d_model * self.scheme.codec.bytes_per_elem() + self.groups_per_row() * 4
+        } else {
+            self.d_model * 4
+        };
+        2 * n_layer * per_row
+    }
+
+    /// Deterministic SR stream key for one row: splitmix64-style mix of
+    /// (seed, layer, position, K-or-V), so a row re-encoded after
+    /// preemption or on a prefix-cache miss reproduces its codes exactly.
+    fn row_seed(&self, layer: usize, pos: usize, which: u64) -> u64 {
+        let mut h = self.seed ^ 0x9E37_79B9_7F4A_7C15;
+        for x in [layer as u64 + 1, pos as u64 + 1, which + 1] {
+            h ^= x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        }
+        h
+    }
+
+    /// Encode one staged row in place: per group, compute the po2 scale,
+    /// pack each element's code, and overwrite the f32 mirror with the
+    /// dequantized value (`decode(code) × scale`). No-op for passthrough.
+    fn encode_row(
+        &self,
+        row: &mut [f32],
+        codes: &mut [u16],
+        scales: &mut [f32],
+        layer: usize,
+        pos: usize,
+        which: u64,
+    ) {
+        debug_assert_eq!(row.len(), self.d_model);
+        let codec = &self.scheme.codec;
+        let rounding = self.scheme.rounding;
+        let stochastic = rounding == Rounding::Stochastic;
+        let mut rng = Philox4x32::new(self.row_seed(layer, pos, which));
+        for (gi, chunk) in row.chunks_mut(self.group).enumerate() {
+            let amax = chunk.iter().fold(0f64, |m, &x| m.max((x as f64).abs()));
+            let s = po2_scale(amax, codec);
+            scales[gi] = s as f32;
+            for (e, x) in chunk.iter_mut().enumerate() {
+                let rand = if stochastic { rng.next_u32() } else { 0 };
+                let q = codec.quantize(*x as f64 / s, rounding, rand);
+                codes[gi * self.group + e] = codec.encode(q);
+                *x = (q * s) as f32;
+            }
+        }
+    }
+}
+
+/// Packed payload of a quantized block: element codes (one u16 slot per
+/// element, occupying `bytes_per_elem` in the deployment accounting) and
+/// one f32 po2 scale per row group, for K and V separately.
+#[derive(Debug, Clone, PartialEq)]
+struct KvEnc {
+    k_codes: Vec<u16>,
+    v_codes: Vec<u16>,
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
+    groups_per_row: usize,
+}
 
 /// One fixed-size position block: the K and V rows of `block_size`
 /// consecutive sequence positions for *every* layer, laid out layer-major
 /// (`(layer * block_size + slot) * d_model`). This is the unit of KV-cache
 /// allocation, sharing, and copy-on-write in the serve layer.
+///
+/// For quantized blocks the packed codes + scales in `enc` are canonical;
+/// `k`/`v` hold the dequantized f32 mirror the read path returns slices of.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KvBlock {
     /// Arena identity (block-table entry). Standalone [`PagedKv`]s number
@@ -40,13 +212,39 @@ pub struct KvBlock {
     v: Vec<f32>,
     block_size: usize,
     d_model: usize,
+    enc: Option<KvEnc>,
 }
 
 impl KvBlock {
+    /// A raw-f32 block (the passthrough layout).
     pub fn new(id: u32, n_layer: usize, block_size: usize, d_model: usize) -> KvBlock {
         assert!(block_size > 0 && d_model > 0 && n_layer > 0);
         let n = n_layer * block_size * d_model;
-        KvBlock { id, k: vec![0.0; n], v: vec![0.0; n], block_size, d_model }
+        KvBlock { id, k: vec![0.0; n], v: vec![0.0; n], block_size, d_model, enc: None }
+    }
+
+    /// A block shaped for `quant`: allocates the code/scale payload when
+    /// the policy quantizes, otherwise identical to [`KvBlock::new`].
+    pub fn for_quant(
+        id: u32,
+        n_layer: usize,
+        block_size: usize,
+        d_model: usize,
+        quant: &KvQuant,
+    ) -> KvBlock {
+        let mut b = KvBlock::new(id, n_layer, block_size, d_model);
+        if quant.is_quantizing() {
+            let n = n_layer * block_size * d_model;
+            let g = quant.groups_per_row();
+            b.enc = Some(KvEnc {
+                k_codes: vec![0; n],
+                v_codes: vec![0; n],
+                k_scales: vec![1.0; n_layer * block_size * g],
+                v_scales: vec![1.0; n_layer * block_size * g],
+                groups_per_row: g,
+            });
+        }
+        b
     }
 
     /// Positions this block can hold.
@@ -54,9 +252,25 @@ impl KvBlock {
         self.block_size
     }
 
-    /// Bytes of K/V storage in this block.
+    /// This block stores packed codes (a quantized KV scheme).
+    pub fn is_encoded(&self) -> bool {
+        self.enc.is_some()
+    }
+
+    /// Resident bytes of K/V storage in this block: the f32 mirror plus,
+    /// for quantized blocks, the canonical codes and scales (the emulation
+    /// keeps both; [`KvQuant::bytes_per_position`] is the deployment
+    /// number).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        let mirror = (self.k.len() + self.v.len()) * std::mem::size_of::<f32>();
+        match &self.enc {
+            None => mirror,
+            Some(e) => {
+                mirror
+                    + (e.k_codes.len() + e.v_codes.len()) * std::mem::size_of::<u16>()
+                    + (e.k_scales.len() + e.v_scales.len()) * std::mem::size_of::<f32>()
+            }
+        }
     }
 
     #[inline]
@@ -77,19 +291,82 @@ impl KvBlock {
         &self.v[o..o + self.d_model]
     }
 
-    /// Write the K and V rows of `layer` at in-block position `slot`.
+    /// Packed K codes of `layer` at `slot` (None for raw blocks).
+    pub fn k_codes(&self, layer: usize, slot: usize) -> Option<&[u16]> {
+        let o = self.off(layer, slot);
+        self.enc.as_ref().map(|e| &e.k_codes[o..o + self.d_model])
+    }
+
+    /// Per-group K scales of `layer` at `slot` (None for raw blocks).
+    pub fn k_scales(&self, layer: usize, slot: usize) -> Option<&[f32]> {
+        self.enc.as_ref().map(|e| {
+            let so = (layer * self.block_size + slot) * e.groups_per_row;
+            &e.k_scales[so..so + e.groups_per_row]
+        })
+    }
+
+    /// Write the K and V rows of `layer` at in-block position `slot`
+    /// verbatim (raw path; quantized writes go through
+    /// [`KvBlock::write_encoded`]).
     pub fn write(&mut self, layer: usize, slot: usize, k: &[f32], v: &[f32]) {
         let o = self.off(layer, slot);
         self.k[o..o + self.d_model].copy_from_slice(k);
         self.v[o..o + self.d_model].copy_from_slice(v);
     }
 
+    /// Write the K/V rows of `layer` at `slot`, encoding them through
+    /// `quant` (codes + scales become canonical, the mirror holds the
+    /// dequantized values). `pos` is the absolute sequence position —
+    /// stochastic rounding is keyed on it so re-encoding after preemption
+    /// reproduces the same codes.
+    pub fn write_encoded(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k: &[f32],
+        v: &[f32],
+        quant: &KvQuant,
+        pos: usize,
+    ) {
+        self.write(layer, slot, k, v);
+        let o = self.off(layer, slot);
+        let d = self.d_model;
+        if let Some(enc) = &mut self.enc {
+            let g = enc.groups_per_row;
+            let so = (layer * self.block_size + slot) * g;
+            quant.encode_row(
+                &mut self.k[o..o + d],
+                &mut enc.k_codes[o..o + d],
+                &mut enc.k_scales[so..so + g],
+                layer,
+                pos,
+                0,
+            );
+            quant.encode_row(
+                &mut self.v[o..o + d],
+                &mut enc.v_codes[o..o + d],
+                &mut enc.v_scales[so..so + g],
+                layer,
+                pos,
+                1,
+            );
+        }
+    }
+
     /// Copy another block's K/V contents into this one (copy-on-write),
-    /// keeping this block's own `id`.
+    /// keeping this block's own `id`. Codes and scales copy along with the
+    /// mirror, so the fresh block stays canonical.
     pub fn copy_contents_from(&mut self, other: &KvBlock) {
         assert_eq!(self.k.len(), other.k.len(), "block geometry mismatch");
+        assert_eq!(self.enc.is_some(), other.enc.is_some(), "block encoding mismatch");
         self.k.copy_from_slice(&other.k);
         self.v.copy_from_slice(&other.v);
+        if let (Some(dst), Some(src)) = (&mut self.enc, &other.enc) {
+            dst.k_codes.copy_from_slice(&src.k_codes);
+            dst.v_codes.copy_from_slice(&src.v_codes);
+            dst.k_scales.copy_from_slice(&src.k_scales);
+            dst.v_scales.copy_from_slice(&src.v_scales);
+        }
     }
 }
 
@@ -114,7 +391,8 @@ pub trait KvStorage {
     }
 
     /// Stage the K/V rows of `layer` for absolute position `pos`
-    /// (`len() <= pos < capacity()`).
+    /// (`len() <= pos < capacity()`). Quantizing storages encode the rows
+    /// here, so staged reads already see the codec's values.
     fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
 
     /// K row of `layer` at absolute position `pos` (committed or staged).
@@ -145,28 +423,53 @@ pub struct PagedKv {
     /// Standalone mode allocates private blocks on demand; the serve path
     /// disables this so every block goes through the arena budget.
     auto_grow: bool,
+    /// How K/V rows are stored (f32 passthrough or a quantized scheme).
+    quant: KvQuant,
 }
 
 impl PagedKv {
-    /// Standalone paged cache (private blocks, allocated on demand) — the
-    /// drop-in paged counterpart of
+    /// Standalone paged cache (private f32 blocks, allocated on demand) —
+    /// the drop-in paged counterpart of
     /// [`crate::nn::transformer::DecodeCache::new`].
     pub fn new(cfg: &ModelConfig, block_size: usize, capacity: usize) -> PagedKv {
-        PagedKv::with_auto_grow(cfg, block_size, capacity, true)
+        PagedKv::with_quant(cfg, block_size, capacity, true, KvQuant::passthrough(cfg.d_model))
     }
 
     /// A paged cache whose blocks must be provided externally
     /// ([`PagedKv::push_block`] / [`PagedKv::adopt_prefix`]) — used by the
     /// serve arena so allocation stays under its budget.
     pub fn external(cfg: &ModelConfig, block_size: usize, capacity: usize) -> PagedKv {
-        PagedKv::with_auto_grow(cfg, block_size, capacity, false)
+        PagedKv::with_quant(cfg, block_size, capacity, false, KvQuant::passthrough(cfg.d_model))
     }
 
-    fn with_auto_grow(
+    /// Standalone paged cache storing rows through `quant` (auto-grown
+    /// private blocks) — used by drift probes and the fuzz harness.
+    pub fn new_quantized(
+        cfg: &ModelConfig,
+        block_size: usize,
+        capacity: usize,
+        quant: KvQuant,
+    ) -> PagedKv {
+        PagedKv::with_quant(cfg, block_size, capacity, true, quant)
+    }
+
+    /// Externally-fed paged cache storing rows through `quant` — what
+    /// [`crate::serve::kvcache::BlockAllocator::new_seq`] hands out.
+    pub fn external_quantized(
+        cfg: &ModelConfig,
+        block_size: usize,
+        capacity: usize,
+        quant: KvQuant,
+    ) -> PagedKv {
+        PagedKv::with_quant(cfg, block_size, capacity, false, quant)
+    }
+
+    fn with_quant(
         cfg: &ModelConfig,
         block_size: usize,
         capacity: usize,
         auto_grow: bool,
+        quant: KvQuant,
     ) -> PagedKv {
         assert!(block_size > 0, "kv block size must be positive");
         PagedKv {
@@ -177,11 +480,17 @@ impl PagedKv {
             len: 0,
             blocks: Vec::new(),
             auto_grow,
+            quant,
         }
     }
 
     pub fn block_size(&self) -> usize {
         self.block_size
+    }
+
+    /// The row-storage policy this cache writes through.
+    pub fn kv_quant(&self) -> &KvQuant {
+        &self.quant
     }
 
     /// Blocks currently in the chain.
@@ -225,6 +534,11 @@ impl PagedKv {
     pub fn push_block(&mut self, b: Arc<KvBlock>) {
         assert_eq!(b.block_size, self.block_size, "block size mismatch");
         assert_eq!(b.d_model, self.d_model, "d_model mismatch");
+        assert_eq!(
+            b.is_encoded(),
+            self.quant.is_quantizing(),
+            "block storage layout does not match the cache's kv scheme"
+        );
         self.blocks.push(b);
     }
 
@@ -245,6 +559,13 @@ impl PagedKv {
         let covering = positions.div_ceil(self.block_size);
         assert!(covering <= blocks.len(), "prefix chain too short for {positions} positions");
         assert!(positions <= self.capacity, "prefix longer than cache capacity");
+        for b in &blocks[..covering] {
+            assert_eq!(
+                b.is_encoded(),
+                self.quant.is_quantizing(),
+                "adopted block storage layout does not match the cache's kv scheme"
+            );
+        }
         self.blocks.extend(blocks[..covering].iter().cloned());
         self.len = positions;
     }
@@ -264,8 +585,8 @@ impl PagedKv {
         &self.blocks[..covering]
     }
 
-    /// Bytes of K/V storage referenced by this chain (shared blocks count
-    /// fully; the arena tracks unique bytes).
+    /// Resident bytes of K/V storage referenced by this chain (shared
+    /// blocks count fully; the arena tracks unique bytes).
     pub fn bytes(&self) -> usize {
         self.blocks.iter().map(|b| b.bytes()).sum()
     }
@@ -290,16 +611,18 @@ impl KvStorage for PagedKv {
                 "no block reserved for position {pos} (scheduler must reserve before the wave)"
             );
             let id = self.blocks.len() as u32;
-            self.blocks.push(Arc::new(KvBlock::new(
+            self.blocks.push(Arc::new(KvBlock::for_quant(
                 id,
                 self.n_layer,
                 self.block_size,
                 self.d_model,
+                &self.quant,
             )));
         }
+        let quant = &self.quant;
         let block = Arc::get_mut(&mut self.blocks[lb])
             .expect("append into a shared block (copy-on-write was skipped)");
-        block.write(layer, pos % self.block_size, k, v);
+        block.write_encoded(layer, pos % self.block_size, k, v, quant, pos);
     }
 
     fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
@@ -326,6 +649,10 @@ mod tests {
         ModelConfig::tiny(Arch::Gpt2)
     }
 
+    fn quant(label: &str) -> KvQuant {
+        KvQuant::new(crate::quant::resolve(label).unwrap(), cfg().d_model, 7).unwrap()
+    }
+
     #[test]
     fn block_rows_roundtrip() {
         let mut b = KvBlock::new(7, 2, 4, 8);
@@ -337,6 +664,7 @@ mod tests {
         assert_eq!(b.k_row(0, 3), &[0.0; 8]);
         assert!(b.bytes() > 0);
         assert_eq!(b.id, 7);
+        assert!(!b.is_encoded());
     }
 
     #[test]
@@ -432,5 +760,116 @@ mod tests {
         }
         kv.commit(1);
         assert_eq!(kv.len(), 3);
+    }
+
+    // ------------------------------------------------- quantized KV blocks
+
+    #[test]
+    fn kv_quant_rejects_unhostable_geometries() {
+        let c = cfg();
+        let elem = crate::quant::resolve("fp8_e3m4").unwrap().elementwise();
+        let err = KvQuant::new(elem, c.d_model, 0).unwrap_err().to_string();
+        assert!(err.contains("elementwise"), "{err}");
+        let ragged = crate::quant::resolve("fp8_e3m4").unwrap().with_block(48);
+        let err = KvQuant::new(ragged, c.d_model, 0).unwrap_err().to_string();
+        assert!(err.contains("does not divide"), "{err}");
+        // passthrough and row-divisible blockwise schemes are fine
+        assert!(KvQuant::new(crate::quant::resolve("f32").unwrap(), c.d_model, 0).is_ok());
+        assert!(KvQuant::new(crate::quant::resolve("int8_sr").unwrap(), c.d_model, 0).is_ok());
+    }
+
+    #[test]
+    fn quantized_write_keeps_mirror_equal_to_decoded_codes() {
+        let c = cfg();
+        let q = quant("fp8_e3m4");
+        let codec = crate::quant::resolve("fp8_e3m4").unwrap().codec;
+        let mut kv = PagedKv::new_quantized(&c, 4, 16, q);
+        let k: Vec<f32> = (0..c.d_model).map(|i| (i as f32 - 30.0) * 0.11).collect();
+        let v: Vec<f32> = (0..c.d_model).map(|i| (i as f32) * 0.07 - 1.0).collect();
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &k, &v);
+        }
+        kv.commit(1);
+        let block = &kv.blocks[0];
+        assert!(block.is_encoded());
+        let codes = block.k_codes(1, 0).unwrap();
+        let scales = block.k_scales(1, 0).unwrap();
+        let group = c.d_model / scales.len();
+        for (i, &m) in block.k_row(1, 0).iter().enumerate() {
+            let s = scales[i / group] as f64;
+            let want = (codec.decode(codes[i]) * s) as f32;
+            assert_eq!(m, want, "mirror[{i}] diverges from decode(code)*scale");
+        }
+        // the mirror is quantized, i.e. generally not the raw input
+        assert!(block.k_row(0, 0).iter().zip(&k).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn passthrough_quant_stores_raw_rows_without_codes() {
+        let c = cfg();
+        let mut kv = PagedKv::new_quantized(&c, 4, 16, KvQuant::passthrough(c.d_model));
+        let k: Vec<f32> = (0..c.d_model).map(|i| (i as f32) * 0.013 - 0.4).collect();
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &k, &k);
+        }
+        kv.commit(1);
+        assert!(!kv.blocks[0].is_encoded());
+        assert_eq!(kv.k_row(0, 0), &k[..], "f32 passthrough must be bit-identical");
+    }
+
+    #[test]
+    fn stochastic_kv_rows_reproduce_per_position() {
+        // the SR stream is keyed on (seed, layer, pos): two caches fed the
+        // same rows encode identically — the re-prefill/prefix-reuse
+        // determinism guarantee — while another seed differs
+        let c = cfg();
+        let k: Vec<f32> = (0..c.d_model).map(|i| ((i * 13) % 17) as f32 * 0.031 - 0.2).collect();
+        let run = |seed: u64| {
+            let q =
+                KvQuant::new(crate::quant::resolve("int8_sr").unwrap(), c.d_model, seed).unwrap();
+            let mut kv = PagedKv::new_quantized(&c, 4, 16, q);
+            for pos in 0..3 {
+                for l in 0..c.n_layer {
+                    kv.write(l, pos, &k, &k);
+                }
+                kv.commit(1);
+            }
+            (kv.k_row(1, 2).to_vec(), kv.v_row(0, 1).to_vec())
+        };
+        assert_eq!(run(5), run(5), "same seed must reproduce");
+        assert_ne!(run(5), run(6), "different seeds should differ");
+    }
+
+    #[test]
+    fn quantized_bytes_per_position_beats_f32() {
+        let c = cfg();
+        let f32b = KvQuant::passthrough(c.d_model).bytes_per_position(c.n_layer);
+        assert_eq!(f32b, 2 * c.n_layer * c.d_model * 4);
+        for label in ["fp8_e3m4", "int8_sr", "fp4_e2m1"] {
+            let q = quant(label);
+            let b = q.bytes_per_position(c.n_layer);
+            assert!(b < f32b, "{label}: {b} >= {f32b}");
+            assert!(q.is_quantizing());
+        }
+        // bf16 codes are 2 bytes: still half the f32 arena
+        assert_eq!(quant("bf16").bytes_per_position(c.n_layer), 2 * c.n_layer * (c.d_model * 2 + 2 * 4));
+    }
+
+    #[test]
+    fn copy_contents_from_carries_codes() {
+        let c = cfg();
+        let q = quant("int8");
+        let mut kv = PagedKv::new_quantized(&c, 4, 16, q.clone());
+        let k: Vec<f32> = (0..c.d_model).map(|i| (i as f32) * 0.09 - 2.0).collect();
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &k, &k);
+        }
+        kv.commit(1);
+        let src = kv.blocks[0].clone();
+        let mut fresh = KvBlock::for_quant(9, c.n_layer, 4, c.d_model, &q);
+        fresh.copy_contents_from(&src);
+        assert_eq!(fresh.k_row(0, 0), src.k_row(0, 0));
+        assert_eq!(fresh.k_codes(0, 0), src.k_codes(0, 0));
+        assert_eq!(fresh.k_scales(0, 0), src.k_scales(0, 0));
     }
 }

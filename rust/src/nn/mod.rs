@@ -9,7 +9,7 @@ pub mod optim;
 pub mod tensor;
 pub mod transformer;
 
-pub use kv::{KvBlock, KvStorage, PagedKv};
+pub use kv::{KvBlock, KvQuant, KvStorage, PagedKv};
 pub use optim::{AdamMini, AdamW, LrSchedule, Opt};
 pub use tensor::Mat;
 pub use transformer::{DecodeCache, Params, Transformer};

@@ -116,9 +116,19 @@ impl FpFormat {
 
     /// Cast with an explicit rounding mode. `rand` is consumed only by
     /// [`Rounding::Stochastic`]; pass 0 otherwise.
+    ///
+    /// NaN policy (enforced by `tests/quant_suite.rs`): formats *with*
+    /// inf/nan codes propagate NaN; formats *without* them (the saturating
+    /// OCP-style FP8/FP6/FP4 variants) have no NaN encoding at all, so a
+    /// NaN input saturates to ±max_finite — casting can then never produce
+    /// a value the packed codec cannot represent.
     pub fn cast_mode(&self, x: f64, mode: Rounding, rand: u32) -> f64 {
         if x.is_nan() {
-            return f64::NAN;
+            return if self.has_inf_nan {
+                f64::NAN
+            } else {
+                self.max_finite().copysign(x)
+            };
         }
         if x.is_infinite() {
             return if self.has_inf_nan {

@@ -97,11 +97,22 @@ impl Codec {
     /// Quantize a pre-scaled value to the nearest representable value under
     /// `rounding`, clamping to range. `rand` is consumed only by
     /// [`Rounding::Stochastic`]; pass 0 otherwise.
+    ///
+    /// NaN policy (documented here, enforced by `tests/quant_suite.rs`):
+    /// NaN never contaminates a shared block scale (amax folds ignore it —
+    /// `f64::max` skips NaN), and per element it maps to the codec's
+    /// nearest representable notion of "NaN": FP formats with inf/nan
+    /// codes propagate NaN, saturating FP formats clamp it to ±max_finite
+    /// (see [`FpFormat::cast_mode`]), and symmetric INT codecs — which have
+    /// no NaN code at all — map it to 0.
     pub fn quantize(&self, x: f64, rounding: Rounding, rand: u32) -> f64 {
         match self {
             Codec::F32 => x,
             Codec::Fp(f) => f.cast_mode(x, rounding, rand),
             Codec::Int { .. } => {
+                if x.is_nan() {
+                    return 0.0;
+                }
                 let m = self.max_code();
                 let r = match rounding {
                     Rounding::NearestEven => round_ties_even(x),
@@ -157,6 +168,12 @@ impl Codec {
 /// code (at most 16 bits for every format this crate defines).
 fn encode_fp(fmt: &FpFormat, v: f64) -> u16 {
     let m = fmt.man_bits;
+    if v.is_nan() {
+        // only formats with inf/nan codes can hold a NaN (saturating
+        // formats never produce one — `cast_mode` clamps NaN to max_finite)
+        debug_assert!(fmt.has_inf_nan, "NaN reached encode for a format without NaN codes");
+        return ((((1u32 << fmt.exp_bits) - 1) as u16) << m) | 1;
+    }
     let sign: u16 = if v.is_sign_negative() { 1 << (fmt.exp_bits + m) } else { 0 };
     let a = v.abs();
     if a == 0.0 {

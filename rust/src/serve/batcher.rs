@@ -284,7 +284,9 @@ impl Scheduler {
                 if alloc.prefix_evict_lru() {
                     continue;
                 }
-                alloc.release_chain(seq.kv.take_blocks());
+                alloc
+                    .release_chain(seq.kv.take_blocks())
+                    .expect("un-admitted sequence chain was live");
                 if from_preempted {
                     self.preempted.push_front(seq);
                 } else {
@@ -312,7 +314,7 @@ impl Scheduler {
             .max_by_key(|(_, s)| s.seq_no)
             .map(|(i, _)| i)?;
         let mut seq = self.active.remove(idx);
-        alloc.release_chain(seq.kv.take_blocks());
+        alloc.release_chain(seq.kv.take_blocks()).expect("preempted sequence chain was live");
         stats.record_preemption();
         self.preempted.push_back(seq);
         Some(idx)
@@ -332,7 +334,7 @@ impl Scheduler {
                 if self.prefix_cache {
                     alloc.prefix_insert(&seq.req.prompt, &seq.kv);
                 }
-                alloc.release_chain(seq.kv.take_blocks());
+                alloc.release_chain(seq.kv.take_blocks()).expect("retired sequence chain was live");
                 done.push(seq.into_response(now));
             } else {
                 i += 1;

@@ -25,6 +25,7 @@
 
 use crate::config::schema::ModelConfig;
 use crate::nn::transformer::{Params, Transformer};
+use crate::quant::{Geometry, QuantScheme, Scheme};
 use crate::serve::batcher::{ActiveSeq, Scheduler};
 use crate::serve::kvcache::{BlockAllocator, PrefixCacheStats};
 use crate::serve::protocol::{GenRequest, GenResponse};
@@ -53,6 +54,15 @@ pub struct EngineConfig {
     pub eos: Option<usize>,
     /// Per-sequence KV capacity in positions (clamped to the model seq_len).
     pub capacity: usize,
+    /// How K/V rows are stored in the arena (CLI `--kv-store`): `"f32"`
+    /// passthrough (bit-identical to pre-quantization serving) or any
+    /// blockwise registry scheme, e.g. `"fp8_e3m4"` / `"int8_sr"` — rows
+    /// are then held as packed codes + per-group po2 scales
+    /// ([`crate::nn::kv::KvQuant`]).
+    pub kv_scheme: Scheme,
+    /// Seed for the KV scheme's stochastic-rounding streams (keyed per
+    /// layer/position, so re-prefill and prefix reuse stay deterministic).
+    pub kv_seed: u64,
 }
 
 impl Default for EngineConfig {
@@ -66,6 +76,8 @@ impl Default for EngineConfig {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             eos: None,
             capacity: usize::MAX,
+            kv_scheme: crate::quant::resolve("f32").expect("f32 scheme is registered"),
+            kv_seed: 0x6B76_5EED,
         }
     }
 }
@@ -73,7 +85,9 @@ impl Default for EngineConfig {
 impl EngineConfig {
     /// Reject degenerate paging configurations with a descriptive error
     /// (the CLI calls this before building an engine, so `--kv-block 0`
-    /// and friends fail cleanly instead of panicking).
+    /// and friends fail cleanly instead of panicking). Model-dependent
+    /// checks (KV-scheme row divisibility) live in
+    /// [`EngineConfig::validate_for`].
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 {
             bail!("--max-batch must be positive");
@@ -87,7 +101,27 @@ impl EngineConfig {
         if self.capacity == 0 {
             bail!("per-sequence KV capacity must be positive");
         }
+        if self.kv_scheme.codec.is_packed() && matches!(self.kv_scheme.geometry, Geometry::None)
+        {
+            bail!(
+                "--kv-store '{}' is an elementwise cast (no block scale); KV quantization \
+                 is block-granular — pick a blockwise label such as 'fp8_e3m4' or 'f32'",
+                self.kv_scheme.label()
+            );
+        }
         Ok(())
+    }
+
+    /// [`EngineConfig::validate`] plus the model-dependent KV-scheme
+    /// checks. Delegates to [`crate::nn::kv::KvQuant::new`] — the same
+    /// constructor `BlockAllocator::with_scheme` runs — so this can never
+    /// accept a scheme the arena would then reject (a packed scheme's
+    /// block size must divide `d_model`: K/V rows are encoded as whole
+    /// scale groups, ragged tails are rejected, not silently padded).
+    pub fn validate_for(&self, model: &ModelConfig) -> Result<()> {
+        self.validate()?;
+        crate::nn::kv::KvQuant::new(self.kv_scheme.clone(), model.d_model, self.kv_seed)
+            .map(|_| ())
     }
 
     /// The arena budget in blocks for a given per-sequence capacity.
@@ -114,15 +148,28 @@ pub struct Engine {
 impl Engine {
     /// Build from already-materialized params (e.g. a freshly initialized
     /// model, or `WeightStore::to_params`). Degenerate configs panic here;
-    /// use [`EngineConfig::validate`] first for a clean error.
+    /// use [`EngineConfig::validate_for`] first for a clean error.
     pub fn new(model_cfg: ModelConfig, params: Params, cfg: EngineConfig) -> Engine {
-        cfg.validate().expect("invalid engine config");
+        cfg.validate_for(&model_cfg).expect("invalid engine config");
         let model = Transformer::new(model_cfg.clone());
         let capacity = cfg.capacity.min(model_cfg.seq_len);
-        let alloc =
-            BlockAllocator::new(&model_cfg, cfg.resolved_blocks(capacity), cfg.kv_block);
+        let alloc = BlockAllocator::with_scheme(
+            &model_cfg,
+            cfg.resolved_blocks(capacity),
+            cfg.kv_block,
+            cfg.kv_scheme.clone(),
+            cfg.kv_seed,
+        )
+        .expect("validate_for accepted the kv scheme");
         let sched = Scheduler::new(cfg.max_batch, cfg.prefill_chunk, cfg.prefix_cache);
-        Engine { model, params, alloc, sched, stats: ServeStats::new(), cfg, capacity }
+        let mut stats = ServeStats::new();
+        stats.set_kv_store(
+            alloc.kv_store_label(),
+            alloc.bytes_per_position(),
+            alloc.bytes(),
+            alloc.encoded_bytes(),
+        );
+        Engine { model, params, alloc, sched, stats, cfg, capacity }
     }
 
     /// Build from a quantized snapshot: dequantize-on-load, then serve.
@@ -130,8 +177,14 @@ impl Engine {
         Engine::new(store.cfg.clone(), store.to_params(), cfg)
     }
 
-    /// Validate and queue a request.
+    /// Validate and queue a request. The config is re-checked here
+    /// (including the KV scheme's geometry against the model): the arena
+    /// captured its validated scheme at construction, so a config mutated
+    /// afterwards would otherwise be silently ignored — rejecting the
+    /// request keeps `cfg` and the arena honest and gives programmatic
+    /// misuse a clean error instead.
     pub fn enqueue(&mut self, req: GenRequest) -> Result<()> {
+        self.cfg.validate_for(&self.model.cfg)?;
         let vocab = self.model.cfg.vocab;
         if req.prompt.is_empty() {
             bail!("request {}: empty prompt", req.id);
@@ -192,6 +245,23 @@ impl Engine {
     /// Prefix-index diagnostics (entries / insertions / evictions).
     pub fn prefix_cache_stats(&self) -> PrefixCacheStats {
         self.alloc.prefix_stats()
+    }
+
+    /// Drop every cached prefix chain (releases the blocks the index kept
+    /// alive). After a full drain this must leave zero live blocks — the
+    /// fuzz harness's leak invariant.
+    pub fn clear_prefix_cache(&mut self) {
+        self.alloc.prefix_clear();
+    }
+
+    /// Canonical label of the KV row-storage scheme (`"f32"`, `"fp8_e3m4"`, …).
+    pub fn kv_store(&self) -> &str {
+        self.alloc.kv_store_label()
+    }
+
+    /// Encoded bytes one cached sequence position costs under the KV scheme.
+    pub fn kv_bytes_per_position(&self) -> usize {
+        self.alloc.bytes_per_position()
     }
 
     /// Copy-on-write block copies performed so far.
@@ -543,6 +613,120 @@ mod tests {
         assert!(zero_chunk.validate().unwrap_err().to_string().contains("prefill-chunk"));
         let zero_batch = EngineConfig { max_batch: 0, ..EngineConfig::default() };
         assert!(zero_batch.validate().is_err());
+    }
+
+    #[test]
+    fn kv_scheme_validation_rejects_unhostable_geometries() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2); // d_model 64
+        // packed codec with elementwise geometry: no block scale to share
+        let elementwise = EngineConfig {
+            kv_scheme: crate::quant::resolve("fp8_e3m4").unwrap().elementwise(),
+            ..EngineConfig::default()
+        };
+        let err = elementwise.validate().unwrap_err().to_string();
+        assert!(err.contains("elementwise"), "{err}");
+        assert!(err.contains("fp8_e3m4"), "{err}");
+        // block 48 does not divide d_model 64: rejected by the model check
+        let ragged = EngineConfig {
+            kv_scheme: crate::quant::resolve("fp8_e3m4").unwrap().with_block(48),
+            ..EngineConfig::default()
+        };
+        assert!(ragged.validate().is_ok(), "divisibility needs the model config");
+        let err = ragged.validate_for(&cfg).unwrap_err().to_string();
+        assert!(err.contains("does not divide"), "{err}");
+        assert!(err.contains("48"), "{err}");
+        // the good cases pass both levels
+        for label in ["f32", "fp8_e3m4", "int8_sr", "bf16"] {
+            let good = EngineConfig {
+                kv_scheme: crate::quant::resolve(label).unwrap(),
+                ..EngineConfig::default()
+            };
+            assert!(good.validate_for(&cfg).is_ok(), "{label}");
+        }
+    }
+
+    #[test]
+    fn enqueue_rejects_invalid_kv_scheme_with_clean_error() {
+        // an engine whose config is corrupted after construction must fail
+        // at enqueue with the validation error, not panic at first commit
+        let mut e = tiny_engine(2, 0, 1);
+        e.cfg.kv_scheme = crate::quant::resolve("fp8_e3m4").unwrap().with_block(48);
+        let err = e.enqueue(GenRequest::greedy(1, vec![2, 3], 4)).unwrap_err().to_string();
+        assert!(err.contains("does not divide"), "{err}");
+        e.cfg.kv_scheme = crate::quant::resolve("int8_sr").unwrap().elementwise();
+        let err = e.enqueue(GenRequest::greedy(2, vec![2, 3], 4)).unwrap_err().to_string();
+        assert!(err.contains("elementwise"), "{err}");
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn quantized_kv_engine_completes_and_reports_store() {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(5);
+        let mut e = Engine::new(
+            cfg,
+            params,
+            EngineConfig {
+                max_batch: 4,
+                kv_block: 8,
+                kv_blocks: 0,
+                prefill_chunk: 4,
+                prefix_cache: true,
+                threads: 2,
+                kv_scheme: crate::quant::resolve("fp8_e3m4").unwrap(),
+                ..EngineConfig::default()
+            },
+        );
+        assert_eq!(e.kv_store(), "fp8_e3m4");
+        assert!(e.kv_bytes_per_position() < 2 * e.model.cfg.n_layer * e.model.cfg.d_model * 4);
+        for id in 0..5u64 {
+            e.enqueue(GenRequest::greedy(id, vec![1 + id as usize * 3, 7, 9], 4)).unwrap();
+        }
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 5);
+        for r in &out {
+            assert_eq!(r.tokens.len(), 4);
+        }
+        e.clear_prefix_cache();
+        let (live, ..) = e.kv_usage();
+        assert_eq!(live, 0, "quantized blocks leaked");
+        let j = e.stats.bench_json("kv", vec![]);
+        assert_eq!(j.get("kv_store").as_str(), Some("fp8_e3m4"));
+        assert!(j.get("kv_bytes_per_position").as_usize().unwrap() > 0);
+    }
+
+    #[test]
+    fn quantized_kv_greedy_outputs_are_deterministic() {
+        // same config + same requests => identical tokens, including for
+        // stochastic-rounding KV (draws are keyed per layer/position)
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(6);
+        let run = || {
+            let mut e = Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 2,
+                    kv_block: 4,
+                    kv_blocks: 8, // tight: forces preemption interleave
+                    prefill_chunk: 3,
+                    prefix_cache: true,
+                    threads: 1,
+                    kv_scheme: crate::quant::resolve("int8_sr").unwrap(),
+                    ..EngineConfig::default()
+                },
+            );
+            for id in 0..4u64 {
+                let prompt: Vec<usize> = (0..9).map(|k| (id as usize * 11 + k * 2) % 50).collect();
+                e.enqueue(GenRequest::greedy(id, prompt, 5)).unwrap();
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "int8_sr KV serving must be reproducible");
     }
 
     #[test]

@@ -6,9 +6,14 @@
 //! * [`BlockAllocator`] — a budget of `n_blocks` fixed-size
 //!   [`KvBlock`]s. Buffers are recycled through a free list; every block
 //!   id carries a [`BlockState`] (free / live-with-refcount), so double
-//!   release and retain-after-free are O(1) checks instead of the old
-//!   pool's O(n) `free.contains` scan (and the misleading
-//!   checked-out-slot assert is gone — blocks have no checkout state).
+//!   release and retain-after-free are O(1) checks that surface as
+//!   `Err` (not panics) to the caller.
+//! * **Quantized arenas** — the allocator owns the [`KvQuant`] row-storage
+//!   policy: every block it hands out is shaped for the chosen
+//!   `quant::Scheme` (packed codes + po2 scales + f32 decode mirror, or
+//!   raw f32 for the `"f32"` passthrough), and every [`PagedKv`] it
+//!   creates writes through that policy. [`BlockAllocator::bytes_per_position`]
+//!   reports the encoded bytes/position of the scheme.
 //! * **Copy-on-write append** — a sequence whose next write lands in a
 //!   *shared* block (adopted from the prefix index) gets an exclusive
 //!   copy first ([`BlockAllocator::reserve`]); the shared original stays
@@ -24,7 +29,9 @@
 //! preemption) lives in [`crate::serve::batcher`].
 
 use crate::config::schema::ModelConfig;
-use crate::nn::kv::{KvBlock, KvStorage, PagedKv};
+use crate::nn::kv::{KvBlock, KvQuant, KvStorage, PagedKv};
+use crate::quant::Scheme;
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -90,8 +97,8 @@ struct PrefixIndex {
 }
 
 /// The global paged KV arena: block budget, buffer free list, per-block
-/// refcounted states, copy-on-write support, and the cross-request prefix
-/// index.
+/// refcounted states, copy-on-write support, the row-storage (quant)
+/// policy, and the cross-request prefix index.
 #[derive(Debug)]
 pub struct BlockAllocator {
     n_layer: usize,
@@ -116,14 +123,40 @@ pub struct BlockAllocator {
     high_water: usize,
     prefix: PrefixIndex,
     tick: u64,
+    /// How K/V rows are stored in every block of this arena.
+    quant: KvQuant,
 }
 
 impl BlockAllocator {
-    /// An arena of `n_blocks` blocks of `block_size` positions each.
+    /// An arena of `n_blocks` raw-f32 blocks of `block_size` positions
+    /// each (the passthrough layout).
     pub fn new(cfg: &ModelConfig, n_blocks: usize, block_size: usize) -> BlockAllocator {
+        BlockAllocator::with_quant(cfg, n_blocks, block_size, KvQuant::passthrough(cfg.d_model))
+    }
+
+    /// An arena whose blocks store K/V through `scheme` (see
+    /// [`KvQuant::new`] for the geometries rejected here). `seed` keys the
+    /// stochastic-rounding streams.
+    pub fn with_scheme(
+        cfg: &ModelConfig,
+        n_blocks: usize,
+        block_size: usize,
+        scheme: Scheme,
+        seed: u64,
+    ) -> Result<BlockAllocator> {
+        let quant = KvQuant::new(scheme, cfg.d_model, seed)?;
+        Ok(BlockAllocator::with_quant(cfg, n_blocks, block_size, quant))
+    }
+
+    fn with_quant(
+        cfg: &ModelConfig,
+        n_blocks: usize,
+        block_size: usize,
+        quant: KvQuant,
+    ) -> BlockAllocator {
         assert!(n_blocks > 0, "arena needs at least one block");
         assert!(block_size > 0, "kv block size must be positive");
-        let probe = KvBlock::new(0, cfg.n_layer, block_size, cfg.d_model);
+        let probe = KvBlock::for_quant(0, cfg.n_layer, block_size, cfg.d_model, &quant);
         BlockAllocator {
             n_layer: cfg.n_layer,
             d_model: cfg.d_model,
@@ -140,11 +173,28 @@ impl BlockAllocator {
             high_water: 0,
             prefix: PrefixIndex::default(),
             tick: 0,
+            quant,
         }
     }
 
     pub fn block_size(&self) -> usize {
         self.block_size
+    }
+
+    /// The row-storage policy every block of this arena uses.
+    pub fn kv_quant(&self) -> &KvQuant {
+        &self.quant
+    }
+
+    /// Canonical label of the KV storage scheme (`"f32"`, `"fp8_e3m4"`, …).
+    pub fn kv_store_label(&self) -> &str {
+        self.quant.label()
+    }
+
+    /// Encoded bytes one sequence position costs under this arena's
+    /// scheme (codes + scales, or raw f32 for passthrough).
+    pub fn bytes_per_position(&self) -> usize {
+        self.quant.bytes_per_position(self.n_layer)
     }
 
     /// Total block budget.
@@ -166,12 +216,20 @@ impl BlockAllocator {
         self.high_water
     }
 
-    /// Bytes of the full arena budget.
+    /// Resident bytes of the full arena budget (for quantized schemes this
+    /// includes the emulation's f32 decode mirror; see
+    /// [`BlockAllocator::encoded_bytes`] for the deployment number).
     pub fn bytes(&self) -> usize {
         self.block_bytes * self.total
     }
 
-    /// Bytes of K/V currently live.
+    /// Encoded bytes of the full arena budget under the chosen scheme —
+    /// what a deployment layout storing only codes + scales would cost.
+    pub fn encoded_bytes(&self) -> usize {
+        self.bytes_per_position() * self.block_size * self.total
+    }
+
+    /// Resident bytes of K/V currently live.
     pub fn live_bytes(&self) -> usize {
         self.block_bytes * self.live
     }
@@ -181,10 +239,11 @@ impl BlockAllocator {
         positions.div_ceil(self.block_size)
     }
 
-    /// An empty paged cache wired to this arena's geometry (blocks must be
-    /// reserved through the allocator before writes).
+    /// An empty paged cache wired to this arena's geometry and storage
+    /// scheme (blocks must be reserved through the allocator before
+    /// writes).
     pub fn new_seq(&self, cfg: &ModelConfig, capacity: usize) -> PagedKv {
-        PagedKv::external(cfg, self.block_size, capacity)
+        PagedKv::external_quantized(cfg, self.block_size, capacity, self.quant.clone())
     }
 
     fn state(&self, id: BlockId) -> BlockState {
@@ -206,7 +265,7 @@ impl BlockAllocator {
                 self.reuses += 1;
                 b
             }
-            None => KvBlock::new(0, self.n_layer, self.block_size, self.d_model),
+            None => KvBlock::for_quant(0, self.n_layer, self.block_size, self.d_model, &self.quant),
         };
         let id = match self.free_ids.pop() {
             Some(id) => id,
@@ -225,26 +284,28 @@ impl BlockAllocator {
     }
 
     /// Register an additional holder of each block (sharing a chain).
-    pub fn retain(&mut self, blocks: &[Arc<KvBlock>]) {
+    /// Retaining a block whose id was already freed is misuse and returns
+    /// an error (the states of blocks retained so far are still applied).
+    pub fn retain(&mut self, blocks: &[Arc<KvBlock>]) -> Result<()> {
         for b in blocks {
             match self.states[b.id as usize] {
                 BlockState::Live { refs } => {
                     self.states[b.id as usize] = BlockState::Live { refs: refs + 1 }
                 }
-                BlockState::Free => unreachable!("retain of freed block {}", b.id),
+                BlockState::Free => bail!("retain of freed block {}", b.id),
             }
         }
+        Ok(())
     }
 
     /// Drop one holder's reference. When the last holder releases, the id
     /// and (if no stray `Arc` remains) the buffer are recycled. A double
-    /// release is caught in O(1) by the state enum.
-    pub fn release(&mut self, block: Arc<KvBlock>) {
+    /// release is caught in O(1) by the state enum and returned as an
+    /// error (the arena stays consistent — nothing is freed twice).
+    pub fn release(&mut self, block: Arc<KvBlock>) -> Result<()> {
         let id = block.id as usize;
         match self.states[id] {
-            BlockState::Free => {
-                debug_assert!(false, "double release of block {id}");
-            }
+            BlockState::Free => bail!("double release of block {id}"),
             BlockState::Live { refs: 1 } => {
                 self.states[id] = BlockState::Free;
                 self.free_ids.push(id as BlockId);
@@ -257,13 +318,20 @@ impl BlockAllocator {
                 self.states[id] = BlockState::Live { refs: refs - 1 };
             }
         }
+        Ok(())
     }
 
     /// Release every block of a chain (sequence retirement / preemption).
-    pub fn release_chain(&mut self, blocks: Vec<Arc<KvBlock>>) {
+    /// Returns the first misuse error, after attempting every release.
+    pub fn release_chain(&mut self, blocks: Vec<Arc<KvBlock>>) -> Result<()> {
+        let mut first_err = Ok(());
         for b in blocks {
-            self.release(b);
+            let r = self.release(b);
+            if r.is_err() && first_err.is_ok() {
+                first_err = r;
+            }
         }
+        first_err
     }
 
     /// Positions `kv` could absorb right now given the free budget (counting
@@ -315,7 +383,7 @@ impl BlockAllocator {
         Arc::get_mut(&mut fresh).expect("fresh block is exclusive").copy_contents_from(&src);
         drop(src);
         let old = kv.replace_tail(fresh);
-        self.release(old);
+        self.release(old).expect("CoW-displaced block was live");
         self.cow_copies += 1;
         true
     }
@@ -346,7 +414,7 @@ impl BlockAllocator {
                 continue; // cached already (or a collision: keep the old entry)
             }
             let blocks: Vec<Arc<KvBlock>> = kv.blocks_covering(l).to_vec();
-            self.retain(&blocks);
+            self.retain(&blocks).expect("published chain blocks are live");
             self.prefix.map.insert(
                 key,
                 PrefixEntry { tokens: tokens[..l].to_vec(), blocks, last_used: self.tick },
@@ -383,7 +451,7 @@ impl BlockAllocator {
             }
             e.last_used = tick;
             let blocks = e.blocks.clone();
-            self.retain(&blocks);
+            self.retain(&blocks).expect("indexed chain blocks are live");
             return Some((blocks, l));
         }
         None
@@ -398,7 +466,7 @@ impl BlockAllocator {
             return false;
         };
         let entry = self.prefix.map.remove(&key).expect("key just found");
-        self.release_chain(entry.blocks);
+        self.release_chain(entry.blocks).expect("evicted chain blocks were live");
         self.prefix.evictions += 1;
         true
     }
@@ -441,14 +509,14 @@ mod tests {
         assert_eq!(a.free_blocks(), 0);
         assert!(a.try_alloc().is_none(), "exhausted arena must refuse");
         let id0 = b0.id;
-        a.release(b0);
+        a.release(b0).unwrap();
         assert_eq!(a.free_blocks(), 1);
         let b2 = a.try_alloc().unwrap();
         assert_eq!(b2.id, id0, "freed id is recycled");
         assert_eq!(a.reuses, 1, "freed buffer is recycled");
         assert_eq!(a.high_water(), 2);
-        a.release(b1);
-        a.release(b2);
+        a.release(b1).unwrap();
+        a.release(b2).unwrap();
         assert_eq!(a.live_blocks(), 0);
         assert!(a.bytes() > 0 && a.live_bytes() == 0);
     }
@@ -458,24 +526,52 @@ mod tests {
         let mut a = arena(4, 4);
         let b = a.try_alloc().unwrap();
         let clone = b.clone();
-        a.retain(std::slice::from_ref(&clone));
+        a.retain(std::slice::from_ref(&clone)).unwrap();
         assert!(a.is_shared(b.id));
-        a.release(b);
+        a.release(b).unwrap();
         assert_eq!(a.live_blocks(), 1, "still held by the clone");
         assert!(!a.is_shared(clone.id));
-        a.release(clone);
+        a.release(clone).unwrap();
         assert_eq!(a.live_blocks(), 0);
     }
 
     #[test]
-    #[cfg(debug_assertions)]
-    #[should_panic(expected = "double release")]
-    fn double_release_detected_in_o1() {
+    fn double_release_returns_error_in_o1() {
         let mut a = arena(2, 4);
         let b = a.try_alloc().unwrap();
         let dup = b.clone();
-        a.release(b);
-        a.release(dup); // second release of the same id: state is Free
+        let id = b.id;
+        a.release(b).unwrap();
+        let err = a.release(dup).unwrap_err().to_string();
+        assert!(err.contains(&format!("double release of block {id}")), "{err}");
+        // the arena stayed consistent: the id is still free exactly once
+        assert_eq!(a.free_blocks(), 2);
+        assert!(a.try_alloc().is_some());
+    }
+
+    #[test]
+    fn retain_after_free_returns_error() {
+        let mut a = arena(2, 4);
+        let b = a.try_alloc().unwrap();
+        let dup = b.clone();
+        let id = b.id;
+        a.release(b).unwrap();
+        let err = a.retain(std::slice::from_ref(&dup)).unwrap_err().to_string();
+        assert!(err.contains(&format!("retain of freed block {id}")), "{err}");
+        assert_eq!(a.live_blocks(), 0, "failed retain must not resurrect the block");
+    }
+
+    #[test]
+    fn release_chain_reports_first_error_but_releases_rest() {
+        let mut a = arena(3, 4);
+        let b0 = a.try_alloc().unwrap();
+        let b1 = a.try_alloc().unwrap();
+        let stale = b0.clone();
+        a.release(b0).unwrap();
+        // chain contains one already-freed block and one live block
+        let err = a.release_chain(vec![stale, b1]).unwrap_err().to_string();
+        assert!(err.contains("double release"), "{err}");
+        assert_eq!(a.live_blocks(), 0, "live block after the bad entry was still released");
     }
 
     #[test]
@@ -497,7 +593,7 @@ mod tests {
         assert_eq!(a.max_appendable(&kv), 3, "room left in the third block");
         assert!(a.reserve(&mut kv, 3), "in-chain room needs no new block");
         assert!(!a.reserve(&mut kv, 4), "fourth block exceeds the budget");
-        a.release_chain(kv.take_blocks());
+        a.release_chain(kv.take_blocks()).unwrap();
         assert_eq!(a.free_blocks(), 3);
     }
 
@@ -516,12 +612,12 @@ mod tests {
             kv1.commit(1);
         }
         let chain = kv1.take_blocks();
-        a.retain(&chain); // simulate an index holding the chain
+        a.retain(&chain).unwrap(); // simulate an index holding the chain
         // sequence 2 adopts the chain (positions 0..6) and appends
         let mut kv2 = a.new_seq(&c, 64);
         kv2.adopt_prefix(&chain, 6);
-        a.retain(kv2.blocks_covering(6));
-        a.release_chain(chain); // original holder leaves; index copy stays
+        a.retain(kv2.blocks_covering(6)).unwrap();
+        a.release_chain(chain).unwrap(); // original holder leaves; index copy stays
         assert!(a.is_shared(kv2.block_table()[1]));
         assert!(a.reserve(&mut kv2, 1), "CoW within budget");
         assert_eq!(a.cow_copies, 1);
@@ -537,6 +633,48 @@ mod tests {
         // the frozen shared copy kept sequence 1's data
         assert_eq!(kv2.k_row(0, 6), &row2[..]);
         assert_eq!(kv2.k_row(0, 5), &row[..]);
+    }
+
+    #[test]
+    fn make_tail_exclusive_refcount_transitions() {
+        // shared tail (refs 2): CoW allocates a fresh exclusive block,
+        // drops one reference from the original (refs 2 -> 1), and leaves
+        // the other holder's view untouched
+        let c = cfg();
+        let mut a = arena(4, 4);
+        let mut kv1 = a.new_seq(&c, 64);
+        assert!(a.reserve(&mut kv1, 2));
+        let row = vec![3.0f32; c.d_model];
+        for pos in 0..2 {
+            for l in 0..c.n_layer {
+                kv1.write(l, pos, &row, &row);
+            }
+            kv1.commit(1);
+        }
+        let chain = kv1.take_blocks();
+        a.retain(&chain).unwrap(); // a second holder (e.g. the prefix index)
+        let shared_id = chain[0].id;
+        let mut kv2 = a.new_seq(&c, 64);
+        // adopt clones the Arcs only; register kv2 as a holder explicitly,
+        // the way the scheduler does, then drop the original holder
+        kv2.adopt_prefix(&chain, 2);
+        a.retain(kv2.blocks_covering(2)).unwrap();
+        a.release_chain(chain).unwrap();
+        assert!(a.is_shared(shared_id), "index + kv2 share the block");
+        let live_before = a.live_blocks();
+        assert!(a.make_tail_exclusive(&mut kv2));
+        assert_eq!(a.cow_copies, 1);
+        assert_eq!(a.live_blocks(), live_before + 1, "CoW consumed one fresh block");
+        assert!(!a.is_shared(shared_id), "original dropped to a single holder");
+        let new_tail = kv2.tail_block().unwrap().id;
+        assert_ne!(new_tail, shared_id);
+        assert!(!a.is_shared(new_tail), "fresh copy is exclusive");
+        // idempotent: an exclusive tail needs no further copies
+        assert!(a.make_tail_exclusive(&mut kv2));
+        assert_eq!(a.cow_copies, 1);
+        // cleanup: both chains release without error
+        a.release_chain(kv2.take_blocks()).unwrap();
+        a.prefix_clear();
     }
 
     #[test]
@@ -556,7 +694,7 @@ mod tests {
         a.prefix_insert(&prompt, &kv);
         // full prefix (10) + block-aligned cuts (4, 8)
         assert_eq!(a.prefix_stats().insertions, 3);
-        a.release_chain(kv.take_blocks());
+        a.release_chain(kv.take_blocks()).unwrap();
         assert_eq!(a.live_blocks(), 3, "index keeps the chain alive");
 
         // identical prompt: reuse covers len-1 = 9 positions? no entry at 9,
@@ -564,14 +702,14 @@ mod tests {
         let (chain, reused) = a.prefix_lookup(&prompt).unwrap();
         assert_eq!(reused, 8);
         assert_eq!(chain.len(), 2);
-        a.release_chain(chain);
+        a.release_chain(chain).unwrap();
 
         // a prompt sharing only the first 4 tokens
         let mut other: Vec<usize> = (0..10).collect();
         other[5] = 40;
         let (chain, reused) = a.prefix_lookup(&other).unwrap();
         assert_eq!(reused, 4);
-        a.release_chain(chain);
+        a.release_chain(chain).unwrap();
 
         // unknown prompt misses
         assert!(a.prefix_lookup(&[30, 31, 32]).is_none());
@@ -581,5 +719,93 @@ mod tests {
         a.prefix_clear();
         assert_eq!(a.prefix_stats().entries, 0);
         assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_lru_evicts_in_recency_order() {
+        // three distinct short prompts (each shorter than a block => one
+        // entry each); touching one refreshes its stamp, so eviction must
+        // walk the untouched entries oldest-first
+        let c = cfg();
+        let mut a = arena(8, 4);
+        let prompts: [Vec<usize>; 3] = [vec![1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]];
+        for p in &prompts {
+            let mut kv = a.new_seq(&c, 64);
+            assert!(a.reserve(&mut kv, p.len()));
+            let row = vec![0.25f32; c.d_model];
+            for pos in 0..p.len() {
+                for l in 0..c.n_layer {
+                    kv.write(l, pos, &row, &row);
+                }
+                kv.commit(1);
+            }
+            a.prefix_insert(p, &kv);
+            a.release_chain(kv.take_blocks()).unwrap();
+        }
+        assert_eq!(a.prefix_stats().entries, 3);
+        // lookups see at most len-1 positions, so probe with the prompt
+        // plus one divergent token to hit the full 3-token entries
+        let probe = |p: &[usize]| {
+            let mut q = p.to_vec();
+            q.push(99);
+            q
+        };
+        // touch prompt 0: its stamp is now the newest
+        let (chain, n) = a.prefix_lookup(&probe(&prompts[0])).unwrap();
+        assert_eq!(n, 3);
+        a.release_chain(chain).unwrap();
+        // first eviction removes prompt 1 (oldest untouched) …
+        assert!(a.prefix_evict_lru());
+        assert!(
+            a.prefix_lookup(&probe(&prompts[1])).is_none(),
+            "prompt 1 should be evicted first"
+        );
+        let (chain, _) = a.prefix_lookup(&probe(&prompts[0])).unwrap(); // touch again
+        a.release_chain(chain).unwrap();
+        // … second removes prompt 2 …
+        assert!(a.prefix_evict_lru());
+        assert!(
+            a.prefix_lookup(&probe(&prompts[2])).is_none(),
+            "prompt 2 should be evicted second"
+        );
+        // … and the most-recently-used prompt 0 survives to the last round
+        let (chain, _) = a.prefix_lookup(&probe(&prompts[0])).unwrap();
+        a.release_chain(chain).unwrap();
+        assert!(a.prefix_evict_lru());
+        assert_eq!(a.prefix_stats().entries, 0);
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn quantized_arena_hands_out_encoded_blocks() {
+        let c = cfg();
+        let scheme = crate::quant::resolve("fp8_e3m4").unwrap();
+        let mut a = BlockAllocator::with_scheme(&c, 4, 4, scheme, 11).unwrap();
+        assert_eq!(a.kv_store_label(), "fp8_e3m4");
+        assert!(a.bytes_per_position() < 2 * c.n_layer * c.d_model * 4);
+        assert!(a.encoded_bytes() < 4 * 4 * 2 * c.n_layer * c.d_model * 4);
+        let b = a.try_alloc().unwrap();
+        assert!(b.is_encoded());
+        let mut kv = a.new_seq(&c, 64);
+        assert!(kv.kv_quant().is_quantizing());
+        assert!(a.reserve(&mut kv, 2));
+        let row: Vec<f32> = (0..c.d_model).map(|i| (i as f32) * 0.03 - 0.9).collect();
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &row, &row);
+        }
+        kv.commit(1);
+        assert!(kv.k_row(0, 0).iter().zip(&row).any(|(x, y)| x != y), "rows must quantize");
+        a.release_chain(kv.take_blocks()).unwrap();
+        a.release(b).unwrap();
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn with_scheme_rejects_unhostable_geometry() {
+        let c = cfg();
+        let elem = crate::quant::resolve("fp8_e3m4").unwrap().elementwise();
+        assert!(BlockAllocator::with_scheme(&c, 4, 4, elem, 0).is_err());
+        let ragged = crate::quant::resolve("fp8_e3m4").unwrap().with_block(48);
+        assert!(BlockAllocator::with_scheme(&c, 4, 4, ragged, 0).is_err());
     }
 }

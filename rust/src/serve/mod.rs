@@ -17,10 +17,15 @@
 //!    contiguous cache.
 //! 3. **allocate** — [`kvcache::BlockAllocator`] owns the global block
 //!    arena: free-list recycling, per-block refcounted states (O(1)
-//!    double-free detection), copy-on-write for shared tails, and a
-//!    prefix index (token-prefix hash → block chain) so identical prompt
-//!    prefixes across requests share physical blocks *and* skip their
-//!    prefill compute.
+//!    double-free detection, surfaced as `Err` not panics), copy-on-write
+//!    for shared tails, and a prefix index (token-prefix hash → block
+//!    chain) so identical prompt prefixes across requests share physical
+//!    blocks *and* skip their prefill compute. The arena also owns the
+//!    **KV row-storage scheme** ([`crate::nn::kv::KvQuant`], CLI
+//!    `--kv-store`): blocks can hold K/V rows as packed codes +
+//!    per-group po2 scales through any blockwise `quant::Scheme`
+//!    (`"fp8_e3m4"`, `"int8_sr"`, …) with a resident f32 decode mirror,
+//!    or raw f32 (`"f32"`, bit-identical to pre-quantization serving).
 //! 4. **schedule** — [`batcher::Scheduler`] continuously batches with a
 //!    block budget: admission waits on free blocks (not slots), prefill
 //!    runs in chunks interleaved with decode waves, and when the arena
@@ -33,8 +38,14 @@
 //!    exposes blocking [`engine::EngineClient`]s.
 //! 6. **account** — [`stats::ServeStats`] tracks p50/p95 latency, TTFT,
 //!    tokens/sec, batch occupancy, block occupancy, prefix-hit rate,
-//!    preemptions and prefill chunks, and emits the `BENCH_serve.json`
-//!    record.
+//!    preemptions, prefill chunks, and the KV scheme's bytes/position +
+//!    encoded arena bytes, and emits the `BENCH_serve.json` record.
+//!
+//! The conformance harness for all of the above — a seeded, deterministic
+//! serving fuzzer asserting leak-freedom, determinism, paged-vs-contiguous
+//! greedy identity, prefix on/off equivalence, and bounded quantized-KV
+//! logit drift — lives in [`crate::testing::fuzz`] and runs from
+//! `tests/fuzz_serve.rs`.
 
 pub mod batcher;
 pub mod engine;

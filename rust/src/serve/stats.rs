@@ -38,6 +38,18 @@ pub struct ServeStats {
     pub preemptions: usize,
     /// Arena block budget (set once by the engine).
     pub kv_blocks_total: usize,
+    /// Canonical label of the KV row-storage scheme (`"f32"`, `"fp8_e3m4"`,
+    /// …; set once by the engine).
+    pub kv_store: String,
+    /// Encoded bytes one cached position costs under the KV scheme
+    /// (packed codes + per-group scales, or raw f32 for passthrough).
+    pub kv_bytes_per_position: usize,
+    /// Resident bytes of the arena budget (includes the emulation's f32
+    /// decode mirror for quantized schemes).
+    pub kv_arena_bytes: usize,
+    /// Encoded bytes of the arena budget — what a deployment layout
+    /// storing only codes + scales would cost.
+    pub kv_arena_encoded_bytes: usize,
     /// Sequences advanced per wave (the continuous-batching occupancy).
     occupancy: Vec<usize>,
     /// Live arena blocks sampled per wave.
@@ -95,6 +107,21 @@ impl ServeStats {
 
     pub fn record_preemption(&mut self) {
         self.preemptions += 1;
+    }
+
+    /// Record the KV row-storage scheme and its byte accounting (set once
+    /// by the engine at construction).
+    pub fn set_kv_store(
+        &mut self,
+        label: &str,
+        bytes_per_position: usize,
+        arena_bytes: usize,
+        arena_encoded_bytes: usize,
+    ) {
+        self.kv_store = label.to_string();
+        self.kv_bytes_per_position = bytes_per_position;
+        self.kv_arena_bytes = arena_bytes;
+        self.kv_arena_encoded_bytes = arena_encoded_bytes;
     }
 
     /// Fraction of prefix-index lookups that found a reusable chain.
@@ -228,6 +255,9 @@ impl ServeStats {
             ("kv_blocks_total", num(self.kv_blocks_total as f64)),
             ("block_occupancy_mean", num(self.block_occupancy_mean())),
             ("block_occupancy_max", num(self.block_occupancy_max())),
+            ("kv_store", s(&self.kv_store)),
+            ("kv_bytes_per_position", num(self.kv_bytes_per_position as f64)),
+            ("kv_arena_encoded_bytes", num(self.kv_arena_encoded_bytes as f64)),
         ];
         pairs.extend(extra);
         obj(pairs)
@@ -249,7 +279,8 @@ impl ServeStats {
              prefill chunks  {:>10}  ({} tokens)\n\
              prefix hits     {:>10}  ({:.0}% rate, {} positions reused)\n\
              preemptions     {:>10}\n\
-             kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)",
+             kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)\n\
+             kv store        {:>10}  ({} B/position encoded, arena {} B encoded)",
             self.completed,
             self.prompt_tokens,
             self.gen_tokens,
@@ -272,6 +303,9 @@ impl ServeStats {
             self.kv_blocks_total,
             self.block_occupancy_mean() * 100.0,
             self.block_occupancy_max() * 100.0,
+            self.kv_store,
+            self.kv_bytes_per_position,
+            self.kv_arena_encoded_bytes,
         )
     }
 }
@@ -344,6 +378,21 @@ mod tests {
         assert!(text.contains("tokens/sec"));
         assert!(text.contains("prefix hits"));
         assert!(text.contains("kv blocks"));
+        assert!(text.contains("kv store"));
+    }
+
+    #[test]
+    fn kv_store_accounting_flows_to_bench_json() {
+        let mut st = ServeStats::new();
+        st.set_kv_store("fp8_e3m4", 288, 1 << 20, 1 << 18);
+        assert_eq!(st.kv_store, "fp8_e3m4");
+        let j = st.bench_json("kv", vec![]);
+        assert_eq!(j.get("kv_store").as_str(), Some("fp8_e3m4"));
+        assert_eq!(j.get("kv_bytes_per_position").as_usize(), Some(288));
+        assert_eq!(j.get("kv_arena_encoded_bytes").as_usize(), Some(1 << 18));
+        let text = st.render("kv");
+        assert!(text.contains("fp8_e3m4"), "{text}");
+        assert!(text.contains("288"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Deterministic serving fuzz/conformance substrate: generates random
+//! request mixes + engine configurations from a single seed and asserts
+//! the serving invariants end to end. `tests/fuzz_serve.rs` drives this
+//! over a fixed seed matrix (CI runs it in release mode on every PR);
+//! every failure message names the generating seed, so a red run
+//! reproduces with `check_case(seed)`.
+//!
+//! Invariants checked per case ([`check_case`]):
+//!
+//! 1. **completion + leak-freedom** — every request completes, and after
+//!    the engine drains (prefix cache cleared) zero arena blocks remain
+//!    live; refcount underflow/double-free would surface as an allocator
+//!    error along the way.
+//! 2. **determinism** — re-running the identical engine + workload yields
+//!    identical greedy tokens, including for stochastic-rounding KV
+//!    schemes (SR draws are keyed per layer/position).
+//! 3. **prefix-cache transparency** — flipping the prefix cache on/off
+//!    leaves every greedy completion unchanged.
+//! 4. **paged f32 == contiguous** — under the `"f32"` KV store, engine
+//!    outputs are bit-identical to a serial `DecodeCache` reference
+//!    decode (and the storage-level logit drift is exactly zero).
+//! 5. **bounded quantized drift** — under a quantized KV store, the
+//!    final-position logits of every prompt fed through the quantized
+//!    paged cache stay within [`FUZZ_DRIFT_BOUND`] (max-abs) of the f32
+//!    reference.
+//!
+//! Cases are deliberately small (arena sizes near the per-request minimum
+//! force preemption and copy-on-write; prompts shorter than a block force
+//! mid-block prefix adoption) and hard-capped — at most
+//! [`MAX_REQUESTS`] requests of ≤ 14 prompt + ≤ [`MAX_NEW_TOKENS`]
+//! generated tokens on the tiny GPT2 config — so a full seed-matrix run
+//! stays well under the CI wall-time budget.
+
+use crate::config::schema::{Arch, ModelConfig};
+use crate::nn::kv::{KvQuant, PagedKv};
+use crate::nn::transformer::{DecodeCache, Params, Transformer};
+use crate::serve::{Engine, EngineConfig, GenRequest, GenResponse};
+use crate::testing::prop::Gen;
+
+/// KV row-storage schemes the fuzzer rotates through.
+pub const FUZZ_KV_LABELS: &[&str] = &["f32", "fp8_e3m4", "int8_sr"];
+
+/// The fixed seed matrix CI exercises on every PR (N = 8). Frozen so
+/// regressions reproduce byte-for-byte across machines, and chosen to
+/// cover every `seed % 3` residue — the KV scheme is stratified by seed
+/// (see [`FuzzCase::generate`]), so the matrix provably exercises all of
+/// [`FUZZ_KV_LABELS`].
+pub const FUZZ_SEED_MATRIX: [u64; 8] = [12, 23, 37, 45, 53, 66, 79, 97];
+
+/// Max-abs final-logit drift allowed for quantized KV vs the f32
+/// reference (per prompt). Generous: fp8/int8 row quantization on the
+/// tiny config lands one to two orders of magnitude below this; the bound
+/// exists to catch scale/codec wiring bugs, not to certify accuracy.
+pub const FUZZ_DRIFT_BOUND: f32 = 2.5;
+
+/// Per-case request cap (wall-time guard for the CI seed matrix).
+pub const MAX_REQUESTS: usize = 8;
+
+/// Per-request generation cap (wall-time guard for the CI seed matrix).
+pub const MAX_NEW_TOKENS: usize = 6;
+
+/// One generated fuzz case: a random engine configuration plus a random
+/// greedy request mix (shared prefixes, varied prompt/gen lengths) on the
+/// tiny GPT2 config.
+pub struct FuzzCase {
+    pub seed: u64,
+    pub kv_label: &'static str,
+    pub ecfg: EngineConfig,
+    pub requests: Vec<GenRequest>,
+}
+
+impl FuzzCase {
+    /// Deterministically generate the case for `seed`.
+    pub fn generate(seed: u64) -> FuzzCase {
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let mut g = Gen::new(seed ^ 0xF022_5EED);
+        // stratified, not drawn: a small seed matrix covering every
+        // `seed % 3` residue provably exercises every scheme
+        let kv_label = FUZZ_KV_LABELS[(seed % FUZZ_KV_LABELS.len() as u64) as usize];
+        let kv_block = *g.choose(&[1usize, 2, 3, 4, 8]);
+        let prefill_chunk = g.usize_in(1, 6);
+        let max_batch = g.usize_in(1, 4);
+        let threads = g.usize_in(1, 2);
+        let prefix_cache = g.bool();
+        // two candidate "system prompt" heads some requests share
+        let heads: Vec<Vec<usize>> = (0..2)
+            .map(|_| (0..g.usize_in(2, 6)).map(|_| g.usize_in(0, cfg.vocab - 1)).collect())
+            .collect();
+        let n_req = g.usize_in(3, MAX_REQUESTS);
+        let mut requests = Vec::with_capacity(n_req);
+        let mut max_need = 1;
+        for id in 0..n_req {
+            let mut prompt: Vec<usize> =
+                if g.bool() { heads[g.usize_in(0, 1)].clone() } else { Vec::new() };
+            let extra = g.usize_in(usize::from(prompt.is_empty()), 8);
+            prompt.extend((0..extra).map(|_| g.usize_in(0, cfg.vocab - 1)));
+            let max_new = g.usize_in(1, MAX_NEW_TOKENS);
+            max_need = max_need.max(prompt.len() + max_new - 1);
+            requests.push(GenRequest::greedy(id as u64, prompt, max_new));
+        }
+        // arena barely larger than the biggest single request: every
+        // request fits alone (the enqueue bound) but concurrent sequences
+        // contend, forcing preemption / prefix eviction / CoW paths
+        let per_req = max_need.div_ceil(kv_block);
+        let kv_blocks = per_req + g.usize_in(0, per_req.max(1));
+        let ecfg = EngineConfig {
+            max_batch,
+            kv_block,
+            kv_blocks,
+            prefill_chunk,
+            prefix_cache,
+            threads,
+            kv_scheme: crate::quant::resolve(kv_label).expect("fuzz kv label is registered"),
+            kv_seed: seed,
+            ..EngineConfig::default()
+        };
+        FuzzCase { seed, kv_label, ecfg, requests }
+    }
+
+    /// One-line description for failure messages.
+    pub fn describe(&self) -> String {
+        format!(
+            "kv={} block={} arena={} chunk={} batch={} threads={} prefix={} reqs={}",
+            self.kv_label,
+            self.ecfg.kv_block,
+            self.ecfg.kv_blocks,
+            self.ecfg.prefill_chunk,
+            self.ecfg.max_batch,
+            self.ecfg.threads,
+            self.ecfg.prefix_cache,
+            self.requests.len()
+        )
+    }
+}
+
+/// The model every fuzz case serves (weights are fixed — the fuzzer
+/// explores scheduling/storage space, not parameter space).
+pub fn model_under_test() -> (Transformer, Params) {
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(0xF00D);
+    (model, params)
+}
+
+/// Drive one engine over `requests`; returns completions sorted by id.
+/// Errors on incomplete drains and on block leaks (live blocks after the
+/// prefix cache is cleared).
+pub fn run_engine(
+    model: &Transformer,
+    params: &Params,
+    ecfg: &EngineConfig,
+    requests: &[GenRequest],
+    tag: &str,
+) -> Result<Vec<GenResponse>, String> {
+    let mut e = Engine::new(model.cfg.clone(), params.clone(), ecfg.clone());
+    for r in requests {
+        e.enqueue(r.clone()).map_err(|err| format!("{tag}: enqueue req {}: {err}", r.id))?;
+    }
+    let mut out = e.run_to_completion();
+    if out.len() != requests.len() {
+        return Err(format!("{tag}: {}/{} requests completed", out.len(), requests.len()));
+    }
+    e.clear_prefix_cache();
+    let (live, total, _, _) = e.kv_usage();
+    if live != 0 {
+        return Err(format!("{tag}: {live} of {total} blocks leaked after drain"));
+    }
+    out.sort_by_key(|r| r.id);
+    Ok(out)
+}
+
+/// Serial greedy reference: one request decoded token-at-a-time on the
+/// contiguous f32 `DecodeCache` (no paging, no batching, no sharing).
+pub fn reference_greedy(model: &Transformer, params: &Params, req: &GenRequest) -> Vec<usize> {
+    let mut cache = DecodeCache::new(&model.cfg, model.cfg.seq_len);
+    let mut fed = req.prompt.clone();
+    let mut generated = Vec::new();
+    let mut i = 0;
+    loop {
+        let logits = model.decode_step(params, fed[i], &mut cache);
+        i += 1;
+        if i < fed.len() {
+            continue;
+        }
+        let mut best = 0;
+        for (c, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = c;
+            }
+        }
+        generated.push(best);
+        if generated.len() >= req.max_new_tokens {
+            return generated;
+        }
+        fed.push(best);
+    }
+}
+
+/// Max-abs difference of the per-step logits between feeding `tokens`
+/// through a paged cache storing rows via `kv_label` and the contiguous
+/// f32 reference. Exactly 0.0 for the `"f32"` passthrough.
+pub fn kv_logit_drift(
+    model: &Transformer,
+    params: &Params,
+    tokens: &[usize],
+    kv_label: &str,
+    kv_block: usize,
+    kv_seed: u64,
+) -> f32 {
+    let scheme = crate::quant::resolve(kv_label).expect("kv label is registered");
+    let quant = KvQuant::new(scheme, model.cfg.d_model, kv_seed).expect("hostable kv scheme");
+    let mut paged = PagedKv::new_quantized(&model.cfg, kv_block, tokens.len(), quant);
+    let mut reference = DecodeCache::new(&model.cfg, tokens.len());
+    let mut drift = 0f32;
+    for &t in tokens {
+        let a = model.decode_step(params, t, &mut paged);
+        let b = model.decode_step(params, t, &mut reference);
+        let step = a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        drift = drift.max(step);
+    }
+    drift
+}
+
+fn tokens_of(out: &[GenResponse]) -> Vec<Vec<usize>> {
+    out.iter().map(|r| r.tokens.clone()).collect()
+}
+
+/// Generate and fully check the case for `seed`; `Err` carries the
+/// violated invariant plus the case description (the caller prepends the
+/// seed so failures reproduce).
+pub fn check_case(seed: u64) -> Result<(), String> {
+    let case = FuzzCase::generate(seed);
+    let (model, params) = model_under_test();
+    let tag = case.describe();
+
+    // 1. complete + leak-free
+    let first = run_engine(&model, &params, &case.ecfg, &case.requests, &tag)?;
+
+    // 2. determinism: the identical engine reproduces every token
+    let second = run_engine(&model, &params, &case.ecfg, &case.requests, &tag)?;
+    if tokens_of(&first) != tokens_of(&second) {
+        return Err(format!("{tag}: nondeterministic outputs across identical runs"));
+    }
+
+    // 3. prefix-cache transparency: flipping it changes nothing
+    let flipped = EngineConfig { prefix_cache: !case.ecfg.prefix_cache, ..case.ecfg.clone() };
+    let third = run_engine(&model, &params, &flipped, &case.requests, &tag)?;
+    if tokens_of(&first) != tokens_of(&third) {
+        return Err(format!(
+            "{tag}: greedy outputs changed when prefix cache flipped to {}",
+            flipped.prefix_cache
+        ));
+    }
+
+    if case.kv_label == "f32" {
+        // 4. paged f32 serving is bit-identical to the contiguous reference
+        for (resp, req) in first.iter().zip(case.requests.iter()) {
+            let want = reference_greedy(&model, &params, req);
+            if resp.tokens != want {
+                return Err(format!(
+                    "{tag}: req {} diverged from the contiguous f32 reference \
+                     (got {:?}, want {want:?})",
+                    req.id, resp.tokens
+                ));
+            }
+        }
+        for req in &case.requests {
+            let drift = kv_logit_drift(
+                &model,
+                &params,
+                &req.prompt,
+                "f32",
+                case.ecfg.kv_block,
+                case.ecfg.kv_seed,
+            );
+            if drift != 0.0 {
+                return Err(format!("{tag}: f32 passthrough produced nonzero drift {drift}"));
+            }
+        }
+    } else {
+        // 5. bounded logit drift for quantized KV
+        for req in &case.requests {
+            let drift = kv_logit_drift(
+                &model,
+                &params,
+                &req.prompt,
+                case.kv_label,
+                case.ecfg.kv_block,
+                case.ecfg.kv_seed,
+            );
+            if !drift.is_finite() || drift > FUZZ_DRIFT_BOUND {
+                return Err(format!(
+                    "{tag}: req {} logit drift {drift} exceeds bound {FUZZ_DRIFT_BOUND}",
+                    req.id
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_generation_is_deterministic_and_bounded() {
+        for seed in [3u64, 99, 12345] {
+            let a = FuzzCase::generate(seed);
+            let b = FuzzCase::generate(seed);
+            assert_eq!(a.kv_label, b.kv_label);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.ecfg.kv_blocks, b.ecfg.kv_blocks);
+            assert!(a.requests.len() <= MAX_REQUESTS);
+            for r in &a.requests {
+                assert!(!r.prompt.is_empty());
+                assert!(r.max_new_tokens <= MAX_NEW_TOKENS);
+                assert!(
+                    a.ecfg.kv_blocks
+                        >= (r.prompt.len() + r.max_new_tokens - 1).div_ceil(a.ecfg.kv_block),
+                    "seed {seed}: request {} cannot fit the arena alone",
+                    r.id
+                );
+            }
+            assert!(a.describe().contains(a.kv_label));
+        }
+    }
+
+    #[test]
+    fn reference_greedy_matches_engine_on_a_simple_case() {
+        let (model, params) = model_under_test();
+        let req = GenRequest::greedy(1, vec![4, 9, 2], 4);
+        let mut e = Engine::new(
+            model.cfg.clone(),
+            params.clone(),
+            EngineConfig { max_batch: 1, threads: 1, ..EngineConfig::default() },
+        );
+        e.enqueue(req.clone()).unwrap();
+        let out = e.run_to_completion();
+        assert_eq!(out[0].tokens, reference_greedy(&model, &params, &req));
+    }
+
+    #[test]
+    fn drift_is_zero_for_f32_and_small_for_fp8() {
+        let (model, params) = model_under_test();
+        let tokens: Vec<usize> = (0..12).map(|k| (k * 7 + 1) % 50).collect();
+        assert_eq!(kv_logit_drift(&model, &params, &tokens, "f32", 4, 9), 0.0);
+        let d = kv_logit_drift(&model, &params, &tokens, "fp8_e3m4", 4, 9);
+        assert!(d > 0.0, "fp8 KV should perturb logits at least slightly");
+        assert!(d < FUZZ_DRIFT_BOUND, "fp8 drift {d} out of bound");
+    }
+}

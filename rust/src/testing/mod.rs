@@ -1,5 +1,16 @@
-//! Test support: a mini property-testing framework (proptest substitute).
+//! Test support: a mini property-testing framework (proptest substitute)
+//! plus the deterministic serving fuzz/conformance substrate.
+//!
+//! * [`prop`] — per-seed case generation ([`Gen`]) and the [`check`]
+//!   runner; failures panic with the generating seed and case index.
+//! * [`fuzz`] — the serving conformance harness: [`fuzz::FuzzCase`]
+//!   derives a random request mix + engine configuration from one seed,
+//!   and [`fuzz::check_case`] asserts the serving invariants (leak-free
+//!   drain, determinism, prefix-cache transparency, paged-f32 ==
+//!   contiguous, bounded quantized-KV logit drift). Driven over a fixed
+//!   seed matrix by `tests/fuzz_serve.rs` on every PR.
 
+pub mod fuzz;
 pub mod prop;
 
 pub use prop::{assert_allclose, check, Gen};

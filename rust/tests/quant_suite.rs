@@ -216,6 +216,164 @@ fn prop_scheme_quantize_matches_explicit_fake_quantize() {
     });
 }
 
+/// Subnormal inputs: values inside every FP format's subnormal range must
+/// quantize to exactly representable values that survive the code hop, and
+/// a block whose amax is subnormal gets a scale that keeps it resolvable.
+#[test]
+fn prop_subnormal_inputs_roundtrip_per_fp_format() {
+    check("subnormal edge cases per format", 15, |g: &mut Gen| {
+        for scheme in Registry::global().schemes() {
+            let Codec::Fp(fmt) = scheme.codec else { continue };
+            if scheme.rounding != Rounding::NearestEven {
+                continue; // deterministic check
+            }
+            // a point strictly inside the subnormal range
+            let x = fmt.min_subnormal() * g.f64_in(0.6, (1u64 << fmt.man_bits) as f64 - 0.4);
+            let q = scheme.codec.quantize(x, Rounding::NearestEven, 0);
+            if !fmt.is_representable(q) {
+                return Err(format!("{}: subnormal {x} -> unrepresentable {q}", scheme.label()));
+            }
+            if q != 0.0 {
+                let back = scheme.decode(scheme.encode(q));
+                if back != q {
+                    return Err(format!("{}: subnormal code hop {q} -> {back}", scheme.label()));
+                }
+            }
+            // below half the min subnormal RNE underflows to (signed) zero
+            let tiny = fmt.min_subnormal() * 0.49;
+            if scheme.codec.quantize(tiny, Rounding::NearestEven, 0) != 0.0 {
+                return Err(format!("{}: {tiny} failed to underflow", scheme.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Overflow inputs: magnitudes beyond max_finite saturate (or go to inf
+/// for formats with inf codes), and the result still encodes/decodes
+/// exactly. Blockwise quantize never clips — the po2 scale maps the block
+/// amax inside range.
+#[test]
+fn prop_overflow_inputs_per_fp_format() {
+    check("overflow edge cases per format", 15, |g: &mut Gen| {
+        for scheme in Registry::global().schemes() {
+            let Codec::Fp(fmt) = scheme.codec else { continue };
+            let huge = fmt.max_finite() * g.f64_in(1.5, 1e6);
+            for signed in [huge, -huge] {
+                let q = scheme.codec.quantize(signed, Rounding::NearestEven, 0);
+                let expect_inf = fmt.has_inf_nan;
+                if expect_inf && !q.is_infinite() {
+                    return Err(format!("{}: {signed} should overflow to inf, got {q}", scheme.label()));
+                }
+                if !expect_inf && q.abs() != fmt.max_finite() {
+                    return Err(format!("{}: {signed} should saturate, got {q}", scheme.label()));
+                }
+                if q.signum() != signed.signum() {
+                    return Err(format!("{}: overflow lost the sign of {signed}", scheme.label()));
+                }
+                if expect_inf {
+                    let back = scheme.decode(scheme.encode(q));
+                    if back != q {
+                        return Err(format!("{}: inf code hop {q} -> {back}", scheme.label()));
+                    }
+                }
+            }
+            // blockwise: the shared scale absorbs the magnitude — no clip
+            let w = [huge, huge / 2.0, 0.0, -huge];
+            let q = fake_quantize(
+                &w,
+                2,
+                2,
+                Geometry::Square { block: 2 },
+                &scheme.codec,
+                Rounding::NearestEven,
+                0,
+            );
+            if q.data.iter().any(|v| !v.is_finite()) {
+                return Err(format!("{}: blockwise quantize clipped to non-finite", scheme.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// All-zero blocks: unit scale, zero outputs, zero codes — and the shared
+/// scale of a mixed block is never poisoned by its zero elements.
+#[test]
+fn all_zero_blocks_quantize_to_zero_with_unit_scale() {
+    for scheme in Registry::global().schemes() {
+        if !scheme.codec.is_packed() {
+            continue;
+        }
+        let w = [0.0f64; 16];
+        let q = scheme.quantize(&w, 4, 4, 7);
+        assert!(q.scales.iter().all(|&s| s == 1.0), "{}: {:?}", scheme.label(), q.scales);
+        assert!(q.data.iter().all(|&v| v == 0.0), "{}", scheme.label());
+        let code = scheme.encode(0.0);
+        assert_eq!(scheme.decode(code), 0.0, "{}", scheme.label());
+    }
+}
+
+/// The NaN policy (documented on `Codec::quantize` / `FpFormat::cast_mode`):
+/// a NaN element never contaminates the shared block scale or its
+/// neighbours; per element, inf/nan formats propagate NaN, saturating FP
+/// formats clamp it to ±max_finite, and INT codecs map it to 0.
+#[test]
+fn nan_policy_is_enforced() {
+    use gaussws::numerics::formats;
+    // elementwise policy per codec family
+    let ieee = Codec::Fp(formats::BF16);
+    assert!(ieee.quantize(f64::NAN, Rounding::NearestEven, 0).is_nan(), "ieee formats propagate");
+    let sat = Codec::Fp(formats::FP8_E3M4);
+    let q = sat.quantize(f64::NAN, Rounding::NearestEven, 0);
+    assert_eq!(q.abs(), formats::FP8_E3M4.max_finite(), "saturating formats clamp NaN: {q}");
+    let int = Codec::Int { bits: 8 };
+    assert_eq!(int.quantize(f64::NAN, Rounding::NearestEven, 0), 0.0, "INT maps NaN to 0");
+    // ieee formats can round-trip NaN through the packed code
+    for fmt in [formats::BF16, formats::FP16, formats::FP8_E5M2] {
+        let codec = Codec::Fp(fmt);
+        assert!(codec.decode(codec.encode(f64::NAN)).is_nan(), "{fmt:?}: NaN code hop");
+    }
+    // a single NaN inside a block: neighbours and the shared scale match
+    // the same block with the NaN replaced by zero (amax folds skip NaN)
+    let scheme = gaussws::quant::resolve("fp8_e3m4").unwrap();
+    let mut w: Vec<f64> = (0..64).map(|i| (i as f64 - 30.0) * 0.17).collect();
+    let mut clean = w.clone();
+    w[13] = f64::NAN;
+    clean[13] = 0.0;
+    let qn = scheme.quantize(&w, 8, 8, 0);
+    let qc = scheme.quantize(&clean, 8, 8, 0);
+    assert_eq!(qn.scales, qc.scales, "NaN poisoned a shared scale");
+    for (i, (a, b)) in qn.data.iter().zip(qc.data.iter()).enumerate() {
+        if i == 13 {
+            // NaN saturates at the block's scale: ±max_finite × scale
+            assert_eq!(a.abs(), formats::FP8_E3M4.max_finite() * qn.scales[0], "elem 13: {a}");
+        } else {
+            assert_eq!(a, b, "elem {i}: neighbour of NaN changed");
+        }
+    }
+}
+
+/// SR determinism under `tensor_seed`: the documented contract is that the
+/// same (name, salt) makes two *independent* stochastic quantize calls
+/// byte-identical — this is what keeps SR snapshots reproducible across
+/// the quantize/serve/eval paths — while a different name or salt diverges.
+#[test]
+fn sr_determinism_under_tensor_seed_across_independent_calls() {
+    use gaussws::quant::tensor_seed;
+    let scheme = gaussws::quant::resolve("int8_sr").unwrap();
+    let mut g = Gen::new(41);
+    let w = g.normal_vec(24 * 24);
+    let a = scheme.quantize(&w, 24, 24, tensor_seed("blk0.up", 2026));
+    let b = scheme.quantize(&w, 24, 24, tensor_seed("blk0.up", 2026));
+    assert_eq!(a.data, b.data, "same tensor name + salt must reproduce exactly");
+    assert_eq!(a.scales, b.scales);
+    let other_name = scheme.quantize(&w, 24, 24, tensor_seed("blk1.up", 2026));
+    let other_salt = scheme.quantize(&w, 24, 24, tensor_seed("blk0.up", 2027));
+    assert_ne!(a.data, other_name.data, "different tensor names must decorrelate");
+    assert_ne!(a.data, other_salt.data, "different salts must decorrelate");
+}
+
 /// INT stores (including stochastic ones) survive the full
 /// snapshot→save→load→serve hop byte-for-byte.
 #[test]
