@@ -148,14 +148,14 @@ fn main() -> anyhow::Result<()> {
             stats.max_occupancy()
         );
     }
-    if prefix_cache && shared_prefix > 0 && stats.prefix_hits == 0 {
+    if prefix_cache && shared_prefix > 0 && stats.prefix_hits() == 0 {
         println!("WARNING: shared-prefix workload produced no prefix hits");
     } else if prefix_cache {
         println!(
             "prefix cache: {} hits ({:.0}% of lookups), {} K/V positions reused",
-            stats.prefix_hits,
+            stats.prefix_hits(),
             stats.prefix_hit_rate() * 100.0,
-            stats.prefix_tokens_reused
+            stats.prefix_tokens_reused()
         );
     }
     Ok(())

@@ -1,14 +1,24 @@
 //! Run metrics: per-step loss/LR/throughput logging, WMA smoothing
 //! (Fig. 4 uses α = 1/16 and 1/128), windowed-max loss, divergence
 //! detection, and CSV/JSON export for the experiment harness.
+//!
+//! [`RunLog`] is a view over a [`telemetry::Registry`](crate::telemetry):
+//! every pushed row also lands in `train.*` counters/gauges/histograms
+//! (steps, tokens, loss, lr, step wall-time), and
+//! [`RunLog::record_layer_numerics`] publishes per-layer PQT gauges —
+//! the effective train-time bitwidth `train.bt_mean.<layer>` and the
+//! Eq. 3 noise amplitude factor `train.noise_amp.<layer>` (mean of
+//! `2^(1 − b_t)`, the multiplier on amax in the perturbation std) — so
+//! training numerics share the serve layer's exposition path.
 
+use crate::telemetry::Registry;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::stats::{wma_series, windowed_max};
 use std::io::Write;
 use std::path::Path;
 
 /// One training-step record.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct StepRow {
     pub step: usize,
     pub loss: f64,
@@ -17,6 +27,11 @@ pub struct StepRow {
     pub tokens: usize,
     /// wall seconds for the step
     pub dt: f64,
+    /// mean effective train-time bitwidth b_t across PQT layers (Eq. 11);
+    /// 0 when the run has no PQT linears
+    pub bt_mean: f64,
+    /// mean Eq. 3 noise amplitude factor 2^(1 − b_t) across PQT layers
+    pub noise_amp: f64,
 }
 
 /// A full run log.
@@ -26,6 +41,7 @@ pub struct RunLog {
     pub rows: Vec<StepRow>,
     /// steps at which divergence was detected
     pub divergences: Vec<usize>,
+    reg: Registry,
 }
 
 impl RunLog {
@@ -33,8 +49,39 @@ impl RunLog {
         RunLog { name: name.to_string(), ..Default::default() }
     }
 
+    /// The backing telemetry registry (`train.*` metrics); shared across
+    /// clones, exposable next to the serve metrics.
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
     pub fn push(&mut self, row: StepRow) {
+        self.reg.counter("train.steps").inc();
+        self.reg.counter("train.tokens").add(row.tokens as u64);
+        self.reg.gauge("train.loss").set(row.loss);
+        self.reg.gauge("train.lr").set(row.lr);
+        self.reg.histogram("train.step_dt_s").record(row.dt);
+        if row.bt_mean != 0.0 {
+            self.reg.gauge("train.bt_mean").set(row.bt_mean);
+            self.reg.gauge("train.noise_amp").set(row.noise_amp);
+        }
         self.rows.push(row);
+    }
+
+    /// Publish per-layer PQT numerics gauges (`train.bt_mean.<layer>`,
+    /// `train.noise_amp.<layer>`) and return `(bt_mean, noise_amp)` for
+    /// aggregation into the step row. `bt` is the per-group effective
+    /// bitwidth vector of one layer's weight (Eq. 11).
+    pub fn record_layer_numerics(&self, layer: &str, bt: &[f32]) -> (f64, f64) {
+        if bt.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = bt.len() as f64;
+        let bt_mean = bt.iter().map(|&b| b as f64).sum::<f64>() / n;
+        let noise_amp = bt.iter().map(|&b| (1.0 - b as f64).exp2()).sum::<f64>() / n;
+        self.reg.gauge(&format!("train.bt_mean.{layer}")).set(bt_mean);
+        self.reg.gauge(&format!("train.noise_amp.{layer}")).set(noise_amp);
+        (bt_mean, noise_amp)
     }
 
     pub fn losses(&self) -> Vec<f64> {
@@ -89,11 +136,12 @@ impl RunLog {
         let sm16 = self.smoothed(1.0 / 16.0);
         let sm128 = self.smoothed(1.0 / 128.0);
         let mx = self.max_loss(64);
-        let mut out = String::from("step,loss,wma16,wma128,max64,lr,tokens,dt\n");
+        let mut out = String::from("step,loss,wma16,wma128,max64,lr,tokens,dt,bt_mean,noise_amp\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6e},{},{:.4}\n",
-                r.step, r.loss, sm16[i], sm128[i], mx[i], r.lr, r.tokens, r.dt
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6e},{},{:.4},{:.4},{:.6}\n",
+                r.step, r.loss, sm16[i], sm128[i], mx[i], r.lr, r.tokens, r.dt, r.bt_mean,
+                r.noise_amp
             ));
         }
         out
@@ -132,7 +180,7 @@ mod tests {
     fn log_with(losses: &[f64]) -> RunLog {
         let mut l = RunLog::new("t");
         for (i, &x) in losses.iter().enumerate() {
-            l.push(StepRow { step: i, loss: x, lr: 1e-3, tokens: 100, dt: 0.1 });
+            l.push(StepRow { step: i, loss: x, lr: 1e-3, tokens: 100, dt: 0.1, ..Default::default() });
         }
         l
     }
@@ -148,9 +196,10 @@ mod tests {
     #[test]
     fn tokens_per_sec_skips_compile_step() {
         let mut l = RunLog::new("t");
-        l.push(StepRow { step: 0, loss: 1.0, lr: 0.0, tokens: 100, dt: 10.0 }); // compile
-        l.push(StepRow { step: 1, loss: 1.0, lr: 0.0, tokens: 100, dt: 0.1 });
-        l.push(StepRow { step: 2, loss: 1.0, lr: 0.0, tokens: 100, dt: 0.1 });
+        let row = |step, dt| StepRow { step, loss: 1.0, lr: 0.0, tokens: 100, dt, ..Default::default() };
+        l.push(row(0, 10.0)); // compile
+        l.push(row(1, 0.1));
+        l.push(row(2, 0.1));
         assert!((l.tokens_per_sec() - 1000.0).abs() < 1.0);
     }
 
@@ -175,6 +224,41 @@ mod tests {
         let mut l = log_with(&losses);
         assert!(!l.check_divergence(3.0));
         assert!(l.divergences.is_empty());
+    }
+
+    #[test]
+    fn registry_sees_training_metrics() {
+        let mut l = RunLog::new("t");
+        let (bt_mean, noise_amp) = l.record_layer_numerics("blk0.attn.qkv", &[3.0, 4.0]);
+        assert!((bt_mean - 3.5).abs() < 1e-12);
+        // mean of 2^(1-3) and 2^(1-4) = (0.25 + 0.125) / 2
+        assert!((noise_amp - 0.1875).abs() < 1e-12);
+        l.push(StepRow {
+            step: 0,
+            loss: 2.5,
+            lr: 1e-3,
+            tokens: 128,
+            dt: 0.2,
+            bt_mean,
+            noise_amp,
+        });
+        let reg = l.registry();
+        assert_eq!(reg.counter("train.steps").get(), 1);
+        assert_eq!(reg.counter("train.tokens").get(), 128);
+        assert_eq!(reg.gauge("train.loss").get(), 2.5);
+        assert_eq!(reg.gauge("train.bt_mean.blk0.attn.qkv").get(), 3.5);
+        assert_eq!(reg.histogram("train.step_dt_s").count(), 1);
+        // layer gauges show up in the shared exposition
+        let text = reg.prometheus_text();
+        assert!(text.contains("gaussws_train_bt_mean_blk0_attn_qkv"));
+        assert!(text.contains("gaussws_train_noise_amp_blk0_attn_qkv"));
+    }
+
+    #[test]
+    fn empty_layer_numerics_is_zero_and_unpublished() {
+        let l = RunLog::new("t");
+        assert_eq!(l.record_layer_numerics("blk0", &[]), (0.0, 0.0));
+        assert!(!l.registry().names().iter().any(|n| n.starts_with("train.bt_mean")));
     }
 
     #[test]

@@ -268,12 +268,28 @@ impl Trainer {
 
         self.seeds.advance_step();
         let loss = loss_sum / n_micro as f64;
+        // per-layer PQT numerics gauges (effective bitwidth + noise
+        // amplitude), aggregated into the step row as run-wide means
+        let mut bt_sum = 0.0;
+        let mut amp_sum = 0.0;
+        let mut n_layers = 0usize;
+        for name in self.bi_layer_names() {
+            if let Some(bt) = self.bt_of(&name) {
+                let (bt_mean, noise_amp) = self.log.record_layer_numerics(&name, &bt);
+                bt_sum += bt_mean;
+                amp_sum += noise_amp;
+                n_layers += 1;
+            }
+        }
+        let n = n_layers.max(1) as f64;
         self.log.push(StepRow {
             step: self.step,
             loss,
             lr,
             tokens: self.tokens_per_step(),
             dt: t0.elapsed().as_secs_f64(),
+            bt_mean: if n_layers > 0 { bt_sum / n } else { 0.0 },
+            noise_amp: if n_layers > 0 { amp_sum / n } else { 0.0 },
         });
         self.log.check_divergence(3.0);
         self.step += 1;

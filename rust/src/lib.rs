@@ -44,6 +44,13 @@
 //!   label registry (`"bf16"`, `"fp8_e3m4"`, `"int8_sr"`, …) shared by
 //!   train-time fake-quant, checkpoint snapshots, and the packed serving
 //!   store, so every format/rounding scenario is a single registry entry.
+//! * **[`telemetry`]** — the shared observability substrate: a lock-light
+//!   [`telemetry::Registry`] of sharded counters, gauges and log-bucketed
+//!   histograms with JSON/Prometheus exposition, plus per-request Chrome
+//!   trace-event timelines (`serve --trace-out`). `serve::ServeStats` and
+//!   `coordinator::metrics::RunLog` are views over it, so serving latency
+//!   percentiles, KV logit-drift histograms, and per-layer PQT noise
+//!   amplitude / effective bitwidth gauges all share one exposition path.
 //!
 //! Python never runs on the training path; after `make artifacts` the rust
 //! binary is self-contained. The PJRT execution path itself sits behind the
@@ -62,5 +69,6 @@ pub mod prng;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod testing;
 pub mod util;

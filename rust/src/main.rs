@@ -9,7 +9,9 @@
 //!   quantize --checkpoint ck --artifact tag [--formats bf16,fp8_e3m4,...]
 //!           (Table C.1 on a checkpoint; labels resolve via quant::Registry)
 //!   serve   [--checkpoint ck | --snapshot s.gwqs] --store fp8_e3m4
-//!           (quantized-snapshot serving engine + self-driven load)
+//!           (quantized-snapshot serving engine + self-driven load;
+//!            --trace-out exports per-request Chrome trace timelines,
+//!            --metrics-every prints telemetry registry snapshots)
 //!   info    (list artifacts in the manifest + registered quant schemes)
 
 use anyhow::{bail, Context, Result};
@@ -73,6 +75,8 @@ fn print_usage() {
          \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
+         \x20               [--trace-out trace.jsonl (per-request Chrome trace timeline)]\n\
+         \x20               [--metrics-every N (print a registry snapshot every N waves)]\n\
          \x20 gaussws info"
     );
 }
@@ -428,6 +432,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         capacity: usize::MAX,
         kv_scheme,
         kv_seed: seed,
+        trace: args.get("trace-out").is_some(),
     };
     // degenerate paging configs (including an unhostable --kv-store
     // geometry for this model) fail here with a clean error, not a panic
@@ -503,9 +508,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: seed ^ id as u64,
         })?;
     }
-    let done = engine.run_to_completion();
+    // --metrics-every N: step the engine wave-by-wave and print a
+    // registry snapshot every N waves (machine-greppable `METRICS` lines)
+    let metrics_every = args.usize_or("metrics-every", 0);
+    let done = if metrics_every == 0 {
+        engine.run_to_completion()
+    } else {
+        let mut done = Vec::new();
+        let mut wave = 0usize;
+        while !engine.is_idle() {
+            done.extend(engine.step());
+            wave += 1;
+            if wave % metrics_every == 0 {
+                println!("METRICS wave {wave} {}", engine.stats.registry().snapshot_json());
+            }
+        }
+        done
+    };
     println!();
     println!("{}", engine.stats.render(store.label()));
+    if let Some(path) = args.get("trace-out") {
+        if let Some(t) = engine.stats.trace() {
+            t.write_jsonl(path)?;
+            println!("trace: {} events -> {path} (open with ui.perfetto.dev)", t.len());
+        }
+    }
     let (live, blocks, high_water, kv_bytes) = engine.kv_usage();
     println!(
         "kv arena: {blocks} blocks x {} positions, live {live}, high water {high_water}, \

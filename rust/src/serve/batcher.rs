@@ -25,6 +25,7 @@ use crate::prng::Philox4x32;
 use crate::serve::kvcache::BlockAllocator;
 use crate::serve::protocol::{FinishReason, GenRequest, GenResponse};
 use crate::serve::stats::ServeStats;
+use crate::util::json::{num, s, Json};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -253,6 +254,7 @@ impl Scheduler {
             } else {
                 break;
             };
+            let live_before = alloc.live_blocks();
             // prefix adoption: reuse the longest cached prefix of the feed
             // stream (for re-admissions that includes generated tokens)
             let mut reused = 0usize;
@@ -265,6 +267,10 @@ impl Scheduler {
                     // local clones just go away
                     drop(chain);
                 }
+                // counted at the lookup site (not at admission success) so
+                // hits + misses == lookups holds even when this admission
+                // later bounces off a dry arena
+                stats.record_prefix_lookup(reused);
             }
             // admission by free blocks: reserve the first chunk's blocks up
             // front (including a possible copy-on-write of an adopted
@@ -275,6 +281,30 @@ impl Scheduler {
                     seq.seq_no = self.next_seq_no;
                     self.next_seq_no += 1;
                     stats.record_admission(if self.prefix_cache { Some(reused) } else { None });
+                    if let Some(t) = stats.trace_mut() {
+                        // reserve delta, not absolute: LRU evictions during
+                        // the loop can shrink the live count concurrently
+                        let delta = alloc.live_blocks() as i64 - live_before as i64;
+                        t.begin(
+                            "resident",
+                            seq.req.id,
+                            vec![
+                                (
+                                    "prefix",
+                                    s(if !self.prefix_cache {
+                                        "off"
+                                    } else if reused > 0 {
+                                        "hit"
+                                    } else {
+                                        "miss"
+                                    }),
+                                ),
+                                ("reused", num(reused as f64)),
+                                ("readmit", Json::Bool(from_preempted)),
+                                ("blocks_reserved", num(delta as f64)),
+                            ],
+                        );
+                    }
                     self.active.push(seq);
                     admitted += 1;
                     break;
@@ -314,8 +344,18 @@ impl Scheduler {
             .max_by_key(|(_, s)| s.seq_no)
             .map(|(i, _)| i)?;
         let mut seq = self.active.remove(idx);
-        alloc.release_chain(seq.kv.take_blocks()).expect("preempted sequence chain was live");
+        let chain = seq.kv.take_blocks();
+        let released = chain.len();
+        alloc.release_chain(chain).expect("preempted sequence chain was live");
         stats.record_preemption();
+        if let Some(t) = stats.trace_mut() {
+            t.end(
+                "resident",
+                seq.req.id,
+                vec![("reason", s("preempt")), ("blocks_released", num(released as f64))],
+            );
+            t.instant("preempt", seq.req.id, vec![]);
+        }
         self.preempted.push_back(seq);
         Some(idx)
     }
@@ -465,7 +505,7 @@ mod tests {
         assert_eq!(alloc.free_blocks(), 2);
         assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
         assert_eq!(sched.pending_len(), 1);
-        assert_eq!(stats.admissions, 2);
+        assert_eq!(stats.admissions(), 2);
     }
 
     #[test]
@@ -488,7 +528,7 @@ mod tests {
         assert_eq!(sched.active_len(), 1);
         assert_eq!(sched.pending_len(), 1, "victim waits for re-admission");
         assert!(alloc.live_blocks() < live_before);
-        assert_eq!(stats.preemptions, 1);
+        assert_eq!(stats.preemptions(), 1);
         // re-admission keeps its progress: stream = prompt ++ generated
         assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
         let re = sched.active.last().unwrap();
@@ -517,10 +557,11 @@ mod tests {
         // an identical prompt admits with most of its prefill skipped
         sched.push(GenRequest::greedy(1, prompt.clone(), 1));
         assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 1);
-        assert_eq!(stats.prefix_hits, 1);
+        assert_eq!(stats.prefix_hits(), 1);
+        assert_eq!(stats.prefix_lookups(), stats.prefix_hits() + stats.prefix_misses());
         let re = sched.active.last().unwrap();
         assert_eq!(re.kv.len(), 8, "block-aligned prefix of 10-1 positions");
         assert_eq!(re.next_chunk_len(8), 2, "only the unshared tail re-feeds");
-        assert_eq!(stats.prefix_tokens_reused, 8);
+        assert_eq!(stats.prefix_tokens_reused(), 8);
     }
 }

@@ -31,6 +31,7 @@ use crate::serve::kvcache::{BlockAllocator, PrefixCacheStats};
 use crate::serve::protocol::{GenRequest, GenResponse};
 use crate::serve::stats::ServeStats;
 use crate::serve::weights::WeightStore;
+use crate::util::json::num;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc;
 
@@ -63,6 +64,10 @@ pub struct EngineConfig {
     /// Seed for the KV scheme's stochastic-rounding streams (keyed per
     /// layer/position, so re-prefill and prefix reuse stay deterministic).
     pub kv_seed: u64,
+    /// Record per-request trace timelines (enqueue → admit → prefill /
+    /// decode waves → preempt → retire) into the stats' trace buffer —
+    /// exported as Chrome trace-event JSONL via `serve --trace-out`.
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +83,7 @@ impl Default for EngineConfig {
             capacity: usize::MAX,
             kv_scheme: crate::quant::resolve("f32").expect("f32 scheme is registered"),
             kv_seed: 0x6B76_5EED,
+            trace: false,
         }
     }
 }
@@ -169,6 +175,9 @@ impl Engine {
             alloc.bytes(),
             alloc.encoded_bytes(),
         );
+        if cfg.trace {
+            stats.enable_trace();
+        }
         Engine { model, params, alloc, sched, stats, cfg, capacity }
     }
 
@@ -216,7 +225,15 @@ impl Engine {
                 self.alloc.total_blocks()
             );
         }
+        let (req_id, prompt_len, max_new) = (req.id, req.prompt.len(), req.max_new_tokens);
         self.sched.push(req);
+        if let Some(t) = self.stats.trace_mut() {
+            t.begin(
+                "request",
+                req_id,
+                vec![("prompt_len", num(prompt_len as f64)), ("max_new", num(max_new as f64))],
+            );
+        }
         Ok(())
     }
 
@@ -252,6 +269,7 @@ impl Engine {
     /// fuzz harness's leak invariant.
     pub fn clear_prefix_cache(&mut self) {
         self.alloc.prefix_clear();
+        self.stats.set_blocks_live(self.alloc.live_blocks());
     }
 
     /// Canonical label of the KV row-storage scheme (`"f32"`, `"fp8_e3m4"`, …).
@@ -326,6 +344,19 @@ impl Engine {
             }
         }
         self.stats.record_blocks(self.alloc.live_blocks(), self.alloc.total_blocks());
+        // per-sequence wave spans: label + chunk captured at plan time (a
+        // chunk is a decode step iff it feeds exactly the one sampled token)
+        let wave_start = self.stats.trace().map(|t| t.now_us());
+        let wave_meta: Vec<(u64, usize, bool)> = if wave_start.is_some() {
+            self.sched
+                .active
+                .iter()
+                .zip(&chunks)
+                .map(|(seq, &c)| (seq.req.id, c, c == 1 && !seq.in_prefill()))
+                .collect()
+        } else {
+            Vec::new()
+        };
         // ---- wave: advance every sequence by its chunk ----
         {
             let model = &self.model;
@@ -351,10 +382,28 @@ impl Engine {
                 });
             }
         }
+        if let Some(start) = wave_start {
+            if let Some(t) = self.stats.trace_mut() {
+                let dur = t.now_us().saturating_sub(start).max(1);
+                for &(tid, positions, is_decode) in &wave_meta {
+                    t.complete(
+                        if is_decode { "decode" } else { "prefill" },
+                        tid,
+                        start,
+                        dur,
+                        vec![("positions", num(positions as f64))],
+                    );
+                }
+            }
+        }
         let done = self.sched.retire(&mut self.alloc);
         for r in &done {
             self.stats.record_completion(r);
         }
+        // retirement is a release edge too: keep the occupancy-over-time
+        // gauge honest between waves (the fuzz harness asserts it returns
+        // to zero after a drain + prefix clear)
+        self.stats.set_blocks_live(self.alloc.live_blocks());
         done
     }
 
@@ -557,7 +606,7 @@ mod tests {
             assert!(r.total_s >= 0.0 && r.ttft_s >= 0.0);
         }
         assert!(e.stats.max_occupancy() > 1, "continuous batching never batched");
-        assert_eq!(e.stats.completed, 6);
+        assert_eq!(e.stats.completed(), 6);
         let (live, total, high_water, bytes) = e.kv_usage();
         assert_eq!(live, 0, "blocks leaked");
         assert_eq!(total, 4 * 64usize.div_ceil(8));
@@ -771,7 +820,7 @@ mod tests {
             assert_eq!(j.join().unwrap(), vec![3, 3]);
         }
         let stats = handle.shutdown();
-        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.completed(), 6);
     }
 
     #[test]
@@ -816,10 +865,10 @@ mod tests {
         let mut b = roomy.run_to_completion();
         assert_eq!(a.len(), 6);
         assert!(
-            tight.stats.preemptions > 0,
+            tight.stats.preemptions() > 0,
             "4-block arena with 3-block sequences must preempt"
         );
-        assert_eq!(roomy.stats.preemptions, 0);
+        assert_eq!(roomy.stats.preemptions(), 0);
         a.sort_by_key(|r| r.id);
         b.sort_by_key(|r| r.id);
         for (x, y) in a.iter().zip(b.iter()) {
@@ -876,9 +925,9 @@ mod tests {
             assert_eq!(x.id, y.id);
             assert_eq!(x.tokens, y.tokens, "req {}: prefix sharing changed the output", x.id);
         }
-        assert!(cached.stats.prefix_hits >= 8, "fan-out admissions must hit the cached prefix");
-        assert!(cached.stats.prefix_tokens_reused >= 8 * 17);
-        assert_eq!(plain.stats.prefix_hits, 0);
+        assert!(cached.stats.prefix_hits() >= 8, "fan-out admissions must hit the cached prefix");
+        assert!(cached.stats.prefix_tokens_reused() >= 8 * 17);
+        assert_eq!(plain.stats.prefix_hits(), 0);
         assert!(cached.cow_copies() > 0, "divergent mid-block tails must copy-on-write");
         // shared chains mean fewer live blocks for the same concurrent load
         assert!(

@@ -36,16 +36,24 @@
 //!    `Arc`-shared read-only, writable tails exclusive), and retires
 //!    finished sequences into the prefix index; a spawned engine front
 //!    exposes blocking [`engine::EngineClient`]s.
-//! 6. **account** — [`stats::ServeStats`] tracks p50/p95 latency, TTFT,
-//!    tokens/sec, batch occupancy, block occupancy, prefix-hit rate,
-//!    preemptions, prefill chunks, and the KV scheme's bytes/position +
-//!    encoded arena bytes, and emits the `BENCH_serve.json` record.
+//! 6. **account** — [`stats::ServeStats`] is a view over a shared
+//!    [`crate::telemetry::Registry`]: counters, gauges and log-bucketed
+//!    histograms back p50/p95/p99 latency, TTFT, tokens/sec, batch
+//!    occupancy, a live-block gauge sampled over time, prefix-hit rate,
+//!    preemptions, prefill chunks, the KV logit-drift histogram, and the
+//!    KV scheme's bytes/position + encoded arena bytes; it emits the
+//!    `BENCH_serve.json` record and exposes JSON / Prometheus-text
+//!    snapshots (`serve --metrics-every`). With `EngineConfig::trace` on
+//!    (`serve --trace-out`), every request additionally records a Chrome
+//!    trace-event timeline — enqueue → admit (prefix hit/miss, block
+//!    reserve delta) → prefill chunks → decode waves → preempt/re-admit →
+//!    retire — exported as JSONL for ui.perfetto.dev.
 //!
 //! The conformance harness for all of the above — a seeded, deterministic
 //! serving fuzzer asserting leak-freedom, determinism, paged-vs-contiguous
-//! greedy identity, prefix on/off equivalence, and bounded quantized-KV
-//! logit drift — lives in [`crate::testing::fuzz`] and runs from
-//! `tests/fuzz_serve.rs`.
+//! greedy identity, prefix on/off equivalence, bounded quantized-KV
+//! logit drift, and telemetry/trace consistency — lives in
+//! [`crate::testing::fuzz`] and runs from `tests/fuzz_serve.rs`.
 
 pub mod batcher;
 pub mod engine;

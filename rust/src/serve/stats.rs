@@ -1,41 +1,53 @@
 //! Serving-side accounting: per-request latency (queue / TTFT / total),
-//! generated-token throughput, and per-wave batch occupancy. This is the
-//! first latency-oriented metrics surface in the codebase — the training
-//! loop reports tokens/step, serving reports p50/p95 and tokens/sec.
+//! generated-token throughput, per-wave batch occupancy, and the KV
+//! logit-drift histogram — all as a *view over* a
+//! [`telemetry::Registry`](crate::telemetry::Registry).
+//!
+//! Every counter, gauge and latency percentile below is backed by a named
+//! registry metric (prefix `serve.`), so `--metrics-every` snapshots,
+//! Prometheus exposition, `bench_json`, and `render` read the same state.
+//! Latency percentiles are histogram-backed (log-bucketed, nearest-rank —
+//! within one bucket width of the exact percentile); means and extrema
+//! stay exact via the histograms' count/sum/min/max atomics.
+//!
+//! When tracing is enabled ([`ServeStats::enable_trace`], wired to
+//! `EngineConfig::trace` / `serve --trace-out`), the struct also carries
+//! the per-request [`TraceBuffer`] timeline; `record_completion` closes
+//! each request's spans.
+//!
+//! Cloning a `ServeStats` clones the registry *handles*, not the values:
+//! clones observe and mutate the same underlying metrics.
 
 use crate::serve::protocol::GenResponse;
+use crate::telemetry::{Counter, Gauge, Histogram, Registry, TraceBuffer, TraceEvent};
 use crate::util::json::{num, obj, s, Json};
-use crate::util::stats::percentile;
 use std::time::Instant;
 
-/// Aggregated serving statistics.
-#[derive(Debug, Clone, Default)]
+/// Aggregated serving statistics (view over a telemetry registry).
+#[derive(Debug, Clone)]
 pub struct ServeStats {
-    /// Completed requests.
-    pub completed: usize,
-    /// Prompt tokens consumed (prefill work).
-    pub prompt_tokens: usize,
-    /// Tokens generated (decode work the caller actually received).
-    pub gen_tokens: usize,
-    /// Decode waves executed.
-    pub waves: usize,
-    /// Sequences admitted into the active batch (re-admissions after
-    /// preemption count again).
-    pub admissions: usize,
-    /// Multi-token prefill chunks executed (waves where a sequence
-    /// advanced by more than one position).
-    pub prefill_chunks: usize,
-    /// Prompt positions fed through multi-token chunks.
-    pub prefill_chunk_tokens: usize,
-    /// Admissions that adopted a cached prompt-prefix chain.
-    pub prefix_hits: usize,
-    /// Admissions that looked up the prefix index and missed.
-    pub prefix_misses: usize,
-    /// KV positions skipped (neither recomputed nor re-stored) thanks to
-    /// prefix reuse.
-    pub prefix_tokens_reused: usize,
-    /// Sequences pushed back to the queue because the arena ran dry.
-    pub preemptions: usize,
+    reg: Registry,
+    completed: Counter,
+    prompt_tokens: Counter,
+    gen_tokens: Counter,
+    waves: Counter,
+    admissions: Counter,
+    prefill_chunks: Counter,
+    prefill_chunk_tokens: Counter,
+    prefix_lookups: Counter,
+    prefix_hits: Counter,
+    prefix_misses: Counter,
+    prefix_tokens_reused: Counter,
+    preemptions: Counter,
+    /// Current live arena blocks — an occupancy-over-time gauge updated on
+    /// every reserve/release edge, not just end-state.
+    blocks_live: Gauge,
+    occupancy: Histogram,
+    block_live: Histogram,
+    total_s: Histogram,
+    ttft_s: Histogram,
+    queue_s: Histogram,
+    kv_drift: Histogram,
     /// Arena block budget (set once by the engine).
     pub kv_blocks_total: usize,
     /// Canonical label of the KV row-storage scheme (`"f32"`, `"fp8_e3m4"`,
@@ -50,30 +62,167 @@ pub struct ServeStats {
     /// Encoded bytes of the arena budget — what a deployment layout
     /// storing only codes + scales would cost.
     pub kv_arena_encoded_bytes: usize,
-    /// Sequences advanced per wave (the continuous-batching occupancy).
-    occupancy: Vec<usize>,
-    /// Live arena blocks sampled per wave.
-    block_live: Vec<usize>,
-    total_s: Vec<f64>,
-    ttft_s: Vec<f64>,
-    queue_s: Vec<f64>,
+    trace: Option<TraceBuffer>,
     /// Wall-clock span from the first wave to the last completion.
     first_wave: Option<Instant>,
     last_done: Option<Instant>,
 }
 
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
 impl ServeStats {
     pub fn new() -> ServeStats {
-        ServeStats::default()
+        ServeStats::with_registry(Registry::new())
     }
+
+    /// Build a view over an existing registry (metric names are prefixed
+    /// `serve.`).
+    pub fn with_registry(reg: Registry) -> ServeStats {
+        ServeStats {
+            completed: reg.counter("serve.requests_completed"),
+            prompt_tokens: reg.counter("serve.prompt_tokens"),
+            gen_tokens: reg.counter("serve.gen_tokens"),
+            waves: reg.counter("serve.waves"),
+            admissions: reg.counter("serve.admissions"),
+            prefill_chunks: reg.counter("serve.prefill_chunks"),
+            prefill_chunk_tokens: reg.counter("serve.prefill_chunk_tokens"),
+            prefix_lookups: reg.counter("serve.prefix_lookups"),
+            prefix_hits: reg.counter("serve.prefix_hits"),
+            prefix_misses: reg.counter("serve.prefix_misses"),
+            prefix_tokens_reused: reg.counter("serve.prefix_tokens_reused"),
+            preemptions: reg.counter("serve.preemptions"),
+            blocks_live: reg.gauge("serve.kv_blocks_live"),
+            occupancy: reg.histogram("serve.batch_occupancy"),
+            block_live: reg.histogram("serve.kv_blocks_live_per_wave"),
+            total_s: reg.histogram("serve.latency_total_s"),
+            ttft_s: reg.histogram("serve.latency_ttft_s"),
+            queue_s: reg.histogram("serve.latency_queue_s"),
+            kv_drift: reg.histogram("serve.kv_logit_drift"),
+            reg,
+            kv_blocks_total: 0,
+            kv_store: String::new(),
+            kv_bytes_per_position: 0,
+            kv_arena_bytes: 0,
+            kv_arena_encoded_bytes: 0,
+            trace: None,
+            first_wave: None,
+            last_done: None,
+        }
+    }
+
+    /// The backing registry (for `--metrics-every` snapshots and
+    /// Prometheus exposition).
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// Turn on per-request trace-timeline recording.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(TraceBuffer::new());
+        }
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    pub fn trace(&self) -> Option<&TraceBuffer> {
+        self.trace.as_ref()
+    }
+
+    pub fn trace_mut(&mut self) -> Option<&mut TraceBuffer> {
+        self.trace.as_mut()
+    }
+
+    /// Recorded trace events (empty when tracing is off).
+    pub fn trace_events(&self) -> &[TraceEvent] {
+        self.trace.as_ref().map(|t| t.events()).unwrap_or(&[])
+    }
+
+    // ---- counter views ------------------------------------------------
+
+    /// Completed requests.
+    pub fn completed(&self) -> usize {
+        self.completed.get() as usize
+    }
+
+    /// Prompt tokens consumed (prefill work).
+    pub fn prompt_tokens(&self) -> usize {
+        self.prompt_tokens.get() as usize
+    }
+
+    /// Tokens generated (decode work the caller actually received).
+    pub fn gen_tokens(&self) -> usize {
+        self.gen_tokens.get() as usize
+    }
+
+    /// Decode waves executed.
+    pub fn waves(&self) -> usize {
+        self.waves.get() as usize
+    }
+
+    /// Sequences admitted into the active batch (re-admissions after
+    /// preemption count again).
+    pub fn admissions(&self) -> usize {
+        self.admissions.get() as usize
+    }
+
+    /// Multi-token prefill chunks executed (waves where a sequence
+    /// advanced by more than one position).
+    pub fn prefill_chunks(&self) -> usize {
+        self.prefill_chunks.get() as usize
+    }
+
+    /// Prompt positions fed through multi-token chunks.
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.prefill_chunk_tokens.get() as usize
+    }
+
+    /// Prefix-index lookups performed at admission.
+    pub fn prefix_lookups(&self) -> usize {
+        self.prefix_lookups.get() as usize
+    }
+
+    /// Lookups that found a reusable cached prompt-prefix chain.
+    pub fn prefix_hits(&self) -> usize {
+        self.prefix_hits.get() as usize
+    }
+
+    /// Lookups that missed the prefix index.
+    pub fn prefix_misses(&self) -> usize {
+        self.prefix_misses.get() as usize
+    }
+
+    /// KV positions skipped (neither recomputed nor re-stored) thanks to
+    /// prefix reuse.
+    pub fn prefix_tokens_reused(&self) -> usize {
+        self.prefix_tokens_reused.get() as usize
+    }
+
+    /// Sequences pushed back to the queue because the arena ran dry.
+    pub fn preemptions(&self) -> usize {
+        self.preemptions.get() as usize
+    }
+
+    /// Current live arena blocks (the occupancy-over-time gauge).
+    pub fn blocks_live_now(&self) -> f64 {
+        self.blocks_live.get()
+    }
+
+    // ---- recording ----------------------------------------------------
 
     /// Record one decode wave that advanced `n_seqs` sequences.
     pub fn record_wave(&mut self, n_seqs: usize) {
         if n_seqs == 0 {
             return;
         }
-        self.waves += 1;
-        self.occupancy.push(n_seqs);
+        self.waves.inc();
+        self.occupancy.record(n_seqs as f64);
         if self.first_wave.is_none() {
             self.first_wave = Some(Instant::now());
         }
@@ -82,31 +231,55 @@ impl ServeStats {
     /// Sample the arena's live-block count for the current wave.
     pub fn record_blocks(&mut self, live: usize, total: usize) {
         self.kv_blocks_total = total;
-        self.block_live.push(live);
+        self.block_live.record(live as f64);
+        self.set_blocks_live(live);
+    }
+
+    /// Update the live-block gauge (called on every reserve/release edge:
+    /// per wave, at retire, and when the prefix cache is cleared).
+    pub fn set_blocks_live(&mut self, live: usize) {
+        self.blocks_live.set(live as f64);
+        if let Some(t) = self.trace.as_mut() {
+            t.counter("kv_blocks_live", live as f64);
+        }
     }
 
     /// Record one multi-token prefill chunk of `tokens` positions.
     pub fn record_prefill_chunk(&mut self, tokens: usize) {
-        self.prefill_chunks += 1;
-        self.prefill_chunk_tokens += tokens;
+        self.prefill_chunks.inc();
+        self.prefill_chunk_tokens.add(tokens as u64);
+    }
+
+    /// Record a prefix-index lookup that adopted `reused` cached positions
+    /// (0 = miss). Called at the lookup site, so `hits + misses ==
+    /// lookups` holds even when the admission later bounces off a dry
+    /// arena — the fuzz harness checks exactly that.
+    pub fn record_prefix_lookup(&mut self, reused: usize) {
+        self.prefix_lookups.inc();
+        if reused > 0 {
+            self.prefix_hits.inc();
+        } else {
+            self.prefix_misses.inc();
+        }
     }
 
     /// Record an admission; `reused` is the prefix positions adopted from
     /// the prefix index (`None` when the prefix cache is disabled).
     pub fn record_admission(&mut self, reused: Option<usize>) {
-        self.admissions += 1;
-        match reused {
-            Some(0) => self.prefix_misses += 1,
-            Some(n) => {
-                self.prefix_hits += 1;
-                self.prefix_tokens_reused += n;
-            }
-            None => {}
+        self.admissions.inc();
+        if let Some(n) = reused {
+            self.prefix_tokens_reused.add(n as u64);
         }
     }
 
     pub fn record_preemption(&mut self) {
-        self.preemptions += 1;
+        self.preemptions.inc();
+    }
+
+    /// Record one KV quantized-vs-f32 logit drift sample into the
+    /// streaming drift histogram (`serve.kv_logit_drift`).
+    pub fn record_kv_drift(&mut self, drift: f64) {
+        self.kv_drift.record(drift);
     }
 
     /// Record the KV row-storage scheme and its byte accounting (set once
@@ -124,27 +297,41 @@ impl ServeStats {
         self.kv_arena_encoded_bytes = arena_encoded_bytes;
     }
 
+    /// Record a completed request.
+    pub fn record_completion(&mut self, resp: &GenResponse) {
+        self.completed.inc();
+        self.prompt_tokens.add(resp.prompt_len as u64);
+        self.gen_tokens.add(resp.tokens.len() as u64);
+        self.total_s.record(resp.total_s);
+        self.ttft_s.record(resp.ttft_s);
+        self.queue_s.record(resp.queue_s);
+        self.last_done = Some(Instant::now());
+        if let Some(t) = self.trace.as_mut() {
+            t.end("resident", resp.id, vec![]);
+            t.end("request", resp.id, vec![("gen_tokens", num(resp.tokens.len() as f64))]);
+        }
+    }
+
+    // ---- derived views ------------------------------------------------
+
     /// Fraction of prefix-index lookups that found a reusable chain.
     pub fn prefix_hit_rate(&self) -> f64 {
-        let lookups = self.prefix_hits + self.prefix_misses;
+        let lookups = self.prefix_lookups();
         if lookups == 0 {
             0.0
         } else {
-            self.prefix_hits as f64 / lookups as f64
+            self.prefix_hits() as f64 / lookups as f64
         }
     }
 
-    /// Mean live arena blocks per wave.
+    /// Mean live arena blocks per wave (exact, via histogram sum/count).
     pub fn mean_blocks_live(&self) -> f64 {
-        if self.block_live.is_empty() {
-            return 0.0;
-        }
-        self.block_live.iter().sum::<usize>() as f64 / self.block_live.len() as f64
+        self.block_live.mean()
     }
 
-    /// Peak live arena blocks in any wave.
+    /// Peak live arena blocks in any wave (exact).
     pub fn max_blocks_live(&self) -> usize {
-        self.block_live.iter().copied().max().unwrap_or(0)
+        self.block_live.max() as usize
     }
 
     /// Mean fraction of the arena budget live per wave.
@@ -165,17 +352,6 @@ impl ServeStats {
         }
     }
 
-    /// Record a completed request.
-    pub fn record_completion(&mut self, resp: &GenResponse) {
-        self.completed += 1;
-        self.prompt_tokens += resp.prompt_len;
-        self.gen_tokens += resp.tokens.len();
-        self.total_s.push(resp.total_s);
-        self.ttft_s.push(resp.ttft_s);
-        self.queue_s.push(resp.queue_s);
-        self.last_done = Some(Instant::now());
-    }
-
     /// Wall seconds from the first decode wave to the last completion.
     pub fn wall_s(&self) -> f64 {
         match (self.first_wave, self.last_done) {
@@ -188,43 +364,54 @@ impl ServeStats {
     pub fn tokens_per_sec(&self) -> f64 {
         let w = self.wall_s();
         if w > 0.0 {
-            self.gen_tokens as f64 / w
+            self.gen_tokens() as f64 / w
         } else {
             0.0
         }
     }
 
     pub fn p50_total_ms(&self) -> f64 {
-        percentile(&self.total_s, 50.0) * 1e3
+        self.total_s.quantile(0.5) * 1e3
     }
 
     pub fn p95_total_ms(&self) -> f64 {
-        percentile(&self.total_s, 95.0) * 1e3
+        self.total_s.quantile(0.95) * 1e3
+    }
+
+    pub fn p99_total_ms(&self) -> f64 {
+        self.total_s.quantile(0.99) * 1e3
     }
 
     pub fn p50_ttft_ms(&self) -> f64 {
-        percentile(&self.ttft_s, 50.0) * 1e3
+        self.ttft_s.quantile(0.5) * 1e3
     }
 
     pub fn p95_ttft_ms(&self) -> f64 {
-        percentile(&self.ttft_s, 95.0) * 1e3
+        self.ttft_s.quantile(0.95) * 1e3
     }
 
     pub fn mean_queue_ms(&self) -> f64 {
-        crate::util::stats::mean(&self.queue_s) * 1e3
+        self.queue_s.mean() * 1e3
     }
 
-    /// Mean sequences advanced per wave.
+    /// Mean sequences advanced per wave (exact).
     pub fn mean_occupancy(&self) -> f64 {
-        if self.occupancy.is_empty() {
-            return 0.0;
-        }
-        self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
+        self.occupancy.mean()
     }
 
-    /// Peak sequences advanced in one wave.
+    /// Peak sequences advanced in one wave (exact).
     pub fn max_occupancy(&self) -> usize {
-        self.occupancy.iter().copied().max().unwrap_or(0)
+        self.occupancy.max() as usize
+    }
+
+    /// Max KV quantized logit drift observed (0 when none recorded).
+    pub fn kv_drift_max(&self) -> f64 {
+        self.kv_drift.max()
+    }
+
+    /// Median KV quantized logit drift (0 when none recorded).
+    pub fn kv_drift_p50(&self) -> f64 {
+        self.kv_drift.quantile(0.5)
     }
 
     /// The BENCH record: one flat JSON object per serving run, consumed by
@@ -234,24 +421,26 @@ impl ServeStats {
         let mut pairs = vec![
             ("bench", s("serve")),
             ("label", s(label)),
-            ("requests", num(self.completed as f64)),
-            ("prompt_tokens", num(self.prompt_tokens as f64)),
-            ("gen_tokens", num(self.gen_tokens as f64)),
-            ("waves", num(self.waves as f64)),
+            ("requests", num(self.completed() as f64)),
+            ("prompt_tokens", num(self.prompt_tokens() as f64)),
+            ("gen_tokens", num(self.gen_tokens() as f64)),
+            ("waves", num(self.waves() as f64)),
             ("tokens_per_sec", num(self.tokens_per_sec())),
             ("p50_total_ms", num(self.p50_total_ms())),
             ("p95_total_ms", num(self.p95_total_ms())),
+            ("p99_total_ms", num(self.p99_total_ms())),
             ("p50_ttft_ms", num(self.p50_ttft_ms())),
             ("p95_ttft_ms", num(self.p95_ttft_ms())),
             ("mean_queue_ms", num(self.mean_queue_ms())),
             ("mean_batch_occupancy", num(self.mean_occupancy())),
             ("max_batch_occupancy", num(self.max_occupancy() as f64)),
-            ("prefill_chunks", num(self.prefill_chunks as f64)),
-            ("prefill_chunk_tokens", num(self.prefill_chunk_tokens as f64)),
-            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefill_chunks", num(self.prefill_chunks() as f64)),
+            ("prefill_chunk_tokens", num(self.prefill_chunk_tokens() as f64)),
+            ("prefix_lookups", num(self.prefix_lookups() as f64)),
+            ("prefix_hits", num(self.prefix_hits() as f64)),
             ("prefix_hit_rate", num(self.prefix_hit_rate())),
-            ("prefix_tokens_reused", num(self.prefix_tokens_reused as f64)),
-            ("preemptions", num(self.preemptions as f64)),
+            ("prefix_tokens_reused", num(self.prefix_tokens_reused() as f64)),
+            ("preemptions", num(self.preemptions() as f64)),
             ("kv_blocks_total", num(self.kv_blocks_total as f64)),
             ("block_occupancy_mean", num(self.block_occupancy_mean())),
             ("block_occupancy_max", num(self.block_occupancy_max())),
@@ -259,6 +448,10 @@ impl ServeStats {
             ("kv_bytes_per_position", num(self.kv_bytes_per_position as f64)),
             ("kv_arena_encoded_bytes", num(self.kv_arena_encoded_bytes as f64)),
         ];
+        if self.kv_drift.count() > 0 {
+            pairs.push(("kv_logit_drift_max", num(self.kv_drift_max())));
+            pairs.push(("kv_logit_drift_p50", num(self.kv_drift_p50())));
+        }
         pairs.extend(extra);
         obj(pairs)
     }
@@ -281,10 +474,10 @@ impl ServeStats {
              preemptions     {:>10}\n\
              kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)\n\
              kv store        {:>10}  ({} B/position encoded, arena {} B encoded)",
-            self.completed,
-            self.prompt_tokens,
-            self.gen_tokens,
-            self.waves,
+            self.completed(),
+            self.prompt_tokens(),
+            self.gen_tokens(),
+            self.waves(),
             self.tokens_per_sec(),
             self.p50_total_ms(),
             self.p95_total_ms(),
@@ -293,12 +486,12 @@ impl ServeStats {
             self.mean_queue_ms(),
             self.mean_occupancy(),
             self.max_occupancy(),
-            self.prefill_chunks,
-            self.prefill_chunk_tokens,
-            self.prefix_hits,
+            self.prefill_chunks(),
+            self.prefill_chunk_tokens(),
+            self.prefix_hits(),
             self.prefix_hit_rate() * 100.0,
-            self.prefix_tokens_reused,
-            self.preemptions,
+            self.prefix_tokens_reused(),
+            self.preemptions(),
             self.mean_blocks_live(),
             self.kv_blocks_total,
             self.block_occupancy_mean() * 100.0,
@@ -314,6 +507,8 @@ impl ServeStats {
 mod tests {
     use super::*;
     use crate::serve::protocol::FinishReason;
+    use crate::telemetry::hist;
+    use crate::util::stats::percentile_nearest_rank;
 
     fn resp(id: u64, n: usize, total: f64) -> GenResponse {
         GenResponse {
@@ -336,21 +531,42 @@ mod tests {
         for i in 0..4 {
             st.record_completion(&resp(i, 5, 0.010 * (i + 1) as f64));
         }
-        assert_eq!(st.completed, 4);
-        assert_eq!(st.gen_tokens, 20);
-        assert_eq!(st.prompt_tokens, 16);
+        assert_eq!(st.completed(), 4);
+        assert_eq!(st.gen_tokens(), 20);
+        assert_eq!(st.prompt_tokens(), 16);
         assert_eq!(st.max_occupancy(), 3);
         assert!((st.mean_occupancy() - 2.0).abs() < 1e-9);
         assert!(st.p50_total_ms() > 0.0);
         assert!(st.p95_total_ms() >= st.p50_total_ms());
+        assert!(st.p99_total_ms() >= st.p95_total_ms());
         assert!(st.tokens_per_sec() >= 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_match_exact_within_one_bucket() {
+        // the acceptance contract: histogram-backed p50/p95 agree with the
+        // exact nearest-rank percentile to within one bucket width
+        let mut st = ServeStats::new();
+        let totals: Vec<f64> = (0..60).map(|i| 0.005 + 0.003 * ((i * 7) % 23) as f64).collect();
+        for (i, &t) in totals.iter().enumerate() {
+            st.record_completion(&resp(i as u64, 2, t));
+        }
+        for (p, got_ms) in [(50.0, st.p50_total_ms()), (95.0, st.p95_total_ms())] {
+            let exact = percentile_nearest_rank(&totals, p);
+            let got = got_ms / 1e3;
+            assert!(
+                (got - exact).abs() <= hist::bucket_width(exact),
+                "p{p}: histogram {got} vs exact {exact} (bucket width {})",
+                hist::bucket_width(exact)
+            );
+        }
     }
 
     #[test]
     fn empty_waves_not_counted() {
         let mut st = ServeStats::new();
         st.record_wave(0);
-        assert_eq!(st.waves, 0);
+        assert_eq!(st.waves(), 0);
         assert_eq!(st.mean_occupancy(), 0.0);
     }
 
@@ -364,6 +580,12 @@ mod tests {
         assert_eq!(j.get("label").as_str(), Some("bf16/b4"));
         assert_eq!(j.get("gen_tokens").as_usize(), Some(3));
         assert_eq!(j.get("batch").as_usize(), Some(4));
+        // drift keys only appear once drift samples exist
+        assert_eq!(*j.get("kv_logit_drift_max"), Json::Null);
+        st.record_kv_drift(0.25);
+        let j2 = st.bench_json("bf16/b4", vec![]);
+        assert_eq!(j2.get("kv_logit_drift_max").as_f64(), Some(0.25));
+        assert!(j2.get("kv_logit_drift_p50").as_f64().is_some());
         // reparses as valid JSON
         assert!(Json::parse(&j.to_string()).is_ok());
     }
@@ -402,25 +624,66 @@ mod tests {
         st.record_blocks(12, 16);
         st.record_prefill_chunk(8);
         st.record_prefill_chunk(3);
+        st.record_prefix_lookup(0);
         st.record_admission(Some(0));
+        st.record_prefix_lookup(10);
         st.record_admission(Some(10));
         st.record_admission(None); // prefix cache disabled: no lookup
         st.record_preemption();
-        assert_eq!(st.admissions, 3);
-        assert_eq!(st.prefill_chunks, 2);
-        assert_eq!(st.prefill_chunk_tokens, 11);
-        assert_eq!(st.prefix_hits, 1);
-        assert_eq!(st.prefix_misses, 1);
-        assert_eq!(st.prefix_tokens_reused, 10);
+        assert_eq!(st.admissions(), 3);
+        assert_eq!(st.prefill_chunks(), 2);
+        assert_eq!(st.prefill_chunk_tokens(), 11);
+        assert_eq!(st.prefix_lookups(), 2);
+        assert_eq!(st.prefix_hits(), 1);
+        assert_eq!(st.prefix_misses(), 1);
+        assert_eq!(st.prefix_tokens_reused(), 10);
         assert!((st.prefix_hit_rate() - 0.5).abs() < 1e-12);
-        assert_eq!(st.preemptions, 1);
+        assert_eq!(st.preemptions(), 1);
         assert!((st.mean_blocks_live() - 8.0).abs() < 1e-12);
         assert_eq!(st.max_blocks_live(), 12);
         assert!((st.block_occupancy_mean() - 0.5).abs() < 1e-12);
         assert!((st.block_occupancy_max() - 0.75).abs() < 1e-12);
+        assert_eq!(st.blocks_live_now(), 12.0, "gauge tracks the last sample");
         let j = st.bench_json("paged", vec![]);
         assert_eq!(j.get("preemptions").as_usize(), Some(1));
         assert_eq!(j.get("prefix_hits").as_usize(), Some(1));
+        assert_eq!(j.get("prefix_lookups").as_usize(), Some(2));
         assert_eq!(j.get("kv_blocks_total").as_usize(), Some(16));
+    }
+
+    #[test]
+    fn registry_exposition_sees_serve_metrics() {
+        let mut st = ServeStats::new();
+        st.record_wave(2);
+        st.record_completion(&resp(0, 3, 0.02));
+        let snap = st.registry().snapshot_json();
+        assert_eq!(snap.get("serve.requests_completed").as_usize(), Some(1));
+        assert_eq!(snap.get("serve.gen_tokens").as_usize(), Some(3));
+        assert_eq!(snap.get("serve.latency_total_s").get("count").as_usize(), Some(1));
+        let prom = st.registry().prometheus_text();
+        assert!(prom.contains("gaussws_serve_requests_completed 1"));
+    }
+
+    #[test]
+    fn clones_share_the_registry() {
+        let mut st = ServeStats::new();
+        let view = st.clone();
+        st.record_admission(None);
+        assert_eq!(view.admissions(), 1, "clones are views over the same metrics");
+    }
+
+    #[test]
+    fn trace_records_completion_spans() {
+        let mut st = ServeStats::new();
+        assert!(st.trace_events().is_empty());
+        st.enable_trace();
+        if let Some(t) = st.trace_mut() {
+            t.begin("request", 0, vec![]);
+            t.begin("resident", 0, vec![]);
+        }
+        st.record_completion(&resp(0, 3, 0.02));
+        let names: Vec<&str> = st.trace_events().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["request", "resident", "resident", "request"]);
+        assert!(crate::telemetry::check_well_nested(st.trace_events()).is_ok());
     }
 }

@@ -1,0 +1,315 @@
+//! Log-bucketed streaming histogram — the latency/drift primitive behind
+//! the [`crate::telemetry::Registry`].
+//!
+//! Buckets are geometric: [`BUCKETS_PER_OCTAVE`] sub-buckets per factor of
+//! two, anchored at [`MIN_TRACKED`]. With 4 sub-buckets per octave every
+//! bucket spans a ratio of 2^(1/4) ≈ 1.19, so any quantile estimate is
+//! within ~19% (one bucket width) of the exact sample — tight enough for
+//! p50/p95/p99 latency and drift reporting while recording stays O(1),
+//! allocation-free and lock-free (relaxed atomics only).
+//!
+//! [`Histogram::quantile`] implements the *nearest-rank* estimator: the
+//! returned value lands in the same bucket as the exact nearest-rank
+//! sample, and is clamped to the observed `[min, max]` range (so a
+//! single-sample histogram reports that sample exactly at every
+//! quantile). Values at or below [`MIN_TRACKED`] — including zero and
+//! negatives — share the catch-all bucket 0, which is therefore the one
+//! bucket with no width bound.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Total bucket count. 256 buckets at 4/octave span 64 octaves:
+/// [`MIN_TRACKED`] (1e-9) up to ~1.8e10 — nanoseconds to hours when the
+/// recorded unit is seconds.
+pub const N_BUCKETS: usize = 256;
+
+/// Sub-buckets per factor of two (bucket ratio = 2^(1/4) ≈ 1.19).
+pub const BUCKETS_PER_OCTAVE: f64 = 4.0;
+
+/// Lower edge of the geometric grid. Values `<= MIN_TRACKED` (including
+/// zero and negatives) clamp into bucket 0.
+pub const MIN_TRACKED: f64 = 1e-9;
+
+/// Bucket index for a value (clamped into `[0, N_BUCKETS)`).
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > MIN_TRACKED) {
+        return 0; // catch-all: zero, negatives, NaN already filtered
+    }
+    let i = ((v / MIN_TRACKED).log2() * BUCKETS_PER_OCTAVE) as usize;
+    i.min(N_BUCKETS - 1)
+}
+
+/// `[lo, hi)` value bounds of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (f64, f64) {
+    let lo = MIN_TRACKED * (i as f64 / BUCKETS_PER_OCTAVE).exp2();
+    let hi = MIN_TRACKED * ((i + 1) as f64 / BUCKETS_PER_OCTAVE).exp2();
+    (lo, hi)
+}
+
+/// Width of the bucket `v` falls in — the quantile error bound at `v`.
+pub fn bucket_width(v: f64) -> f64 {
+    let (lo, hi) = bucket_bounds(bucket_index(v));
+    hi - lo
+}
+
+struct Core {
+    counts: Vec<AtomicU64>, // N_BUCKETS entries
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+/// A cloneable handle to a shared streaming histogram. Clones record into
+/// the same buckets; reads are exact once writers quiesce.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<Core>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("min", &self.min())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+fn atomic_f64_update(bits: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            core: Arc::new(Core {
+                counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+                min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+                max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            }),
+        }
+    }
+
+    /// Record one sample. NaN is dropped.
+    pub fn record(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let c = &self.core;
+        c.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_update(&c.sum_bits, |s| s + v);
+        atomic_f64_update(&c.min_bits, |m| m.min(v));
+        atomic_f64_update(&c.max_bits, |m| m.max(v));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Exact sum of recorded samples.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            f64::from_bits(self.core.min_bits.load(Ordering::Relaxed))
+        }
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            f64::from_bits(self.core.max_bits.load(Ordering::Relaxed))
+        }
+    }
+
+    /// Nearest-rank quantile estimate for `q` in `[0, 1]` — the geometric
+    /// midpoint of the bucket holding the rank-`ceil(q·n)` sample, clamped
+    /// to the observed `[min, max]`. Within one bucket width of the exact
+    /// nearest-rank percentile (see module docs). 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, c) in self.core.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                return (lo * hi).sqrt().clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exact nearest-rank percentile: the rank-`ceil(q·n)` order statistic.
+    fn exact_nearest_rank(xs: &[f64], q: f64) -> f64 {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        v[rank - 1]
+    }
+
+    #[test]
+    fn bucket_grid_is_monotone_and_covering() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(MIN_TRACKED), 0);
+        assert_eq!(bucket_index(f64::MAX), N_BUCKETS - 1);
+        let mut last = 0;
+        for k in 0..60 {
+            let v = 1e-8 * 1.5f64.powi(k);
+            let i = bucket_index(v);
+            assert!(i >= last, "bucket index must be monotone in v");
+            last = i;
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v < hi * (1.0 + 1e-12), "{v} outside [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_every_quantile() {
+        let h = Histogram::new();
+        h.record(0.0123);
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), 0.0123, "q={q}");
+        }
+        assert_eq!(h.min(), 0.0123);
+        assert_eq!(h.max(), 0.0123);
+        assert!((h.mean() - 0.0123).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_range_clamped() {
+        let h = Histogram::new();
+        for k in 1..=100 {
+            h.record(k as f64 * 0.001);
+        }
+        let mut last = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "quantiles must be monotone");
+            assert!(v >= h.min() && v <= h.max());
+            last = v;
+        }
+    }
+
+    #[test]
+    fn quantile_matches_exact_within_one_bucket() {
+        // deterministic pseudo-random samples spanning several octaves
+        let xs: Vec<f64> =
+            (0..500).map(|k| 1e-4 * (1.0 + ((k * 2654435761u64 as usize) % 9973) as f64)).collect();
+        let h = Histogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let exact = exact_nearest_rank(&xs, q);
+            let est = h.quantile(q);
+            assert!(
+                (est - exact).abs() <= bucket_width(exact),
+                "q={q}: est {est} vs exact {exact} (width {})",
+                bucket_width(exact)
+            );
+        }
+    }
+
+    #[test]
+    fn mean_sum_min_max_are_exact() {
+        let h = Histogram::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 40.0);
+        assert_eq!(h.mean(), 5.0);
+        assert_eq!(h.min(), 2.0);
+        assert_eq!(h.max(), 9.0);
+    }
+
+    #[test]
+    fn nan_is_dropped_zero_is_kept() {
+        let h = Histogram::new();
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 0);
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), 0.0, "all-zero histogram clamps to 0");
+    }
+
+    #[test]
+    fn concurrent_recording_totals_are_exact() {
+        let h = Histogram::new();
+        std::thread::scope(|sc| {
+            for t in 0..4 {
+                let h = h.clone();
+                sc.spawn(move || {
+                    for k in 0..10_000 {
+                        h.record(1.0 + ((t * 10_000 + k) % 7) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+        // every sample is a small integer: the f64 CAS-add sum is exact
+        let expect: f64 = (0..40_000).map(|i| 1.0 + (i % 7) as f64).sum();
+        assert_eq!(h.sum(), expect);
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability substrate shared by L3 training and L4 serving.
+//!
+//! Three pieces, all std-only and lock-light:
+//!
+//! * [`registry`] — a [`Registry`] of named metrics behind cloneable
+//!   handles: sharded atomic [`Counter`]s (per-thread shard selection, so
+//!   serve workers never contend on a cache line), bit-cast `f64`
+//!   [`Gauge`]s, and log-bucketed streaming [`Histogram`]s. Snapshots
+//!   expose deterministically as JSON ([`Registry::snapshot_json`]) or
+//!   Prometheus text ([`Registry::prometheus_text`]).
+//! * [`hist`] — the histogram core: geometric buckets (4 per octave,
+//!   ~19% width), exact count/sum/min/max, nearest-rank quantiles that
+//!   land within one bucket width of the exact percentile.
+//! * [`trace`] — per-request [`TraceBuffer`] timelines in Chrome
+//!   trace-event form (enqueue → admit → prefill/decode waves →
+//!   preempt/re-admit → retire, with block reserve/release deltas),
+//!   exported as JSONL via `gaussws serve --trace-out <path>`.
+//!
+//! `serve::ServeStats` and `coordinator::metrics::RunLog` are *views over*
+//! a registry — their counters and latency percentiles read straight from
+//! these primitives, so `--metrics-every` snapshots, bench JSON, and
+//! exposition all agree by construction. The paper budgets 1.40% for PQT
+//! overhead; `bench_serve`'s telemetry-on/off arm holds this layer to the
+//! same standard (< 2% tokens/sec).
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use registry::{Counter, Gauge, Registry, COUNTER_SHARDS};
+pub use trace::{check_well_nested, Phase, TraceBuffer, TraceEvent};

@@ -1,0 +1,311 @@
+//! Named metric registry — counters, gauges and histograms with JSON and
+//! Prometheus-text exposition.
+//!
+//! The registry itself is a `Mutex<BTreeMap>` locked only on the cold
+//! paths (handle registration, snapshot). Hot-path recording goes through
+//! cloneable handles that touch nothing but atomics:
+//!
+//! * [`Counter`] — monotone `u64`, sharded across [`COUNTER_SHARDS`]
+//!   cache-line-padded atomics so concurrent serve workers never contend
+//!   on one line; each thread picks a shard once by hashing its
+//!   `ThreadId`.
+//! * [`Gauge`] — a single `f64` stored as atomic bits (`set`/`add`/`get`).
+//! * [`Histogram`] — the log-bucketed streaming histogram from
+//!   [`crate::telemetry::hist`].
+//!
+//! Exposition is deterministic: names iterate in `BTreeMap` order and the
+//! JSON emitter sorts object keys, so two snapshots of the same state are
+//! byte-identical.
+
+use crate::telemetry::hist::Histogram;
+use crate::util::json::{num, obj, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counter shard count; each shard sits on its own cache line.
+pub const COUNTER_SHARDS: usize = 16;
+
+#[repr(align(64))]
+#[derive(Debug)]
+struct Shard(AtomicU64);
+
+/// Monotone counter handle. `add` touches one thread-affine shard; `get`
+/// sums all shards (exact once writers quiesce).
+#[derive(Clone, Debug)]
+pub struct Counter {
+    shards: Arc<[Shard; COUNTER_SHARDS]>,
+}
+
+fn shard_of_thread() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SHARD.with(|s| {
+        let mut i = s.get();
+        if i == usize::MAX {
+            use std::hash::{Hash, Hasher};
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            i = (h.finish() as usize) % COUNTER_SHARDS;
+            s.set(i);
+        }
+        i
+    })
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { shards: Arc::new(std::array::from_fn(|_| Shard(AtomicU64::new(0)))) }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.shards[shard_of_thread()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// `f64` gauge handle (value stored as atomic bits).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>, // 0u64 == 0.0f64.to_bits()
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// Shared, cloneable registry of named metrics. Lock is taken only for
+/// registration and snapshots — recording goes through the handles.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    metrics: Arc<Mutex<BTreeMap<String, Metric>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter `name`. Panics if `name` is already
+    /// registered as a different metric kind.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Counter(Counter::new())) {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::new())) {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Histogram(Histogram::new())) {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Registered metric names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Deterministic JSON snapshot: counters/gauges as numbers, histograms
+    /// as `{count, sum, mean, min, max, p50, p95, p99}` objects.
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.metrics.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => num(c.get() as f64),
+                Metric::Gauge(g) => num(g.get()),
+                Metric::Histogram(h) => obj(vec![
+                    ("count", num(h.count() as f64)),
+                    ("sum", num(h.sum())),
+                    ("mean", num(h.mean())),
+                    ("min", num(h.min())),
+                    ("max", num(h.max())),
+                    ("p50", num(h.quantile(0.5))),
+                    ("p95", num(h.quantile(0.95))),
+                    ("p99", num(h.quantile(0.99))),
+                ]),
+            };
+            out.insert(name.clone(), v);
+        }
+        Json::Obj(out)
+    }
+
+    /// Prometheus text exposition. Counters and gauges expose one sample;
+    /// histograms expose summary-style quantiles plus `_sum`/`_count`.
+    /// Metric names are sanitized (`.` → `_`) and prefixed `gaussws_`.
+    pub fn prometheus_text(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut s: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            s.insert_str(0, "gaussws_");
+            s
+        }
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            let n = sanitize(name);
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {n} summary\n"));
+                    for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+                        out.push_str(&format!(
+                            "{n}{{quantile=\"{label}\"}} {}\n",
+                            h.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{n}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{n}_count {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_views() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.add(3);
+        b.inc();
+        assert_eq!(reg.counter("hits").get(), 4);
+        let g = reg.gauge("level");
+        g.set(2.5);
+        g.add(-0.5);
+        assert_eq!(reg.gauge("level").get(), 2.0);
+        let h = reg.histogram("lat");
+        h.record(0.25);
+        assert_eq!(reg.histogram("lat").count(), 1);
+        assert_eq!(reg.names(), vec!["hits".to_string(), "lat".into(), "level".into()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn sharded_counter_is_exact_under_contention() {
+        let reg = Registry::new();
+        let c = reg.counter("n");
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                let c = c.clone();
+                sc.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic_and_parseable() {
+        let reg = Registry::new();
+        reg.counter("b.count").add(7);
+        reg.gauge("a.level").set(1.5);
+        let h = reg.histogram("c.lat");
+        h.record(0.01);
+        h.record(0.03);
+        let one = reg.snapshot_json().to_string();
+        let two = reg.snapshot_json().to_string();
+        assert_eq!(one, two, "same state must snapshot byte-identically");
+        let parsed = Json::parse(&one).unwrap();
+        assert_eq!(parsed.get("b.count").as_f64(), Some(7.0));
+        assert_eq!(parsed.get("a.level").as_f64(), Some(1.5));
+        assert_eq!(parsed.get("c.lat").get("count").as_f64(), Some(2.0));
+        assert_eq!(parsed.get("c.lat").get("sum").as_f64(), Some(0.04));
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let reg = Registry::new();
+        reg.counter("serve.requests_completed").add(6);
+        reg.gauge("serve.kv_blocks_live").set(0.0);
+        reg.histogram("serve.latency_total_s").record(0.02);
+        let text = reg.prometheus_text();
+        assert!(text.contains("# TYPE gaussws_serve_requests_completed counter"));
+        assert!(text.contains("gaussws_serve_requests_completed 6"));
+        assert!(text.contains("# TYPE gaussws_serve_kv_blocks_live gauge"));
+        assert!(text.contains("# TYPE gaussws_serve_latency_total_s summary"));
+        assert!(text.contains("gaussws_serve_latency_total_s{quantile=\"0.95\"}"));
+        assert!(text.contains("gaussws_serve_latency_total_s_count 1"));
+        assert_eq!(reg.prometheus_text(), text, "exposition must be deterministic");
+    }
+}

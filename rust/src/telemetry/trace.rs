@@ -1,0 +1,283 @@
+//! Per-request trace timelines in Chrome trace-event form.
+//!
+//! The serve engine records one [`TraceEvent`] per lifecycle edge of a
+//! request — enqueue, admission (prefix hit/miss, blocks reserved), each
+//! prefill chunk, each decode wave, preemption (blocks released),
+//! re-admission and retirement — plus counter events for live KV blocks.
+//! Events use the request id as `tid`, so every request renders as its
+//! own track.
+//!
+//! Export is JSONL: one trace-event object per line, each parseable by
+//! [`crate::util::json`]. `ui.perfetto.dev` opens the file directly;
+//! `chrome://tracing` wants a JSON array — wrap the lines in `[...]` with
+//! commas (see README "Observability").
+//!
+//! [`check_well_nested`] is the structural invariant used by the serving
+//! fuzz harness: per `tid`, `B`/`E` events must form a proper bracket
+//! sequence (a request span wrapping one or more residency episodes).
+
+use crate::util::json::{num, s, Json};
+use std::time::Instant;
+
+/// Chrome trace-event phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `B` — span begin.
+    Begin,
+    /// `E` — span end.
+    End,
+    /// `X` — complete span with explicit duration.
+    Complete,
+    /// `i` — instant event.
+    Instant,
+    /// `C` — counter sample.
+    Counter,
+}
+
+impl Phase {
+    /// The single-character `ph` code used by the trace-event format.
+    pub fn code(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Complete => "X",
+            Phase::Instant => "i",
+            Phase::Counter => "C",
+        }
+    }
+}
+
+/// One timeline event. Timestamps are microseconds since the owning
+/// buffer's origin.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ph: Phase,
+    pub ts_us: u64,
+    /// Duration — meaningful for [`Phase::Complete`] events only.
+    pub dur_us: u64,
+    /// Track id: the request id for per-request spans, 0 for globals.
+    pub tid: u64,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// An in-memory, append-only event timeline with a fixed time origin.
+/// Recording is single-writer by construction (the engine's coordinator
+/// thread); worker threads never touch it.
+#[derive(Debug, Clone)]
+pub struct TraceBuffer {
+    origin: Instant,
+    events: Vec<TraceEvent>,
+}
+
+impl Default for TraceBuffer {
+    fn default() -> Self {
+        TraceBuffer::new()
+    }
+}
+
+impl TraceBuffer {
+    pub fn new() -> TraceBuffer {
+        TraceBuffer { origin: Instant::now(), events: Vec::new() }
+    }
+
+    /// Microseconds elapsed since the buffer was created.
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Open a span on track `tid`.
+    pub fn begin(&mut self, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) {
+        let ts_us = self.now_us();
+        self.events.push(TraceEvent { name, ph: Phase::Begin, ts_us, dur_us: 0, tid, args });
+    }
+
+    /// Close the innermost open span named `name` on track `tid`.
+    pub fn end(&mut self, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) {
+        let ts_us = self.now_us();
+        self.events.push(TraceEvent { name, ph: Phase::End, ts_us, dur_us: 0, tid, args });
+    }
+
+    /// Zero-duration marker on track `tid`.
+    pub fn instant(&mut self, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) {
+        let ts_us = self.now_us();
+        self.events.push(TraceEvent { name, ph: Phase::Instant, ts_us, dur_us: 0, tid, args });
+    }
+
+    /// Complete span with an explicit start and duration (used for wave
+    /// work recorded after the fact).
+    pub fn complete(
+        &mut self,
+        name: &'static str,
+        tid: u64,
+        ts_us: u64,
+        dur_us: u64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.events.push(TraceEvent { name, ph: Phase::Complete, ts_us, dur_us, tid, args });
+    }
+
+    /// Counter sample on the global track (renders as a stacked area).
+    pub fn counter(&mut self, name: &'static str, value: f64) {
+        let ts_us = self.now_us();
+        self.events.push(TraceEvent {
+            name,
+            ph: Phase::Counter,
+            ts_us,
+            dur_us: 0,
+            tid: 0,
+            args: vec![("value", num(value))],
+        });
+    }
+
+    /// One event as a trace-event JSON object.
+    pub fn event_json(e: &TraceEvent) -> Json {
+        let mut pairs = vec![
+            ("name", s(e.name)),
+            ("ph", s(e.ph.code())),
+            ("ts", num(e.ts_us as f64)),
+            ("pid", num(1.0)),
+            ("tid", num(e.tid as f64)),
+        ];
+        if e.ph == Phase::Complete {
+            pairs.push(("dur", num(e.dur_us as f64)));
+        }
+        let args: std::collections::BTreeMap<String, Json> =
+            e.args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        pairs.push(("args", Json::Obj(args)));
+        crate::util::json::obj(pairs)
+    }
+
+    /// The whole timeline as JSONL — one trace-event object per line.
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&Self::event_json(e).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the timeline as a `.jsonl` file.
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_lines())
+    }
+}
+
+/// Structural invariant over a timeline: per track (`tid`), `B`/`E`
+/// events must bracket properly — every `E` closes the matching innermost
+/// `B`, and no span stays open at the end. `X`/`i`/`C` events are
+/// nesting-neutral.
+pub fn check_well_nested(events: &[TraceEvent]) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut stacks: BTreeMap<u64, Vec<&'static str>> = BTreeMap::new();
+    for e in events {
+        match e.ph {
+            Phase::Begin => stacks.entry(e.tid).or_default().push(e.name),
+            Phase::End => match stacks.entry(e.tid).or_default().pop() {
+                Some(open) if open == e.name => {}
+                Some(open) => {
+                    return Err(format!(
+                        "tid {}: E '{}' closes open span '{}'",
+                        e.tid, e.name, open
+                    ))
+                }
+                None => return Err(format!("tid {}: E '{}' without a matching B", e.tid, e.name)),
+            },
+            _ => {}
+        }
+    }
+    for (tid, stack) in &stacks {
+        if let Some(open) = stack.last() {
+            return Err(format!("tid {tid}: span '{open}' never closed"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_lines_parse_with_trace_event_schema() {
+        let mut t = TraceBuffer::new();
+        t.begin("request", 7, vec![("prompt_len", num(12.0))]);
+        t.begin("resident", 7, vec![("prefix", s("miss"))]);
+        t.complete("prefill", 7, 0, 120, vec![("positions", num(8.0))]);
+        t.instant("preempt", 7, vec![]);
+        t.counter("kv_blocks_live", 3.0);
+        t.end("resident", 7, vec![]);
+        t.end("request", 7, vec![("gen_tokens", num(4.0))]);
+        let lines: Vec<&str> = t.to_json_lines().lines().collect();
+        assert_eq!(lines.len(), 7);
+        for line in &lines {
+            let v = Json::parse(line).expect("every line must be standalone JSON");
+            assert!(v.get("name").as_str().is_some());
+            assert!(matches!(v.get("ph").as_str(), Some("B" | "E" | "X" | "i" | "C")));
+            assert!(v.get("ts").as_f64().is_some());
+            assert!(v.get("tid").as_f64().is_some());
+            assert!(v.get("args").as_obj().is_some());
+        }
+        // the complete event carries its duration
+        let x = Json::parse(lines[2]).unwrap();
+        assert_eq!(x.get("ph").as_str(), Some("X"));
+        assert_eq!(x.get("dur").as_f64(), Some(120.0));
+        // counter events carry their value in args
+        let c = Json::parse(lines[4]).unwrap();
+        assert_eq!(c.get("args").get("value").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn well_nested_accepts_request_with_two_residencies() {
+        let mut t = TraceBuffer::new();
+        t.begin("request", 1, vec![]);
+        t.begin("resident", 1, vec![]);
+        t.end("resident", 1, vec![]); // preempted
+        t.begin("resident", 1, vec![]); // re-admitted
+        t.end("resident", 1, vec![]);
+        t.end("request", 1, vec![]);
+        t.begin("request", 2, vec![]);
+        t.end("request", 2, vec![]);
+        assert!(check_well_nested(t.events()).is_ok());
+    }
+
+    #[test]
+    fn well_nested_rejects_bad_brackets() {
+        let mut open = TraceBuffer::new();
+        open.begin("request", 1, vec![]);
+        assert!(check_well_nested(open.events()).unwrap_err().contains("never closed"));
+
+        let mut cross = TraceBuffer::new();
+        cross.begin("request", 1, vec![]);
+        cross.begin("resident", 1, vec![]);
+        cross.end("request", 1, vec![]);
+        assert!(check_well_nested(cross.events()).unwrap_err().contains("closes open span"));
+
+        let mut orphan = TraceBuffer::new();
+        orphan.end("resident", 3, vec![]);
+        assert!(check_well_nested(orphan.events()).unwrap_err().contains("without a matching B"));
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let mut t = TraceBuffer::new();
+        t.begin("a", 1, vec![]);
+        t.instant("b", 1, vec![]);
+        t.end("a", 1, vec![]);
+        let ts: Vec<u64> = t.events().iter().map(|e| e.ts_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

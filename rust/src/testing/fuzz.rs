@@ -23,6 +23,13 @@
 //!    final-position logits of every prompt fed through the quantized
 //!    paged cache stay within [`FUZZ_DRIFT_BOUND`] (max-abs) of the f32
 //!    reference.
+//! 6. **telemetry consistency** — every engine run in the harness records
+//!    with tracing on, and after the drain the registry must be
+//!    self-consistent: `admissions ≥ completed` (preemption re-admits,
+//!    never skips), `prefix_hits + prefix_misses == prefix_lookups`, the
+//!    live-block gauge reads zero once the arena is empty, and the trace
+//!    stream is well-nested per request with one balanced
+//!    `request` span per completion.
 //!
 //! Cases are deliberately small (arena sizes near the per-request minimum
 //! force preemption and copy-on-write; prompts shorter than a block force
@@ -143,8 +150,10 @@ pub fn model_under_test() -> (Transformer, Params) {
 }
 
 /// Drive one engine over `requests`; returns completions sorted by id.
-/// Errors on incomplete drains and on block leaks (live blocks after the
-/// prefix cache is cleared).
+/// Errors on incomplete drains, on block leaks (live blocks after the
+/// prefix cache is cleared), and on telemetry inconsistencies — every
+/// harness run records with tracing on and the registry/trace invariants
+/// (invariant 6 in the module docs) are asserted after the drain.
 pub fn run_engine(
     model: &Transformer,
     params: &Params,
@@ -152,7 +161,8 @@ pub fn run_engine(
     requests: &[GenRequest],
     tag: &str,
 ) -> Result<Vec<GenResponse>, String> {
-    let mut e = Engine::new(model.cfg.clone(), params.clone(), ecfg.clone());
+    let traced = EngineConfig { trace: true, ..ecfg.clone() };
+    let mut e = Engine::new(model.cfg.clone(), params.clone(), traced);
     for r in requests {
         e.enqueue(r.clone()).map_err(|err| format!("{tag}: enqueue req {}: {err}", r.id))?;
     }
@@ -165,8 +175,56 @@ pub fn run_engine(
     if live != 0 {
         return Err(format!("{tag}: {live} of {total} blocks leaked after drain"));
     }
+    check_telemetry(&e, requests.len(), tag)?;
     out.sort_by_key(|r| r.id);
     Ok(out)
+}
+
+/// Telemetry consistency checks run against a drained engine (invariant 6).
+fn check_telemetry(e: &Engine, n_requests: usize, tag: &str) -> Result<(), String> {
+    let st = &e.stats;
+    if st.completed() != n_requests {
+        return Err(format!(
+            "{tag}: telemetry counted {} completions for {n_requests} requests",
+            st.completed()
+        ));
+    }
+    if st.admissions() < st.completed() {
+        return Err(format!(
+            "{tag}: admissions {} < completed {} (every completion needs an admission)",
+            st.admissions(),
+            st.completed()
+        ));
+    }
+    if st.prefix_hits() + st.prefix_misses() != st.prefix_lookups() {
+        return Err(format!(
+            "{tag}: prefix hits {} + misses {} != lookups {}",
+            st.prefix_hits(),
+            st.prefix_misses(),
+            st.prefix_lookups()
+        ));
+    }
+    if st.blocks_live_now() != 0.0 {
+        return Err(format!(
+            "{tag}: live-block gauge reads {} after drain + prefix clear",
+            st.blocks_live_now()
+        ));
+    }
+    let events = st.trace_events();
+    if events.is_empty() {
+        return Err(format!("{tag}: tracing was on but no events were recorded"));
+    }
+    crate::telemetry::check_well_nested(events)
+        .map_err(|err| format!("{tag}: trace stream not well-nested: {err}"))?;
+    // one balanced request span per completion
+    let begins = events.iter().filter(|ev| ev.name == "request" && ev.ph.code() == "B").count();
+    let ends = events.iter().filter(|ev| ev.name == "request" && ev.ph.code() == "E").count();
+    if begins != n_requests || ends != n_requests {
+        return Err(format!(
+            "{tag}: expected {n_requests} balanced request spans, saw {begins} begins / {ends} ends"
+        ));
+    }
+    Ok(())
 }
 
 /// Serial greedy reference: one request decoded token-at-a-time on the

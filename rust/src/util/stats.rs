@@ -17,13 +17,19 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+/// p-th percentile by linear interpolation on a sorted copy.
+///
+/// Total on its domain: an empty slice gives 0, a single sample is
+/// returned at every `p`, `p` is clamped into `[0, 100]` (so `p = 0` is
+/// the minimum and `p = 100` the maximum, never an out-of-range index),
+/// and NaN samples sort last (`total_cmp`) instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
     let idx = (p / 100.0) * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -32,6 +38,21 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     } else {
         v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
     }
+}
+
+/// Exact nearest-rank percentile: the rank-`⌈(p/100)·n⌉` order statistic
+/// (clamped to rank 1). This is the estimator the telemetry histogram's
+/// `quantile` approximates — the two agree within one bucket width, which
+/// the telemetry suite checks by property test. Returns 0 when empty.
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
+    let rank = (((p / 100.0) * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
 }
 
 /// Median.
@@ -124,6 +145,38 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // empty slice: defined, zero
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_nearest_rank(&[], 95.0), 0.0);
+        // single sample: returned at every p
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0, "p={p}");
+            assert_eq!(percentile_nearest_rank(&[42.0], p), 42.0, "p={p}");
+        }
+        // out-of-range p clamps instead of indexing out of bounds
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 3.0);
+        assert_eq!(percentile_nearest_rank(&xs, -10.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 250.0), 3.0);
+        // NaN samples sort last instead of panicking
+        let with_nan = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert!(percentile(&with_nan, 100.0).is_nan());
+    }
+
+    #[test]
+    fn nearest_rank_matches_order_statistics() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0); // rank clamps to 1
+        assert_eq!(percentile_nearest_rank(&xs, 20.0), 1.0); // ceil(0.2*5) = 1
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 3.0); // ceil(0.5*5) = 3
+        assert_eq!(percentile_nearest_rank(&xs, 61.0), 4.0); // ceil(0.61*5) = 4
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 5.0);
     }
 
     #[test]

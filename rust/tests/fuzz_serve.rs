@@ -113,7 +113,7 @@ fn quantized_kv_preemption_storm_is_leak_free() {
     }
     let out = e.run_to_completion();
     assert_eq!(out.len(), 6);
-    assert!(e.stats.preemptions > 0, "4-block arena with 3-block sequences must preempt");
+    assert!(e.stats.preemptions() > 0, "4-block arena with 3-block sequences must preempt");
     let (live, ..) = e.kv_usage();
     assert_eq!(live, 0, "quantized blocks leaked through preemption");
 }

@@ -146,9 +146,9 @@ fn prefix_shared_sequences_diverge_correctly_after_cow() {
             x.id
         );
     }
-    assert!(cached.stats.prefix_hits >= 4, "extensions must hit the cached prompt");
+    assert!(cached.stats.prefix_hits() >= 4, "extensions must hit the cached prompt");
     assert!(cached.cow_copies() > 0, "mid-block adoption must trigger copy-on-write");
-    assert_eq!(plain.stats.prefix_hits, 0);
+    assert_eq!(plain.stats.prefix_hits(), 0);
     let (live, ..) = cached.kv_usage();
     let idx = cached.prefix_cache_stats();
     assert!(idx.entries > 0);
@@ -192,8 +192,8 @@ fn preempt_then_reprefill_matches_unpreempted_run() {
     let (tight, a) = run(6);
     let (roomy, b) = run(0);
     assert_eq!(a.len(), 5);
-    assert!(tight.stats.preemptions > 0, "tight arena must preempt");
-    assert_eq!(roomy.stats.preemptions, 0);
+    assert!(tight.stats.preemptions() > 0, "tight arena must preempt");
+    assert_eq!(roomy.stats.preemptions(), 0);
     for (x, y) in a.iter().zip(b.iter()) {
         assert_eq!(x.id, y.id);
         assert_eq!(x.tokens, y.tokens, "req {}: re-prefill changed the completion", x.id);
@@ -250,7 +250,7 @@ fn preemption_with_prefix_cache_still_correct() {
     // under contention something must have given: either preemption or
     // LRU eviction of cached prefixes
     assert!(
-        contended.stats.preemptions > 0 || contended.prefix_cache_stats().evictions > 0,
+        contended.stats.preemptions() > 0 || contended.prefix_cache_stats().evictions > 0,
         "8-block arena with 4-block sequences should show contention"
     );
 }

@@ -1,0 +1,217 @@
+//! Telemetry integration suite: registry exactness under concurrency,
+//! deterministic exposition, Chrome trace JSONL round-trips through
+//! `util::json`, engine trace-span structure (including preemption), and
+//! the histogram-vs-exact-percentile property.
+
+use gaussws::config::schema::{Arch, ModelConfig};
+use gaussws::serve::{Engine, EngineConfig, GenRequest};
+use gaussws::telemetry::{check_well_nested, Histogram, Phase, Registry};
+use gaussws::testing::prop::{check, Gen};
+use gaussws::util::json::Json;
+use gaussws::util::stats::percentile_nearest_rank;
+
+// ---- registry -----------------------------------------------------------
+
+#[test]
+fn counters_are_exact_under_contention() {
+    let reg = Registry::new();
+    let threads = 8;
+    let per_thread = 20_000u64;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let c = reg.counter("hits");
+            let g = reg.gauge("level");
+            let h = reg.histogram("lat");
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    c.inc();
+                    g.set(i as f64);
+                    h.record(1.0 + (i % 7) as f64);
+                }
+            });
+        }
+    });
+    assert_eq!(reg.counter("hits").get(), threads * per_thread);
+    assert_eq!(reg.histogram("lat").count(), threads * per_thread);
+    assert!(reg.gauge("level").get() < per_thread as f64);
+}
+
+#[test]
+fn exposition_is_deterministic() {
+    let build = || {
+        let reg = Registry::new();
+        reg.counter("b.count").add(3);
+        reg.counter("a.count").inc();
+        reg.gauge("z.gauge").set(1.5);
+        let h = reg.histogram("m.hist");
+        for v in [0.1, 0.2, 0.4, 0.8] {
+            h.record(v);
+        }
+        reg
+    };
+    let (x, y) = (build(), build());
+    assert_eq!(x.snapshot_json().to_string(), y.snapshot_json().to_string());
+    assert_eq!(x.prometheus_text(), y.prometheus_text());
+    // repeated exposition of the same registry is stable too
+    assert_eq!(x.snapshot_json().to_string(), x.snapshot_json().to_string());
+    // names come out sorted (BTreeMap order), so diffs are meaningful
+    let names = x.names();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted);
+}
+
+// ---- engine traces ------------------------------------------------------
+
+fn traced_engine(kv_blocks: usize, max_batch: usize) -> Engine {
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = gaussws::nn::transformer::Transformer::new(cfg.clone());
+    let params = model.init_params(7);
+    Engine::new(
+        cfg,
+        params,
+        EngineConfig {
+            max_batch,
+            kv_block: 2,
+            kv_blocks,
+            prefill_chunk: 3,
+            threads: 1,
+            trace: true,
+            ..EngineConfig::default()
+        },
+    )
+}
+
+fn run_requests(e: &mut Engine, n: usize) {
+    for id in 0..n {
+        let prompt: Vec<usize> = (0..5).map(|k| (id * 7 + k * 3 + 1) % 50).collect();
+        e.enqueue(GenRequest::greedy(id as u64, prompt, 4)).unwrap();
+    }
+    let done = e.run_to_completion();
+    assert_eq!(done.len(), n);
+}
+
+#[test]
+fn trace_jsonl_round_trips_through_util_json() {
+    let mut e = traced_engine(0, 4);
+    run_requests(&mut e, 4);
+    let t = e.stats.trace().expect("tracing was enabled");
+    assert!(!t.is_empty());
+    let lines: Vec<&str> = t.to_json_lines().lines().collect();
+    assert_eq!(lines.len(), t.len());
+    for line in lines {
+        let v = Json::parse(line).expect("each trace line is standalone JSON");
+        assert!(v.get("name").as_str().is_some());
+        assert!(matches!(v.get("ph").as_str(), Some("B" | "E" | "X" | "i" | "C")));
+        assert_eq!(v.get("pid").as_f64(), Some(1.0));
+        assert!(v.get("ts").as_f64().is_some());
+    }
+    // and the same bytes land on disk via write_jsonl
+    let dir = std::env::temp_dir().join(format!("gaussws_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    t.write_jsonl(path.to_str().unwrap()).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), t.to_json_lines());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn request_spans_cover_the_lifecycle() {
+    let mut e = traced_engine(0, 4);
+    run_requests(&mut e, 4);
+    let events = e.stats.trace_events();
+    check_well_nested(events).expect("trace must be well-nested");
+    let count = |name: &str, ph: Phase| {
+        events.iter().filter(|ev| ev.name == name && ev.ph == ph).count()
+    };
+    assert_eq!(count("request", Phase::Begin), 4);
+    assert_eq!(count("request", Phase::End), 4);
+    assert_eq!(count("resident", Phase::Begin), 4);
+    // 5-token prompts with a 3-token prefill chunk → ≥ 1 prefill span and
+    // ≥ 3 decode spans (4 new tokens, the first sampled off prefill) each
+    assert!(count("prefill", Phase::Complete) >= 4);
+    assert!(count("decode", Phase::Complete) >= 4 * 3);
+    // live-block counter samples track reserve/release over time
+    assert!(count("kv_blocks_live", Phase::Counter) > 0);
+    assert_eq!(count("preempt", Phase::Instant), 0);
+}
+
+#[test]
+fn preempted_requests_get_two_residencies() {
+    // same contention geometry as the engine's preemption test: 6 requests
+    // of 12+5 positions (3 blocks each at kv_block 8) vs a 4-block arena
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = gaussws::nn::transformer::Transformer::new(cfg.clone());
+    let params = model.init_params(3);
+    let mut e = Engine::new(
+        cfg,
+        params,
+        EngineConfig {
+            max_batch: 4,
+            kv_block: 8,
+            kv_blocks: 4,
+            prefill_chunk: 4,
+            prefix_cache: false,
+            threads: 1,
+            trace: true,
+            ..EngineConfig::default()
+        },
+    );
+    for id in 0..6u64 {
+        let prompt: Vec<usize> = (0..12).map(|k| (id as usize * 5 + k * 3) % 50).collect();
+        e.enqueue(GenRequest::greedy(id, prompt, 6)).unwrap();
+    }
+    assert_eq!(e.run_to_completion().len(), 6);
+    assert!(e.stats.preemptions() > 0, "tight arena must preempt");
+    let events = e.stats.trace_events();
+    check_well_nested(events).expect("preempted trace must still be well-nested");
+    let residencies =
+        events.iter().filter(|ev| ev.name == "resident" && ev.ph == Phase::Begin).count();
+    let preempts =
+        events.iter().filter(|ev| ev.name == "preempt" && ev.ph == Phase::Instant).count();
+    assert_eq!(preempts, e.stats.preemptions());
+    // every preemption re-admits, so residencies = requests + preemptions
+    assert_eq!(residencies, 6 + preempts);
+}
+
+#[test]
+fn serve_registry_and_trainer_registry_share_exposition_shape() {
+    let mut e = traced_engine(0, 4);
+    run_requests(&mut e, 4);
+    e.clear_prefix_cache(); // release cached chains so the live gauge reads 0
+    let text = e.stats.registry().prometheus_text();
+    assert!(text.contains("gaussws_serve_requests_completed 4"));
+    assert!(text.contains("gaussws_serve_kv_blocks_live 0"));
+    assert!(text.contains("gaussws_serve_latency_total_s"));
+    let snap = e.stats.registry().snapshot_json();
+    assert_eq!(snap.get("serve.requests_completed").as_f64(), Some(4.0));
+    assert!(snap.get("serve.latency_total_s").get("p95").as_f64().is_some());
+}
+
+// ---- histogram property -------------------------------------------------
+
+#[test]
+fn histogram_quantiles_track_exact_percentiles() {
+    check("hist quantile within one bucket of exact", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 400);
+        let h = Histogram::new();
+        let mut xs = Vec::with_capacity(n);
+        // span several octaves so many buckets are exercised
+        for _ in 0..n {
+            let v = g.f64_in(1e-4, 50.0);
+            h.record(v);
+            xs.push(v);
+        }
+        for &p in &[50.0, 95.0, 99.0] {
+            let exact = percentile_nearest_rank(&xs, p);
+            let approx = h.quantile(p / 100.0);
+            let width = gaussws::telemetry::hist::bucket_width(exact);
+            if (approx - exact).abs() > width {
+                return Err(format!(
+                    "n={n} p={p}: histogram {approx} vs exact {exact} (bucket width {width})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
