@@ -1,156 +1,86 @@
-//! Closed-loop load generator for the serving engine: N client threads each
-//! issue blocking generate RPCs back-to-back against a spawned engine,
-//! exercising continuous batching from *outside* the engine (requests
-//! arrive asynchronously, sequences join/leave the batch between waves).
+//! Load-generator example, now a thin wrapper over the declarative
+//! workload framework (`gaussws::load`): pick a named corpus scenario or
+//! shape a custom spec from flags, then drive it through the in-process
+//! engine or the loopback TCP front end.
 //!
-//! With more than one client the reported batch occupancy should exceed 1 —
-//! the scheduler is merging independent request streams into shared decode
-//! waves — while per-request results stay identical to serial execution.
-//! `--shared-prefix N` makes every prompt start with the same N tokens (a
-//! system-prompt workload): with the prefix cache enabled the engine
-//! should report prefix hits and reuse K/V across clients. Sharing is
-//! block-granular, so hits need `shared-prefix >= kv-block` (the default
-//! kv-block here is 8 to match the default shared prefix).
-//!
-//! `--kv-store <label>` additionally quantizes the KV arena itself
-//! (block-granular codes + po2 scales through the quant registry, e.g.
-//! `fp8_e3m4` or `int8_sr`); the default `f32` keeps today's exact path.
+//! The old ad-hoc flag soup (hand-rolled prompts, per-client loops) lives
+//! on as a [`WorkloadSpec`] — distributions, shared-prefix mixture,
+//! arrival schedule and deadline mix are spec fields, and the request
+//! stream is seeded + deterministic, so any run here can be reproduced
+//! bit-for-bit by `gaussws load` or the conformance tests.
 //!
 //! Run: cargo run --release --example serve_load -- \
-//!        [--clients 8] [--requests-per-client 4] [--store fp8_e3m4]
-//!        [--max-batch 8] [--threads 2] [--prompt-len 12] [--max-new 16]
-//!        [--kv-block 8] [--kv-blocks 0] [--prefill-chunk 8]
-//!        [--kv-store f32] [--shared-prefix 8] [--no-prefix-cache]
+//!        [--scenario bursty-chat|long-doc-prefill|many-short|preemption-storm]
+//!        [--driver in-process|direct|tcp]
+//!      or shape a custom workload:
+//!        [--clients 8] [--requests 32] [--prompt-len "uniform 4 16"]
+//!        [--max-new "fixed 8"] [--arrival "bursts 4 10"]
+//!        [--shared-prefix 8] [--shared-frac 0.5] [--deadline-ms 0(off)]
+//!        [--max-batch 8] [--kv-block 8] [--kv-blocks 0] [--threads 2]
+//!        [--seed 2026]
 
-use gaussws::config::schema::{Arch, ModelConfig};
-use gaussws::data::{SynthCorpus, SynthSpec};
-use gaussws::nn::transformer::Transformer;
-use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
-use gaussws::util::stats::percentile;
+use gaussws::load::{run, run_scenario, tiny_model, Arrival, Dist, Driver, Scenario, WorkloadSpec};
+use gaussws::serve::{EngineConfig, NetServerConfig};
 use gaussws::util::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let clients = args.usize_or("clients", 8);
-    let per_client = args.usize_or("requests-per-client", 4);
-    let store_mode = gaussws::quant::resolve(args.get_or("store", "fp8_e3m4"))?;
-    let max_batch = args.usize_or("max-batch", 8);
-    let threads = args.usize_or("threads", 2);
-    let prompt_len = args.usize_or("prompt-len", 12);
-    let max_new = args.usize_or("max-new", 16);
     let seed = args.u64_or("seed", 2026);
-    let kv_block = args.usize_or("kv-block", 8);
-    let kv_blocks = args.usize_or("kv-blocks", 0);
-    let prefill_chunk = args.usize_or("prefill-chunk", 8);
-    let prefix_cache = !args.flag("no-prefix-cache");
-    let shared_prefix = args.usize_or("shared-prefix", 8).min(prompt_len.saturating_sub(1));
-
-    // demo weights: random init snapshotted through the quantized store
-    // (swap in `gaussws serve --checkpoint` for trained weights)
-    let cfg = ModelConfig::tiny(Arch::Gpt2);
-    let model = Transformer::new(cfg.clone());
-    let params = model.init_params(seed);
-    let store = WeightStore::from_params(&params, &cfg, store_mode, seed)?;
-    println!(
-        "store {}: {} -> {} bytes ({:.2}x)",
-        store.label(),
-        store.master_bytes(),
-        store.bytes(),
-        store.master_bytes() as f64 / store.bytes() as f64
-    );
-
-    let kv_scheme = gaussws::quant::resolve(args.get_or("kv-store", "f32"))?;
-    let ecfg = EngineConfig {
-        max_batch,
-        kv_block,
-        kv_blocks,
-        prefill_chunk,
-        prefix_cache,
-        threads,
-        eos: None,
-        capacity: usize::MAX,
-        kv_scheme,
-        kv_seed: seed,
+    let driver = match args.get_or("driver", "in-process") {
+        "direct" => Driver::Direct,
+        "in-process" => Driver::InProcess,
+        "tcp" => Driver::Tcp(NetServerConfig::default()),
+        other => anyhow::bail!("unknown --driver '{other}' (direct|in-process|tcp)"),
     };
-    ecfg.validate_for(&cfg)?;
-    let engine = Engine::from_store(&store, ecfg);
-    println!(
-        "kv store: {} ({} B/position encoded)",
-        engine.kv_store(),
-        engine.kv_bytes_per_position()
-    );
-    let handle = engine.spawn();
 
-    let corpus = SynthCorpus::generate(SynthSpec {
-        vocab: cfg.vocab,
-        len: 1 << 16,
-        seed: seed ^ 0xFEED,
-        ..Default::default()
-    });
-    let span = corpus.tokens.len() - prompt_len - 1;
-    // the shared head every prompt starts with (system-prompt workload)
-    let head: Vec<usize> =
-        corpus.tokens[29..29 + shared_prefix].iter().map(|&t| t as usize).collect();
-
-    println!(
-        "{clients} closed-loop clients × {per_client} requests, max_new {max_new}, \
-         shared prefix {shared_prefix}, prefix cache {}...",
-        if prefix_cache { "on" } else { "off" }
-    );
-    let mut joins = Vec::new();
-    for c in 0..clients {
-        let client = handle.client();
-        let head = head.clone();
-        let prompts: Vec<Vec<usize>> = (0..per_client)
-            .map(|k| {
-                let start = ((c * per_client + k) * 1777 + 13) % span;
-                let mut p = head.clone();
-                p.extend(
-                    corpus.tokens[start..start + prompt_len - shared_prefix]
-                        .iter()
-                        .map(|&t| t as usize),
-                );
-                p
-            })
-            .collect();
-        joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
-            let mut latencies = Vec::new();
-            for (k, prompt) in prompts.into_iter().enumerate() {
-                let id = (c * 10_000 + k) as u64;
-                let resp = client.generate(GenRequest::greedy(id, prompt, max_new))?;
-                assert_eq!(resp.id, id);
-                assert_eq!(resp.tokens.len(), max_new);
-                latencies.push(resp.total_s * 1e3);
-            }
-            Ok(latencies)
-        }));
-    }
-    let mut client_lat = Vec::new();
-    for j in joins {
-        client_lat.extend(j.join().expect("client thread panicked")?);
-    }
-    let stats = handle.shutdown();
+    let (spec, outcome) = if let Some(name) = args.get("scenario") {
+        let sc = Scenario::by_name(name)?;
+        println!("scenario {}: {}", sc.spec.name, sc.about);
+        let outcome = run_scenario(&sc, driver.clone(), seed)?;
+        (sc.spec, outcome)
+    } else {
+        let shared_prefix = args.usize_or("shared-prefix", 8);
+        let deadline_ms = args.u64_or("deadline-ms", 0);
+        let mut spec = WorkloadSpec::new("serve-load-example")
+            .clients(args.usize_or("clients", 8))
+            .requests(args.usize_or("requests", 32))
+            .prompt_len(Dist::parse(args.get_or("prompt-len", "uniform 4 16"))?)
+            .max_new(Dist::parse(args.get_or("max-new", "fixed 8"))?)
+            .shared_prefix(shared_prefix, args.f64_or("shared-frac", 0.5))
+            .arrival(Arrival::parse(args.get_or("arrival", "closed"))?)
+            .seed(seed);
+        if deadline_ms > 0 {
+            spec = spec.deadlines(deadline_ms, args.f64_or("deadline-frac", 1.0));
+        }
+        spec.validate()?;
+        let (cfg, params) = tiny_model(seed);
+        let ecfg = EngineConfig {
+            max_batch: args.usize_or("max-batch", 8),
+            kv_block: args.usize_or("kv-block", 8),
+            kv_blocks: args.usize_or("kv-blocks", 0),
+            prefill_chunk: args.usize_or("prefill-chunk", 8),
+            prefix_cache: !args.flag("no-prefix-cache"),
+            threads: args.usize_or("threads", 2),
+            ..EngineConfig::default()
+        };
+        ecfg.validate_for(&cfg)?;
+        let outcome = run(&spec, cfg, params, ecfg, driver.clone())?;
+        (spec, outcome)
+    };
 
     println!();
-    println!("{}", stats.render(store.label()));
-    println!(
-        "client-side latency p50/p95: {:.1} / {:.1} ms over {} calls",
-        percentile(&client_lat, 50.0),
-        percentile(&client_lat, 95.0),
-        client_lat.len()
-    );
-    if clients > 1 && stats.max_occupancy() <= 1 {
+    println!("{}", outcome.stats.render(&format!("{} ({})", spec.name, driver.label())));
+    let stats = &outcome.stats;
+    if spec.clients > 1 && stats.max_occupancy() <= 1 {
         println!("WARNING: batch occupancy never exceeded 1 — continuous batching inactive");
-    } else {
+    } else if spec.clients > 1 {
         println!(
             "continuous batching active: mean occupancy {:.2}, max {}",
             stats.mean_occupancy(),
             stats.max_occupancy()
         );
     }
-    if prefix_cache && shared_prefix > 0 && stats.prefix_hits() == 0 {
-        println!("WARNING: shared-prefix workload produced no prefix hits");
-    } else if prefix_cache {
+    if spec.shared_prefix_len > 0 && stats.prefix_hits() > 0 {
         println!(
             "prefix cache: {} hits ({:.0}% of lookups), {} K/V positions reused",
             stats.prefix_hits(),
@@ -158,5 +88,9 @@ fn main() -> anyhow::Result<()> {
             stats.prefix_tokens_reused()
         );
     }
+    if outcome.failed > 0 {
+        println!("failed requests: {}", outcome.failed);
+    }
+    println!("BENCH {}", outcome.bench_arm(&spec, driver.label()));
     Ok(())
 }

@@ -18,12 +18,18 @@
 //!     for f32, bounded for the quantized arms);
 //!   * telemetry on vs off at batch 8 (best-of-N tokens/sec each): the
 //!     "on" arm records full per-request trace timelines on top of the
-//!     always-on registry; asserted within 2% of the "off" arm.
+//!     always-on registry; asserted within 2% of the "off" arm;
+//!   * the declarative workload corpus (`load::Scenario::all()`): every
+//!     named scenario — bursty-chat, long-doc-prefill, many-short,
+//!     preemption-storm — replayed through the deterministic direct
+//!     driver, each recorded as a `load.<name>` arm carrying the
+//!     telemetry-backed p50/p95/p99 latency percentiles.
 //!
 //! Run: cargo bench --bench bench_serve [-- --quick --out BENCH_serve.json]
 
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::data::{SynthCorpus, SynthSpec};
+use gaussws::load::{run_scenario, Driver, Scenario};
 use gaussws::nn::transformer::Transformer;
 use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
 use gaussws::testing::fuzz::{kv_logit_drift, FUZZ_DRIFT_BOUND};
@@ -307,6 +313,31 @@ fn main() {
     );
     records.push(best_rec[0].take().expect("telemetry-off arm ran"));
     records.push(best_rec[1].take().expect("telemetry-on arm ran"));
+
+    // ---- workload corpus: every named scenario through the direct driver ----
+    // the direct driver (enqueue-all + run_to_completion) gives the
+    // scheduler maximum concurrency with deterministic ordering, so these
+    // arms are reproducible and comparable run-to-run; the spec seed fixes
+    // the request mix, the model seed fixes the weights
+    for sc in Scenario::all() {
+        let outcome = run_scenario(&sc, Driver::Direct, seed)
+            .unwrap_or_else(|e| panic!("scenario {}: {e:#}", sc.spec.name));
+        assert_eq!(
+            outcome.responses.len() + outcome.failed,
+            sc.spec.requests,
+            "{}: requests lost",
+            sc.spec.name
+        );
+        assert_eq!(
+            outcome.stats.blocks_live_now(),
+            0.0,
+            "{}: blocks leaked after drain",
+            sc.spec.name
+        );
+        let record = outcome.bench_arm(&sc.spec, Driver::Direct.label());
+        println!("BENCH {record}");
+        records.push(record);
+    }
 
     let aggregate = obj(vec![
         ("bench", s("serve")),

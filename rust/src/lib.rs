@@ -30,6 +30,15 @@
 //!   `examples/serve_load.rs` drive it end to end; the storage seam is
 //!   the [`nn::kv::KvStorage`] trait (contiguous `DecodeCache` for
 //!   standalone decode, paged for serving — bit-identical logits).
+//! * **[`net`](serve::net) + [`load`]** — the serving edge and its load
+//!   harness: a std-only TCP front end (`serve --listen`) speaking
+//!   length-prefixed newline-JSON frames with strict request parsing,
+//!   free-block admission control / shed-with-retry backpressure,
+//!   per-request deadlines and graceful drain; and a declarative workload
+//!   framework (`load <scenario>`) — seeded distribution-based specs
+//!   (TOML or builder), a deterministic generator, and a runner driving
+//!   direct / in-process / loopback-TCP transports over a named scenario
+//!   corpus, each arm recorded in `BENCH_serve.json`.
 //! * **[`testing`]** — the in-crate test substrate: `testing::prop` is the
 //!   mini property-testing framework (deterministic per-seed `Gen` +
 //!   `check` runner), and `testing::fuzz` is the serving
@@ -61,6 +70,7 @@ pub mod config;
 pub mod exp;
 pub mod coordinator;
 pub mod data;
+pub mod load;
 pub mod mx;
 pub mod nn;
 pub mod numerics;

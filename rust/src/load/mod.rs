@@ -1,0 +1,33 @@
+//! Declarative workload / load-generation framework for the serving layer.
+//!
+//! Three pieces:
+//!
+//! * [`spec`] — [`WorkloadSpec`]: a named, declarative workload
+//!   (prompt-length and max-new **distributions** incl. mixtures,
+//!   shared-prefix mixture, arrival schedule incl. bursts, client count,
+//!   deadline mix, seed) with a deterministic generator: the same spec
+//!   always expands to the same request sequence. Specs are buildable in
+//!   code or loadable from a `[workload]` TOML table
+//!   ([`WorkloadSpec::from_toml`]); distributions use a compact text form
+//!   (`"uniform 4 20"`, `"mix 0.8 uniform 4 12 | 0.2 fixed 40"`).
+//! * [`scenarios`] — the named corpus ([`Scenario`]): `bursty-chat`,
+//!   `long-doc-prefill`, `many-short`, `preemption-storm`; each pairs a
+//!   spec with the engine sizing it stresses, and records its run as a
+//!   distinct `BENCH_serve.json` arm.
+//! * [`runner`] — [`runner::run`] drives an expanded workload through one
+//!   of three transports ([`Driver`]): synchronous direct enqueue, a
+//!   spawned in-process engine with closed-loop client threads, or
+//!   loopback TCP through [`crate::serve::net`]. Greedy serving is
+//!   schedule-independent, so all three must produce bit-identical token
+//!   streams — the conformance tests assert it.
+//!
+//! CLI: `load <scenario>` runs a corpus entry (or `--spec workload.toml`),
+//! `load --list` prints the corpus.
+
+pub mod runner;
+pub mod scenarios;
+pub mod spec;
+
+pub use runner::{run, run_scenario, tiny_model, Driver, RunOutcome};
+pub use scenarios::Scenario;
+pub use spec::{Arrival, Dist, LoadRequest, WorkloadSpec};

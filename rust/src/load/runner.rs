@@ -1,0 +1,281 @@
+//! The workload runner: expands a [`WorkloadSpec`] and drives it against a
+//! serving engine through one of three transports, returning the run's
+//! [`ServeStats`] and every completed response.
+//!
+//! Because the serving stack is deterministic for greedy requests
+//! regardless of batching/scheduling (the engine's batching-transparency
+//! invariant), all three drivers must produce bit-identical token streams
+//! for the same spec — the loopback conformance tests assert exactly that.
+
+use crate::config::schema::{Arch, ModelConfig};
+use crate::load::scenarios::Scenario;
+use crate::load::spec::{LoadRequest, WorkloadSpec};
+use crate::nn::transformer::{Params, Transformer};
+use crate::serve::engine::{Engine, EngineConfig};
+use crate::serve::net::{NetClient, NetServer, NetServerConfig};
+use crate::serve::protocol::GenResponse;
+use crate::serve::stats::ServeStats;
+use crate::util::json::{num, s, Json};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How the generated requests reach the engine.
+#[derive(Debug, Clone)]
+pub enum Driver {
+    /// Synchronous: enqueue the whole workload into an [`Engine`] and
+    /// `run_to_completion`. Ignores clients/arrival timing — maximum
+    /// concurrency pressure, fully deterministic scheduling. The reference
+    /// the other drivers are compared against.
+    Direct,
+    /// Threaded in-process: a spawned engine plus one closed-loop client
+    /// thread per spec client, honoring per-request delays.
+    InProcess,
+    /// Loopback TCP: a [`NetServer`] on `127.0.0.1:0` plus one
+    /// [`NetClient`] connection per spec client; shed requests are retried
+    /// per their `retry_after_ms` hint.
+    Tcp(NetServerConfig),
+}
+
+impl Driver {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Driver::Direct => "direct",
+            Driver::InProcess => "in-process",
+            Driver::Tcp(_) => "tcp",
+        }
+    }
+}
+
+/// What a workload run produced.
+pub struct RunOutcome {
+    pub stats: ServeStats,
+    /// Completed responses, sorted by request id.
+    pub responses: Vec<GenResponse>,
+    /// Requests that errored at the client (rejected, or shed past the
+    /// retry budget). Deadline-expired requests are *completions*, not
+    /// failures — they come back as responses with `finish = "deadline"`.
+    pub failed: usize,
+}
+
+impl RunOutcome {
+    /// The run's `BENCH_serve.json` arm: the stats record labelled
+    /// `load.<workload>` plus the workload/driver coordinates.
+    pub fn bench_arm(&self, spec: &WorkloadSpec, driver_label: &str) -> Json {
+        self.stats.bench_json(
+            &format!("load.{}", spec.name),
+            vec![
+                ("workload", s(&spec.name)),
+                ("driver", s(driver_label)),
+                ("clients", num(spec.clients as f64)),
+                ("spec_requests", num(spec.requests as f64)),
+                ("failed", num(self.failed as f64)),
+            ],
+        )
+    }
+}
+
+/// The tiny reference model every scenario is sized for (seeded params, so
+/// two runs with the same seed serve identical weights).
+pub fn tiny_model(seed: u64) -> (ModelConfig, Params) {
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(seed);
+    (cfg, params)
+}
+
+/// Expand `spec` and drive it through `driver`.
+pub fn run(
+    spec: &WorkloadSpec,
+    model_cfg: ModelConfig,
+    params: Params,
+    ecfg: EngineConfig,
+    driver: Driver,
+) -> Result<RunOutcome> {
+    spec.validate()?;
+    let reqs = spec.generate();
+    let engine = Engine::new(model_cfg, params, ecfg);
+    match driver {
+        Driver::Direct => run_direct(engine, reqs),
+        Driver::InProcess => run_in_process(engine, spec.clients, reqs),
+        Driver::Tcp(net_cfg) => run_tcp(engine, net_cfg, spec.clients, reqs),
+    }
+}
+
+/// [`run`] for a corpus [`Scenario`]: builds the tiny model with
+/// `model_seed` and the scenario's engine sizing.
+pub fn run_scenario(sc: &Scenario, driver: Driver, model_seed: u64) -> Result<RunOutcome> {
+    let (cfg, params) = tiny_model(model_seed);
+    run(&sc.spec, cfg, params, sc.engine_config(), driver)
+}
+
+fn run_direct(mut engine: Engine, reqs: Vec<LoadRequest>) -> Result<RunOutcome> {
+    let mut failed = 0;
+    for lr in reqs {
+        if engine.enqueue(lr.req).is_err() {
+            failed += 1;
+        }
+    }
+    let mut responses = engine.run_to_completion();
+    responses.sort_by_key(|r| r.id);
+    engine.clear_prefix_cache();
+    Ok(RunOutcome { stats: engine.stats, responses, failed })
+}
+
+/// Split the expanded workload into per-client send lists (id order within
+/// each client, as generated).
+fn per_client(clients: usize, reqs: Vec<LoadRequest>) -> Vec<Vec<LoadRequest>> {
+    let mut lists: Vec<Vec<LoadRequest>> = (0..clients.max(1)).map(|_| Vec::new()).collect();
+    for lr in reqs {
+        let c = lr.client % lists.len();
+        lists[c].push(lr);
+    }
+    lists
+}
+
+fn run_in_process(engine: Engine, clients: usize, reqs: Vec<LoadRequest>) -> Result<RunOutcome> {
+    let handle = engine.spawn();
+    let collected: Mutex<Vec<GenResponse>> = Mutex::new(Vec::new());
+    let failed = AtomicUsize::new(0);
+    std::thread::scope(|sc| {
+        for list in per_client(clients, reqs) {
+            let client = handle.client();
+            let collected = &collected;
+            let failed = &failed;
+            sc.spawn(move || {
+                for lr in list {
+                    if lr.delay_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(lr.delay_ms));
+                    }
+                    match client.generate(lr.req) {
+                        Ok(resp) => collected.lock().expect("responses lock").push(resp),
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let stats = handle.shutdown();
+    let mut responses = collected.into_inner().expect("responses lock");
+    responses.sort_by_key(|r| r.id);
+    Ok(RunOutcome { stats, responses, failed: failed.load(Ordering::Relaxed) })
+}
+
+fn run_tcp(
+    engine: Engine,
+    net_cfg: NetServerConfig,
+    clients: usize,
+    reqs: Vec<LoadRequest>,
+) -> Result<RunOutcome> {
+    let server = NetServer::bind("127.0.0.1:0", engine, net_cfg)?;
+    let addr = server.local_addr();
+    let collected: Mutex<Vec<GenResponse>> = Mutex::new(Vec::new());
+    let failed = AtomicUsize::new(0);
+    let connect_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|sc| {
+        for list in per_client(clients, reqs) {
+            let collected = &collected;
+            let failed = &failed;
+            let connect_err = &connect_err;
+            sc.spawn(move || {
+                let mut conn = match NetClient::connect(addr).context("load client connect") {
+                    Ok(c) => c,
+                    Err(e) => {
+                        *connect_err.lock().expect("connect-err lock") = Some(e);
+                        failed.fetch_add(list.len(), Ordering::Relaxed);
+                        return;
+                    }
+                };
+                for lr in list {
+                    if lr.delay_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(lr.delay_ms));
+                    }
+                    // generous retry budget: load runs must not drop work
+                    // just because the arena was momentarily full
+                    match conn.generate_retrying(&lr.req, 200) {
+                        Ok(resp) => collected.lock().expect("responses lock").push(resp),
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    if let Some(e) = connect_err.into_inner().expect("connect-err lock") {
+        return Err(e);
+    }
+    let mut responses = collected.into_inner().expect("responses lock");
+    responses.sort_by_key(|r| r.id);
+    Ok(RunOutcome { stats, responses, failed: failed.load(Ordering::Relaxed) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::load::spec::Dist;
+
+    fn small_spec() -> WorkloadSpec {
+        WorkloadSpec::new("runner-smoke")
+            .clients(2)
+            .requests(6)
+            .prompt_len(Dist::Uniform { lo: 2, hi: 6 })
+            .max_new(Dist::Fixed(3))
+            .seed(31)
+    }
+
+    #[test]
+    fn direct_driver_completes_and_is_deterministic() {
+        let spec = small_spec();
+        let go = || {
+            let (cfg, params) = tiny_model(9);
+            let ecfg = EngineConfig {
+                max_batch: 4,
+                kv_block: 8,
+                prefill_chunk: 4,
+                threads: 1,
+                ..EngineConfig::default()
+            };
+            run(&spec, cfg, params, ecfg, Driver::Direct).unwrap()
+        };
+        let a = go();
+        assert_eq!(a.responses.len(), 6);
+        assert_eq!(a.failed, 0);
+        assert_eq!(a.stats.completed(), 6);
+        let b = go();
+        for (x, y) in a.responses.iter().zip(b.responses.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "direct driver must be reproducible");
+        }
+        let arm = a.bench_arm(&spec, Driver::Direct.label());
+        assert_eq!(arm.get("workload").as_str(), Some("runner-smoke"));
+        assert_eq!(arm.get("driver").as_str(), Some("direct"));
+        assert_eq!(arm.get("requests").as_usize(), Some(6));
+        assert_eq!(arm.get("spec_requests").as_usize(), Some(6));
+    }
+
+    #[test]
+    fn in_process_driver_matches_direct_tokens() {
+        let spec = small_spec();
+        let (cfg, params) = tiny_model(9);
+        let ecfg = EngineConfig {
+            max_batch: 4,
+            kv_block: 8,
+            prefill_chunk: 4,
+            threads: 2,
+            ..EngineConfig::default()
+        };
+        let direct = run(&spec, cfg.clone(), params.clone(), ecfg.clone(), Driver::Direct).unwrap();
+        let inproc = run(&spec, cfg, params, ecfg, Driver::InProcess).unwrap();
+        assert_eq!(inproc.responses.len(), 6);
+        assert_eq!(inproc.failed, 0);
+        for (x, y) in direct.responses.iter().zip(inproc.responses.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "req {}: transport changed the tokens", x.id);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! The named scenario corpus: curated (workload, engine-sizing) pairs that
+//! each stress one serving behaviour, sized for the tiny reference model so
+//! tests and benches run them end-to-end in milliseconds. Every scenario
+//! records its run as a distinct `BENCH_serve.json` arm.
+
+use crate::load::spec::{Arrival, Dist, WorkloadSpec};
+use crate::serve::engine::EngineConfig;
+use anyhow::{bail, Result};
+
+/// A workload spec plus the engine sizing it is meant to stress.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub spec: WorkloadSpec,
+    pub max_batch: usize,
+    pub kv_block: usize,
+    /// Arena budget in blocks (0 = roomy: no admission throttling).
+    pub kv_blocks: usize,
+    pub prefill_chunk: usize,
+    pub prefix_cache: bool,
+    /// One line on what the scenario exercises (shown by `load --list`).
+    pub about: &'static str,
+}
+
+impl Scenario {
+    /// The engine sizing for this scenario (2 worker threads: enough to
+    /// exercise the parallel wave path without oversubscribing CI).
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            max_batch: self.max_batch,
+            kv_block: self.kv_block,
+            kv_blocks: self.kv_blocks,
+            prefill_chunk: self.prefill_chunk,
+            prefix_cache: self.prefix_cache,
+            threads: 2,
+            ..EngineConfig::default()
+        }
+    }
+
+    /// The built-in corpus. Sizing invariant: every scenario's worst-case
+    /// `prompt + max_new - 1` fits the tiny model's 64-position capacity.
+    pub fn all() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                spec: WorkloadSpec::new("bursty-chat")
+                    .clients(4)
+                    .requests(24)
+                    .prompt_len(Dist::Uniform { lo: 4, hi: 20 })
+                    .max_new(Dist::Uniform { lo: 4, hi: 10 })
+                    .shared_prefix(12, 0.5)
+                    .arrival(Arrival::Bursts { burst: 3, gap_ms: 10 })
+                    .deadlines(2000, 0.25)
+                    .seed(0xC4A7),
+                max_batch: 8,
+                kv_block: 8,
+                kv_blocks: 48,
+                prefill_chunk: 8,
+                prefix_cache: true,
+                about: "bursty multi-turn chat: shared system prefix, deadline mix, arrival bursts",
+            },
+            Scenario {
+                spec: WorkloadSpec::new("long-doc-prefill")
+                    .clients(2)
+                    .requests(10)
+                    .prompt_len(Dist::Uniform { lo: 40, hi: 56 })
+                    .max_new(Dist::Fixed(6))
+                    .seed(0xD0C5),
+                max_batch: 4,
+                kv_block: 16,
+                kv_blocks: 0,
+                prefill_chunk: 16,
+                prefix_cache: false,
+                about: "prefill-dominated: near-capacity prompts, few output tokens, big chunks",
+            },
+            Scenario {
+                spec: WorkloadSpec::new("many-short")
+                    .clients(8)
+                    .requests(48)
+                    .prompt_len(Dist::Uniform { lo: 2, hi: 6 })
+                    .max_new(Dist::Fixed(4))
+                    .seed(0x5407),
+                max_batch: 8,
+                kv_block: 8,
+                kv_blocks: 0,
+                prefill_chunk: 4,
+                prefix_cache: false,
+                about: "throughput floor: a swarm of tiny independent requests, batching-bound",
+            },
+            Scenario {
+                spec: WorkloadSpec::new("preemption-storm")
+                    .clients(4)
+                    .requests(16)
+                    .prompt_len(Dist::Uniform { lo: 10, hi: 14 })
+                    .max_new(Dist::Fixed(6))
+                    .seed(0x5702),
+                max_batch: 4,
+                kv_block: 8,
+                kv_blocks: 6, // each sequence needs 3 of 6 blocks: arena churns
+                prefill_chunk: 4,
+                prefix_cache: false,
+                about: "arena pressure: block budget forces preempt/re-admit churn",
+            },
+        ]
+    }
+
+    /// Corpus scenario names, in corpus order.
+    pub fn names() -> Vec<String> {
+        Scenario::all().into_iter().map(|s| s.spec.name).collect()
+    }
+
+    /// Look up a corpus scenario by name.
+    pub fn by_name(name: &str) -> Result<Scenario> {
+        match Scenario::all().into_iter().find(|s| s.spec.name == name) {
+            Some(s) => Ok(s),
+            None => bail!(
+                "unknown scenario {name:?} (have: {})",
+                Scenario::names().join(", ")
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_well_formed() {
+        let all = Scenario::all();
+        assert!(all.len() >= 4, "the corpus must keep at least 4 scenarios");
+        for sc in &all {
+            sc.spec.validate().unwrap_or_else(|e| panic!("{}: {e:#}", sc.spec.name));
+            sc.engine_config().validate().unwrap_or_else(|e| panic!("{}: {e:#}", sc.spec.name));
+            // worst case must fit the tiny model's 64-position capacity
+            let worst = sc.spec.prompt_len.upper_bound() + sc.spec.max_new.upper_bound() - 1;
+            assert!(worst <= 64, "{}: worst case {worst} positions > 64", sc.spec.name);
+            // and, alone, must fit the scenario's arena
+            if sc.kv_blocks > 0 {
+                let blocks = worst.div_ceil(sc.kv_block);
+                assert!(
+                    blocks <= sc.kv_blocks,
+                    "{}: worst request needs {blocks} blocks, arena has {}",
+                    sc.spec.name,
+                    sc.kv_blocks
+                );
+            }
+            assert!(!sc.about.is_empty());
+        }
+        // names are unique and lookup round-trips
+        let names = Scenario::names();
+        for n in &names {
+            assert_eq!(&Scenario::by_name(n).unwrap().spec.name, n);
+        }
+        assert_eq!(
+            names.iter().collect::<std::collections::BTreeSet<_>>().len(),
+            names.len(),
+            "scenario names must be unique"
+        );
+        assert!(Scenario::by_name("no-such").is_err());
+    }
+}

@@ -1,0 +1,490 @@
+//! Declarative workload specifications with a seeded deterministic
+//! generator: the same [`WorkloadSpec`] always expands to the same request
+//! sequence, so a workload driven in-process and over TCP can be compared
+//! token-for-token.
+
+use crate::config::toml::TomlDoc;
+use crate::serve::protocol::GenRequest;
+use crate::testing::prop::Gen;
+use anyhow::{bail, Context, Result};
+
+/// A distribution over token counts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    Fixed(usize),
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform { lo: usize, hi: usize },
+    /// Weighted mixture of sub-distributions.
+    Mix(Vec<(f64, Dist)>),
+}
+
+impl Dist {
+    pub fn sample(&self, g: &mut Gen) -> usize {
+        match self {
+            Dist::Fixed(n) => *n,
+            Dist::Uniform { lo, hi } => g.usize_in(*lo, *hi),
+            Dist::Mix(parts) => {
+                let total: f64 = parts.iter().map(|(w, _)| w).sum();
+                let mut u = g.f64_in(0.0, total);
+                for (w, d) in parts {
+                    u -= w;
+                    if u <= 0.0 {
+                        return d.sample(g);
+                    }
+                }
+                let (_, last) = parts.last().expect("mix is non-empty by construction");
+                last.sample(g)
+            }
+        }
+    }
+
+    /// Largest value this distribution can produce (for capacity checks).
+    pub fn upper_bound(&self) -> usize {
+        match self {
+            Dist::Fixed(n) => *n,
+            Dist::Uniform { hi, .. } => *hi,
+            Dist::Mix(parts) => parts.iter().map(|(_, d)| d.upper_bound()).max().unwrap_or(0),
+        }
+    }
+
+    /// Parse the TOML/CLI text form: `"fixed N"`, `"uniform LO HI"`, or a
+    /// flat mixture `"mix W fixed N | W uniform LO HI"` (weights need not
+    /// sum to 1; they are normalized at sampling).
+    pub fn parse(text: &str) -> Result<Dist> {
+        let text = text.trim();
+        if let Some(rest) = text.strip_prefix("mix ") {
+            let mut parts = Vec::new();
+            for piece in rest.split('|') {
+                let piece = piece.trim();
+                let (w_text, d_text) =
+                    piece.split_once(' ').with_context(|| format!("mix arm {piece:?}: expected 'WEIGHT DIST'"))?;
+                let w: f64 = w_text
+                    .trim()
+                    .parse()
+                    .ok()
+                    .with_context(|| format!("mix arm {piece:?}: bad weight {w_text:?}"))?;
+                if w <= 0.0 || !w.is_finite() {
+                    bail!("mix arm {piece:?}: weight must be positive and finite");
+                }
+                parts.push((w, Dist::parse(d_text)?));
+            }
+            if parts.is_empty() {
+                bail!("mix: at least one arm required");
+            }
+            return Ok(Dist::Mix(parts));
+        }
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        match toks.as_slice() {
+            ["fixed", n] => {
+                Ok(Dist::Fixed(n.parse().ok().with_context(|| format!("fixed: bad count {n:?}"))?))
+            }
+            ["uniform", lo, hi] => {
+                let lo: usize = lo.parse().ok().with_context(|| format!("uniform: bad lo {lo:?}"))?;
+                let hi: usize = hi.parse().ok().with_context(|| format!("uniform: bad hi {hi:?}"))?;
+                if hi < lo {
+                    bail!("uniform: hi {hi} < lo {lo}");
+                }
+                Ok(Dist::Uniform { lo, hi })
+            }
+            _ => bail!(
+                "distribution must be 'fixed N', 'uniform LO HI' or 'mix W DIST | ...' (got {text:?})"
+            ),
+        }
+    }
+}
+
+/// When clients send their requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Closed loop: each client sends its next request the moment the
+    /// previous reply lands.
+    Closed,
+    /// Paced: each client waits `gap_ms` before every request.
+    Paced { gap_ms: u64 },
+    /// Bursty: per client, `burst` requests go back-to-back, then a
+    /// `gap_ms` pause before the next burst.
+    Bursts { burst: usize, gap_ms: u64 },
+}
+
+impl Arrival {
+    /// Parse `"closed"`, `"paced GAP_MS"` or `"bursts N GAP_MS"`.
+    pub fn parse(text: &str) -> Result<Arrival> {
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        match toks.as_slice() {
+            ["closed"] => Ok(Arrival::Closed),
+            ["paced", gap] => Ok(Arrival::Paced {
+                gap_ms: gap.parse().ok().with_context(|| format!("paced: bad gap {gap:?}"))?,
+            }),
+            ["bursts", n, gap] => {
+                let burst: usize =
+                    n.parse().ok().with_context(|| format!("bursts: bad size {n:?}"))?;
+                if burst == 0 {
+                    bail!("bursts: size must be positive");
+                }
+                Ok(Arrival::Bursts {
+                    burst,
+                    gap_ms: gap.parse().ok().with_context(|| format!("bursts: bad gap {gap:?}"))?,
+                })
+            }
+            _ => bail!("arrival must be 'closed', 'paced GAP_MS' or 'bursts N GAP_MS' (got {text:?})"),
+        }
+    }
+}
+
+/// One generated request plus its schedule slot.
+#[derive(Debug, Clone)]
+pub struct LoadRequest {
+    pub req: GenRequest,
+    /// Which client issues it (requests round-robin across clients).
+    pub client: usize,
+    /// Milliseconds the client waits before sending it (0 in closed loop).
+    pub delay_ms: u64,
+}
+
+/// A named, declarative workload: distributions, mixtures and schedule,
+/// expanded deterministically by [`WorkloadSpec::generate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    /// Concurrent closed-loop clients the runner spawns.
+    pub clients: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Prompt tokens are drawn uniformly from `[0, vocab)`.
+    pub vocab: usize,
+    pub prompt_len: Dist,
+    pub max_new: Dist,
+    /// Length of the workload's shared prompt prefix (0 = none).
+    pub shared_prefix_len: usize,
+    /// Fraction of requests whose prompt starts with the shared prefix.
+    pub shared_prefix_frac: f64,
+    pub arrival: Arrival,
+    /// Deadline applied to a `deadline_frac` fraction of requests.
+    pub deadline_ms: Option<u64>,
+    pub deadline_frac: f64,
+    /// Generator seed: same spec + same seed = same request sequence.
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// A minimal closed-loop spec; shape it with the builder methods.
+    pub fn new(name: &str) -> WorkloadSpec {
+        WorkloadSpec {
+            name: name.to_string(),
+            clients: 2,
+            requests: 8,
+            vocab: 50,
+            prompt_len: Dist::Uniform { lo: 2, hi: 8 },
+            max_new: Dist::Fixed(4),
+            shared_prefix_len: 0,
+            shared_prefix_frac: 0.0,
+            arrival: Arrival::Closed,
+            deadline_ms: None,
+            deadline_frac: 0.0,
+            seed: 0x10AD,
+        }
+    }
+
+    pub fn clients(mut self, n: usize) -> Self {
+        self.clients = n;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn vocab(mut self, v: usize) -> Self {
+        self.vocab = v;
+        self
+    }
+
+    pub fn prompt_len(mut self, d: Dist) -> Self {
+        self.prompt_len = d;
+        self
+    }
+
+    pub fn max_new(mut self, d: Dist) -> Self {
+        self.max_new = d;
+        self
+    }
+
+    pub fn shared_prefix(mut self, len: usize, frac: f64) -> Self {
+        self.shared_prefix_len = len;
+        self.shared_prefix_frac = frac;
+        self
+    }
+
+    pub fn arrival(mut self, a: Arrival) -> Self {
+        self.arrival = a;
+        self
+    }
+
+    pub fn deadlines(mut self, ms: u64, frac: f64) -> Self {
+        self.deadline_ms = Some(ms);
+        self.deadline_frac = frac;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("workload {}: clients must be positive", self.name);
+        }
+        if self.requests == 0 {
+            bail!("workload {}: requests must be positive", self.name);
+        }
+        if self.vocab == 0 {
+            bail!("workload {}: vocab must be positive", self.name);
+        }
+        for (label, frac) in
+            [("shared_prefix_frac", self.shared_prefix_frac), ("deadline_frac", self.deadline_frac)]
+        {
+            if !(0.0..=1.0).contains(&frac) {
+                bail!("workload {}: {label} must be in [0, 1], got {frac}", self.name);
+            }
+        }
+        if self.prompt_len.upper_bound() == 0 {
+            bail!("workload {}: prompt_len can produce 0 (prompts must be non-empty)", self.name);
+        }
+        Ok(())
+    }
+
+    /// Expand the spec into its request sequence. Deterministic: the draw
+    /// order is fixed per request, so the expansion never depends on how
+    /// the runner later schedules the clients.
+    pub fn generate(&self) -> Vec<LoadRequest> {
+        let mut g = Gen::new(self.seed ^ 0x10AD_5EED);
+        let shared: Vec<usize> =
+            (0..self.shared_prefix_len).map(|_| g.usize_in(0, self.vocab - 1)).collect();
+        let clients = self.clients.max(1);
+        let mut out = Vec::with_capacity(self.requests);
+        for i in 0..self.requests {
+            let plen = self.prompt_len.sample(&mut g).max(1);
+            let use_shared = self.shared_prefix_len > 0
+                && g.f64_in(0.0, 1.0) < self.shared_prefix_frac;
+            let mut prompt: Vec<usize> = Vec::with_capacity(plen);
+            if use_shared {
+                prompt.extend(shared.iter().take(plen).copied());
+            }
+            while prompt.len() < plen {
+                prompt.push(g.usize_in(0, self.vocab - 1));
+            }
+            let max_new = self.max_new.sample(&mut g).max(1);
+            let deadline = match self.deadline_ms {
+                Some(ms) if g.f64_in(0.0, 1.0) < self.deadline_frac => Some(ms),
+                _ => None,
+            };
+            let seq_in_client = i / clients;
+            let delay_ms = match self.arrival {
+                Arrival::Closed => 0,
+                Arrival::Paced { gap_ms } => gap_ms,
+                Arrival::Bursts { burst, gap_ms } => {
+                    // a client pauses before each burst (including a
+                    // staggerless first one at seq 0: bursts align)
+                    if seq_in_client > 0 && seq_in_client % burst.max(1) == 0 {
+                        gap_ms
+                    } else {
+                        0
+                    }
+                }
+            };
+            let mut req = GenRequest::greedy(i as u64, prompt, max_new);
+            req.seed = self.seed.wrapping_add(i as u64);
+            req.deadline_ms = deadline;
+            out.push(LoadRequest { req, client: i % clients, delay_ms });
+        }
+        out
+    }
+
+    /// Load a spec from a TOML document's `[workload]` table. Every key is
+    /// optional over [`WorkloadSpec::new`] defaults; distributions and the
+    /// arrival schedule use their text forms (see [`Dist::parse`] and
+    /// [`Arrival::parse`]).
+    pub fn from_toml(doc: &TomlDoc) -> Result<WorkloadSpec> {
+        let mut spec = WorkloadSpec::new(&doc.str_or("workload.name", "custom"));
+        spec.clients = doc.i64_or("workload.clients", spec.clients as i64) as usize;
+        spec.requests = doc.i64_or("workload.requests", spec.requests as i64) as usize;
+        spec.vocab = doc.i64_or("workload.vocab", spec.vocab as i64) as usize;
+        spec.seed = doc.i64_or("workload.seed", spec.seed as i64) as u64;
+        spec.shared_prefix_len =
+            doc.i64_or("workload.shared_prefix_len", spec.shared_prefix_len as i64) as usize;
+        spec.shared_prefix_frac = doc.f64_or("workload.shared_prefix_frac", spec.shared_prefix_frac);
+        spec.deadline_frac = doc.f64_or("workload.deadline_frac", spec.deadline_frac);
+        if let Some(v) = doc.get("workload.deadline_ms") {
+            spec.deadline_ms =
+                Some(v.as_i64().context("workload.deadline_ms must be an integer")? as u64);
+        }
+        if let Some(v) = doc.get("workload.prompt_len") {
+            spec.prompt_len =
+                Dist::parse(v.as_str().context("workload.prompt_len must be a string")?)?;
+        }
+        if let Some(v) = doc.get("workload.max_new") {
+            spec.max_new = Dist::parse(v.as_str().context("workload.max_new must be a string")?)?;
+        }
+        if let Some(v) = doc.get("workload.arrival") {
+            spec.arrival =
+                Arrival::parse(v.as_str().context("workload.arrival must be a string")?)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_text_forms_parse() {
+        assert_eq!(Dist::parse("fixed 7").unwrap(), Dist::Fixed(7));
+        assert_eq!(Dist::parse("uniform 2 9").unwrap(), Dist::Uniform { lo: 2, hi: 9 });
+        let mix = Dist::parse("mix 0.75 uniform 4 16 | 0.25 fixed 200").unwrap();
+        assert_eq!(
+            mix,
+            Dist::Mix(vec![(0.75, Dist::Uniform { lo: 4, hi: 16 }), (0.25, Dist::Fixed(200))])
+        );
+        assert_eq!(mix.upper_bound(), 200);
+        assert!(Dist::parse("uniform 9 2").is_err());
+        assert!(Dist::parse("gaussian 3").is_err());
+        assert!(Dist::parse("mix x fixed 1").is_err());
+    }
+
+    #[test]
+    fn arrival_text_forms_parse() {
+        assert_eq!(Arrival::parse("closed").unwrap(), Arrival::Closed);
+        assert_eq!(Arrival::parse("paced 15").unwrap(), Arrival::Paced { gap_ms: 15 });
+        assert_eq!(
+            Arrival::parse("bursts 8 40").unwrap(),
+            Arrival::Bursts { burst: 8, gap_ms: 40 }
+        );
+        assert!(Arrival::parse("bursts 0 40").is_err());
+        assert!(Arrival::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn dist_samples_stay_in_range() {
+        let mut g = Gen::new(42);
+        let d = Dist::Uniform { lo: 3, hi: 11 };
+        for _ in 0..200 {
+            let v = d.sample(&mut g);
+            assert!((3..=11).contains(&v));
+        }
+        let mix = Dist::Mix(vec![(0.5, Dist::Fixed(1)), (0.5, Dist::Fixed(9))]);
+        let mut saw = [false, false];
+        for _ in 0..200 {
+            match mix.sample(&mut g) {
+                1 => saw[0] = true,
+                9 => saw[1] = true,
+                other => panic!("mix produced {other}"),
+            }
+        }
+        assert!(saw[0] && saw[1], "both mix arms must be reachable");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = WorkloadSpec::new("det")
+            .clients(3)
+            .requests(20)
+            .prompt_len(Dist::Uniform { lo: 2, hi: 10 })
+            .shared_prefix(6, 0.5)
+            .deadlines(100, 0.3)
+            .seed(77);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.req, y.req);
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.delay_ms, y.delay_ms);
+        }
+        // a different seed reshuffles the draws
+        let c = spec.clone().seed(78).generate();
+        assert!(
+            a.iter().zip(c.iter()).any(|(x, y)| x.req.prompt != y.req.prompt),
+            "seed change must alter the workload"
+        );
+    }
+
+    #[test]
+    fn shared_prefix_mixture_shows_up() {
+        let spec = WorkloadSpec::new("mix")
+            .clients(1)
+            .requests(40)
+            .prompt_len(Dist::Fixed(10))
+            .shared_prefix(8, 0.5)
+            .seed(5);
+        let reqs = spec.generate();
+        let shared: Vec<usize> = reqs
+            .iter()
+            .find(|r| reqs.iter().filter(|o| o.req.prompt[..8] == r.req.prompt[..8]).count() > 5)
+            .expect("some prompts share a prefix")
+            .req
+            .prompt[..8]
+            .to_vec();
+        let with = reqs.iter().filter(|r| r.req.prompt[..8] == shared[..]).count();
+        assert!(with >= 10 && with <= 30, "~half the prompts share the prefix, got {with}/40");
+    }
+
+    #[test]
+    fn bursts_schedule_pauses_between_bursts() {
+        let spec = WorkloadSpec::new("bursty")
+            .clients(1)
+            .requests(9)
+            .arrival(Arrival::Bursts { burst: 3, gap_ms: 25 });
+        let delays: Vec<u64> = spec.generate().iter().map(|r| r.delay_ms).collect();
+        assert_eq!(delays, vec![0, 0, 0, 25, 0, 0, 25, 0, 0]);
+    }
+
+    #[test]
+    fn deadline_mix_applies_to_a_fraction() {
+        let spec =
+            WorkloadSpec::new("dl").clients(1).requests(60).deadlines(150, 0.5).seed(11);
+        let n = spec.generate().iter().filter(|r| r.req.deadline_ms == Some(150)).count();
+        assert!(n > 15 && n < 45, "about half carry deadlines, got {n}/60");
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let text = "\
+[workload]
+name = \"custom-burst\"
+clients = 4
+requests = 32
+vocab = 64
+prompt_len = \"mix 0.8 uniform 4 12 | 0.2 fixed 40\"
+max_new = \"uniform 2 6\"
+arrival = \"bursts 8 20\"
+shared_prefix_len = 10
+shared_prefix_frac = 0.4
+deadline_ms = 300
+deadline_frac = 0.25
+seed = 9
+";
+        let doc = crate::config::toml::parse(text).unwrap();
+        let spec = WorkloadSpec::from_toml(&doc).unwrap();
+        assert_eq!(spec.name, "custom-burst");
+        assert_eq!(spec.clients, 4);
+        assert_eq!(spec.requests, 32);
+        assert_eq!(spec.prompt_len.upper_bound(), 40);
+        assert_eq!(spec.arrival, Arrival::Bursts { burst: 8, gap_ms: 20 });
+        assert_eq!(spec.deadline_ms, Some(300));
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.generate().len(), 32);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(WorkloadSpec::new("z").requests(0).validate().is_err());
+        assert!(WorkloadSpec::new("z").clients(0).validate().is_err());
+        let mut s = WorkloadSpec::new("z");
+        s.shared_prefix_frac = 1.5;
+        assert!(s.validate().is_err());
+    }
+}

@@ -11,7 +11,12 @@
 //!   serve   [--checkpoint ck | --snapshot s.gwqs] --store fp8_e3m4
 //!           (quantized-snapshot serving engine + self-driven load;
 //!            --trace-out exports per-request Chrome trace timelines,
-//!            --metrics-every prints telemetry registry snapshots)
+//!            --metrics-every prints telemetry registry snapshots;
+//!            --listen ADDR serves over TCP — length-prefixed
+//!            newline-JSON frames — until stdin closes, then drains)
+//!   load    <scenario> | --spec workload.toml  [--driver direct|in-process|tcp]
+//!           (declarative workload corpus: bursty-chat, long-doc-prefill,
+//!            many-short, preemption-storm; `load --list` prints it)
 //!   info    (list artifacts in the manifest + registered quant schemes)
 
 use anyhow::{bail, Context, Result};
@@ -42,8 +47,9 @@ fn run(args: &Args) -> Result<()> {
         Some("info") => cmd_info(args),
         Some("quantize") => cmd_quantize(args),
         Some("serve") => cmd_serve(args),
+        Some("load") => cmd_load(args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (try: train|exp|tables|demo|quantize|serve|info)")
+            bail!("unknown subcommand '{other}' (try: train|exp|tables|demo|quantize|serve|load|info)")
         }
         None => {
             print_usage();
@@ -77,6 +83,13 @@ fn print_usage() {
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
          \x20               [--trace-out trace.jsonl (per-request Chrome trace timeline)]\n\
          \x20               [--metrics-every N (print a registry snapshot every N waves)]\n\
+         \x20               [--listen 127.0.0.1:7433 (serve over TCP until stdin closes;\n\
+         \x20                --max-pending 64 --retry-after-ms 50 --default-deadline-ms D)]\n\
+         \x20 gaussws load bursty-chat|long-doc-prefill|many-short|preemption-storm\n\
+         \x20              [--driver in-process|direct|tcp] [--seed 1234]\n\
+         \x20              [--bench-out runs/BENCH_serve.json]\n\
+         \x20 gaussws load --spec workload.toml   (a [workload] table; see README)\n\
+         \x20 gaussws load --list\n\
          \x20 gaussws info"
     );
 }
@@ -467,6 +480,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("served-weights eval: loss {loss:.4}  ppl {:.2}", loss.exp());
     }
 
+    // ---- TCP front end: serve over the socket instead of self-driving ----
+    if let Some(addr) = args.get("listen") {
+        use gaussws::serve::NetServerConfig;
+        let net_cfg = NetServerConfig {
+            max_pending: args.usize_or("max-pending", 64),
+            retry_after_ms: args.u64_or("retry-after-ms", 50),
+            default_deadline_ms: args.get("default-deadline-ms").and_then(|v| v.parse().ok()),
+        };
+        let server = gaussws::serve::NetServer::bind(addr, engine, net_cfg)?;
+        println!(
+            "listening on {} — frames are '<len> <json>\\n'; close stdin (ctrl-d) to drain",
+            server.local_addr()
+        );
+        // block until the operator closes stdin (or sends one line)
+        let mut line = String::new();
+        let _ = std::io::stdin().read_line(&mut line);
+        println!("draining...");
+        let stats = server.shutdown();
+        println!("{}", stats.render(&format!("{} tcp", store.label())));
+        if let Some(path) = args.get("trace-out") {
+            if let Some(t) = stats.trace() {
+                t.write_jsonl(path)?;
+                println!("trace: {} events -> {path} (open with ui.perfetto.dev)", t.len());
+            }
+        }
+        return Ok(());
+    }
+
     // ---- self-driven synthetic load ----
     let n_req = args.usize_or("requests", 32);
     let prompt_len = args.usize_or("prompt-len", 16).clamp(1, mcfg.seq_len.saturating_sub(1));
@@ -506,6 +547,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             temperature,
             top_k,
             seed: seed ^ id as u64,
+            deadline_ms: None,
         })?;
     }
     // --metrics-every N: step the engine wave-by-wave and print a
@@ -573,6 +615,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         std::fs::write(path, format!("{record}\n"))?;
         println!("bench record -> {path}");
+    }
+    Ok(())
+}
+
+/// `gaussws load`: run a named workload scenario (or a custom `[workload]`
+/// TOML spec) against the tiny reference model through the declarative
+/// load framework — direct, in-process threaded, or loopback TCP.
+fn cmd_load(args: &Args) -> Result<()> {
+    use gaussws::load::{run, run_scenario, tiny_model, Driver, Scenario, WorkloadSpec};
+    use gaussws::serve::{EngineConfig, NetServerConfig};
+
+    let scenario_arg = args.positional.first().map(String::as_str);
+    if args.flag("list") || (scenario_arg.is_none() && args.get("spec").is_none()) {
+        println!("workload corpus (gaussws load <name>):");
+        for sc in Scenario::all() {
+            println!(
+                "  {:<18} {:>3} reqs x {} clients — {}",
+                sc.spec.name, sc.spec.requests, sc.spec.clients, sc.about
+            );
+        }
+        println!("or: gaussws load --spec workload.toml  (a [workload] table; see README)");
+        return Ok(());
+    }
+
+    let driver = match args.get_or("driver", "in-process") {
+        "direct" => Driver::Direct,
+        "in-process" => Driver::InProcess,
+        "tcp" => Driver::Tcp(NetServerConfig {
+            max_pending: args.usize_or("max-pending", 64),
+            retry_after_ms: args.u64_or("retry-after-ms", 50),
+            default_deadline_ms: args.get("default-deadline-ms").and_then(|v| v.parse().ok()),
+        }),
+        other => bail!("unknown --driver '{other}' (direct|in-process|tcp)"),
+    };
+    let model_seed = args.u64_or("seed", 1234);
+
+    let (spec, outcome) = if let Some(path) = args.get("spec") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let doc = gaussws::config::toml::parse(&text).with_context(|| format!("parse {path}"))?;
+        let spec = WorkloadSpec::from_toml(&doc)?;
+        let (mcfg, params) = tiny_model(model_seed);
+        let ecfg = EngineConfig {
+            max_batch: args.usize_or("max-batch", 8),
+            kv_block: args.usize_or("kv-block", 8),
+            kv_blocks: args.usize_or("kv-blocks", 0),
+            prefill_chunk: args.usize_or("prefill-chunk", 8),
+            threads: args.usize_or("threads", 2),
+            ..EngineConfig::default()
+        };
+        let outcome = run(&spec, mcfg, params, ecfg, driver.clone())?;
+        (spec, outcome)
+    } else {
+        let sc = Scenario::by_name(scenario_arg.expect("checked above"))?;
+        println!("scenario {}: {}", sc.spec.name, sc.about);
+        let outcome = run_scenario(&sc, driver.clone(), model_seed)?;
+        (sc.spec, outcome)
+    };
+
+    println!("{}", outcome.stats.render(&format!("load.{} ({})", spec.name, driver.label())));
+    if outcome.failed > 0 {
+        println!("failed requests: {}", outcome.failed);
+    }
+    let record = outcome.bench_arm(&spec, driver.label());
+    println!("BENCH {record}");
+    if let Some(path) = args.get("bench-out") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("bench record -> {path}");
+    }
+    let expected = spec.requests;
+    let got = outcome.responses.len() + outcome.failed;
+    if got != expected {
+        bail!("lost responses: {got} accounted of {expected}");
     }
     Ok(())
 }

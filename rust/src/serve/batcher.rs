@@ -360,6 +360,79 @@ impl Scheduler {
         Some(idx)
     }
 
+    /// Expire requests whose per-request deadline has passed, wherever
+    /// they sit in the lifecycle: queued requests finish empty-handed,
+    /// preempted and active sequences finish with whatever they generated
+    /// so far (an active victim's blocks are released; nothing is
+    /// published to the prefix index — a canceled sequence's prefix is not
+    /// a prefix anyone asked to cache). Every expiry is recorded through
+    /// [`ServeStats::record_deadline`], which closes the request's trace
+    /// spans (the "resident" span only for sequences that were active).
+    pub fn expire_deadlines(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        stats: &mut ServeStats,
+    ) -> Vec<GenResponse> {
+        let now = Instant::now();
+        let due = |req: &GenRequest, enqueued: Instant| -> bool {
+            req.deadline_ms
+                .map(|d| now.duration_since(enqueued).as_millis() as u64 >= d)
+                .unwrap_or(false)
+        };
+        let mut out = Vec::new();
+        // queued: never admitted, nothing generated, no blocks held
+        let mut i = 0;
+        while i < self.pending.len() {
+            if due(&self.pending[i].0, self.pending[i].1) {
+                let (req, enqueued) = self.pending.remove(i).expect("index checked");
+                let waited = now.duration_since(enqueued).as_secs_f64();
+                let resp = GenResponse {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    finish: FinishReason::Deadline,
+                    queue_s: waited,
+                    ttft_s: waited,
+                    total_s: waited,
+                };
+                stats.record_deadline(&resp, false);
+                out.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        // preempted: blocks were already released at preemption
+        let mut i = 0;
+        while i < self.preempted.len() {
+            if due(&self.preempted[i].req, self.preempted[i].enqueued) {
+                let mut seq = self.preempted.remove(i).expect("index checked");
+                seq.finish = Some(FinishReason::Deadline);
+                let resp = seq.into_response(now);
+                stats.record_deadline(&resp, false);
+                out.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        // active: release the chain mid-flight
+        let mut i = 0;
+        while i < self.active.len() {
+            if due(&self.active[i].req, self.active[i].enqueued) {
+                let mut seq = self.active.remove(i);
+                alloc
+                    .release_chain(seq.kv.take_blocks())
+                    .expect("expired sequence chain was live");
+                seq.finish = Some(FinishReason::Deadline);
+                let resp = seq.into_response(now);
+                stats.record_deadline(&resp, true);
+                out.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// Remove finished sequences, publishing their prompt chains to the
     /// prefix index and releasing their blocks; returns their responses.
     pub fn retire(&mut self, alloc: &mut BlockAllocator) -> Vec<GenResponse> {
@@ -536,6 +609,39 @@ mod tests {
         assert_eq!(re.generated, vec![1]);
         assert_eq!(re.kv.len(), 0, "re-prefills from scratch");
         assert_eq!(re.next_chunk_len(8), 4, "prompt(3) + generated(1) to re-feed");
+    }
+
+    #[test]
+    fn deadline_expiry_sweeps_queued_and_active() {
+        let c = cfg();
+        let mut stats = ServeStats::new();
+        let mut alloc = arena(8);
+        let mut sched = Scheduler::new(2, 8, false);
+        let with_deadline = |id: u64, ms: u64| {
+            let mut r = GenRequest::greedy(id, vec![1, 2, 3], 4);
+            r.deadline_ms = Some(ms);
+            r
+        };
+        sched.push(with_deadline(1, 0));
+        sched.push(GenRequest::greedy(2, vec![4, 5, 6], 4));
+        assert_eq!(sched.admit(&c, 64, &mut alloc, &mut stats), 2);
+        sched.push(with_deadline(0, 0)); // queued behind the full batch
+        let live_before = alloc.live_blocks();
+        let mut done = sched.expire_deadlines(&mut alloc, &mut stats);
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 0, "queued request expired");
+        assert_eq!(done[0].finish, FinishReason::Deadline);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(done[1].id, 1, "active sequence expired");
+        assert_eq!(done[1].finish, FinishReason::Deadline);
+        assert_eq!(sched.active_len(), 1, "the deadline-free sequence survives");
+        assert_eq!(sched.pending_len(), 0);
+        assert!(alloc.live_blocks() < live_before, "expired active blocks released");
+        assert_eq!(stats.deadline_expired(), 2);
+        // no deadline or a future deadline: the sweep is a no-op
+        assert!(sched.expire_deadlines(&mut alloc, &mut stats).is_empty());
+        assert_eq!(sched.active_len(), 1);
     }
 
     #[test]

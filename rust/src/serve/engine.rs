@@ -249,6 +249,20 @@ impl Engine {
         self.sched.is_idle()
     }
 
+    /// Free arena blocks right now — the admission-control headroom signal
+    /// the TCP front end ([`crate::serve::net`]) sheds load on.
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    /// Arena blocks a request needs end-to-end (prompt plus every
+    /// generated position except the last). Admission headroom checks
+    /// compare this against [`Engine::free_blocks`].
+    pub fn blocks_for_request(&self, req: &GenRequest) -> usize {
+        let need = req.prompt.len() + req.max_new_tokens.saturating_sub(1);
+        self.alloc.blocks_for(need)
+    }
+
     /// KV arena diagnostics: (live blocks, total blocks, high water, bytes).
     pub fn kv_usage(&self) -> (usize, usize, usize, usize) {
         (
@@ -293,9 +307,15 @@ impl Engine {
     /// its chunk (parallel across workers), retire finished sequences.
     /// Returns completions.
     pub fn step(&mut self) -> Vec<GenResponse> {
+        // deadline sweep first: an expired queued request must not be
+        // admitted, and an expired active sequence must not burn a wave
+        let mut expired = self.sched.expire_deadlines(&mut self.alloc, &mut self.stats);
+        if !expired.is_empty() {
+            self.stats.set_blocks_live(self.alloc.live_blocks());
+        }
         self.sched.admit(&self.model.cfg, self.capacity, &mut self.alloc, &mut self.stats);
         if self.sched.active.is_empty() {
-            return Vec::new();
+            return expired;
         }
         // ---- plan: pick + reserve this wave's chunk per sequence ----
         // Active order is admission order, so preempting the newest only
@@ -404,7 +424,8 @@ impl Engine {
         // gauge honest between waves (the fuzz harness asserts it returns
         // to zero after a drain + prefix clear)
         self.stats.set_blocks_live(self.alloc.live_blocks());
-        done
+        expired.extend(done);
+        expired
     }
 
     /// Drive the engine until queue and batch drain; returns all
@@ -834,11 +855,41 @@ mod tests {
                 temperature: 0.9,
                 top_k: 20,
                 seed: 1234,
+                deadline_ms: None,
             };
             e.enqueue(req).unwrap();
             e.run_to_completion().remove(0).tokens
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn expired_deadline_returns_partial_response() {
+        use crate::serve::protocol::FinishReason;
+        let mut e = tiny_engine(2, 0, 1);
+        // an already-expired deadline: the first step sweeps it out before
+        // any wave runs, and the engine goes idle (no stuck request)
+        let mut r = GenRequest::greedy(7, vec![3, 4, 5], 6);
+        r.deadline_ms = Some(0);
+        e.enqueue(r).unwrap();
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 7);
+        assert_eq!(out[0].finish, FinishReason::Deadline);
+        assert!(out[0].tokens.is_empty(), "never admitted: no tokens");
+        assert!(e.is_idle());
+        assert_eq!(e.stats.deadline_expired(), 1);
+        let (live, ..) = e.kv_usage();
+        assert_eq!(live, 0, "expiry leaked blocks");
+        // a roomy deadline on the same engine completes normally
+        let mut r = GenRequest::greedy(8, vec![3, 4, 5], 4);
+        r.deadline_ms = Some(60_000);
+        e.enqueue(r).unwrap();
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(e.stats.deadline_expired(), 1, "unexpired deadline not counted");
     }
 
     #[test]

@@ -49,15 +49,28 @@
 //!    reserve delta) → prefill chunks → decode waves → preempt/re-admit →
 //!    retire — exported as JSONL for ui.perfetto.dev.
 //!
+//! 7. **listen** — [`net::NetServer`] is the TCP edge (`serve --listen`):
+//!    length-prefixed newline-JSON frames ([`net::frame`]) carrying
+//!    strict-parsed requests ([`protocol::GenRequest::from_json_strict`]),
+//!    admission control and backpressure against free-block headroom
+//!    (bounded queue, shed-with-`retry_after_ms`), per-request deadlines
+//!    ([`protocol::FinishReason::Deadline`]), structured
+//!    [`protocol::ErrorResponse`] frames for malformed/rejected requests,
+//!    and graceful drain on shutdown. Driven by the declarative workload
+//!    framework in [`crate::load`] (`load <scenario>`).
+//!
 //! The conformance harness for all of the above — a seeded, deterministic
 //! serving fuzzer asserting leak-freedom, determinism, paged-vs-contiguous
 //! greedy identity, prefix on/off equivalence, bounded quantized-KV
 //! logit drift, and telemetry/trace consistency — lives in
-//! [`crate::testing::fuzz`] and runs from `tests/fuzz_serve.rs`.
+//! [`crate::testing::fuzz`] and runs from `tests/fuzz_serve.rs`; the
+//! net-transport arm replays the same seeds over a loopback TCP server and
+//! asserts bit-identical outputs.
 
 pub mod batcher;
 pub mod engine;
 pub mod kvcache;
+pub mod net;
 pub mod protocol;
 pub mod stats;
 pub mod weights;
@@ -65,6 +78,7 @@ pub mod weights;
 pub use batcher::{sample_logits, ActiveSeq, Scheduler};
 pub use engine::{Engine, EngineClient, EngineConfig, EngineHandle};
 pub use kvcache::{BlockAllocator, BlockId, BlockState, PrefixCacheStats};
-pub use protocol::{FinishReason, GenRequest, GenResponse};
+pub use net::{NetClient, NetServer, NetServerConfig};
+pub use protocol::{ErrorResponse, FinishReason, GenRequest, GenResponse};
 pub use stats::ServeStats;
 pub use weights::WeightStore;

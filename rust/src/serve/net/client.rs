@@ -1,0 +1,83 @@
+//! A small blocking TCP client over the frame protocol — the transport the
+//! load runner uses in `--driver tcp` mode, and what an external client of
+//! the server would look like.
+
+use crate::serve::net::frame;
+use crate::serve::protocol::{parse_reply, ErrorResponse, GenRequest, GenResponse};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One connection to a [`NetServer`](crate::serve::net::NetServer).
+/// Requests may be pipelined ([`NetClient::send`] repeatedly, then
+/// [`NetClient::recv`]); replies come back in completion order, not send
+/// order, so pipelining callers must route by response id.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("clone stream")?;
+        Ok(NetClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Frame and send one request (does not wait for the reply).
+    pub fn send(&mut self, req: &GenRequest) -> Result<()> {
+        frame::write_frame(&mut self.writer, &req.to_json().to_string())
+            .context("send request frame")?;
+        Ok(())
+    }
+
+    /// Block for the next reply frame: a completed [`GenResponse`] or a
+    /// structured [`ErrorResponse`].
+    pub fn recv(&mut self) -> Result<std::result::Result<GenResponse, ErrorResponse>> {
+        let payload = frame::read_frame(&mut self.reader)
+            .context("read reply frame")?
+            .context("connection closed by server")?;
+        let j = Json::parse(&payload).context("reply is not valid JSON")?;
+        parse_reply(&j)
+    }
+
+    /// Closed-loop convenience: send one request and block for its reply.
+    /// An error frame becomes an `Err` (with the retry hint in the
+    /// message); use [`NetClient::generate_retrying`] to honor it instead.
+    pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
+        self.send(req)?;
+        match self.recv()? {
+            Ok(resp) if resp.id == req.id => Ok(resp),
+            Ok(resp) => bail!("response id {} does not match request {}", resp.id, req.id),
+            Err(e) => match e.retry_after_ms {
+                Some(ms) => bail!("request {} shed: {} (retry after {ms} ms)", req.id, e.error),
+                None => bail!("request {} rejected: {}", req.id, e.error),
+            },
+        }
+    }
+
+    /// [`NetClient::generate`], but back off and retry when the server
+    /// sheds the request with a `retry_after_ms` hint. Permanent errors
+    /// still fail immediately. `max_retries` bounds the retry loop.
+    pub fn generate_retrying(&mut self, req: &GenRequest, max_retries: usize) -> Result<GenResponse> {
+        let mut attempts = 0;
+        loop {
+            self.send(req)?;
+            match self.recv()? {
+                Ok(resp) if resp.id == req.id => return Ok(resp),
+                Ok(resp) => bail!("response id {} does not match request {}", resp.id, req.id),
+                Err(e) => match e.retry_after_ms {
+                    Some(ms) if attempts < max_retries => {
+                        attempts += 1;
+                        std::thread::sleep(Duration::from_millis(ms.clamp(1, 100)));
+                    }
+                    Some(_) => bail!("request {} shed after {attempts} retries: {}", req.id, e.error),
+                    None => bail!("request {} rejected: {}", req.id, e.error),
+                },
+            }
+        }
+    }
+}

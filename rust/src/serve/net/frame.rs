@@ -1,0 +1,141 @@
+//! Length-prefixed newline-JSON framing for the TCP front end.
+//!
+//! A frame is `<len> <payload>\n`: the payload's byte length in ASCII
+//! decimal, one space, exactly `len` payload bytes, one trailing newline.
+//! The explicit length makes the stream self-synchronizing for well-behaved
+//! peers while staying trivially greppable on the wire (each frame is one
+//! line); the trailing newline is *verified*, so a peer whose length field
+//! lies is detected immediately instead of silently desynchronizing.
+//!
+//! Defensive bounds: the length header is capped at 8 digits and the
+//! payload at [`MAX_FRAME_LEN`], so a garbage or adversarial header cannot
+//! make the server allocate unbounded memory. All violations surface as
+//! `io::ErrorKind::InvalidData`; the connection is then dropped after an
+//! error frame (resynchronizing with a malformed peer is not attempted).
+
+use std::io::{self, BufRead, Write};
+
+/// Hard cap on a frame's payload size (1 MiB — far above any real request:
+/// a full-context prompt serializes to a few hundred KiB).
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Write one frame. The frame is materialized first so the transport sees
+/// a single `write_all` (one syscall on an unbuffered `TcpStream`).
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(bad("frame payload exceeds MAX_FRAME_LEN"));
+    }
+    w.write_all(format!("{} {}\n", payload.len(), payload).as_bytes())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary; EOF
+/// anywhere inside a frame, a malformed header, an oversized length, or a
+/// missing trailing newline is an `InvalidData`/`UnexpectedEof` error.
+pub fn read_frame<R: BufRead>(r: &mut R) -> io::Result<Option<String>> {
+    let mut len: usize = 0;
+    let mut digits = 0;
+    loop {
+        let mut b = [0u8; 1];
+        match r.read(&mut b) {
+            Ok(0) => {
+                return if digits == 0 {
+                    Ok(None) // clean EOF between frames
+                } else {
+                    Err(bad("eof inside frame header"))
+                };
+            }
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+        match b[0] {
+            b'0'..=b'9' => {
+                digits += 1;
+                if digits > 8 {
+                    return Err(bad("frame length header too long"));
+                }
+                len = len * 10 + (b[0] - b'0') as usize;
+            }
+            b' ' if digits > 0 => break,
+            _ => return Err(bad("frame header must be '<len> <payload>\\n'")),
+        }
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(bad("frame payload exceeds MAX_FRAME_LEN"));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut nl = [0u8; 1];
+    r.read_exact(&mut nl)?;
+    if nl[0] != b'\n' {
+        return Err(bad("frame length does not match payload (no trailing newline)"));
+    }
+    String::from_utf8(payload).map(Some).map_err(|_| bad("frame payload is not UTF-8"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn rt(payloads: &[&str]) -> Vec<String> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        let mut out = Vec::new();
+        while let Some(p) = read_frame(&mut r).unwrap() {
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let payloads = [r#"{"id":1}"#, "", "x", "newline \\n inside stays escaped"];
+        assert_eq!(rt(&payloads), payloads);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let mut r = Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn garbage_header_rejected() {
+        for bad_stream in ["hello\n", " 5 abcde\n", "5x abc\n", "\n"] {
+            let mut r = Cursor::new(bad_stream.as_bytes().to_vec());
+            assert!(read_frame(&mut r).is_err(), "{bad_stream:?}");
+        }
+    }
+
+    #[test]
+    fn lying_length_rejected() {
+        // header says 3 bytes but the payload has 5 before the newline
+        let mut r = Cursor::new(b"3 abcde\n".to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn partial_frame_then_eof_rejected() {
+        for partial in ["12", "12 ", "5 ab"] {
+            let mut r = Cursor::new(partial.as_bytes().to_vec());
+            assert!(read_frame(&mut r).is_err(), "{partial:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut r = Cursor::new(format!("{} x\n", MAX_FRAME_LEN + 1).into_bytes());
+        assert!(read_frame(&mut r).is_err());
+        let mut sink = Vec::new();
+        let huge = "y".repeat(MAX_FRAME_LEN + 1);
+        assert!(write_frame(&mut sink, &huge).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! TCP serving front end — the network edge over
+//! [`serve::protocol`](crate::serve::protocol).
+//!
+//! Std-only (no async runtime, no new dependencies): a connection
+//! acceptor plus per-connection reader/writer threads feed the one engine
+//! thread that owns the [`Engine`](crate::serve::Engine). The wire format
+//! is length-prefixed newline-JSON ([`frame`]): `<len> <payload>\n`, one
+//! compact JSON object per frame.
+//!
+//! The edge enforces what the in-process front never had to:
+//!
+//! * **strict parsing** —
+//!   [`GenRequest::from_json_strict`](crate::serve::GenRequest::from_json_strict):
+//!   missing or mistyped fields come back as one per-field
+//!   [`ErrorResponse`](crate::serve::ErrorResponse) frame, never a silent
+//!   default;
+//! * **admission control / backpressure** — requests admit against live
+//!   free-block headroom, queue up to a bound, then shed with a
+//!   `retry_after_ms` hint ([`NetServerConfig`]);
+//! * **deadlines** — per-request `deadline_ms` (or a server default)
+//!   finishes overdue requests with `FinishReason::Deadline` and whatever
+//!   tokens they produced;
+//! * **graceful drain** — [`NetServer::shutdown`] stops accepting,
+//!   completes and flushes every in-flight request, then returns the run's
+//!   [`ServeStats`](crate::serve::ServeStats) with the live-block gauge at
+//!   zero.
+//!
+//! The whole lifecycle is observable through the engine's telemetry
+//! registry: `net.connections_accepted/closed`, `net.frames_in/bad`,
+//! `net.requests_admitted/rejected/shed`, `net.responses_sent`, plus the
+//! per-request trace spans the engine already records.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::NetClient;
+pub use server::{NetServer, NetServerConfig};

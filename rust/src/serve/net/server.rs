@@ -1,0 +1,366 @@
+//! The TCP serving front end: an acceptor plus per-connection reader and
+//! writer threads feeding one engine thread.
+//!
+//! Thread layout (all std, no async runtime):
+//!
+//! ```text
+//!   acceptor ──spawns──▶ reader ──(GenRequest, reply_tx)──▶ engine thread
+//!                          │                                    │ step()
+//!                          └─parse errors─▶ writer ◀─responses──┘
+//! ```
+//!
+//! * The **engine thread** owns the [`Engine`] outright — and with it the
+//!   single-writer [`TraceBuffer`](crate::telemetry::TraceBuffer) — so
+//!   every admission decision and trace event happens on one thread.
+//!   Registry counters are sharded atomics, so connection threads bump the
+//!   `net.*` counters directly.
+//! * **Admission/backpressure** is decided on the engine thread against
+//!   live [`BlockAllocator`](crate::serve::kvcache::BlockAllocator) state:
+//!   a request whose block need fits the current free headroom is
+//!   admitted; otherwise it may still queue while the scheduler's pending
+//!   queue is below [`NetServerConfig::max_pending`]; beyond that it is
+//!   shed with a retryable [`ErrorResponse`] carrying `retry_after_ms`.
+//! * **Graceful drain** ([`NetServer::shutdown`]): the acceptor stops
+//!   accepting and exits; every open connection's read half is shut down
+//!   (readers unblock, drop their channel senders); the engine thread
+//!   keeps stepping until the channel disconnects *and* the engine is
+//!   idle, so every in-flight request completes and its response is
+//!   flushed; finally the prefix cache is dropped so the live-block gauge
+//!   drains to zero.
+
+use crate::serve::engine::Engine;
+use crate::serve::net::frame;
+use crate::serve::protocol::{ErrorResponse, GenRequest};
+use crate::serve::stats::ServeStats;
+use crate::telemetry::Counter;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Front-end admission knobs (the engine's own config governs everything
+/// behind the socket).
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Scheduler pending-queue bound: a request that does not fit the free
+    /// block headroom may still queue until this many requests wait;
+    /// beyond it the server sheds load with a retryable error.
+    pub max_pending: usize,
+    /// Back-off hint (milliseconds) returned with shed requests.
+    pub retry_after_ms: u64,
+    /// Deadline applied to requests that carry none (`None` = unbounded).
+    pub default_deadline_ms: Option<u64>,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { max_pending: 64, retry_after_ms: 50, default_deadline_ms: None }
+    }
+}
+
+/// Connection-thread telemetry handles (cloned per connection; counters
+/// are thread-safe sharded atomics on the engine's registry).
+#[derive(Clone)]
+struct ConnCounters {
+    accepted: Counter,
+    closed: Counter,
+    frames_in: Counter,
+    frames_bad: Counter,
+}
+
+enum NetMsg {
+    Request(GenRequest, mpsc::Sender<String>),
+}
+
+/// A listening TCP serving front end over one [`Engine`].
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    msg_tx: Option<mpsc::Sender<NetMsg>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    engine_join: Option<std::thread::JoinHandle<ServeStats>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start serving `engine` on a dedicated thread.
+    pub fn bind(addr: &str, engine: Engine, cfg: NetServerConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let local = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let (msg_tx, msg_rx) = mpsc::channel::<NetMsg>();
+        let reg = engine.stats.registry().clone();
+        let counters = ConnCounters {
+            accepted: reg.counter("net.connections_accepted"),
+            closed: reg.counter("net.connections_closed"),
+            frames_in: reg.counter("net.frames_in"),
+            frames_bad: reg.counter("net.frames_bad"),
+        };
+        let engine_join = std::thread::spawn(move || engine_loop(engine, msg_rx, cfg));
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            let msg_tx = msg_tx.clone();
+            std::thread::spawn(move || accept_loop(listener, msg_tx, shutdown, conns, counters))
+        };
+        Ok(NetServer {
+            addr: local,
+            shutdown,
+            conns,
+            msg_tx: Some(msg_tx),
+            acceptor: Some(acceptor),
+            engine_join: Some(engine_join),
+        })
+    }
+
+    /// The bound address (the ephemeral port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight request,
+    /// flush its response, and return the engine's stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.drain()
+    }
+
+    fn drain(&mut self) -> ServeStats {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            a.join().expect("acceptor thread panicked");
+        }
+        // unblock every reader: in-flight requests drain, new frames stop
+        for c in self.conns.lock().expect("conns lock").drain(..) {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+        drop(self.msg_tx.take());
+        self.engine_join
+            .take()
+            .expect("server already shut down")
+            .join()
+            .expect("engine thread panicked")
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.engine_join.is_some() {
+            self.drain();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    msg_tx: mpsc::Sender<NetMsg>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    counters: ConnCounters,
+) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                counters.accepted.inc();
+                // accepted sockets can inherit the listener's nonblocking
+                // mode on some platforms; readers/writers want blocking IO
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let write_half = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => continue,
+                };
+                if let Ok(keep) = stream.try_clone() {
+                    conns.lock().expect("conns lock").push(keep);
+                }
+                let (out_tx, out_rx) = mpsc::channel::<String>();
+                std::thread::spawn(move || writer_loop(write_half, out_rx));
+                let tx = msg_tx.clone();
+                let cc = counters.clone();
+                std::thread::spawn(move || reader_loop(stream, tx, out_tx, cc));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Per-connection reader: decode frames, strict-parse requests, forward to
+/// the engine thread. Malformed payloads get an [`ErrorResponse`] and the
+/// connection stays open; a framing violation gets one and closes it.
+fn reader_loop(
+    stream: TcpStream,
+    msg_tx: mpsc::Sender<NetMsg>,
+    out_tx: mpsc::Sender<String>,
+    counters: ConnCounters,
+) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match frame::read_frame(&mut r) {
+            Ok(Some(payload)) => {
+                counters.frames_in.inc();
+                let reply = match Json::parse(&payload) {
+                    Ok(j) => match GenRequest::from_json_strict(&j) {
+                        Ok(req) => {
+                            if msg_tx.send(NetMsg::Request(req, out_tx.clone())).is_ok() {
+                                None
+                            } else {
+                                Some(ErrorResponse::permanent(
+                                    j.get("id").as_u64(),
+                                    "server is shutting down",
+                                ))
+                            }
+                        }
+                        Err(e) => {
+                            counters.frames_bad.inc();
+                            Some(ErrorResponse::permanent(j.get("id").as_u64(), format!("{e:#}")))
+                        }
+                    },
+                    Err(e) => {
+                        counters.frames_bad.inc();
+                        Some(ErrorResponse::permanent(None, format!("invalid JSON: {e}")))
+                    }
+                };
+                if let Some(err) = reply {
+                    if out_tx.send(err.to_json().to_string()).is_err() {
+                        break;
+                    }
+                }
+            }
+            Ok(None) => break, // clean EOF
+            Err(e) => {
+                counters.frames_bad.inc();
+                let _ = out_tx
+                    .send(ErrorResponse::permanent(None, format!("framing: {e}")).to_json().to_string());
+                break;
+            }
+        }
+    }
+    counters.closed.inc();
+}
+
+/// Per-connection writer: owns the socket's write half; frames every
+/// outgoing payload and flushes per message (replies are latency-bound).
+/// Exits when every sender (reader + engine-held response routes) is gone.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<String>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(payload) = rx.recv() {
+        if frame::write_frame(&mut w, &payload).is_err() || w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+/// The engine thread: owns the [`Engine`], decides admission, steps waves,
+/// and routes responses back to each request's connection writer.
+fn engine_loop(mut engine: Engine, rx: mpsc::Receiver<NetMsg>, cfg: NetServerConfig) -> ServeStats {
+    let reg = engine.stats.registry().clone();
+    let admitted = reg.counter("net.requests_admitted");
+    let rejected = reg.counter("net.requests_rejected");
+    let shed = reg.counter("net.requests_shed");
+    let responses = reg.counter("net.responses_sent");
+    let mut responders: Vec<(u64, mpsc::Sender<String>)> = Vec::new();
+    let mut open = true;
+    loop {
+        // block for work when fully idle; otherwise drain whatever arrived
+        if engine.is_idle() && open {
+            match rx.recv() {
+                Ok(msg) => handle(&mut engine, &cfg, &mut responders, msg, (&admitted, &rejected, &shed)),
+                Err(_) => open = false,
+            }
+        }
+        while open {
+            match rx.try_recv() {
+                Ok(msg) => handle(&mut engine, &cfg, &mut responders, msg, (&admitted, &rejected, &shed)),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        for resp in engine.step() {
+            if let Some(i) = responders.iter().position(|(id, _)| *id == resp.id) {
+                let (_, tx) = responders.swap_remove(i);
+                if tx.send(resp.to_json().to_string()).is_ok() {
+                    responses.inc();
+                }
+            }
+        }
+        if !open && engine.is_idle() {
+            // drain epilogue: drop cached prefix chains so the live-block
+            // gauge ends at zero (the leak invariant tests assert on)
+            engine.clear_prefix_cache();
+            return engine.stats;
+        }
+    }
+}
+
+/// Admission control for one incoming request, on the engine thread.
+fn handle(
+    engine: &mut Engine,
+    cfg: &NetServerConfig,
+    responders: &mut Vec<(u64, mpsc::Sender<String>)>,
+    msg: NetMsg,
+    (admitted, rejected, shed): (&Counter, &Counter, &Counter),
+) {
+    let NetMsg::Request(mut req, reply_tx) = msg;
+    let id = req.id;
+    // responses route by id, so a duplicate in-flight id is ambiguous
+    if responders.iter().any(|(rid, _)| *rid == id) {
+        rejected.inc();
+        let _ = reply_tx.send(
+            ErrorResponse::permanent(Some(id), format!("request {id}: duplicate in-flight id"))
+                .to_json()
+                .to_string(),
+        );
+        return;
+    }
+    if req.deadline_ms.is_none() {
+        req.deadline_ms = cfg.default_deadline_ms;
+    }
+    // backpressure: fits-free-headroom admits; otherwise queue while the
+    // pending queue is below its bound; beyond that, shed with a hint
+    if engine.blocks_for_request(&req) > engine.free_blocks()
+        && engine.queued() >= cfg.max_pending
+    {
+        shed.inc();
+        if let Some(t) = engine.stats.trace_mut() {
+            t.instant("net.shed", id, vec![]);
+        }
+        let _ = reply_tx.send(
+            ErrorResponse::retryable(
+                id,
+                format!(
+                    "overloaded: {} free blocks, {} queued (bound {})",
+                    engine.free_blocks(),
+                    engine.queued(),
+                    cfg.max_pending
+                ),
+                cfg.retry_after_ms,
+            )
+            .to_json()
+            .to_string(),
+        );
+        return;
+    }
+    match engine.enqueue(req) {
+        Ok(()) => {
+            admitted.inc();
+            responders.push((id, reply_tx));
+        }
+        Err(e) => {
+            rejected.inc();
+            let _ = reply_tx
+                .send(ErrorResponse::permanent(Some(id), format!("{e:#}")).to_json().to_string());
+        }
+    }
+}

@@ -1,6 +1,14 @@
 //! Request/response types for the serving engine, plus a line-oriented JSON
 //! wire encoding (one object per line) so load generators and logs can
 //! round-trip requests without a schema library.
+//!
+//! Two parse modes: [`GenRequest::from_json`] is lenient (missing knobs
+//! default — fine for logs and tests), while the TCP front end
+//! ([`crate::serve::net`]) uses [`GenRequest::from_json_strict`], which
+//! rejects missing/invalid fields with one per-field error message.
+//! Malformed or load-shed requests get a structured [`ErrorResponse`]
+//! frame back instead of a dropped connection; [`parse_reply`] classifies
+//! reply frames client-side.
 
 use crate::util::json::{arr, num, obj, s, Json};
 use anyhow::{bail, Context, Result};
@@ -20,23 +28,39 @@ pub struct GenRequest {
     pub top_k: usize,
     /// Per-request sampling seed (ignored when greedy).
     pub seed: u64,
+    /// Optional deadline in milliseconds from enqueue; a request that has
+    /// not completed by its deadline finishes with
+    /// [`FinishReason::Deadline`] (returning whatever tokens it generated).
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenRequest {
     /// A greedy request with default knobs.
     pub fn greedy(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new_tokens, temperature: 0.0, top_k: 0, seed: id }
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            seed: id,
+            deadline_ms: None,
+        }
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("id", num(self.id as f64)),
             ("prompt", arr(self.prompt.iter().map(|&t| num(t as f64)).collect())),
             ("max_new_tokens", num(self.max_new_tokens as f64)),
             ("temperature", num(self.temperature as f64)),
             ("top_k", num(self.top_k as f64)),
             ("seed", num(self.seed as f64)),
-        ])
+        ];
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", num(d as f64)));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<GenRequest> {
@@ -57,7 +81,83 @@ impl GenRequest {
             temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
             top_k: j.get("top_k").as_usize().unwrap_or(0),
             seed: j.get("seed").as_u64().unwrap_or(0),
+            deadline_ms: j.get("deadline_ms").as_u64(),
         })
+    }
+
+    /// Strict wire-mode parse for the TCP path: every field the lenient
+    /// [`GenRequest::from_json`] would default is required here, and every
+    /// present field must have the right type. All field errors are
+    /// collected into one `"field: problem; field: problem"` message so a
+    /// client sees the full shape of its mistake in a single error frame.
+    pub fn from_json_strict(j: &Json) -> Result<GenRequest> {
+        let mut errs: Vec<String> = Vec::new();
+        // required fields: missing or mistyped is an error, never a default
+        let id = match j.get("id").as_u64() {
+            Some(v) => v,
+            None => {
+                errs.push("id: required, must be a non-negative integer".to_string());
+                0
+            }
+        };
+        let max_new_tokens = match j.get("max_new_tokens").as_usize() {
+            Some(v) if v > 0 => v,
+            Some(_) => {
+                errs.push("max_new_tokens: must be > 0".to_string());
+                0
+            }
+            None => {
+                errs.push("max_new_tokens: required, must be a positive integer".to_string());
+                0
+            }
+        };
+        let prompt: Vec<usize> = match j.get("prompt").as_arr() {
+            Some(a) => match a.iter().map(|t| t.as_usize()).collect::<Option<Vec<_>>>() {
+                Some(t) if !t.is_empty() => t,
+                Some(_) => {
+                    errs.push("prompt: must be non-empty".to_string());
+                    Vec::new()
+                }
+                None => {
+                    errs.push("prompt: tokens must be non-negative integers".to_string());
+                    Vec::new()
+                }
+            },
+            None => {
+                errs.push("prompt: required, must be an array of token ids".to_string());
+                Vec::new()
+            }
+        };
+        // optional fields: absent is fine, present-but-mistyped is an error
+        let opt = |name: &'static str, errs: &mut Vec<String>| -> Option<u64> {
+            match j.get(name) {
+                Json::Null => None,
+                v => match v.as_u64() {
+                    Some(x) => Some(x),
+                    None => {
+                        errs.push(format!("{name}: must be a non-negative integer"));
+                        None
+                    }
+                },
+            }
+        };
+        let top_k = opt("top_k", &mut errs).unwrap_or(0) as usize;
+        let seed = opt("seed", &mut errs).unwrap_or(0);
+        let deadline_ms = opt("deadline_ms", &mut errs);
+        let temperature = match j.get("temperature") {
+            Json::Null => 0.0f32,
+            v => match v.as_f64() {
+                Some(t) if t >= 0.0 => t as f32,
+                _ => {
+                    errs.push("temperature: must be a number >= 0".to_string());
+                    0.0
+                }
+            },
+        };
+        if !errs.is_empty() {
+            bail!("{}", errs.join("; "));
+        }
+        Ok(GenRequest { id, prompt, max_new_tokens, temperature, top_k, seed, deadline_ms })
     }
 }
 
@@ -68,6 +168,9 @@ pub enum FinishReason {
     Length,
     /// Produced the engine's EOS token.
     Eos,
+    /// Expired its per-request deadline before completing (the response
+    /// carries whatever tokens were generated by then).
+    Deadline,
 }
 
 impl FinishReason {
@@ -75,6 +178,17 @@ impl FinishReason {
         match self {
             FinishReason::Length => "length",
             FinishReason::Eos => "eos",
+            FinishReason::Deadline => "deadline",
+        }
+    }
+
+    /// Inverse of [`FinishReason::name`] (wire decoding).
+    pub fn from_name(name: &str) -> Result<FinishReason> {
+        match name {
+            "length" => Ok(FinishReason::Length),
+            "eos" => Ok(FinishReason::Eos),
+            "deadline" => Ok(FinishReason::Deadline),
+            other => bail!("unknown finish reason {other:?}"),
         }
     }
 }
@@ -107,6 +221,84 @@ impl GenResponse {
             ("total_ms", num(self.total_s * 1e3)),
         ])
     }
+
+    /// Wire decoding for the TCP client (the inverse of
+    /// [`GenResponse::to_json`]; timings come back from milliseconds).
+    pub fn from_json(j: &Json) -> Result<GenResponse> {
+        let tokens = j
+            .get("tokens")
+            .as_arr()
+            .context("response.tokens must be an array")?
+            .iter()
+            .map(|v| v.as_usize().context("response token must be a number"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(GenResponse {
+            id: j.get("id").as_u64().context("response.id")?,
+            prompt_len: j.get("prompt_len").as_usize().context("response.prompt_len")?,
+            tokens,
+            finish: FinishReason::from_name(
+                j.get("finish").as_str().context("response.finish")?,
+            )?,
+            queue_s: j.get("queue_ms").as_f64().context("response.queue_ms")? / 1e3,
+            ttft_s: j.get("ttft_ms").as_f64().context("response.ttft_ms")? / 1e3,
+            total_s: j.get("total_ms").as_f64().context("response.total_ms")? / 1e3,
+        })
+    }
+}
+
+/// A structured error reply: malformed or rejected requests get this frame
+/// instead of a dropped connection. `retry_after_ms` is set when the
+/// rejection is load-shedding (arena headroom / queue bound exceeded) and
+/// the client should back off and retry; it is absent for permanent errors
+/// (parse failures, invalid fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorResponse {
+    /// The offending request's id, when one could be parsed out of it.
+    pub id: Option<u64>,
+    pub error: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ErrorResponse {
+    /// A permanent (non-retryable) error.
+    pub fn permanent(id: Option<u64>, error: impl Into<String>) -> ErrorResponse {
+        ErrorResponse { id, error: error.into(), retry_after_ms: None }
+    }
+
+    /// A load-shedding rejection: retry after `retry_after_ms`.
+    pub fn retryable(id: u64, error: impl Into<String>, retry_after_ms: u64) -> ErrorResponse {
+        ErrorResponse { id: Some(id), error: error.into(), retry_after_ms: Some(retry_after_ms) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(id) = self.id {
+            pairs.push(("id", num(id as f64)));
+        }
+        pairs.push(("error", s(&self.error)));
+        if let Some(ms) = self.retry_after_ms {
+            pairs.push(("retry_after_ms", num(ms as f64)));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ErrorResponse> {
+        Ok(ErrorResponse {
+            id: j.get("id").as_u64(),
+            error: j.get("error").as_str().context("error frame missing .error")?.to_string(),
+            retry_after_ms: j.get("retry_after_ms").as_u64(),
+        })
+    }
+}
+
+/// Classify a decoded reply frame: any object carrying an `"error"` key is
+/// an [`ErrorResponse`]; everything else must parse as a [`GenResponse`].
+pub fn parse_reply(j: &Json) -> Result<std::result::Result<GenResponse, ErrorResponse>> {
+    if !matches!(j.get("error"), Json::Null) {
+        Ok(Err(ErrorResponse::from_json(j)?))
+    } else {
+        Ok(Ok(GenResponse::from_json(j)?))
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +314,7 @@ mod tests {
             temperature: 0.7,
             top_k: 40,
             seed: 99,
+            deadline_ms: Some(250),
         };
         let text = r.to_json().to_string();
         let back = GenRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -131,6 +324,47 @@ mod tests {
         assert!((back.temperature - 0.7).abs() < 1e-6);
         assert_eq!(back.top_k, 40);
         assert_eq!(back.seed, 99);
+        assert_eq!(back.deadline_ms, Some(250));
+        // strict parse accepts the same complete frame and agrees
+        let strict = GenRequest::from_json_strict(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(strict, back);
+    }
+
+    #[test]
+    fn deadline_ms_is_optional_on_the_wire() {
+        let r = GenRequest::greedy(3, vec![1], 4);
+        assert_eq!(r.deadline_ms, None);
+        let j = r.to_json();
+        assert_eq!(*j.get("deadline_ms"), Json::Null, "absent, not null-emitted");
+        assert_eq!(GenRequest::from_json(&j).unwrap().deadline_ms, None);
+    }
+
+    #[test]
+    fn strict_parse_rejects_missing_fields_with_per_field_errors() {
+        // lenient mode defaults these; strict mode must name each problem
+        let j = Json::parse(r#"{"prompt": [5]}"#).unwrap();
+        let err = GenRequest::from_json_strict(&j).unwrap_err().to_string();
+        assert!(err.contains("id:"), "{err}");
+        assert!(err.contains("max_new_tokens:"), "{err}");
+        assert!(!err.contains("prompt:"), "present fields are not flagged: {err}");
+        // mistyped optional field is still an error in strict mode
+        let j = Json::parse(r#"{"id": 1, "prompt": [5], "max_new_tokens": 4, "top_k": "many"}"#)
+            .unwrap();
+        let err = GenRequest::from_json_strict(&j).unwrap_err().to_string();
+        assert!(err.contains("top_k:"), "{err}");
+        // minimal valid strict frame
+        let j = Json::parse(r#"{"id": 1, "prompt": [5], "max_new_tokens": 4}"#).unwrap();
+        let r = GenRequest::from_json_strict(&j).unwrap();
+        assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn strict_parse_rejects_zero_max_new_tokens() {
+        let j = Json::parse(r#"{"id": 1, "prompt": [5], "max_new_tokens": 0}"#).unwrap();
+        let err = GenRequest::from_json_strict(&j).unwrap_err().to_string();
+        assert!(err.contains("max_new_tokens: must be > 0"), "{err}");
     }
 
     #[test]
@@ -161,5 +395,58 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("finish").as_str(), Some("length"));
         assert!((j.get("ttft_ms").as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = GenResponse {
+            id: 11,
+            prompt_len: 2,
+            tokens: vec![4, 5, 6],
+            finish: FinishReason::Deadline,
+            queue_s: 0.003,
+            ttft_s: 0.005,
+            total_s: 0.009,
+        };
+        let back = GenResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, 11);
+        assert_eq!(back.tokens, vec![4, 5, 6]);
+        assert_eq!(back.finish, FinishReason::Deadline);
+        assert!((back.total_s - 0.009).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finish_reason_names_roundtrip() {
+        for f in [FinishReason::Length, FinishReason::Eos, FinishReason::Deadline] {
+            assert_eq!(FinishReason::from_name(f.name()).unwrap(), f);
+        }
+        assert!(FinishReason::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let e = ErrorResponse::retryable(9, "arena full", 50);
+        let back = ErrorResponse::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, e);
+        let p = ErrorResponse::permanent(None, "prompt: must be an array");
+        let back = ErrorResponse::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, None);
+        assert_eq!(back.retry_after_ms, None);
+    }
+
+    #[test]
+    fn parse_reply_classifies_frames() {
+        let ok = GenResponse {
+            id: 1,
+            prompt_len: 1,
+            tokens: vec![2],
+            finish: FinishReason::Eos,
+            queue_s: 0.0,
+            ttft_s: 0.0,
+            total_s: 0.0,
+        };
+        assert!(parse_reply(&ok.to_json()).unwrap().is_ok());
+        let err = ErrorResponse::permanent(Some(1), "bad");
+        assert!(parse_reply(&err.to_json()).unwrap().is_err());
     }
 }

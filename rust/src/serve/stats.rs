@@ -39,6 +39,7 @@ pub struct ServeStats {
     prefix_misses: Counter,
     prefix_tokens_reused: Counter,
     preemptions: Counter,
+    deadline_expired: Counter,
     /// Current live arena blocks — an occupancy-over-time gauge updated on
     /// every reserve/release edge, not just end-state.
     blocks_live: Gauge,
@@ -95,6 +96,7 @@ impl ServeStats {
             prefix_misses: reg.counter("serve.prefix_misses"),
             prefix_tokens_reused: reg.counter("serve.prefix_tokens_reused"),
             preemptions: reg.counter("serve.preemptions"),
+            deadline_expired: reg.counter("serve.deadline_expired"),
             blocks_live: reg.gauge("serve.kv_blocks_live"),
             occupancy: reg.histogram("serve.batch_occupancy"),
             block_live: reg.histogram("serve.kv_blocks_live_per_wave"),
@@ -209,6 +211,12 @@ impl ServeStats {
         self.preemptions.get() as usize
     }
 
+    /// Requests finished by per-request deadline expiry (these also count
+    /// in [`ServeStats::completed`] — the caller got a response).
+    pub fn deadline_expired(&self) -> usize {
+        self.deadline_expired.get() as usize
+    }
+
     /// Current live arena blocks (the occupancy-over-time gauge).
     pub fn blocks_live_now(&self) -> f64 {
         self.blocks_live.get()
@@ -309,6 +317,31 @@ impl ServeStats {
         if let Some(t) = self.trace.as_mut() {
             t.end("resident", resp.id, vec![]);
             t.end("request", resp.id, vec![("gen_tokens", num(resp.tokens.len() as f64))]);
+        }
+    }
+
+    /// Record a deadline-expired request. Counts toward completions (the
+    /// caller received a response) and the latency histograms, but not
+    /// toward `prompt_tokens` — an expired-in-queue prompt was never fed,
+    /// and a partially-fed prompt would overcount prefill work either way.
+    /// `was_resident` says whether the sequence sat in the active batch
+    /// when it expired: only then is there an open "resident" trace span
+    /// to close (queued/preempted requests have none — closing one
+    /// unconditionally would break the well-nestedness invariant the fuzz
+    /// harness checks).
+    pub fn record_deadline(&mut self, resp: &GenResponse, was_resident: bool) {
+        self.deadline_expired.inc();
+        self.completed.inc();
+        self.gen_tokens.add(resp.tokens.len() as u64);
+        self.total_s.record(resp.total_s);
+        self.ttft_s.record(resp.ttft_s);
+        self.queue_s.record(resp.queue_s);
+        self.last_done = Some(Instant::now());
+        if let Some(t) = self.trace.as_mut() {
+            if was_resident {
+                t.end("resident", resp.id, vec![("reason", s("deadline"))]);
+            }
+            t.end("request", resp.id, vec![("finish", s("deadline"))]);
         }
     }
 
@@ -441,6 +474,7 @@ impl ServeStats {
             ("prefix_hit_rate", num(self.prefix_hit_rate())),
             ("prefix_tokens_reused", num(self.prefix_tokens_reused() as f64)),
             ("preemptions", num(self.preemptions() as f64)),
+            ("deadline_expired", num(self.deadline_expired() as f64)),
             ("kv_blocks_total", num(self.kv_blocks_total as f64)),
             ("block_occupancy_mean", num(self.block_occupancy_mean())),
             ("block_occupancy_max", num(self.block_occupancy_max())),
@@ -472,6 +506,7 @@ impl ServeStats {
              prefill chunks  {:>10}  ({} tokens)\n\
              prefix hits     {:>10}  ({:.0}% rate, {} positions reused)\n\
              preemptions     {:>10}\n\
+             deadline expiry {:>10}\n\
              kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)\n\
              kv store        {:>10}  ({} B/position encoded, arena {} B encoded)",
             self.completed(),
@@ -492,6 +527,7 @@ impl ServeStats {
             self.prefix_hit_rate() * 100.0,
             self.prefix_tokens_reused(),
             self.preemptions(),
+            self.deadline_expired(),
             self.mean_blocks_live(),
             self.kv_blocks_total,
             self.block_occupancy_mean() * 100.0,
@@ -670,6 +706,34 @@ mod tests {
         let view = st.clone();
         st.record_admission(None);
         assert_eq!(view.admissions(), 1, "clones are views over the same metrics");
+    }
+
+    #[test]
+    fn deadline_recording_counts_and_closes_spans() {
+        let mut st = ServeStats::new();
+        st.enable_trace();
+        // a queued expiry: only the "request" span is open
+        if let Some(t) = st.trace_mut() {
+            t.begin("request", 0, vec![]);
+        }
+        let mut r = resp(0, 0, 0.05);
+        r.finish = FinishReason::Deadline;
+        st.record_deadline(&r, false);
+        // an active expiry: both spans are open
+        if let Some(t) = st.trace_mut() {
+            t.begin("request", 1, vec![]);
+            t.begin("resident", 1, vec![]);
+        }
+        let mut r = resp(1, 2, 0.07);
+        r.finish = FinishReason::Deadline;
+        st.record_deadline(&r, true);
+        assert_eq!(st.deadline_expired(), 2);
+        assert_eq!(st.completed(), 2, "expiries count as completions");
+        assert_eq!(st.gen_tokens(), 2, "partial tokens delivered are counted");
+        assert_eq!(st.prompt_tokens(), 0, "expired prompts were not (fully) fed");
+        assert!(crate::telemetry::check_well_nested(st.trace_events()).is_ok());
+        let j = st.bench_json("deadline", vec![]);
+        assert_eq!(j.get("deadline_expired").as_usize(), Some(2));
     }
 
     #[test]

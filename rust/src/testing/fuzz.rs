@@ -30,6 +30,10 @@
 //!    live-block gauge reads zero once the arena is empty, and the trace
 //!    stream is well-nested per request with one balanced
 //!    `request` span per completion.
+//! 7. **net transparency** ([`check_case_net`], `tests/fuzz_serve.rs`
+//!    net arm) — the same request mix replayed over a loopback TCP server
+//!    (wire codec + strict parse + framing) yields bit-identical tokens,
+//!    loses no responses across the drain, and ends with zero live blocks.
 //!
 //! Cases are deliberately small (arena sizes near the per-request minimum
 //! force preemption and copy-on-write; prompts shorter than a block force
@@ -41,7 +45,9 @@
 use crate::config::schema::{Arch, ModelConfig};
 use crate::nn::kv::{KvQuant, PagedKv};
 use crate::nn::transformer::{DecodeCache, Params, Transformer};
-use crate::serve::{Engine, EngineConfig, GenRequest, GenResponse};
+use crate::serve::{
+    Engine, EngineConfig, GenRequest, GenResponse, NetClient, NetServer, NetServerConfig,
+};
 use crate::testing::prop::Gen;
 
 /// KV row-storage schemes the fuzzer rotates through.
@@ -353,6 +359,58 @@ pub fn check_case(seed: u64) -> Result<(), String> {
                 ));
             }
         }
+    }
+    Ok(())
+}
+
+/// The net-transport conformance arm: replay the case's request mix over a
+/// loopback TCP server (requests round-trip through the wire codec and the
+/// strict parser, replies through the frame protocol) and assert the token
+/// streams are bit-identical to the in-process engine, the drain loses no
+/// responses, and the live-block gauge ends at zero.
+pub fn check_case_net(seed: u64) -> Result<(), String> {
+    let case = FuzzCase::generate(seed);
+    let (model, params) = model_under_test();
+    let tag = format!("net/{}", case.describe());
+
+    let reference = run_engine(&model, &params, &case.ecfg, &case.requests, &tag)?;
+
+    let traced = EngineConfig { trace: true, ..case.ecfg.clone() };
+    let engine = Engine::new(model.cfg.clone(), params.clone(), traced);
+    let server = NetServer::bind("127.0.0.1:0", engine, NetServerConfig::default())
+        .map_err(|e| format!("{tag}: bind: {e:#}"))?;
+    let mut client = NetClient::connect(server.local_addr())
+        .map_err(|e| format!("{tag}: connect: {e:#}"))?;
+    // pipeline every request on one connection: replies arrive in
+    // completion order and are re-sorted by id below
+    for r in &case.requests {
+        client.send(r).map_err(|e| format!("{tag}: send req {}: {e:#}", r.id))?;
+    }
+    let mut got = Vec::with_capacity(case.requests.len());
+    for _ in 0..case.requests.len() {
+        match client.recv() {
+            Ok(Ok(resp)) => got.push(resp),
+            Ok(Err(err)) => return Err(format!("{tag}: server errored a request: {}", err.error)),
+            Err(e) => return Err(format!("{tag}: recv: {e:#}")),
+        }
+    }
+    let stats = server.shutdown();
+    got.sort_by_key(|r| r.id);
+    if tokens_of(&got) != tokens_of(&reference) {
+        return Err(format!("{tag}: TCP outputs diverged from the in-process engine"));
+    }
+    if stats.completed() != case.requests.len() {
+        return Err(format!(
+            "{tag}: server stats counted {} completions for {} requests",
+            stats.completed(),
+            case.requests.len()
+        ));
+    }
+    if stats.blocks_live_now() != 0.0 {
+        return Err(format!(
+            "{tag}: live-block gauge reads {} after server drain",
+            stats.blocks_live_now()
+        ));
     }
     Ok(())
 }

@@ -9,7 +9,10 @@
 //! * identical runs reproduce identical greedy tokens (incl. SR KV);
 //! * prefix cache on/off never changes greedy outputs;
 //! * paged `f32` serving is bit-identical to the contiguous reference;
-//! * quantized-KV logit drift vs f32 stays bounded.
+//! * quantized-KV logit drift vs f32 stays bounded;
+//! * (net arm) the same mix replayed over loopback TCP — wire codec,
+//!   strict parse, framing, drain — yields bit-identical tokens with zero
+//!   lost responses and zero live blocks (`check_case_net`).
 //!
 //! Every failure (invariant Err *or* panic inside the engine) reports the
 //! generating seed: reproduce with `testing::fuzz::check_case(<seed>)`.
@@ -21,7 +24,7 @@
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::serve::{Engine, EngineConfig, GenRequest};
 use gaussws::testing::fuzz::{
-    check_case, kv_logit_drift, model_under_test, FuzzCase, FUZZ_SEED_MATRIX,
+    check_case, check_case_net, kv_logit_drift, model_under_test, FuzzCase, FUZZ_SEED_MATRIX,
 };
 
 fn seeds() -> Vec<u64> {
@@ -64,6 +67,33 @@ fn fuzz_serve_conformance_seed_matrix() {
                 panic!(
                     "fuzz_serve seed {seed} PANICKED — reproduce with \
                      testing::fuzz::check_case({seed}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_serve_net_transport_seed_matrix() {
+    // the net-transparency arm (invariant 7): every matrix seed's request
+    // mix replayed over loopback TCP must match the in-process engine
+    for seed in seeds() {
+        let outcome = std::panic::catch_unwind(|| check_case_net(seed));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "fuzz_serve net seed {seed} FAILED — reproduce with \
+                 testing::fuzz::check_case_net({seed}): {msg}"
+            ),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "fuzz_serve net seed {seed} PANICKED — reproduce with \
+                     testing::fuzz::check_case_net({seed}): {msg}"
                 );
             }
         }

@@ -1,0 +1,139 @@
+//! End-to-end suite for the declarative workload framework (`load`): the
+//! scenario corpus runs against the tiny reference model through every
+//! driver, each emitting a distinct BENCH_serve arm with telemetry-backed
+//! latency percentiles, and the TOML spec path round-trips into a run.
+
+use gaussws::load::{run, run_scenario, tiny_model, Driver, Scenario, WorkloadSpec};
+use gaussws::serve::{EngineConfig, FinishReason, NetServerConfig};
+use std::collections::BTreeSet;
+
+const MODEL_SEED: u64 = 11;
+
+#[test]
+fn every_scenario_runs_and_emits_a_distinct_bench_arm() {
+    let mut labels = BTreeSet::new();
+    for sc in Scenario::all() {
+        // Direct: fully deterministic scheduling, maximum concurrency
+        let outcome = run_scenario(&sc, Driver::Direct, MODEL_SEED)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", sc.spec.name));
+        assert_eq!(
+            outcome.responses.len() + outcome.failed,
+            sc.spec.requests,
+            "{}: requests lost",
+            sc.spec.name
+        );
+        assert_eq!(outcome.failed, 0, "{}: requests failed", sc.spec.name);
+        assert_eq!(outcome.stats.blocks_live_now(), 0.0, "{}: blocks leaked", sc.spec.name);
+        let arm = outcome.bench_arm(&sc.spec, Driver::Direct.label());
+        // telemetry-backed percentiles are present in every arm
+        for key in ["p50_total_ms", "p95_total_ms", "p99_total_ms", "p50_ttft_ms"] {
+            assert!(
+                arm.get(key).as_f64().is_some(),
+                "{}: bench arm missing {key}",
+                sc.spec.name
+            );
+        }
+        assert_eq!(arm.get("workload").as_str(), Some(sc.spec.name.as_str()));
+        let label = arm.get("label").as_str().expect("label").to_string();
+        assert!(labels.insert(label.clone()), "duplicate bench label {label}");
+    }
+    assert_eq!(labels.len(), Scenario::all().len());
+}
+
+#[test]
+fn preemption_storm_actually_preempts() {
+    let sc = Scenario::by_name("preemption-storm").unwrap();
+    let outcome = run_scenario(&sc, Driver::Direct, MODEL_SEED).unwrap();
+    assert_eq!(outcome.responses.len(), sc.spec.requests);
+    assert!(
+        outcome.stats.preemptions() > 0,
+        "a 6-block arena with 3-block sequences must preempt (got {})",
+        outcome.stats.preemptions()
+    );
+}
+
+#[test]
+fn bursty_chat_exercises_the_prefix_cache_and_deadline_mix() {
+    let sc = Scenario::by_name("bursty-chat").unwrap();
+    // the spec itself must carry the mixture features
+    assert!(sc.spec.shared_prefix_len >= sc.kv_block, "prefix sharing is block-granular");
+    assert!(sc.spec.deadline_ms.is_some());
+    let reqs = sc.spec.generate();
+    assert!(reqs.iter().any(|r| r.req.deadline_ms.is_some()), "deadline mix generated none");
+    assert!(reqs.iter().any(|r| r.req.deadline_ms.is_none()), "deadline mix hit every request");
+    assert!(reqs.iter().any(|r| r.delay_ms > 0), "burst schedule generated no gaps");
+    let outcome = run_scenario(&sc, Driver::Direct, MODEL_SEED).unwrap();
+    assert_eq!(outcome.responses.len(), sc.spec.requests);
+    assert!(outcome.stats.prefix_lookups() > 0, "prefix cache never consulted");
+}
+
+#[test]
+fn many_short_is_transport_invariant() {
+    // no deadlines, roomy arena: direct, in-process and TCP must produce
+    // bit-identical greedy tokens for the whole scenario
+    let sc = Scenario::by_name("many-short").unwrap();
+    let direct = run_scenario(&sc, Driver::Direct, MODEL_SEED).unwrap();
+    let inproc = run_scenario(&sc, Driver::InProcess, MODEL_SEED).unwrap();
+    let tcp = run_scenario(&sc, Driver::Tcp(NetServerConfig::default()), MODEL_SEED).unwrap();
+    assert_eq!(direct.responses.len(), sc.spec.requests);
+    for other in [&inproc, &tcp] {
+        assert_eq!(other.responses.len(), sc.spec.requests);
+        assert_eq!(other.failed, 0);
+        for (a, b) in direct.responses.iter().zip(other.responses.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {}: driver changed the tokens", a.id);
+        }
+    }
+    assert_eq!(tcp.stats.blocks_live_now(), 0.0);
+}
+
+#[test]
+fn tcp_scenario_accounts_for_every_request() {
+    let sc = Scenario::by_name("bursty-chat").unwrap();
+    let outcome = run_scenario(&sc, Driver::Tcp(NetServerConfig::default()), MODEL_SEED).unwrap();
+    assert_eq!(
+        outcome.responses.len() + outcome.failed,
+        sc.spec.requests,
+        "tcp run lost requests"
+    );
+    assert_eq!(outcome.failed, 0);
+    // deadline-expired completions (if any) are completions, not losses
+    for r in &outcome.responses {
+        assert!(matches!(r.finish, FinishReason::Length | FinishReason::Deadline));
+    }
+    assert_eq!(outcome.stats.blocks_live_now(), 0.0);
+}
+
+#[test]
+fn toml_spec_drives_a_run_end_to_end() {
+    let text = "\
+[workload]
+name = \"toml-smoke\"
+clients = 2
+requests = 6
+prompt_len = \"uniform 2 6\"
+max_new = \"fixed 3\"
+arrival = \"paced 1\"
+seed = 5
+";
+    let doc = gaussws::config::toml::parse(text).unwrap();
+    let spec = WorkloadSpec::from_toml(&doc).unwrap();
+    assert_eq!(spec.name, "toml-smoke");
+    let (cfg, params) = tiny_model(MODEL_SEED);
+    let ecfg = EngineConfig {
+        max_batch: 4,
+        kv_block: 8,
+        prefill_chunk: 4,
+        threads: 1,
+        ..EngineConfig::default()
+    };
+    let outcome = run(&spec, cfg, params, ecfg, Driver::InProcess).unwrap();
+    assert_eq!(outcome.responses.len(), 6);
+    assert_eq!(outcome.failed, 0);
+    for r in &outcome.responses {
+        assert_eq!(r.tokens.len(), 3);
+    }
+    let arm = outcome.bench_arm(&spec, Driver::InProcess.label());
+    assert_eq!(arm.get("workload").as_str(), Some("toml-smoke"));
+    assert_eq!(arm.get("driver").as_str(), Some("in-process"));
+}

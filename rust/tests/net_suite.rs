@@ -1,0 +1,281 @@
+//! Integration suite for the TCP serving front end (`serve::net`): a real
+//! loopback server per test, real client sockets, and the in-process
+//! engine as the behavioural reference.
+//!
+//! Covers: bit-identical outputs vs the in-process engine on a seeded
+//! workload, malformed-frame and malformed-JSON handling (error frames;
+//! connection lifetime semantics), strict-parse error frames, deadline
+//! expiry over the wire (per-request and server-default), deterministic
+//! shed-with-retry backpressure, drain-under-load (no admitted response is
+//! lost, live-block gauge ends at zero), and duplicate in-flight id
+//! rejection.
+
+use gaussws::config::schema::{Arch, ModelConfig};
+use gaussws::load::{run, Dist, Driver, WorkloadSpec};
+use gaussws::nn::transformer::Transformer;
+use gaussws::serve::net::frame;
+use gaussws::serve::protocol::parse_reply;
+use gaussws::serve::{
+    Engine, EngineConfig, FinishReason, GenRequest, NetClient, NetServer, NetServerConfig,
+};
+use gaussws::util::json::Json;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn tiny_engine(ecfg: EngineConfig) -> Engine {
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(7);
+    Engine::new(cfg, params, ecfg)
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        kv_block: 8,
+        kv_blocks: 0,
+        prefill_chunk: 4,
+        prefix_cache: false,
+        threads: 1,
+        trace: true,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn loopback_is_bit_identical_to_in_process_engine() {
+    // the same seeded workload through Driver::Direct and Driver::Tcp must
+    // produce identical token streams (greedy serving is
+    // schedule-independent, so transport cannot matter)
+    let spec = WorkloadSpec::new("net-conformance")
+        .clients(3)
+        .requests(12)
+        .prompt_len(Dist::Uniform { lo: 2, hi: 10 })
+        .max_new(Dist::Uniform { lo: 2, hi: 6 })
+        .shared_prefix(8, 0.5)
+        .seed(44);
+    let cfg = ModelConfig::tiny(Arch::Gpt2);
+    let model = Transformer::new(cfg.clone());
+    let params = model.init_params(7);
+    let ecfg = EngineConfig { prefix_cache: true, ..base_cfg() };
+    let direct = run(&spec, cfg.clone(), params.clone(), ecfg.clone(), Driver::Direct).unwrap();
+    let tcp = run(&spec, cfg, params, ecfg, Driver::Tcp(NetServerConfig::default())).unwrap();
+    assert_eq!(direct.responses.len(), 12);
+    assert_eq!(tcp.responses.len(), 12, "tcp run lost responses");
+    assert_eq!(tcp.failed, 0);
+    for (a, b) in direct.responses.iter().zip(tcp.responses.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {}: transport changed the tokens", a.id);
+    }
+    // drain leaves no KV blocks live, even with the prefix cache on
+    assert_eq!(tcp.stats.blocks_live_now(), 0.0, "tcp drain leaked blocks");
+    let reg = tcp.stats.registry();
+    assert_eq!(reg.counter("net.requests_admitted").get(), 12);
+    assert_eq!(reg.counter("net.responses_sent").get(), 12);
+    assert_eq!(reg.counter("net.connections_accepted").get(), 3);
+}
+
+#[test]
+fn malformed_json_gets_error_frame_and_connection_survives() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // not JSON at all: one permanent error frame, connection stays open
+    frame::write_frame(&mut writer, "this is not json").unwrap();
+    let payload = frame::read_frame(&mut reader).unwrap().expect("error frame");
+    let err = parse_reply(&Json::parse(&payload).unwrap()).unwrap().unwrap_err();
+    assert!(err.error.contains("invalid JSON"), "{}", err.error);
+    assert_eq!(err.retry_after_ms, None, "parse errors are permanent");
+
+    // strict-parse failure: per-field errors, echoing the id, still open
+    frame::write_frame(&mut writer, r#"{"id": 9, "prompt": []}"#).unwrap();
+    let payload = frame::read_frame(&mut reader).unwrap().expect("error frame");
+    let err = parse_reply(&Json::parse(&payload).unwrap()).unwrap().unwrap_err();
+    assert_eq!(err.id, Some(9));
+    assert!(err.error.contains("prompt"), "{}", err.error);
+    assert!(err.error.contains("max_new_tokens"), "{}", err.error);
+
+    // the same connection still serves a valid request afterwards
+    let req = GenRequest::greedy(1, vec![3, 4], 3);
+    frame::write_frame(&mut writer, &req.to_json().to_string()).unwrap();
+    let payload = frame::read_frame(&mut reader).unwrap().expect("response frame");
+    let resp = parse_reply(&Json::parse(&payload).unwrap()).unwrap().unwrap();
+    assert_eq!(resp.id, 1);
+    assert_eq!(resp.tokens.len(), 3);
+
+    let stats = server.shutdown();
+    let reg = stats.registry();
+    assert_eq!(reg.counter("net.frames_bad").get(), 2);
+    assert_eq!(reg.counter("net.requests_admitted").get(), 1);
+}
+
+#[test]
+fn garbage_framing_gets_error_frame_and_closes_connection() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // a header that is not `<len> `: framing violation
+    writer.write_all(b"hello world\n").unwrap();
+    writer.flush().unwrap();
+    let payload = frame::read_frame(&mut reader).unwrap().expect("error frame");
+    let err = parse_reply(&Json::parse(&payload).unwrap()).unwrap().unwrap_err();
+    assert!(err.error.contains("framing"), "{}", err.error);
+    // the reader abandoned the connection: no further frame is ever
+    // answered, and after the drain the socket reads EOF
+    frame::write_frame(&mut writer, "0 \n").unwrap();
+    let stats = server.shutdown();
+    assert_eq!(frame::read_frame(&mut reader).unwrap(), None, "expected EOF");
+    assert_eq!(stats.registry().counter("net.frames_bad").get(), 1);
+    assert_eq!(stats.registry().counter("net.requests_admitted").get(), 0);
+}
+
+#[test]
+fn partial_frame_then_eof_closes_cleanly() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    {
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // declare 100 payload bytes, deliver 10, hang up
+        stream.write_all(b"100 {\"id\": 3,").unwrap();
+        stream.flush().unwrap();
+    } // dropped: EOF mid-frame on the server side
+    // give the reader thread a beat to observe the EOF
+    std::thread::sleep(Duration::from_millis(50));
+    let stats = server.shutdown();
+    let reg = stats.registry();
+    assert_eq!(reg.counter("net.connections_accepted").get(), 1);
+    assert_eq!(reg.counter("net.connections_closed").get(), 1);
+    assert_eq!(reg.counter("net.frames_bad").get(), 1, "partial frame counts as bad");
+    assert_eq!(reg.counter("net.requests_admitted").get(), 0);
+}
+
+#[test]
+fn per_request_deadline_expires_over_the_wire() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let mut req = GenRequest::greedy(5, vec![2, 3, 4], 6);
+    req.deadline_ms = Some(0); // already expired on arrival
+    let resp = client.generate(&req).unwrap();
+    assert_eq!(resp.id, 5);
+    assert_eq!(resp.finish, FinishReason::Deadline);
+    assert!(resp.tokens.is_empty(), "never admitted: no tokens");
+    // a roomy deadline completes normally on the same connection
+    let mut req = GenRequest::greedy(6, vec![2, 3, 4], 4);
+    req.deadline_ms = Some(60_000);
+    let resp = client.generate(&req).unwrap();
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(resp.tokens.len(), 4);
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_expired(), 1);
+    assert_eq!(stats.blocks_live_now(), 0.0);
+}
+
+#[test]
+fn server_default_deadline_applies_to_bare_requests() {
+    let cfg = NetServerConfig { default_deadline_ms: Some(0), ..NetServerConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), cfg).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let resp = client.generate(&GenRequest::greedy(1, vec![4, 5], 5)).unwrap();
+    assert_eq!(resp.finish, FinishReason::Deadline, "server default deadline must apply");
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_expired(), 1);
+}
+
+#[test]
+fn overload_sheds_with_retry_hint() {
+    // deterministic overload: a 2-block arena whose prefix cache retains
+    // one block after the first request retires — a follow-up needing 2
+    // blocks exceeds the free headroom, and max_pending 0 forbids queueing
+    let ecfg = EngineConfig { kv_blocks: 2, prefix_cache: true, ..base_cfg() };
+    let net_cfg = NetServerConfig {
+        max_pending: 0,
+        retry_after_ms: 17,
+        ..NetServerConfig::default()
+    };
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(ecfg), net_cfg).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    // warmup: 8-token prompt (one full block) retires into the prefix index
+    let resp = client.generate(&GenRequest::greedy(1, vec![1; 8], 2)).unwrap();
+    assert_eq!(resp.tokens.len(), 2);
+    // needs 2 blocks; 1 is pinned by the cached prefix => shed
+    let req = GenRequest::greedy(2, vec![2; 8], 9);
+    client.send(&req).unwrap();
+    let err = client.recv().unwrap().expect_err("must be shed");
+    assert_eq!(err.id, Some(2));
+    assert_eq!(err.retry_after_ms, Some(17), "shed errors carry the configured hint");
+    assert!(err.error.contains("overloaded"), "{}", err.error);
+    let stats = server.shutdown();
+    assert_eq!(stats.registry().counter("net.requests_shed").get(), 1);
+    assert_eq!(stats.completed(), 1);
+    assert_eq!(stats.blocks_live_now(), 0.0, "drain must clear the pinned prefix block");
+}
+
+#[test]
+fn drain_under_load_loses_no_admitted_responses() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for id in 0..4u64 {
+        client.send(&GenRequest::greedy(id, vec![1 + id as usize, 2, 3], 12)).unwrap();
+    }
+    // let the frames reach the engine thread, then drain mid-generation
+    std::thread::sleep(Duration::from_millis(50));
+    let collector = std::thread::spawn(move || {
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(client.recv().unwrap().expect("admitted requests must complete"));
+        }
+        // after the drain the server closes the socket
+        assert!(client.recv().is_err(), "expected EOF after drain");
+        got
+    });
+    let stats = server.shutdown();
+    let mut got = collector.join().unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 4, "drain lost responses");
+    for (id, r) in got.iter().enumerate() {
+        assert_eq!(r.id, id as u64);
+        assert_eq!(r.tokens.len(), 12);
+    }
+    assert_eq!(stats.completed(), 4);
+    assert_eq!(stats.blocks_live_now(), 0.0, "live-block gauge must read zero after drain");
+    assert_eq!(stats.registry().counter("net.responses_sent").get(), 4);
+}
+
+#[test]
+fn duplicate_in_flight_id_is_rejected() {
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    // a long-running request, then a duplicate id while it is in flight
+    let slow = GenRequest::greedy(7, vec![2, 3], 40);
+    client.send(&slow).unwrap();
+    client.send(&GenRequest::greedy(7, vec![4, 5], 2)).unwrap();
+    let mut saw_dup_error = false;
+    let mut saw_response = false;
+    for _ in 0..2 {
+        match client.recv().unwrap() {
+            Ok(resp) => {
+                assert_eq!(resp.id, 7);
+                assert_eq!(resp.tokens.len(), 40, "the original request must complete");
+                saw_response = true;
+            }
+            Err(err) => {
+                assert_eq!(err.id, Some(7));
+                assert!(err.error.contains("duplicate"), "{}", err.error);
+                saw_dup_error = true;
+            }
+        }
+    }
+    assert!(saw_response, "original request lost");
+    assert!(saw_dup_error, "duplicate id was not rejected");
+    let stats = server.shutdown();
+    assert_eq!(stats.completed(), 1);
+}
