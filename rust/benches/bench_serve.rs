@@ -11,11 +11,18 @@
 //!     the "on" arm must show prefix_hit_rate > 0 AND lower mean block
 //!     occupancy (asserted);
 //!   * KV-store scaling on the shared-prefix workload at batch 8: `f32`
-//!     vs `fp8_e3m4` vs `int8_sr` KV arenas, reporting tokens/sec,
-//!     encoded bytes/position, and the perplexity-proxy per-prompt logit
-//!     drift vs the f32 reference, recorded into the stats drift
-//!     histogram so the BENCH record carries max AND p50 (asserted zero
-//!     for f32, bounded for the quantized arms);
+//!     vs `fp8_e3m4` vs `int8_sr` vs sub-byte-packed `fp4_e2m1_sr` KV
+//!     arenas, reporting tokens/sec, encoded bytes/position
+//!     (`kv_bytes_per_position`, true packed bits — 160 B for fp4 on the
+//!     tiny config), and the perplexity-proxy per-prompt logit drift vs
+//!     the f32 reference, recorded into the stats drift histogram so the
+//!     BENCH record carries max AND p50 (asserted zero for f32, bounded
+//!     per-scheme for the quantized arms);
+//!   * fused packed-code decode vs the f32 mirror (`fused-on`/`fused-off`)
+//!     on the fp8 KV arena at batch 8: identical workload with
+//!     `kv_mirror` off/on — the greedy token streams are asserted
+//!     bit-identical (via per-arm token digests recorded in the BENCH
+//!     schema), demonstrating the fused kernels are a pure storage win;
 //!   * telemetry on vs off at batch 8 (best-of-N tokens/sec each): the
 //!     "on" arm records full per-request trace timelines on top of the
 //!     always-on registry; asserted within 2% of the "off" arm;
@@ -32,7 +39,7 @@ use gaussws::data::{SynthCorpus, SynthSpec};
 use gaussws::load::{run_scenario, Driver, Scenario};
 use gaussws::nn::transformer::Transformer;
 use gaussws::serve::{Engine, EngineConfig, GenRequest, WeightStore};
-use gaussws::testing::fuzz::{kv_logit_drift, FUZZ_DRIFT_BOUND};
+use gaussws::testing::fuzz::{drift_bound, kv_logit_drift};
 use gaussws::util::json::{arr, num, obj, s, Json};
 use gaussws::util::Args;
 
@@ -44,6 +51,9 @@ struct Arm {
     shared_prefix: usize,
     requests: usize,
     kv_store: String,
+    /// keep the f32 decode mirror beside the packed KV codes
+    /// (`EngineConfig::kv_mirror`; the fused-decode comparison arm)
+    mirror: bool,
     /// record per-request trace timelines (the telemetry-overhead arm)
     trace: bool,
 }
@@ -73,6 +83,7 @@ fn run_arm(
             // same SR streams as the drift probe, so the recorded
             // kv_logit_drift_max describes this arm's actual quantization
             kv_seed,
+            kv_mirror: arm.mirror,
             trace: arm.trace,
             ..EngineConfig::default()
         },
@@ -98,8 +109,23 @@ fn run_arm(
         );
         engine.enqueue(GenRequest::greedy(id as u64, prompt, max_new)).expect("valid request");
     }
-    let done = engine.run_to_completion();
+    let mut done = engine.run_to_completion();
     assert_eq!(done.len(), arm.requests, "{}: all requests must complete", arm.label);
+    // FNV-1a over (id, tokens) in id order: a stable digest of the greedy
+    // outputs, so arms meant to be output-identical (fused-on vs
+    // fused-off) can be compared from their BENCH records alone
+    done.sort_by_key(|r| r.id);
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut fold = |v: u64| {
+        digest ^= v;
+        digest = digest.wrapping_mul(0x0000_0100_0000_01B3);
+    };
+    for r in &done {
+        fold(r.id);
+        for &t in &r.tokens {
+            fold(t as u64 + 1);
+        }
+    }
     assert!(
         arm.batch == 1 || engine.stats.max_occupancy() > 1,
         "{}: continuous batching inactive",
@@ -117,6 +143,8 @@ fn run_arm(
         ("kv_block", num(arm.kv_block as f64)),
         ("prefix_cache", Json::Bool(arm.prefix_cache)),
         ("shared_prefix", num(arm.shared_prefix as f64)),
+        ("kv_mirror", Json::Bool(arm.mirror)),
+        ("tokens_digest", s(&format!("{digest:016x}"))),
     ];
     extras.extend(extra);
     let record = engine.stats.bench_json(&arm.label, extras);
@@ -170,6 +198,7 @@ fn main() {
             shared_prefix: 0,
             requests: batch * per_slot,
             kv_store: "f32".into(),
+            mirror: false,
             trace: false,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
@@ -185,6 +214,7 @@ fn main() {
             shared_prefix: 0,
             requests: 8 * per_slot,
             kv_store: "f32".into(),
+            mirror: false,
             trace: false,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
@@ -204,6 +234,7 @@ fn main() {
         shared_prefix,
         requests: 8 * per_slot,
         kv_store: "f32".into(),
+        mirror: false,
         trace: false,
     };
     let (rec_on, hit_rate_on, occ_on) =
@@ -231,36 +262,85 @@ fn main() {
             corpus.tokens[start..start + 24].iter().map(|&t| t as usize).collect()
         })
         .collect();
-    for kv_store in ["f32", "fp8_e3m4", "int8_sr"] {
+    // the "fp4-packed" tag names the sub-byte stratum: 4-bit codes packed
+    // two per byte, 160 B/position on the tiny config vs 1024 B for f32
+    for (kv_store, tag) in [
+        ("f32", "f32"),
+        ("fp8_e3m4", "fp8_e3m4"),
+        ("int8_sr", "int8_sr"),
+        ("fp4_e2m1_sr", "fp4-packed"),
+    ] {
         let drifts: Vec<f64> = drift_prompts
             .iter()
             .map(|p| kv_logit_drift(&model_for_drift, &served_params, p, kv_store, 4, seed) as f64)
             .collect();
         let drift = drifts.iter().cloned().fold(0f64, f64::max);
+        let bound = drift_bound(kv_store) as f64;
         if kv_store == "f32" {
             assert_eq!(drift, 0.0, "f32 KV passthrough must be drift-free");
         } else {
             assert!(
-                drift.is_finite() && drift < FUZZ_DRIFT_BOUND as f64,
-                "{kv_store}: KV logit drift {drift} out of bound"
+                drift.is_finite() && drift < bound,
+                "{kv_store}: KV logit drift {drift} exceeds bound {bound}"
             );
         }
         let arm = Arm {
-            label: format!("{}/kv-{kv_store}/b8", store.label()),
+            label: format!("{}/kv-{tag}/b8", store.label()),
             batch: 8,
             kv_block: 4,
             prefix_cache: true,
             shared_prefix,
             requests: 8 * per_slot,
             kv_store: kv_store.into(),
+            mirror: false,
             trace: false,
         };
         // the per-prompt drifts land in the stats histogram, so the BENCH
         // record carries kv_logit_drift_max AND kv_logit_drift_p50
-        records.push(
-            run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &drifts, vec![]).0,
-        );
+        let rec =
+            run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &drifts, vec![]).0;
+        if kv_store == "fp4_e2m1_sr" {
+            assert_eq!(
+                rec.get("kv_bytes_per_position").as_usize(),
+                Some(160),
+                "fp4 KV must cost 160 B/position on the tiny config (true packed bits)"
+            );
+        }
+        records.push(rec);
     }
+
+    // ---- fused packed-code decode vs the f32 mirror, equal workload ----
+    // fused-on is the default (codes + scales only); fused-off re-enables
+    // the resident f32 mirror and reads rows through it. Same codes, two
+    // read paths: the token streams must be bit-identical, which the
+    // recorded digests prove from the BENCH file alone
+    let mk_fused_arm = |mirror: bool| Arm {
+        label: format!("{}/fused-{}/b8", store.label(), if mirror { "off" } else { "on" }),
+        batch: 8,
+        kv_block: 4,
+        prefix_cache: true,
+        shared_prefix,
+        requests: 8 * per_slot,
+        kv_store: "fp8_e3m4".into(),
+        mirror,
+        trace: false,
+    };
+    let (rec_fused, ..) =
+        run_arm(&store, &corpus, &mk_fused_arm(false), threads, prompt_len, max_new, seed, &[], vec![]);
+    let (rec_mirror, ..) =
+        run_arm(&store, &corpus, &mk_fused_arm(true), threads, prompt_len, max_new, seed, &[], vec![]);
+    assert_eq!(
+        rec_fused.get("tokens_digest").as_str(),
+        rec_mirror.get("tokens_digest").as_str(),
+        "fused packed-code decode must be bit-identical to the f32 mirror"
+    );
+    assert_eq!(
+        rec_fused.get("kv_bytes_per_position").as_usize(),
+        rec_mirror.get("kv_bytes_per_position").as_usize(),
+        "the mirror is resident state, not encoded state"
+    );
+    records.push(rec_fused);
+    records.push(rec_mirror);
 
     // ---- telemetry overhead: trace timelines on vs off, equal workload ----
     // the registry is always on (ServeStats is a view over it), so this
@@ -274,6 +354,7 @@ fn main() {
         shared_prefix: 0,
         requests: 8 * per_slot,
         kv_store: "f32".into(),
+        mirror: false,
         trace: on,
     };
     let reps = if quick { 2 } else { 3 };

@@ -14,8 +14,10 @@
 //!   harness reproducing every table and figure of the paper.
 //! * **L4 (this crate, [`serve`])** — the deployment side of the paper's
 //!   claim: checkpoints are snapshotted into a low-precision MX weight
-//!   store (BF16/FP8/FP6/FP4/INT square-blockwise, bit-packed,
-//!   dequantize-on-load) and served through a continuous-batching engine
+//!   store (BF16/FP8/FP6/FP4/INT square-blockwise, packed at true
+//!   sub-byte code width — the GWQS3 format — and dequantized on load
+//!   through per-codec lookup tables) and served through a
+//!   continuous-batching engine
 //!   with **paged KV-cache memory**: fixed-size position blocks in a
 //!   global refcounted arena ([`nn::kv::PagedKv`] +
 //!   `serve::BlockAllocator`), chunked prefill, cross-request prefix
@@ -23,9 +25,12 @@
 //!   multi-threaded decode worker pool, and p50/p95 latency + tokens/sec
 //!   + block-occupancy accounting. The KV arena itself can be
 //!   **quantized block-by-block** through any blockwise quant scheme
-//!   ([`nn::kv::KvQuant`], `serve --kv-store fp8_e3m4|int8_sr|…`):
-//!   packed codes + per-group po2 scales are canonical, an f32 decode
-//!   mirror keeps reads zero-copy, and `--kv-store f32` preserves the
+//!   ([`nn::kv::KvQuant`], `serve --kv-store fp8_e3m4|fp4_e2m1_sr|…`):
+//!   sub-byte [`quant::PackedCodes`] + per-group po2 scales are the
+//!   *only* resident state — attention dots q·k and accumulates p·v
+//!   directly against the codes via fused LUT-dequant kernels, with an
+//!   opt-in f32 debug mirror (`--kv-mirror`) asserted bit-identical to
+//!   the fused path — and `--kv-store f32` preserves the
 //!   bit-identical passthrough path. `gaussws serve` and
 //!   `examples/serve_load.rs` drive it end to end; the storage seam is
 //!   the [`nn::kv::KvStorage`] trait (contiguous `DecodeCache` for
@@ -46,13 +51,16 @@
 //!   random request mix + engine config, `check_case(seed)` asserts the
 //!   serving invariants (leak-free drain, determinism, prefix-cache
 //!   transparency, paged-f32 == contiguous, bounded quantized-KV logit
-//!   drift), and `tests/fuzz_serve.rs` runs the fixed 8-seed matrix in a
-//!   dedicated release-mode CI job.
+//!   drift, fused-decode == mirror bit-identity), and
+//!   `tests/fuzz_serve.rs` runs the fixed 8-seed matrix (widened to 12 in
+//!   CI to cover every KV stratum) in a dedicated release-mode CI job.
 //! * **[`quant`]** — the unified quantization seam underneath L3 and L4:
 //!   one `QuantScheme` trait (codec × rounding × scale geometry) plus a
 //!   label registry (`"bf16"`, `"fp8_e3m4"`, `"int8_sr"`, …) shared by
 //!   train-time fake-quant, checkpoint snapshots, and the packed serving
-//!   store, so every format/rounding scenario is a single registry entry.
+//!   store, so every format/rounding scenario is a single registry entry;
+//!   [`quant::PackedCodes`] + [`quant::DequantLut`] underneath it store
+//!   codes at their true bit width and decode by table lookup.
 //! * **[`telemetry`]** — the shared observability substrate: a lock-light
 //!   [`telemetry::Registry`] of sharded counters, gauges and log-bucketed
 //!   histograms with JSON/Prometheus exposition, plus per-request Chrome

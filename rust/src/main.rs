@@ -78,6 +78,7 @@ fn print_usage() {
          \x20               [--requests 32 --max-batch 8 --threads N]\n\
          \x20               [--kv-block 16 --kv-blocks 0(auto) --prefill-chunk 8]\n\
          \x20               [--kv-store f32|fp8_e3m4|int8_sr|... (KV arena quantization)]\n\
+         \x20               [--kv-mirror (debug: keep an f32 decode mirror beside the codes)]\n\
          \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
@@ -445,6 +446,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         capacity: usize::MAX,
         kv_scheme,
         kv_seed: seed,
+        // --kv-mirror: re-enable the resident f32 decode mirror (debug
+        // mode; the fused packed-code read path is bit-identical to it)
+        kv_mirror: args.flag("kv-mirror"),
         trace: args.get("trace-out").is_some(),
     };
     // degenerate paging configs (including an unhostable --kv-store

@@ -28,15 +28,24 @@
 //!
 //! The paged arena can additionally store K/V rows *through a
 //! [`crate::quant::Scheme`]*: each row is split into `block`-element groups
-//! sharing one power-of-two scale, and elements are encoded as packed codes
-//! (FP emulation or symmetric INT, RNE or stochastic rounding). The codes +
-//! scales are the canonical storage — a resident f32 *decode mirror* backs
-//! the zero-copy [`KvStorage::k_row`]/[`KvStorage::v_row`] reads, and is
-//! kept exactly equal to `decode(code) × scale` at all times. Memory
-//! accounting ([`KvQuant::bytes_per_position`]) reports the encoded
-//! footprint a deployment layout would cost; the mirror is the emulation
-//! overhead, same trade as the `serve::WeightStore` dequantize-on-load
-//! path.
+//! sharing one power-of-two scale, and elements are encoded as
+//! [`crate::quant::PackedCodes`] — a dense sub-byte bitvector at the
+//! codec's true width (fp4 = 4 bits/element, not a padded byte), plus one
+//! f32 scale per group. The codes + scales are the **only** resident
+//! storage by default: attention reads go through the fused dequant
+//! kernels ([`KvStorage::dot_k`] / [`KvStorage::axpy_v`]), which walk the
+//! packed codes group-by-group through the codec's
+//! [`crate::quant::DequantLut`] — one table index and one scale widen per
+//! element, no f32 row ever materialized. [`KvQuant::with_mirror`] re-
+//! enables the PR-4 resident f32 *decode mirror* (zero-copy
+//! [`KvStorage::k_row`]/[`KvStorage::v_row`] reads) as a debug/test mode;
+//! the fused path is asserted bit-identical to the mirror for every
+//! registered packed codec (`tests/property_suite.rs`, and invariant 8 of
+//! the fuzz harness). [`KvQuant::bytes_per_position`] reports the true
+//! packed footprint (bit-granular, e.g. 160 B/position for fp4 on the
+//! tiny config vs 1024 B f32); [`KvBlock::bytes`] counts exactly what the
+//! block holds resident (packed bytes + scales, plus the mirror only when
+//! enabled).
 //!
 //! Rows are encoded at **stage time** ([`KvStorage::write`]), not at
 //! commit: a position staged earlier in the same prefill chunk must read
@@ -55,7 +64,7 @@
 use crate::config::schema::ModelConfig;
 use crate::numerics::fpformat::Rounding;
 use crate::prng::Philox4x32;
-use crate::quant::{po2_scale, QuantScheme, Scheme};
+use crate::quant::{po2_scale, DequantLut, PackedCodes, QuantScheme, Scheme};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -68,6 +77,10 @@ use std::sync::Arc;
 /// with elementwise geometry (no block, so no shared scale), or a block
 /// size that does not divide `d_model` (ragged tail groups are not
 /// supported — see [`crate::serve::EngineConfig::validate_for`]).
+///
+/// Quantized policies default to **fused** reads (packed codes only, no
+/// resident f32 rows); [`KvQuant::with_mirror`] opts back into the f32
+/// decode mirror for debugging and bit-identity tests.
 #[derive(Debug, Clone)]
 pub struct KvQuant {
     scheme: Scheme,
@@ -76,6 +89,14 @@ pub struct KvQuant {
     d_model: usize,
     /// Base seed for stochastic-rounding draws (mixed per layer/position).
     seed: u64,
+    /// Keep a resident f32 decode mirror next to the codes (debug/test
+    /// mode). Always true for passthrough, where the raw rows *are* the
+    /// storage.
+    mirror: bool,
+    /// The codec's 2^bits decode table, driving the fused kernels.
+    /// `Arc`-shared: a 16-bit codec's table is 64 Ki entries and every
+    /// sequence cache clones the policy.
+    lut: Option<Arc<DequantLut>>,
 }
 
 impl KvQuant {
@@ -83,14 +104,15 @@ impl KvQuant {
     /// bit-identical path.
     pub fn passthrough(d_model: usize) -> KvQuant {
         let scheme = crate::quant::resolve("f32").expect("f32 scheme is registered");
-        KvQuant { scheme, group: 0, d_model, seed: 0 }
+        KvQuant { scheme, group: 0, d_model, seed: 0, mirror: true, lut: None }
     }
 
     /// Build a KV quantizer for `scheme` over `d_model`-wide rows. `seed`
     /// feeds stochastic rounding (deterministic per layer/position).
+    /// Quantized policies start in fused mode (no f32 mirror).
     pub fn new(scheme: Scheme, d_model: usize, seed: u64) -> Result<KvQuant> {
         if !scheme.codec.is_packed() {
-            return Ok(KvQuant { scheme, group: 0, d_model, seed });
+            return Ok(KvQuant { scheme, group: 0, d_model, seed, mirror: true, lut: None });
         }
         let Some(group) = scheme.block() else {
             bail!(
@@ -106,7 +128,30 @@ impl KvQuant {
                 scheme.label()
             );
         }
-        Ok(KvQuant { scheme, group, d_model, seed })
+        let lut = DequantLut::for_codec(&scheme.codec).map(Arc::new);
+        Ok(KvQuant { scheme, group, d_model, seed, mirror: false, lut })
+    }
+
+    /// Keep the resident f32 decode mirror next to the packed codes, so
+    /// [`KvStorage::k_row`]/[`KvStorage::v_row`] stay readable on quantized
+    /// caches. Debug/test mode: the fused default is asserted bit-identical
+    /// to it, so serving never needs the extra `2 × n_layer × d_model × 4`
+    /// bytes per position.
+    pub fn with_mirror(mut self) -> KvQuant {
+        self.mirror = true;
+        self
+    }
+
+    /// Whether blocks under this policy hold resident f32 rows (always
+    /// true for passthrough; opt-in via [`KvQuant::with_mirror`] for
+    /// quantized schemes).
+    pub fn keeps_mirror(&self) -> bool {
+        self.mirror
+    }
+
+    /// The codec's 2^bits decode table (`None` for passthrough).
+    pub fn lut(&self) -> Option<&DequantLut> {
+        self.lut.as_deref()
     }
 
     /// Canonical scheme label, e.g. `"fp8_e3m4"` (`"f32"` for passthrough).
@@ -129,12 +174,16 @@ impl KvQuant {
     }
 
     /// Encoded bytes one sequence position costs (K + V rows of every
-    /// layer): packed element codes plus one f32 scale per group, or plain
-    /// f32 rows for the passthrough. This is the deployment-layout number
-    /// `ServeStats` reports as `kv_bytes_per_position`.
+    /// layer): densely packed element codes at the codec's true bit width
+    /// plus one f32 scale per group, or plain f32 rows for the
+    /// passthrough. This is the deployment-layout number `ServeStats`
+    /// reports as `kv_bytes_per_position` — and, since PR 8, also what the
+    /// fused arena actually keeps resident (tiny config: f32 1024 B,
+    /// fp8/int8 288 B, fp6 224 B, fp4/int4 160 B).
     pub fn bytes_per_position(&self, n_layer: usize) -> usize {
         let per_row = if self.is_quantizing() {
-            self.d_model * self.scheme.codec.bytes_per_elem() + self.groups_per_row() * 4
+            let bits = self.scheme.codec.bits_per_elem() as usize;
+            (self.d_model * bits).div_ceil(8) + self.groups_per_row() * 4
         } else {
             self.d_model * 4
         };
@@ -153,44 +202,54 @@ impl KvQuant {
         h
     }
 
-    /// Encode one staged row in place: per group, compute the po2 scale,
-    /// pack each element's code, and overwrite the f32 mirror with the
-    /// dequantized value (`decode(code) × scale`). No-op for passthrough.
+    /// Encode one staged row: per group, compute the po2 scale, pack each
+    /// element's code into `codes` at `code_off + i`, and (when a mirror
+    /// slice is supplied) write the dequantized f32 value
+    /// (`decode(code) × scale`) alongside.
+    #[allow(clippy::too_many_arguments)]
     fn encode_row(
         &self,
-        row: &mut [f32],
-        codes: &mut [u16],
+        src: &[f32],
+        mut mirror: Option<&mut [f32]>,
+        codes: &mut PackedCodes,
+        code_off: usize,
         scales: &mut [f32],
         layer: usize,
         pos: usize,
         which: u64,
     ) {
-        debug_assert_eq!(row.len(), self.d_model);
+        debug_assert_eq!(src.len(), self.d_model);
         let codec = &self.scheme.codec;
         let rounding = self.scheme.rounding;
         let stochastic = rounding == Rounding::Stochastic;
         let mut rng = Philox4x32::new(self.row_seed(layer, pos, which));
-        for (gi, chunk) in row.chunks_mut(self.group).enumerate() {
+        for (gi, chunk) in src.chunks(self.group).enumerate() {
             let amax = chunk.iter().fold(0f64, |m, &x| m.max((x as f64).abs()));
-            let s = po2_scale(amax, codec);
+            // round-trip the po2 scale through f32: the stored f32 scale
+            // must widen back to *exactly* the value used here, or the
+            // fused path (which re-reads scales[gi]) could diverge from
+            // the mirror by an ulp at the f32 exponent extremes
+            let s = (po2_scale(amax, codec) as f32) as f64;
             scales[gi] = s as f32;
-            for (e, x) in chunk.iter_mut().enumerate() {
+            for (e, &x) in chunk.iter().enumerate() {
                 let rand = if stochastic { rng.next_u32() } else { 0 };
-                let q = codec.quantize(*x as f64 / s, rounding, rand);
-                codes[gi * self.group + e] = codec.encode(q);
-                *x = (q * s) as f32;
+                let q = codec.quantize(x as f64 / s, rounding, rand);
+                codes.set(code_off + gi * self.group + e, codec.encode(q));
+                if let Some(m) = mirror.as_deref_mut() {
+                    m[gi * self.group + e] = (q * s) as f32;
+                }
             }
         }
     }
 }
 
-/// Packed payload of a quantized block: element codes (one u16 slot per
-/// element, occupying `bytes_per_elem` in the deployment accounting) and
-/// one f32 po2 scale per row group, for K and V separately.
+/// Packed payload of a quantized block: element codes stored densely at
+/// the codec's bit width ([`PackedCodes`]) and one f32 po2 scale per row
+/// group, for K and V separately.
 #[derive(Debug, Clone, PartialEq)]
 struct KvEnc {
-    k_codes: Vec<u16>,
-    v_codes: Vec<u16>,
+    k_codes: PackedCodes,
+    v_codes: PackedCodes,
     k_scales: Vec<f32>,
     v_scales: Vec<f32>,
     groups_per_row: usize,
@@ -201,8 +260,10 @@ struct KvEnc {
 /// (`(layer * block_size + slot) * d_model`). This is the unit of KV-cache
 /// allocation, sharing, and copy-on-write in the serve layer.
 ///
-/// For quantized blocks the packed codes + scales in `enc` are canonical;
-/// `k`/`v` hold the dequantized f32 mirror the read path returns slices of.
+/// For quantized blocks the packed codes + scales in `enc` are canonical
+/// and — in the fused default — the only storage; `k`/`v` hold the
+/// dequantized f32 mirror only when the policy was built
+/// [`KvQuant::with_mirror`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct KvBlock {
     /// Arena identity (block-table entry). Standalone [`PagedKv`]s number
@@ -223,8 +284,9 @@ impl KvBlock {
         KvBlock { id, k: vec![0.0; n], v: vec![0.0; n], block_size, d_model, enc: None }
     }
 
-    /// A block shaped for `quant`: allocates the code/scale payload when
-    /// the policy quantizes, otherwise identical to [`KvBlock::new`].
+    /// A block shaped for `quant`: allocates the packed code/scale payload
+    /// when the policy quantizes (plus the f32 mirror only if the policy
+    /// keeps one), otherwise identical to [`KvBlock::new`].
     pub fn for_quant(
         id: u32,
         n_layer: usize,
@@ -232,13 +294,22 @@ impl KvBlock {
         d_model: usize,
         quant: &KvQuant,
     ) -> KvBlock {
-        let mut b = KvBlock::new(id, n_layer, block_size, d_model);
+        assert!(block_size > 0 && d_model > 0 && n_layer > 0);
+        let n = n_layer * block_size * d_model;
+        let mirror_n = if quant.keeps_mirror() { n } else { 0 };
+        let mut b = KvBlock {
+            id,
+            k: vec![0.0; mirror_n],
+            v: vec![0.0; mirror_n],
+            block_size,
+            d_model,
+            enc: None,
+        };
         if quant.is_quantizing() {
-            let n = n_layer * block_size * d_model;
             let g = quant.groups_per_row();
             b.enc = Some(KvEnc {
-                k_codes: vec![0; n],
-                v_codes: vec![0; n],
+                k_codes: PackedCodes::for_codec(&quant.scheme.codec, n),
+                v_codes: PackedCodes::for_codec(&quant.scheme.codec, n),
                 k_scales: vec![1.0; n_layer * block_size * g],
                 v_scales: vec![1.0; n_layer * block_size * g],
                 groups_per_row: g,
@@ -257,17 +328,25 @@ impl KvBlock {
         self.enc.is_some()
     }
 
-    /// Resident bytes of K/V storage in this block: the f32 mirror plus,
-    /// for quantized blocks, the canonical codes and scales (the emulation
-    /// keeps both; [`KvQuant::bytes_per_position`] is the deployment
-    /// number).
+    /// This block holds resident f32 rows ([`KvStorage::k_row`] works).
+    pub fn has_mirror(&self) -> bool {
+        !self.k.is_empty()
+    }
+
+    /// Resident bytes of K/V storage in this block: the true packed code
+    /// bytes + per-group scales for quantized blocks (plus the f32 mirror
+    /// only when the policy keeps one), or the raw f32 rows otherwise. In
+    /// the fused default this matches `block_size ×`
+    /// [`KvQuant::bytes_per_position`] — no 2 B/code padding, no hidden
+    /// mirror.
     pub fn bytes(&self) -> usize {
         let mirror = (self.k.len() + self.v.len()) * std::mem::size_of::<f32>();
         match &self.enc {
             None => mirror,
             Some(e) => {
                 mirror
-                    + (e.k_codes.len() + e.v_codes.len()) * std::mem::size_of::<u16>()
+                    + e.k_codes.byte_len()
+                    + e.v_codes.byte_len()
                     + (e.k_scales.len() + e.v_scales.len()) * std::mem::size_of::<f32>()
             }
         }
@@ -279,22 +358,38 @@ impl KvBlock {
         (layer * self.block_size + slot) * self.d_model
     }
 
-    /// K row of `layer` at in-block position `slot`.
+    /// K row of `layer` at in-block position `slot`. Panics on fused
+    /// quantized blocks (no resident rows) — reads there go through
+    /// [`KvBlock::dot_k_encoded`] / [`KvBlock::axpy_v_encoded`], or build
+    /// the policy with [`KvQuant::with_mirror`].
     pub fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        assert!(
+            self.has_mirror(),
+            "f32 row reads need the decode mirror (KvQuant::with_mirror); \
+             fused quantized blocks are read through dot_k/axpy_v"
+        );
         let o = self.off(layer, slot);
         &self.k[o..o + self.d_model]
     }
 
-    /// V row of `layer` at in-block position `slot`.
+    /// V row of `layer` at in-block position `slot` (same mirror
+    /// requirement as [`KvBlock::k_row`]).
     pub fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        assert!(
+            self.has_mirror(),
+            "f32 row reads need the decode mirror (KvQuant::with_mirror); \
+             fused quantized blocks are read through dot_k/axpy_v"
+        );
         let o = self.off(layer, slot);
         &self.v[o..o + self.d_model]
     }
 
-    /// Packed K codes of `layer` at `slot` (None for raw blocks).
-    pub fn k_codes(&self, layer: usize, slot: usize) -> Option<&[u16]> {
+    /// Packed K codes of `layer` at `slot`, unpacked to one `u16` per
+    /// element (`None` for raw blocks). Allocates — a diagnostics/test
+    /// read; the hot path iterates the packed buffer directly.
+    pub fn k_codes(&self, layer: usize, slot: usize) -> Option<Vec<u16>> {
         let o = self.off(layer, slot);
-        self.enc.as_ref().map(|e| &e.k_codes[o..o + self.d_model])
+        self.enc.as_ref().map(|e| e.k_codes.iter_group(o, self.d_model).collect())
     }
 
     /// Per-group K scales of `layer` at `slot` (None for raw blocks).
@@ -303,6 +398,77 @@ impl KvBlock {
             let so = (layer * self.block_size + slot) * e.groups_per_row;
             &e.k_scales[so..so + e.groups_per_row]
         })
+    }
+
+    /// Fused dequant-dot kernel: dot `q` against elements
+    /// `[head_off, head_off + q.len())` of the packed K row of `layer` at
+    /// `slot`, never materializing an f32 row. Walks the row one scale
+    /// group at a time — fetch the group's po2 scale once, then for each
+    /// code: one [`DequantLut`] table index, one widen-by-scale, one f32
+    /// multiply-accumulate *in ascending element order*, which makes the
+    /// result bit-identical to dotting against the decode mirror.
+    pub fn dot_k_encoded(
+        &self,
+        layer: usize,
+        slot: usize,
+        head_off: usize,
+        q: &[f32],
+        lut: &DequantLut,
+    ) -> f32 {
+        let enc = self.enc.as_ref().expect("dot_k_encoded on a raw block");
+        let row = self.off(layer, slot);
+        let srow = (layer * self.block_size + slot) * enc.groups_per_row;
+        let group = self.d_model / enc.groups_per_row;
+        let end = head_off + q.len();
+        debug_assert!(end <= self.d_model);
+        let mut acc = 0.0f32;
+        let mut e = head_off;
+        while e < end {
+            let gi = e / group;
+            let ge = ((gi + 1) * group).min(end);
+            let s = enc.k_scales[srow + gi] as f64;
+            for (code, &qv) in
+                enc.k_codes.iter_group(row + e, ge - e).zip(&q[e - head_off..ge - head_off])
+            {
+                acc += qv * ((lut.decode(code) * s) as f32);
+            }
+            e = ge;
+        }
+        acc
+    }
+
+    /// Fused dequant-axpy kernel: `out[e] += w × V[head_off + e]` decoded
+    /// straight from the packed V row of `layer` at `slot` (same group-wise
+    /// walk and bit-identity guarantee as [`KvBlock::dot_k_encoded`]).
+    pub fn axpy_v_encoded(
+        &self,
+        layer: usize,
+        slot: usize,
+        head_off: usize,
+        w: f32,
+        out: &mut [f32],
+        lut: &DequantLut,
+    ) {
+        let enc = self.enc.as_ref().expect("axpy_v_encoded on a raw block");
+        let row = self.off(layer, slot);
+        let srow = (layer * self.block_size + slot) * enc.groups_per_row;
+        let group = self.d_model / enc.groups_per_row;
+        let end = head_off + out.len();
+        debug_assert!(end <= self.d_model);
+        let mut e = head_off;
+        while e < end {
+            let gi = e / group;
+            let ge = ((gi + 1) * group).min(end);
+            let s = enc.v_scales[srow + gi] as f64;
+            for (code, o) in enc
+                .v_codes
+                .iter_group(row + e, ge - e)
+                .zip(out[e - head_off..ge - head_off].iter_mut())
+            {
+                *o += w * ((lut.decode(code) * s) as f32);
+            }
+            e = ge;
+        }
     }
 
     /// Write the K and V rows of `layer` at in-block position `slot`
@@ -315,10 +481,10 @@ impl KvBlock {
     }
 
     /// Write the K/V rows of `layer` at `slot`, encoding them through
-    /// `quant` (codes + scales become canonical, the mirror holds the
-    /// dequantized values). `pos` is the absolute sequence position —
-    /// stochastic rounding is keyed on it so re-encoding after preemption
-    /// reproduces the same codes.
+    /// `quant` (codes + scales become canonical; the mirror — when the
+    /// block keeps one — holds the dequantized values). `pos` is the
+    /// absolute sequence position — stochastic rounding is keyed on it so
+    /// re-encoding after preemption reproduces the same codes.
     pub fn write_encoded(
         &mut self,
         layer: usize,
@@ -328,42 +494,31 @@ impl KvBlock {
         quant: &KvQuant,
         pos: usize,
     ) {
-        self.write(layer, slot, k, v);
-        let o = self.off(layer, slot);
+        let Some(enc) = &mut self.enc else {
+            self.write(layer, slot, k, v);
+            return;
+        };
+        let o = (layer * self.block_size + slot) * self.d_model;
         let d = self.d_model;
-        if let Some(enc) = &mut self.enc {
-            let g = enc.groups_per_row;
-            let so = (layer * self.block_size + slot) * g;
-            quant.encode_row(
-                &mut self.k[o..o + d],
-                &mut enc.k_codes[o..o + d],
-                &mut enc.k_scales[so..so + g],
-                layer,
-                pos,
-                0,
-            );
-            quant.encode_row(
-                &mut self.v[o..o + d],
-                &mut enc.v_codes[o..o + d],
-                &mut enc.v_scales[so..so + g],
-                layer,
-                pos,
-                1,
-            );
-        }
+        let g = enc.groups_per_row;
+        let so = (layer * self.block_size + slot) * g;
+        let k_mirror = if self.k.is_empty() { None } else { Some(&mut self.k[o..o + d]) };
+        quant.encode_row(k, k_mirror, &mut enc.k_codes, o, &mut enc.k_scales[so..so + g], layer, pos, 0);
+        let v_mirror = if self.v.is_empty() { None } else { Some(&mut self.v[o..o + d]) };
+        quant.encode_row(v, v_mirror, &mut enc.v_codes, o, &mut enc.v_scales[so..so + g], layer, pos, 1);
     }
 
     /// Copy another block's K/V contents into this one (copy-on-write),
     /// keeping this block's own `id`. Codes and scales copy along with the
-    /// mirror, so the fresh block stays canonical.
+    /// mirror (if any), so the fresh block stays canonical.
     pub fn copy_contents_from(&mut self, other: &KvBlock) {
         assert_eq!(self.k.len(), other.k.len(), "block geometry mismatch");
         assert_eq!(self.enc.is_some(), other.enc.is_some(), "block encoding mismatch");
         self.k.copy_from_slice(&other.k);
         self.v.copy_from_slice(&other.v);
         if let (Some(dst), Some(src)) = (&mut self.enc, &other.enc) {
-            dst.k_codes.copy_from_slice(&src.k_codes);
-            dst.v_codes.copy_from_slice(&src.v_codes);
+            dst.k_codes.clone_from(&src.k_codes);
+            dst.v_codes.clone_from(&src.v_codes);
             dst.k_scales.copy_from_slice(&src.k_scales);
             dst.v_scales.copy_from_slice(&src.v_scales);
         }
@@ -375,6 +530,13 @@ impl KvBlock {
 /// layer-by-layer with [`KvStorage::write`], reads any position `< len() +
 /// staged` during attention, and [`KvStorage::commit`]s once every layer
 /// of the wave's positions has been written.
+///
+/// Attention consumes rows through the fused hooks [`KvStorage::dot_k`]
+/// and [`KvStorage::axpy_v`] rather than raw row slices: the defaults
+/// reproduce the classic f32 loops exactly (same values, same
+/// accumulation order), and quantized paged storage overrides them to
+/// decode packed codes in place — so swapping storage never changes a
+/// single logit bit.
 pub trait KvStorage {
     /// Committed positions (== the next position to be decoded).
     fn len(&self) -> usize;
@@ -400,6 +562,29 @@ pub trait KvStorage {
 
     /// V row of `layer` at absolute position `pos` (committed or staged).
     fn v_row(&self, layer: usize, pos: usize) -> &[f32];
+
+    /// Fused attention-score hook: `Σ_e q[e] × K[head_off + e]` over the K
+    /// row of `layer` at `pos`, accumulated in f32 in ascending element
+    /// order. The default reads the f32 row; quantized paged storage
+    /// decodes packed codes directly (bit-identical by construction).
+    fn dot_k(&self, layer: usize, pos: usize, head_off: usize, q: &[f32]) -> f32 {
+        let kr = self.k_row(layer, pos);
+        let mut acc = 0.0f32;
+        for (e, &qv) in q.iter().enumerate() {
+            acc += qv * kr[head_off + e];
+        }
+        acc
+    }
+
+    /// Fused attention-value hook: `out[e] += w × V[head_off + e]` over
+    /// the V row of `layer` at `pos`, in ascending element order. Same
+    /// override contract as [`KvStorage::dot_k`].
+    fn axpy_v(&self, layer: usize, pos: usize, head_off: usize, w: f32, out: &mut [f32]) {
+        let vr = self.v_row(layer, pos);
+        for (e, o) in out.iter_mut().enumerate() {
+            *o += w * vr[head_off + e];
+        }
+    }
 
     /// Commit `n` staged positions: `len()` advances by `n`.
     fn commit(&mut self, n: usize);
@@ -633,6 +818,35 @@ impl KvStorage for PagedKv {
         self.blocks[pos / self.block_size].v_row(layer, pos % self.block_size)
     }
 
+    fn dot_k(&self, layer: usize, pos: usize, head_off: usize, q: &[f32]) -> f32 {
+        let b = &self.blocks[pos / self.block_size];
+        if !self.quant.keeps_mirror() {
+            if let Some(lut) = self.quant.lut() {
+                return b.dot_k_encoded(layer, pos % self.block_size, head_off, q, lut);
+            }
+        }
+        // mirror / passthrough: identical math + order to the trait default
+        let kr = b.k_row(layer, pos % self.block_size);
+        let mut acc = 0.0f32;
+        for (e, &qv) in q.iter().enumerate() {
+            acc += qv * kr[head_off + e];
+        }
+        acc
+    }
+
+    fn axpy_v(&self, layer: usize, pos: usize, head_off: usize, w: f32, out: &mut [f32]) {
+        let b = &self.blocks[pos / self.block_size];
+        if !self.quant.keeps_mirror() {
+            if let Some(lut) = self.quant.lut() {
+                return b.axpy_v_encoded(layer, pos % self.block_size, head_off, w, out, lut);
+            }
+        }
+        let vr = b.v_row(layer, pos % self.block_size);
+        for (e, o) in out.iter_mut().enumerate() {
+            *o += w * vr[head_off + e];
+        }
+    }
+
     fn commit(&mut self, n: usize) {
         self.len += n;
         debug_assert!(self.len <= self.blocks.len() * self.block_size);
@@ -781,7 +995,7 @@ mod tests {
     #[test]
     fn quantized_write_keeps_mirror_equal_to_decoded_codes() {
         let c = cfg();
-        let q = quant("fp8_e3m4");
+        let q = quant("fp8_e3m4").with_mirror();
         let codec = crate::quant::resolve("fp8_e3m4").unwrap().codec;
         let mut kv = PagedKv::new_quantized(&c, 4, 16, q);
         let k: Vec<f32> = (0..c.d_model).map(|i| (i as f32 - 30.0) * 0.11).collect();
@@ -805,6 +1019,65 @@ mod tests {
     }
 
     #[test]
+    fn fused_reads_are_bit_identical_to_the_mirror() {
+        // the PR-8 acceptance invariant at block granularity: a fused
+        // (codes-only) cache and a mirrored cache fed the same rows must
+        // agree bit-for-bit through dot_k and axpy_v — including scale
+        // groups straddled by the probe span (head_off 16 over group 32)
+        let c = cfg();
+        for label in ["fp8_e3m4", "fp6_e2m3", "fp4_e2m1_sr", "int4_sr", "bf16"] {
+            let mut fused = PagedKv::new_quantized(&c, 4, 16, quant(label));
+            let mut mirrored = PagedKv::new_quantized(&c, 4, 16, quant(label).with_mirror());
+            for pos in 0..5 {
+                let k: Vec<f32> = (0..c.d_model)
+                    .map(|i| ((i * 31 + pos * 7) % 23) as f32 * 0.063 - 0.7)
+                    .collect();
+                let v: Vec<f32> = (0..c.d_model)
+                    .map(|i| ((i * 17 + pos * 11) % 29) as f32 * 0.041 - 0.5)
+                    .collect();
+                for l in 0..c.n_layer {
+                    fused.write(l, pos, &k, &v);
+                    mirrored.write(l, pos, &k, &v);
+                }
+                fused.commit(1);
+                mirrored.commit(1);
+            }
+            let probe: Vec<f32> = (0..32).map(|i| (i as f32) * 0.2 - 3.0).collect();
+            for pos in 0..5 {
+                for l in 0..c.n_layer {
+                    for head_off in [0usize, 16, 32] {
+                        let a = fused.dot_k(l, pos, head_off, &probe);
+                        let b = mirrored.dot_k(l, pos, head_off, &probe);
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{label}: dot_k l{l} p{pos} off{head_off}: {a} vs {b}"
+                        );
+                        let mut oa = vec![0.1f32; 32];
+                        let mut ob = vec![0.1f32; 32];
+                        fused.axpy_v(l, pos, head_off, 0.37, &mut oa);
+                        mirrored.axpy_v(l, pos, head_off, 0.37, &mut ob);
+                        assert_eq!(oa, ob, "{label}: axpy_v l{l} p{pos} off{head_off}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "decode mirror")]
+    fn raw_row_reads_without_mirror_panic_clearly() {
+        let c = cfg();
+        let mut kv = PagedKv::new_quantized(&c, 4, 16, quant("fp8_e3m4"));
+        let row = vec![0.3f32; c.d_model];
+        for l in 0..c.n_layer {
+            kv.write(l, 0, &row, &row);
+        }
+        kv.commit(1);
+        let _ = kv.k_row(0, 0);
+    }
+
+    #[test]
     fn passthrough_quant_stores_raw_rows_without_codes() {
         let c = cfg();
         let mut kv = PagedKv::new_quantized(&c, 4, 16, KvQuant::passthrough(c.d_model));
@@ -825,8 +1098,9 @@ mod tests {
         let c = cfg();
         let k: Vec<f32> = (0..c.d_model).map(|i| ((i * 13) % 17) as f32 * 0.031 - 0.2).collect();
         let run = |seed: u64| {
-            let q =
-                KvQuant::new(crate::quant::resolve("int8_sr").unwrap(), c.d_model, seed).unwrap();
+            let q = KvQuant::new(crate::quant::resolve("int8_sr").unwrap(), c.d_model, seed)
+                .unwrap()
+                .with_mirror();
             let mut kv = PagedKv::new_quantized(&c, 4, 16, q);
             for pos in 0..3 {
                 for l in 0..c.n_layer {
@@ -856,9 +1130,29 @@ mod tests {
     }
 
     #[test]
+    fn packed_bytes_per_position_are_bit_true() {
+        // the satellite-(a) accounting fix: sub-byte codecs no longer
+        // charge a padded byte (or u16 slot) per code. Tiny config:
+        // n_layer 2, d_model 64, scale group 32.
+        let c = cfg();
+        assert_eq!(quant("fp8_e3m4").bytes_per_position(c.n_layer), 288);
+        assert_eq!(quant("int8_sr").bytes_per_position(c.n_layer), 288);
+        assert_eq!(quant("fp6_e3m2").bytes_per_position(c.n_layer), 224);
+        assert_eq!(quant("fp4_e2m1").bytes_per_position(c.n_layer), 160);
+        assert_eq!(quant("int4_sr").bytes_per_position(c.n_layer), 160);
+        // block resident bytes match the accounting exactly in fused mode…
+        let q4 = quant("fp4_e2m1");
+        let b = KvBlock::for_quant(0, c.n_layer, 4, c.d_model, &q4);
+        assert_eq!(b.bytes(), 4 * q4.bytes_per_position(c.n_layer));
+        // …and the opt-in mirror costs exactly the f32 rows on top
+        let m = KvBlock::for_quant(0, c.n_layer, 4, c.d_model, &q4.with_mirror());
+        assert_eq!(m.bytes(), b.bytes() + 2 * c.n_layer * 4 * c.d_model * 4);
+    }
+
+    #[test]
     fn copy_contents_from_carries_codes() {
         let c = cfg();
-        let q = quant("int8");
+        let q = quant("int8").with_mirror();
         let mut kv = PagedKv::new_quantized(&c, 4, 16, q.clone());
         let k: Vec<f32> = (0..c.d_model).map(|i| (i as f32) * 0.09 - 2.0).collect();
         for l in 0..c.n_layer {

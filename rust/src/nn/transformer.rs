@@ -6,8 +6,11 @@
 //! advances a sequence by N positions per wave and
 //! [`Transformer::decode_step`] is its single-token special case, both
 //! generic over [`KvStorage`] (contiguous [`DecodeCache`] or the paged
-//! [`crate::nn::kv::PagedKv`]). Training runs through the L2 HLO
-//! artifacts.
+//! [`crate::nn::kv::PagedKv`]). Attention reads go through the storage's
+//! fused hooks ([`KvStorage::dot_k`] / [`KvStorage::axpy_v`]), so a
+//! quantized paged cache dequantizes its packed codes inside the dot
+//! products — no f32 mirror — while raw storages keep the classic loops,
+//! bit-identically. Training runs through the L2 HLO artifacts.
 //!
 //! Weight layout matches `python/compile/model.py` exactly (see the
 //! manifest ordering in `runtime::artifact`), so HLO-trained parameters
@@ -551,31 +554,27 @@ impl Transformer {
                 cache.write(l, p0 + i, k.row(i), v.row(i));
             }
 
-            // causal attention: row i attends over cached positions 0..=p0+i
+            // causal attention: row i attends over cached positions
+            // 0..=p0+i through the storage's fused hooks — quantized paged
+            // caches dequantize packed codes in place, contiguous/mirrored
+            // caches run the classic f32 loops; both accumulate in the
+            // same element order, so the logits are storage-invariant
             let mut att = Mat::zeros(t, d);
             for i in 0..t {
                 let pos = p0 + i;
                 for head in 0..cfg.n_head {
+                    let qh = &q.row(i)[head * hd..(head + 1) * hd];
                     let mut scores = Mat::zeros(1, pos + 1);
                     for j in 0..=pos {
-                        let kr = cache.k_row(l, j);
-                        let mut acc = 0f32;
-                        for e in 0..hd {
-                            acc += q.at(i, head * hd + e) * kr[head * hd + e];
-                        }
-                        *scores.at_mut(0, j) = acc * scale;
+                        *scores.at_mut(0, j) = cache.dot_k(l, j, head * hd, qh) * scale;
                     }
                     softmax_rows(&mut scores, None);
-                    // j-outer so v_row resolves once per attended position;
-                    // per-element adds stay in ascending-j order, so the
-                    // sum is bit-identical to the e-outer form
+                    // j-outer so each attended position's row resolves (or
+                    // decodes) once; per-element adds stay in ascending-j
+                    // order, bit-identical to the e-outer form
                     let ar = &mut att.data[i * d + head * hd..i * d + (head + 1) * hd];
                     for j in 0..=pos {
-                        let vr = cache.v_row(l, j);
-                        let s = scores.at(0, j);
-                        for e in 0..hd {
-                            ar[e] += s * vr[head * hd + e];
-                        }
+                        cache.axpy_v(l, j, head * hd, scores.at(0, j), ar);
                     }
                 }
             }

@@ -16,17 +16,24 @@
 //!   `"int8_sr"`, …) to scheme instances; the CLI, the TOML config, and the
 //!   GWQS snapshot loader all parse labels here and nowhere else.
 //! * every consumer — train-time ŵ cast, MX consistency analysis, the
-//!   GWQS2 snapshot pack/unpack in `serve::weights` — calls
+//!   GWQS3 snapshot pack/unpack in `serve::weights` — calls
 //!   [`fake_quantize`] / the scheme codec directly (the PR-2 `mx::` shims
 //!   are deleted).
+//! * [`PackedCodes`] / [`DequantLut`] ([`packing`], PR 8) are the shared
+//!   sub-byte storage layer: codes are stored densely at
+//!   [`Codec::bits_per_elem`] bits (fp4 = 4 bits, not a padded byte), and
+//!   decoding is one 2^bits table lookup. The KV arena (`nn::kv`) and the
+//!   GWQS3 store both pack and dequantize through it.
 //!
 //! A new (format × rounding × geometry) scenario — e.g. stochastic-rounded
 //! INT8 direct quantized training, or an FP4 serving store — is one
 //! `Registry::register` call, not a four-site change.
 
+pub mod packing;
 pub mod registry;
 pub mod scheme;
 
+pub use packing::{packed_bytes, DequantLut, PackedCodes};
 pub use registry::{labels, resolve, Registry, DEFAULT_BLOCK};
 pub use scheme::{
     fake_quantize, po2_scale, tensor_seed, Axis, Codec, Geometry, QuantScheme, Quantized, Scheme,

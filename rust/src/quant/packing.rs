@@ -1,0 +1,330 @@
+//! Sub-byte code packing + table-driven dequantization.
+//!
+//! Every packed codec in the registry emits codes of
+//! [`Codec::bits_per_elem`] bits (4 for fp4/int4, 6 for fp6, 8 for fp8 …),
+//! but until PR 8 both the KV arena and the GWQS store spent a whole
+//! `u16` slot per code. This module is the shared fix:
+//!
+//! * [`PackedCodes`] — a dense LSB-first bitvector of fixed-width codes
+//!   (2–16 bits). Code `i` occupies bits `[i*bits, (i+1)*bits)` of the
+//!   byte buffer, so nothing is padded to byte boundaries: an fp4 KV row
+//!   of 64 elements is exactly 32 bytes, and a scale group may start and
+//!   end mid-byte. Random-access `get`/`set` (blocks write slots out of
+//!   order), `push` for streaming writers, and `iter_group` for the fused
+//!   group-wise kernels.
+//! * [`DequantLut`] — the full 2^bits code→value table of a codec, built
+//!   once per scheme so decoding a code on the serving hot path is one
+//!   bounds-checked index instead of `decode_fp` bit surgery. Entries are
+//!   exactly [`Codec::decode`] (`f64`-bit-identical, property-tested in
+//!   `tests/property_suite.rs`), so LUT-driven paths cannot drift from
+//!   the canonical codec.
+//!
+//! Consumers: `nn::kv` (packed KV rows + fused dequant-dot),
+//! `serve::weights` (GWQS3 packed tensor payloads + dequantize-on-load).
+
+use crate::quant::scheme::Codec;
+use anyhow::{bail, Result};
+
+/// Bytes a dense packing of `len` codes of `bits` bits each occupies.
+#[inline]
+pub fn packed_bytes(bits: u32, len: usize) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// A dense LSB-first bitvector of fixed-width (2–16 bit) codes.
+///
+/// Layout invariant: code `i` lives in bits `[i*bits, (i+1)*bits)` of
+/// `bytes` (bit `b` = bit `b % 8` of `bytes[b / 8]`), and every bit past
+/// `len * bits` is zero — so equal contents compare equal byte-for-byte
+/// and the serialized form is canonical.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedCodes {
+    bits: u32,
+    len: usize,
+    bytes: Vec<u8>,
+}
+
+impl PackedCodes {
+    /// An empty vector of `bits`-wide codes. Panics outside 2–16 bits
+    /// (codecs narrower or wider than that don't exist in the registry).
+    pub fn new(bits: u32) -> PackedCodes {
+        assert!((2..=16).contains(&bits), "code width {bits} outside the supported 2-16 bits");
+        PackedCodes { bits, len: 0, bytes: Vec::new() }
+    }
+
+    /// `len` zero codes (the preallocated-block shape: slots are then
+    /// written in arbitrary order via [`PackedCodes::set`]).
+    pub fn with_len(bits: u32, len: usize) -> PackedCodes {
+        let mut pc = PackedCodes::new(bits);
+        pc.len = len;
+        pc.bytes = vec![0u8; packed_bytes(bits, len)];
+        pc
+    }
+
+    /// `len` zero codes at `codec`'s width. Panics for unpacked codecs
+    /// (`f32` passthrough has no code stream).
+    pub fn for_codec(codec: &Codec, len: usize) -> PackedCodes {
+        assert!(codec.is_packed(), "{codec:?} is not a packed codec");
+        PackedCodes::with_len(codec.bits_per_elem(), len)
+    }
+
+    /// Code width in bits.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Number of codes held.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes the packed buffer occupies (the true storage cost).
+    pub fn byte_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The raw packed buffer (for serialization).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Rebuild from a serialized buffer. Rejects wrong buffer lengths and
+    /// non-zero bits past `len * bits` (the canonical-form invariant that
+    /// makes `PartialEq` meaningful), so a corrupt snapshot fails here
+    /// instead of aliasing a different code stream.
+    pub fn from_bytes(bits: u32, len: usize, bytes: Vec<u8>) -> Result<PackedCodes> {
+        if !(2..=16).contains(&bits) {
+            bail!("packed code width {bits} outside the supported 2-16 bits");
+        }
+        let want = packed_bytes(bits, len);
+        if bytes.len() != want {
+            bail!("packed buffer is {} bytes, {len} x {bits}-bit codes need {want}", bytes.len());
+        }
+        let used = len * bits as usize;
+        if used % 8 != 0 {
+            let tail_mask = !((1u8 << (used % 8)) - 1);
+            if bytes[used / 8] & tail_mask != 0 {
+                bail!("packed buffer has non-zero bits past the last code");
+            }
+        }
+        Ok(PackedCodes { bits, len, bytes })
+    }
+
+    #[inline]
+    fn mask(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// The `i`-th code.
+    #[inline]
+    pub fn get(&self, i: usize) -> u16 {
+        debug_assert!(i < self.len, "code index {i} out of range {}", self.len);
+        let bit = i * self.bits as usize;
+        let (byte, shift) = (bit / 8, bit % 8);
+        // a 2-16-bit code shifted by <= 7 bits spans at most 3 bytes
+        let mut acc = 0u32;
+        for (k, &b) in self.bytes[byte..self.bytes.len().min(byte + 3)].iter().enumerate() {
+            acc |= (b as u32) << (8 * k);
+        }
+        ((acc >> shift) & self.mask()) as u16
+    }
+
+    /// Overwrite the `i`-th code. Panics if `code` is wider than the
+    /// configured width (a codec/width mismatch is a bug, not data).
+    #[inline]
+    pub fn set(&mut self, i: usize, code: u16) {
+        assert!(i < self.len, "code index {i} out of range {}", self.len);
+        let mask = self.mask();
+        assert!(code as u32 & !mask == 0, "code {code:#x} does not fit in {} bits", self.bits);
+        let bit = i * self.bits as usize;
+        let (byte, shift) = (bit / 8, bit % 8);
+        let end = self.bytes.len().min(byte + 3);
+        let mut acc = 0u32;
+        for (k, &b) in self.bytes[byte..end].iter().enumerate() {
+            acc |= (b as u32) << (8 * k);
+        }
+        acc = (acc & !(mask << shift)) | ((code as u32) << shift);
+        for (k, b) in self.bytes[byte..end].iter_mut().enumerate() {
+            *b = (acc >> (8 * k)) as u8;
+        }
+    }
+
+    /// Append one code.
+    pub fn push(&mut self, code: u16) {
+        self.len += 1;
+        self.bytes.resize(packed_bytes(self.bits, self.len), 0);
+        self.set(self.len - 1, code);
+    }
+
+    /// All codes in order.
+    pub fn iter(&self) -> impl Iterator<Item = u16> + '_ {
+        self.iter_group(0, self.len)
+    }
+
+    /// Codes `[start, start + n)` — one scale group of a KV row, or any
+    /// other contiguous span (group boundaries need not be byte-aligned).
+    pub fn iter_group(&self, start: usize, n: usize) -> impl Iterator<Item = u16> + '_ {
+        assert!(
+            start + n <= self.len,
+            "group [{start}, {}) out of range {}",
+            start + n,
+            self.len
+        );
+        (start..start + n).map(move |i| self.get(i))
+    }
+}
+
+/// The full `2^bits` code→value table of a packed codec: `table[c] ==
+/// codec.decode(c)` for every representable code pattern (including the
+/// inf/NaN patterns of saturating FP formats — decode is total).
+#[derive(Debug, Clone)]
+pub struct DequantLut {
+    bits: u32,
+    table: Vec<f64>,
+}
+
+impl DequantLut {
+    /// Build the table for `codec`, or `None` for unpacked codecs (`f32`
+    /// passthrough decodes nothing).
+    pub fn for_codec(codec: &Codec) -> Option<DequantLut> {
+        if !codec.is_packed() {
+            return None;
+        }
+        let bits = codec.bits_per_elem();
+        let table = (0..1usize << bits).map(|c| codec.decode(c as u16)).collect();
+        Some(DequantLut { bits, table })
+    }
+
+    /// Decode one code: a single table index on the hot path.
+    #[inline]
+    pub fn decode(&self, code: u16) -> f64 {
+        self.table[code as usize]
+    }
+
+    /// Code width the table covers.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Table size (`2^bits`).
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_straddles_byte_boundaries() {
+        // 6-bit codes: code 1 occupies bits 6..12, straddling bytes 0/1
+        let mut pc = PackedCodes::new(6);
+        let want = [0x3Fu16, 0x2A, 0x15, 0x01, 0x3E];
+        for &c in &want {
+            pc.push(c);
+        }
+        assert_eq!(pc.len(), 5);
+        assert_eq!(pc.byte_len(), packed_bytes(6, 5)); // 30 bits -> 4 bytes
+        assert_eq!(pc.byte_len(), 4);
+        for (i, &c) in want.iter().enumerate() {
+            assert_eq!(pc.get(i), c, "code {i}");
+        }
+        assert_eq!(pc.iter().collect::<Vec<_>>(), want);
+    }
+
+    #[test]
+    fn random_access_set_matches_push_order() {
+        // write slots out of order (the KvBlock pattern) and compare to a
+        // sequential build of the same contents
+        let mut by_set = PackedCodes::with_len(4, 9);
+        let codes = [3u16, 7, 1, 15, 0, 8, 12, 5, 9];
+        for &i in &[8usize, 0, 4, 2, 6, 1, 7, 3, 5] {
+            by_set.set(i, codes[i]);
+        }
+        let mut by_push = PackedCodes::new(4);
+        for &c in &codes {
+            by_push.push(c);
+        }
+        assert_eq!(by_set, by_push);
+        // overwrite in place never disturbs the neighbours
+        by_set.set(4, 2);
+        assert_eq!(by_set.get(3), 15);
+        assert_eq!(by_set.get(4), 2);
+        assert_eq!(by_set.get(5), 8);
+    }
+
+    #[test]
+    fn iter_group_walks_non_byte_aligned_groups() {
+        // 3 groups of 3 codes x 6 bits = 18 bits/group: every group
+        // boundary lands mid-byte
+        let mut pc = PackedCodes::new(6);
+        for c in 0..9u16 {
+            pc.push(c * 7 % 64);
+        }
+        for gi in 0..3 {
+            let got: Vec<u16> = pc.iter_group(gi * 3, 3).collect();
+            let want: Vec<u16> = (gi as u16 * 3..gi as u16 * 3 + 3).map(|c| c * 7 % 64).collect();
+            assert_eq!(got, want, "group {gi}");
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip_and_corruption_rejected() {
+        let mut pc = PackedCodes::new(4);
+        for c in [0xFu16, 0x1, 0x7] {
+            pc.push(c);
+        }
+        let back = PackedCodes::from_bytes(4, 3, pc.as_bytes().to_vec()).unwrap();
+        assert_eq!(back, pc);
+        // wrong length
+        assert!(PackedCodes::from_bytes(4, 3, vec![0u8; 3]).is_err());
+        // non-zero tail bits past the last code
+        let mut dirty = pc.as_bytes().to_vec();
+        *dirty.last_mut().unwrap() |= 0xF0;
+        let err = PackedCodes::from_bytes(4, 3, dirty).unwrap_err().to_string();
+        assert!(err.contains("past the last code"), "{err}");
+        // absurd widths
+        assert!(PackedCodes::from_bytes(1, 3, vec![0u8; 1]).is_err());
+        assert!(PackedCodes::from_bytes(17, 3, vec![0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn sixteen_bit_codes_degenerate_to_plain_u16() {
+        let mut pc = PackedCodes::new(16);
+        for c in [0u16, 1, 0xFFFF, 0xBEEF] {
+            pc.push(c);
+        }
+        assert_eq!(pc.byte_len(), 8);
+        assert_eq!(pc.iter().collect::<Vec<_>>(), vec![0, 1, 0xFFFF, 0xBEEF]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn overwide_code_is_a_bug_not_data() {
+        let mut pc = PackedCodes::with_len(4, 2);
+        pc.set(0, 0x10);
+    }
+
+    #[test]
+    fn lut_exists_exactly_for_packed_codecs() {
+        let fp4 = crate::quant::resolve("fp4_e2m1").unwrap();
+        let lut = DequantLut::for_codec(&fp4.codec).expect("fp4 is packed");
+        assert_eq!(lut.len(), 16);
+        assert_eq!(lut.bits(), 4);
+        // spot-check against the canonical decoder, bit-for-bit
+        for c in 0..16u16 {
+            assert_eq!(lut.decode(c).to_bits(), fp4.codec.decode(c).to_bits(), "code {c}");
+        }
+        let f32s = crate::quant::resolve("f32").unwrap();
+        assert!(DequantLut::for_codec(&f32s.codec).is_none());
+    }
+}

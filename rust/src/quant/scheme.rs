@@ -89,6 +89,14 @@ impl Codec {
         }
     }
 
+    /// Bits one element code occupies in a dense packing — the width
+    /// [`crate::quant::PackedCodes`] stores codes at (fp4 → 4 bits, not a
+    /// padded byte). Identical to [`Codec::total_bits`]; named for the
+    /// storage question it answers.
+    pub fn bits_per_elem(&self) -> u32 {
+        self.total_bits()
+    }
+
     /// True iff this codec bit-packs into u8/u16 element codes.
     pub fn is_packed(&self) -> bool {
         !matches!(self, Codec::F32)

@@ -24,6 +24,7 @@
 //!    `Transformer::prefill_chunk` and sample where prefill completed.
 
 use crate::config::schema::ModelConfig;
+use crate::nn::kv::KvQuant;
 use crate::nn::transformer::{Params, Transformer};
 use crate::quant::{Geometry, QuantScheme, Scheme};
 use crate::serve::batcher::{ActiveSeq, Scheduler};
@@ -64,6 +65,13 @@ pub struct EngineConfig {
     /// Seed for the KV scheme's stochastic-rounding streams (keyed per
     /// layer/position, so re-prefill and prefix reuse stay deterministic).
     pub kv_seed: u64,
+    /// Keep an f32 decode mirror next to the packed codes (CLI
+    /// `--kv-mirror`). Off by default: quantized blocks are read through
+    /// the fused dequant-dot kernels, which are bit-identical to the
+    /// mirror — this debug mode exists to *check* that, at the cost of the
+    /// full f32 row storage on top of the codes. No effect on `"f32"`
+    /// passthrough (which is its own mirror).
+    pub kv_mirror: bool,
     /// Record per-request trace timelines (enqueue → admit → prefill /
     /// decode waves → preempt → retire) into the stats' trace buffer —
     /// exported as Chrome trace-event JSONL via `serve --trace-out`.
@@ -83,6 +91,7 @@ impl Default for EngineConfig {
             capacity: usize::MAX,
             kv_scheme: crate::quant::resolve("f32").expect("f32 scheme is registered"),
             kv_seed: 0x6B76_5EED,
+            kv_mirror: false,
             trace: false,
         }
     }
@@ -159,14 +168,17 @@ impl Engine {
         cfg.validate_for(&model_cfg).expect("invalid engine config");
         let model = Transformer::new(model_cfg.clone());
         let capacity = cfg.capacity.min(model_cfg.seq_len);
-        let alloc = BlockAllocator::with_scheme(
+        let mut quant = KvQuant::new(cfg.kv_scheme.clone(), model_cfg.d_model, cfg.kv_seed)
+            .expect("validate_for accepted the kv scheme");
+        if cfg.kv_mirror {
+            quant = quant.with_mirror();
+        }
+        let alloc = BlockAllocator::with_quant(
             &model_cfg,
             cfg.resolved_blocks(capacity),
             cfg.kv_block,
-            cfg.kv_scheme.clone(),
-            cfg.kv_seed,
-        )
-        .expect("validate_for accepted the kv scheme");
+            quant,
+        );
         let sched = Scheduler::new(cfg.max_batch, cfg.prefill_chunk, cfg.prefix_cache);
         let mut stats = ServeStats::new();
         stats.set_kv_store(
@@ -797,6 +809,41 @@ mod tests {
             out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(), run(), "int8_sr KV serving must be reproducible");
+    }
+
+    #[test]
+    fn mirror_mode_outputs_match_fused_exactly() {
+        // the f32 decode mirror is a debug view of the same packed codes:
+        // flipping it on must not change a single sampled token, even for
+        // a 4-bit stochastic-rounding store
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(9);
+        let run = |mirror: bool| {
+            let mut e = Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 2,
+                    kv_block: 8,
+                    prefill_chunk: 4,
+                    threads: 1,
+                    kv_scheme: crate::quant::resolve("fp4_e2m1_sr").unwrap(),
+                    kv_mirror: mirror,
+                    ..EngineConfig::default()
+                },
+            );
+            // codes + scales only; the mirror never inflates this number
+            assert_eq!(e.kv_bytes_per_position(), 160, "fp4 tiny-config bytes per position");
+            for id in 0..3u64 {
+                let prompt: Vec<usize> = (0..7).map(|k| (id as usize * 13 + k * 3) % 50).collect();
+                e.enqueue(GenRequest::greedy(id, prompt, 5)).unwrap();
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true), "fused reads must be bit-identical to the mirror");
     }
 
     #[test]

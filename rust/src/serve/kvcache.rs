@@ -10,10 +10,14 @@
 //!   `Err` (not panics) to the caller.
 //! * **Quantized arenas** — the allocator owns the [`KvQuant`] row-storage
 //!   policy: every block it hands out is shaped for the chosen
-//!   `quant::Scheme` (packed codes + po2 scales + f32 decode mirror, or
-//!   raw f32 for the `"f32"` passthrough), and every [`PagedKv`] it
-//!   creates writes through that policy. [`BlockAllocator::bytes_per_position`]
-//!   reports the encoded bytes/position of the scheme.
+//!   `quant::Scheme` (densely packed sub-byte codes + po2 scales, read
+//!   through the fused dequant kernels; or raw f32 for the `"f32"`
+//!   passthrough), and every [`PagedKv`] it creates writes through that
+//!   policy. The resident footprint IS the packed one —
+//!   [`BlockAllocator::bytes`] equals [`BlockAllocator::encoded_bytes`]
+//!   unless the policy opted into the f32 debug mirror
+//!   ([`KvQuant::with_mirror`]). [`BlockAllocator::bytes_per_position`]
+//!   reports the bit-true encoded bytes/position of the scheme.
 //! * **Copy-on-write append** — a sequence whose next write lands in a
 //!   *shared* block (adopted from the prefix index) gets an exclusive
 //!   copy first ([`BlockAllocator::reserve`]); the shared original stays
@@ -148,7 +152,10 @@ impl BlockAllocator {
         Ok(BlockAllocator::with_quant(cfg, n_blocks, block_size, quant))
     }
 
-    fn with_quant(
+    /// An arena over an explicit row-storage policy — what
+    /// [`crate::serve::EngineConfig::kv_mirror`] routes through to keep the
+    /// f32 debug mirror next to the packed codes.
+    pub fn with_quant(
         cfg: &ModelConfig,
         n_blocks: usize,
         block_size: usize,
@@ -216,15 +223,16 @@ impl BlockAllocator {
         self.high_water
     }
 
-    /// Resident bytes of the full arena budget (for quantized schemes this
-    /// includes the emulation's f32 decode mirror; see
-    /// [`BlockAllocator::encoded_bytes`] for the deployment number).
+    /// Resident bytes of the full arena budget. In the fused default this
+    /// matches [`BlockAllocator::encoded_bytes`] — packed codes + scales
+    /// are all a quantized block keeps; only a [`KvQuant::with_mirror`]
+    /// policy adds the f32 decode mirror on top.
     pub fn bytes(&self) -> usize {
         self.block_bytes * self.total
     }
 
     /// Encoded bytes of the full arena budget under the chosen scheme —
-    /// what a deployment layout storing only codes + scales would cost.
+    /// the deployment layout storing only codes + scales.
     pub fn encoded_bytes(&self) -> usize {
         self.bytes_per_position() * self.block_size * self.total
     }
@@ -783,9 +791,11 @@ mod tests {
         let mut a = BlockAllocator::with_scheme(&c, 4, 4, scheme, 11).unwrap();
         assert_eq!(a.kv_store_label(), "fp8_e3m4");
         assert!(a.bytes_per_position() < 2 * c.n_layer * c.d_model * 4);
-        assert!(a.encoded_bytes() < 4 * 4 * 2 * c.n_layer * c.d_model * 4);
+        // fused default: what's resident IS the encoded layout, no mirror
+        assert_eq!(a.bytes(), a.encoded_bytes());
         let b = a.try_alloc().unwrap();
         assert!(b.is_encoded());
+        assert!(!b.has_mirror());
         let mut kv = a.new_seq(&c, 64);
         assert!(kv.kv_quant().is_quantizing());
         assert!(a.reserve(&mut kv, 2));
@@ -794,10 +804,28 @@ mod tests {
             kv.write(l, 0, &row, &row);
         }
         kv.commit(1);
-        assert!(kv.k_row(0, 0).iter().zip(&row).any(|(x, y)| x != y), "rows must quantize");
+        // no f32 rows to read: reconstruct each element through the fused
+        // kernel (a one-hot dot) and check the row really quantized
+        let decoded: Vec<f32> = (0..c.d_model).map(|e| kv.dot_k(0, 0, e, &[1.0])).collect();
+        assert!(decoded.iter().zip(&row).any(|(x, y)| x != y), "rows must quantize");
         a.release_chain(kv.take_blocks()).unwrap();
         a.release(b).unwrap();
         assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn mirror_arena_costs_more_than_fused() {
+        let c = cfg();
+        let scheme = crate::quant::resolve("fp8_e3m4").unwrap();
+        let fused = BlockAllocator::with_scheme(&c, 4, 4, scheme.clone(), 11).unwrap();
+        let quant = KvQuant::new(scheme, c.d_model, 11).unwrap().with_mirror();
+        let mirrored = BlockAllocator::with_quant(&c, 4, 4, quant);
+        assert_eq!(mirrored.encoded_bytes(), fused.encoded_bytes());
+        assert_eq!(
+            mirrored.bytes(),
+            fused.bytes() + 4 * 2 * c.n_layer * 4 * c.d_model * 4,
+            "mirror adds exactly the f32 rows"
+        );
     }
 
     #[test]

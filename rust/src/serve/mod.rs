@@ -5,10 +5,14 @@
 //!
 //! 1. **snapshot** — [`weights::WeightStore`] captures a checkpoint's linear
 //!    weights as square-blockwise (32×32) MX groups: one power-of-two scale
-//!    per block plus bit-packed element codes in the codec of a
-//!    [`crate::quant::Scheme`] resolved by label (BF16 / FP8 / FP6 / FP4 /
-//!    INT8 / INT4, RNE or stochastic). Dequantize-on-load reproduces the
-//!    scheme's fake-quant bit-for-bit, so serving inherits the Table C.1
+//!    per block plus element codes packed at their true sub-byte width
+//!    ([`crate::quant::PackedCodes`] — fp4 codes cost 4 bits, not a padded
+//!    byte) in the codec of a [`crate::quant::Scheme`] resolved by label
+//!    (BF16 / FP8 / FP6 / FP4 / INT8 / INT4, RNE or stochastic). The
+//!    on-disk format is **GWQS3** (GWQS1/GWQS2 snapshots still load);
+//!    dequantize-on-load walks the packed codes through a per-codec
+//!    2^bits [`crate::quant::DequantLut`] and reproduces the scheme's
+//!    fake-quant bit-for-bit, so serving inherits the Table C.1
 //!    graceful-degradation claims of the training-time grouping.
 //! 2. **decode** — `nn::transformer::prefill_chunk` advances a sequence by
 //!    N positions per wave (`decode_step` is its 1-token case) against a
@@ -22,10 +26,15 @@
 //!    chain) so identical prompt prefixes across requests share physical
 //!    blocks *and* skip their prefill compute. The arena also owns the
 //!    **KV row-storage scheme** ([`crate::nn::kv::KvQuant`], CLI
-//!    `--kv-store`): blocks can hold K/V rows as packed codes +
-//!    per-group po2 scales through any blockwise `quant::Scheme`
-//!    (`"fp8_e3m4"`, `"int8_sr"`, …) with a resident f32 decode mirror,
-//!    or raw f32 (`"f32"`, bit-identical to pre-quantization serving).
+//!    `--kv-store`): blocks can hold K/V rows as sub-byte
+//!    [`crate::quant::PackedCodes`] + per-group po2 scales through any
+//!    blockwise `quant::Scheme` (`"fp8_e3m4"`, `"fp4_e2m1_sr"`, …) —
+//!    attention reads them through fused dequant-dot kernels
+//!    (`dot_k`/`axpy_v`, no f32 materialization; fp4 is 160 B/position
+//!    on the tiny config vs 1024 B raw). An opt-in f32 decode mirror
+//!    (`--kv-mirror`, [`crate::nn::kv::KvQuant::with_mirror`]) exists as
+//!    a debug mode asserted bit-identical to the fused path; raw f32
+//!    (`"f32"`) stays bit-identical to pre-quantization serving.
 //! 4. **schedule** — [`batcher::Scheduler`] continuously batches with a
 //!    block budget: admission waits on free blocks (not slots), prefill
 //!    runs in chunks interleaved with decode waves, and when the arena

@@ -57,8 +57,10 @@ pub struct ServeStats {
     /// Encoded bytes one cached position costs under the KV scheme
     /// (packed codes + per-group scales, or raw f32 for passthrough).
     pub kv_bytes_per_position: usize,
-    /// Resident bytes of the arena budget (includes the emulation's f32
-    /// decode mirror for quantized schemes).
+    /// Resident bytes of the arena budget. Equal to
+    /// [`ServeStats::kv_arena_encoded_bytes`] under the default fused
+    /// decode; larger only when the engine runs with `kv_mirror` (the f32
+    /// debug mirror is then resident alongside the packed codes).
     pub kv_arena_bytes: usize,
     /// Encoded bytes of the arena budget — what a deployment layout
     /// storing only codes + scales would cost.

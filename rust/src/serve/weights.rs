@@ -1,10 +1,12 @@
 //! Low-precision MX weight store for serving: linear weights are snapshotted
 //! as square-blockwise (default 32×32) groups with one power-of-two scale
-//! per block and *bit-packed element codes* in the target scheme's codec
-//! (BF16 → 2 bytes, FP8/FP6/FP4/INT8/INT4 → 1 byte per element).
-//! Dequantization happens per block on load, reproducing exactly what the
-//! scheme's [`QuantScheme::quantize`] would emit — so the serving path
-//! inherits the Table C.1 fidelity claims of the training-time grouping.
+//! per block and *bit-packed element codes* at the codec's true width
+//! ([`crate::quant::PackedCodes`]: BF16 → 16 bits, FP8/INT8 → 8, FP6 → 6,
+//! FP4/INT4 → 4 bits per element — no byte padding). Dequantization
+//! happens per block on load through the codec's
+//! [`crate::quant::DequantLut`], reproducing exactly what the scheme's
+//! [`QuantScheme::quantize`] would emit — so the serving path inherits the
+//! Table C.1 fidelity claims of the training-time grouping.
 //!
 //! Which quantization applies is described by a [`crate::quant::Scheme`]
 //! resolved from a label through [`crate::quant::Registry`] — the same
@@ -15,10 +17,10 @@
 //! Non-linear tensors (embeddings, norms) stay f32: they are a small
 //! fraction of the parameters and the paper's claim covers the PQT linears.
 //!
-//! On-disk format (`GWQS2`), little-endian:
+//! On-disk format (`GWQS3`), little-endian:
 //!
 //! ```text
-//! magic "GWQS2\n"
+//! magic "GWQS3\n"
 //! u32 label_len | label bytes                 (canonical scheme label)
 //! u8 codec tag: 0 = f32 | 1 = fp | 2 = int
 //!   fp:  u8 exp_bits | u8 man_bits | u8 has_inf_nan | u8 saturating
@@ -30,44 +32,47 @@
 //! u32 n_tensors
 //! per tensor:
 //!   u32 name_len | name | u64 rows | u64 cols
-//!   u8 kind: 0 = raw f32, 1 = u8 codes, 2 = u16 codes
-//!   raw:   rows*cols × f32
-//!   coded: u64 n_scales | n_scales × f32 | rows*cols × (u8|u16)
+//!   u8 kind: 0 = raw f32, 3 = packed codes
+//!   raw:    rows*cols × f32
+//!   packed: u64 n_scales | n_scales × f32
+//!           u32 bits | u64 n_codes | ⌈n_codes·bits/8⌉ bytes (LSB-first)
 //! ```
 //!
-//! The previous `GWQS1` layout (PR 1: FP-only, RNE, square-blockwise) is
-//! still readable; [`WeightStore::save`] always writes GWQS2.
+//! The previous layouts stay readable: `GWQS2` (PR 4: same header, element
+//! codes padded to one/two bytes — kinds 1/2) and `GWQS1` (PR 1: FP-only,
+//! RNE, square-blockwise). Legacy code payloads are re-packed to the dense
+//! sub-byte layout on load, so in memory every store looks like GWQS3;
+//! [`WeightStore::save`] always writes GWQS3.
 
 use crate::config::schema::{Arch, ModelConfig};
 use crate::nn::tensor::Mat;
 use crate::nn::transformer::Params;
 use crate::numerics::fpformat::{FpFormat, Overflow, Rounding};
-use crate::quant::{Codec, Geometry, QuantScheme, Scheme};
+use crate::quant::{packed_bytes, Codec, DequantLut, Geometry, PackedCodes, QuantScheme, Scheme};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+const MAGIC_V3: &[u8; 6] = b"GWQS3\n";
 const MAGIC_V2: &[u8; 6] = b"GWQS2\n";
 const MAGIC_V1: &[u8; 6] = b"GWQS1\n";
 
-/// Packed element payload of one stored tensor.
+/// Element payload of one stored tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Codes {
     /// Unquantized master weights.
     F32(Vec<f32>),
-    /// One byte per element (codecs with ≤ 8 total bits).
-    U8(Vec<u8>),
-    /// Two bytes per element (BF16 and other 9–16 bit codecs).
-    U16(Vec<u16>),
+    /// Element codes packed densely at the codec's true bit width (GWQS3;
+    /// GWQS1/2 byte-padded payloads are re-packed to this on load).
+    Packed(PackedCodes),
 }
 
 impl Codes {
     pub fn len(&self) -> usize {
         match self {
             Codes::F32(v) => v.len(),
-            Codes::U8(v) => v.len(),
-            Codes::U16(v) => v.len(),
+            Codes::Packed(pc) => pc.len(),
         }
     }
 
@@ -75,12 +80,12 @@ impl Codes {
         self.len() == 0
     }
 
-    /// Payload bytes (the compression the store actually achieves).
+    /// Payload bytes (the compression the store actually achieves — true
+    /// packed bytes, not a padded byte per code).
     pub fn bytes(&self) -> usize {
         match self {
             Codes::F32(v) => v.len() * 4,
-            Codes::U8(v) => v.len(),
-            Codes::U16(v) => v.len() * 2,
+            Codes::Packed(pc) => pc.byte_len(),
         }
     }
 }
@@ -220,7 +225,7 @@ impl WeightStore {
             }
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC_V2)?;
+        f.write_all(MAGIC_V3)?;
         write_str(&mut f, self.scheme.label())?;
         match &self.scheme.codec {
             Codec::F32 => f.write_all(&[0u8])?,
@@ -274,17 +279,12 @@ impl WeightStore {
                         f.write_all(&x.to_le_bytes())?;
                     }
                 }
-                Codes::U8(v) => {
-                    f.write_all(&[1u8])?;
+                Codes::Packed(pc) => {
+                    f.write_all(&[3u8])?;
                     write_scales(&mut f, &st.scales)?;
-                    f.write_all(v)?;
-                }
-                Codes::U16(v) => {
-                    f.write_all(&[2u8])?;
-                    write_scales(&mut f, &st.scales)?;
-                    for x in v {
-                        f.write_all(&x.to_le_bytes())?;
-                    }
+                    f.write_all(&pc.bits().to_le_bytes())?;
+                    f.write_all(&(pc.len() as u64).to_le_bytes())?;
+                    f.write_all(pc.as_bytes())?;
                 }
             }
         }
@@ -299,9 +299,11 @@ impl WeightStore {
         let mut magic = [0u8; 6];
         f.read_exact(&mut magic)?;
         match &magic {
-            m if m == MAGIC_V2 => load_v2(&mut f),
+            // V3 and V2 share the header; they differ only in the tensor
+            // payload kinds read_tensors accepts
+            m if m == MAGIC_V3 || m == MAGIC_V2 => load_v2(&mut f),
             m if m == MAGIC_V1 => load_v1(&mut f),
-            _ => bail!("bad weight-store magic (not a GWQS1/GWQS2 file)"),
+            _ => bail!("bad weight-store magic (not a GWQS1/GWQS2/GWQS3 file)"),
         }
     }
 }
@@ -382,26 +384,50 @@ fn read_tensors(
         let cols = read_u64(f)? as usize;
         f.read_exact(&mut tag)?;
         let numel = rows * cols;
+        if tag[0] != 0 && !scheme.codec.is_packed() {
+            bail!("tensor '{name}': coded payload in an f32 store");
+        }
         let (scales, codes) = match tag[0] {
             0 => (Vec::new(), Codes::F32(read_f32s(f, numel)?)),
+            // GWQS1/2 legacy payloads: one or two bytes per code,
+            // re-packed to the dense layout on load
             1 => {
                 let scales = read_scales(f)?;
                 let mut bytes = vec![0u8; numel];
                 f.read_exact(&mut bytes)?;
-                (scales, Codes::U8(bytes))
+                (scales, repack_legacy(bytes.iter().map(|&b| b as u16), numel, &scheme.codec)?)
             }
             2 => {
                 let scales = read_scales(f)?;
                 let mut bytes = vec![0u8; numel * 2];
                 f.read_exact(&mut bytes)?;
-                let v = bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
-                (scales, Codes::U16(v))
+                let it = bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]]));
+                (scales, repack_legacy(it, numel, &scheme.codec)?)
+            }
+            // GWQS3: codes already densely packed on disk
+            3 => {
+                let scales = read_scales(f)?;
+                let bits = read_u32(f)?;
+                if bits != scheme.codec.bits_per_elem() {
+                    bail!(
+                        "tensor '{name}': packed at {bits} bits but scheme '{}' codes \
+                         are {} bits wide",
+                        scheme.label(),
+                        scheme.codec.bits_per_elem()
+                    );
+                }
+                let n_codes = read_u64(f)? as usize;
+                if n_codes != numel {
+                    bail!("tensor '{name}': {n_codes} packed codes for {numel} elements");
+                }
+                let mut bytes = vec![0u8; packed_bytes(bits, n_codes)];
+                f.read_exact(&mut bytes)?;
+                let pc = PackedCodes::from_bytes(bits, n_codes, bytes)
+                    .with_context(|| format!("tensor '{name}': corrupt packed payload"))?;
+                (scales, Codes::Packed(pc))
             }
             other => bail!("unknown tensor kind {other} in weight store"),
         };
-        if !scheme.codec.is_packed() && !matches!(codes, Codes::F32(_)) {
-            bail!("tensor '{name}': coded payload in an f32 store");
-        }
         let expect_scales = if matches!(codes, Codes::F32(_)) {
             0
         } else {
@@ -415,8 +441,10 @@ fn read_tensors(
     Ok(tensors)
 }
 
-/// GWQS2: self-describing scheme descriptor, label cross-checked against
-/// the registry when the label is a registered one.
+/// GWQS2/GWQS3 (shared header): self-describing scheme descriptor, label
+/// cross-checked against the registry when the label is a registered one.
+/// Tensor payloads may be byte-padded (V2 kinds 1/2, re-packed on load) or
+/// densely packed (V3 kind 3).
 fn load_v2(f: &mut impl Read) -> Result<WeightStore> {
     let label = read_str(f)?;
     let codec = read_codec(f)?;
@@ -503,51 +531,65 @@ fn load_v1(f: &mut impl Read) -> Result<WeightStore> {
     Ok(WeightStore { cfg, scheme, tensors })
 }
 
-/// Quantize + bit-pack one matrix through the scheme's codec.
+/// Quantize + bit-pack one matrix through the scheme's codec: element
+/// codes land densely at [`Codec::bits_per_elem`] bits each.
 fn pack_matrix(m: &Mat, scheme: &Scheme, seed: u64) -> StoredTensor {
     let block = scheme.block().expect("packed schemes are square-blockwise");
     let w64: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
     let q = scheme.quantize(&w64, m.rows, m.cols, seed);
     let grid_c = m.cols.div_ceil(block);
-    let encode_at = |i: usize| -> u16 {
+    let mut codes = PackedCodes::for_codec(&scheme.codec, q.data.len());
+    for i in 0..q.data.len() {
         let (r, c) = (i / m.cols, i % m.cols);
         let s = q.scales[(r / block) * grid_c + c / block];
-        scheme.encode(q.data[i] / s)
-    };
-    let codes = if scheme.bytes_per_elem() == 1 {
-        Codes::U8((0..q.data.len()).map(|i| encode_at(i) as u8).collect())
-    } else {
-        Codes::U16((0..q.data.len()).map(encode_at).collect())
-    };
+        codes.set(i, scheme.encode(q.data[i] / s));
+    }
     StoredTensor {
         rows: m.rows,
         cols: m.cols,
         scales: q.scales.iter().map(|&s| s as f32).collect(),
-        codes,
+        codes: Codes::Packed(codes),
     }
 }
 
-/// Dequantize one stored tensor back to an f32 matrix (per-block decode).
+/// Dequantize one stored tensor back to an f32 matrix: per element, one
+/// [`DequantLut`] table index and one block-scale multiply — the same
+/// decode the KV arena's fused kernels run.
 fn unpack_matrix(st: &StoredTensor, scheme: &Scheme) -> Mat {
     match &st.codes {
         Codes::F32(v) => Mat::from_vec(st.rows, st.cols, v.clone()),
-        codes => {
+        Codes::Packed(pc) => {
             let block = scheme.block().expect("packed schemes are square-blockwise");
+            let lut = DequantLut::for_codec(&scheme.codec).expect("packed codec has a LUT");
             let grid_c = st.cols.div_ceil(block);
             let mut data = vec![0f32; st.rows * st.cols];
-            for (i, out) in data.iter_mut().enumerate() {
+            for ((i, out), code) in data.iter_mut().enumerate().zip(pc.iter()) {
                 let (r, c) = (i / st.cols, i % st.cols);
                 let s = st.scales[(r / block) * grid_c + c / block] as f64;
-                let code = match codes {
-                    Codes::U8(v) => v[i] as u16,
-                    Codes::U16(v) => v[i],
-                    Codes::F32(_) => unreachable!(),
-                };
-                *out = (scheme.decode(code) * s) as f32;
+                *out = (lut.decode(code) * s) as f32;
             }
             Mat::from_vec(st.rows, st.cols, data)
         }
     }
+}
+
+/// Re-pack a GWQS1/GWQS2 byte-padded code payload into the dense layout,
+/// rejecting codes wider than the codec (corrupt or mislabeled file).
+fn repack_legacy(
+    codes: impl Iterator<Item = u16>,
+    n: usize,
+    codec: &Codec,
+) -> Result<Codes> {
+    let bits = codec.bits_per_elem();
+    let limit = 1u32 << bits;
+    let mut pc = PackedCodes::with_len(bits, n);
+    for (i, c) in codes.enumerate() {
+        if (c as u32) >= limit {
+            bail!("element code {c} exceeds the codec's {bits}-bit width");
+        }
+        pc.set(i, c);
+    }
+    Ok(Codes::Packed(pc))
 }
 
 fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
@@ -572,6 +614,12 @@ fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
 }
 
 fn write_scales(f: &mut impl Write, scales: &[f32]) -> Result<()> {
@@ -637,14 +685,24 @@ mod tests {
         let f32s = WeightStore::from_params(&params, &cfg, resolve("f32").unwrap(), 6).unwrap();
         assert!(fp8.bytes() < f32s.bytes(), "{} !< {}", fp8.bytes(), f32s.bytes());
         assert_eq!(f32s.bytes(), f32s.master_bytes());
+        // sub-byte packing is a real further win: fp4 code payloads are
+        // half of fp8's, not the same padded byte per element
+        let fp4 =
+            WeightStore::from_params(&params, &cfg, resolve("fp4_e2m1").unwrap(), 6).unwrap();
+        for name in Params::linear_names(&cfg) {
+            let c8 = fp8.tensors[&name].codes.bytes();
+            let c4 = fp4.tensors[&name].codes.bytes();
+            assert_eq!(c4 * 2, c8, "{name}: fp4 codes {c4} B vs fp8 {c8} B");
+        }
     }
 
     #[test]
-    fn save_load_roundtrip_gwqs2() {
+    fn save_load_roundtrip_gwqs3() {
         let cfg = ModelConfig::tiny(Arch::Llama2);
         let model = Transformer::new(cfg.clone());
         let params = model.init_params(7);
-        for label in ["fp8_e4m3", "int8", "int8_sr", "f32"] {
+        // fp6/fp4 exercise the sub-byte packed payload path end to end
+        for label in ["fp8_e4m3", "fp6_e3m2", "fp4_e2m1", "int8", "int8_sr", "f32"] {
             let store =
                 WeightStore::from_params(&params, &cfg, resolve(label).unwrap(), 7).unwrap();
             let path = std::env::temp_dir().join(format!("gaussws_store_test_{label}.gwqs"));
@@ -687,8 +745,35 @@ mod tests {
         assert!(err.is_err());
     }
 
+    /// Write one tensor's element payload the way GWQS1/2 did: one byte
+    /// per code for ≤8-bit codecs, two bytes otherwise.
+    fn write_legacy_codes(f: &mut impl Write, st: &StoredTensor) {
+        match &st.codes {
+            Codes::F32(v) => {
+                f.write_all(&[0u8]).unwrap();
+                for x in v {
+                    f.write_all(&x.to_le_bytes()).unwrap();
+                }
+            }
+            Codes::Packed(pc) => {
+                if pc.bits() <= 8 {
+                    f.write_all(&[1u8]).unwrap();
+                    write_scales(f, &st.scales).unwrap();
+                    let bytes: Vec<u8> = pc.iter().map(|c| c as u8).collect();
+                    f.write_all(&bytes).unwrap();
+                } else {
+                    f.write_all(&[2u8]).unwrap();
+                    write_scales(f, &st.scales).unwrap();
+                    for c in pc.iter() {
+                        f.write_all(&c.to_le_bytes()).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
     /// Write the old GWQS1 layout for back-compat tests (the PR 1 writer,
-    /// kept verbatim in test code only).
+    /// kept in test code only).
     fn write_gwqs1(store: &WeightStore, path: &Path) {
         let fmt = match &store.scheme.codec {
             Codec::Fp(f) => *f,
@@ -723,26 +808,81 @@ mod tests {
             write_str(&mut f, name).unwrap();
             f.write_all(&(st.rows as u64).to_le_bytes()).unwrap();
             f.write_all(&(st.cols as u64).to_le_bytes()).unwrap();
-            match &st.codes {
-                Codes::F32(v) => {
-                    f.write_all(&[0u8]).unwrap();
-                    for x in v {
-                        f.write_all(&x.to_le_bytes()).unwrap();
-                    }
-                }
-                Codes::U8(v) => {
-                    f.write_all(&[1u8]).unwrap();
-                    write_scales(&mut f, &st.scales).unwrap();
-                    f.write_all(v).unwrap();
-                }
-                Codes::U16(v) => {
-                    f.write_all(&[2u8]).unwrap();
-                    write_scales(&mut f, &st.scales).unwrap();
-                    for x in v {
-                        f.write_all(&x.to_le_bytes()).unwrap();
-                    }
-                }
+            write_legacy_codes(&mut f, st);
+        }
+    }
+
+    /// Write the old GWQS2 layout for back-compat tests (the PR 4 writer,
+    /// kept in test code only: same header as GWQS3, byte-padded codes).
+    fn write_gwqs2(store: &WeightStore, path: &Path) {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(MAGIC_V2).unwrap();
+        write_str(&mut f, store.scheme.label()).unwrap();
+        match &store.scheme.codec {
+            Codec::F32 => f.write_all(&[0u8]).unwrap(),
+            Codec::Fp(fmt) => {
+                f.write_all(&[1u8]).unwrap();
+                f.write_all(&[
+                    fmt.exp_bits as u8,
+                    fmt.man_bits as u8,
+                    fmt.has_inf_nan as u8,
+                    (fmt.overflow == Overflow::Saturate) as u8,
+                ])
+                .unwrap();
             }
+            Codec::Int { bits } => f.write_all(&[2u8, *bits as u8]).unwrap(),
+        }
+        let rounding = match store.scheme.rounding {
+            Rounding::NearestEven => 0u8,
+            Rounding::TowardZero => 1,
+            Rounding::Stochastic => 2,
+        };
+        f.write_all(&[rounding]).unwrap();
+        match store.scheme.geometry {
+            Geometry::None => f.write_all(&[0u8]).unwrap(),
+            Geometry::Square { block } => {
+                f.write_all(&[1u8]).unwrap();
+                f.write_all(&(block as u64).to_le_bytes()).unwrap();
+            }
+            Geometry::Vector { .. } => panic!("vector-wise stores are unsupported"),
+        }
+        write_str(&mut f, store.cfg.arch.name()).unwrap();
+        for v in [
+            store.cfg.n_layer,
+            store.cfg.d_model,
+            store.cfg.n_head,
+            store.cfg.d_ff,
+            store.cfg.vocab,
+            store.cfg.seq_len,
+        ] {
+            f.write_all(&(v as u64).to_le_bytes()).unwrap();
+        }
+        f.write_all(&(store.tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, st) in &store.tensors {
+            write_str(&mut f, name).unwrap();
+            f.write_all(&(st.rows as u64).to_le_bytes()).unwrap();
+            f.write_all(&(st.cols as u64).to_le_bytes()).unwrap();
+            write_legacy_codes(&mut f, st);
+        }
+    }
+
+    #[test]
+    fn gwqs2_snapshots_still_load() {
+        // byte-padded V2 payloads re-pack to the dense layout on load and
+        // compare equal to a natively-packed store — for a sub-byte codec
+        // (u8 payload → 4-bit packing) and a 16-bit one (u16 payload)
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(11);
+        for label in ["fp4_e2m1", "bf16"] {
+            let store =
+                WeightStore::from_params(&params, &cfg, resolve(label).unwrap(), 11).unwrap();
+            let path = std::env::temp_dir().join(format!("gaussws_store_v2_{label}.gwqs"));
+            write_gwqs2(&store, &path);
+            let back = WeightStore::load(&path).unwrap();
+            assert_eq!(back.scheme, store.scheme, "{label}");
+            assert_eq!(back.tensors, store.tensors, "{label}");
+            assert_eq!(back.cfg, cfg);
         }
     }
 

@@ -3,13 +3,16 @@
 //! (shared prefixes, varied prompt/gen lengths) and a random engine
 //! configuration (tiny arenas forcing preemption + copy-on-write, random
 //! block/chunk/thread counts) under a random KV storage scheme
-//! (`f32` / `fp8_e3m4` / `int8_sr`) and asserts:
+//! (`f32` / `fp8_e3m4` / `int8_sr` / `fp4_e2m1_sr` — the last exercises
+//! sub-byte packed codes) and asserts:
 //!
 //! * every request completes and zero arena blocks leak after drain;
 //! * identical runs reproduce identical greedy tokens (incl. SR KV);
 //! * prefix cache on/off never changes greedy outputs;
 //! * paged `f32` serving is bit-identical to the contiguous reference;
-//! * quantized-KV logit drift vs f32 stays bounded;
+//! * quantized-KV logit drift vs f32 stays bounded (per-scheme bound);
+//! * enabling the f32 decode mirror (`kv_mirror`) never changes greedy
+//!   outputs — the fused packed-code kernels match the mirror bit-for-bit;
 //! * (net arm) the same mix replayed over loopback TCP — wire codec,
 //!   strict parse, framing, drain — yields bit-identical tokens with zero
 //!   lost responses and zero live blocks (`check_case_net`).
@@ -102,16 +105,17 @@ fn fuzz_serve_net_transport_seed_matrix() {
 
 #[test]
 fn seed_matrix_covers_every_kv_scheme() {
-    // the fixed CI matrix must exercise all three storage schemes; if the
-    // generator changes, rebalance FUZZ_SEED_MATRIX. Deliberately checks
-    // the constant matrix, not seeds(): narrowing GAUSSWS_FUZZ_SEEDS to
-    // bisect one red seed must not fail this unrelated test
+    // the fixed CI matrix must exercise all four storage schemes (incl.
+    // the sub-byte fp4 stratum); if the generator changes, rebalance
+    // FUZZ_SEED_MATRIX. Deliberately checks the constant matrix, not
+    // seeds(): narrowing GAUSSWS_FUZZ_SEEDS to bisect one red seed must
+    // not fail this unrelated test
     let mut labels: Vec<&str> =
         FUZZ_SEED_MATRIX.iter().map(|&s| FuzzCase::generate(s).kv_label).collect();
     labels.sort_unstable();
     labels.dedup();
     assert!(
-        labels.len() >= 3,
+        labels.len() >= 4,
         "seed matrix only covers kv schemes {labels:?}; rebalance FUZZ_SEED_MATRIX"
     );
 }
@@ -204,10 +208,10 @@ fn quantized_drift_is_nonzero_and_bounded_per_scheme() {
     let tokens: Vec<usize> = (0..16).map(|k| (k * 13 + 5) % 50).collect();
     let drift_of = |label: &str| kv_logit_drift(&model, &params, &tokens, label, 4, 3);
     assert_eq!(drift_of("f32"), 0.0);
-    let fp8 = drift_of("fp8_e3m4");
-    let int8 = drift_of("int8_sr");
-    for (label, d) in [("fp8_e3m4", fp8), ("int8_sr", int8)] {
+    for label in ["fp8_e3m4", "int8_sr", "fp4_e2m1_sr"] {
+        let d = drift_of(label);
         assert!(d.is_finite() && d > 0.0, "{label}: drift {d}");
-        assert!(d < gaussws::testing::fuzz::FUZZ_DRIFT_BOUND, "{label}: drift {d}");
+        let bound = gaussws::testing::fuzz::drift_bound(label);
+        assert!(d < bound, "{label}: drift {d} exceeds bound {bound}");
     }
 }

@@ -224,6 +224,115 @@ fn prop_bf16_cast_idempotent_and_exact_on_grid() {
 }
 
 #[test]
+fn prop_packed_codes_roundtrip_any_width() {
+    use gaussws::quant::{packed_bytes, PackedCodes};
+    // push/get/iter/set and the byte-serialization roundtrip agree for
+    // every width 2..=16 — including the non-byte-aligned widths whose
+    // codes straddle byte boundaries (3, 5, 6, 7, ...)
+    check("packed codes roundtrip", 80, |g| {
+        let bits = g.usize_in(2, 16) as u32;
+        let len = g.usize_in(0, 100);
+        let mask = if bits == 16 { u32::from(u16::MAX) } else { (1u32 << bits) - 1 };
+        let codes: Vec<u16> = (0..len).map(|_| (g.u32() & mask) as u16).collect();
+        let mut pc = PackedCodes::new(bits);
+        for &c in &codes {
+            pc.push(c);
+        }
+        if pc.len() != len || pc.byte_len() != packed_bytes(bits, len) {
+            return Err(format!("bits {bits} len {len}: wrong size accounting"));
+        }
+        for (i, &c) in codes.iter().enumerate() {
+            if pc.get(i) != c {
+                return Err(format!("bits {bits} len {len}: get({i}) != pushed code"));
+            }
+        }
+        if pc.iter().collect::<Vec<u16>>() != codes {
+            return Err(format!("bits {bits} len {len}: iter() diverged from get()"));
+        }
+        let back = PackedCodes::from_bytes(bits, len, pc.as_bytes().to_vec())
+            .map_err(|e| format!("bits {bits} len {len}: {e:#}"))?;
+        if back != pc {
+            return Err(format!("bits {bits} len {len}: byte roundtrip changed codes"));
+        }
+        // a random in-place overwrite must leave every neighbor intact
+        if len > 0 {
+            let i = g.usize_in(0, len - 1);
+            let v = (g.u32() & mask) as u16;
+            pc.set(i, v);
+            for (j, &c) in codes.iter().enumerate() {
+                let want = if j == i { v } else { c };
+                if pc.get(j) != want {
+                    return Err(format!("bits {bits}: set({i}) corrupted slot {j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lut_decode_matches_codec_decode_for_every_registered_codec() {
+    use gaussws::quant::{DequantLut, Registry};
+    // exhaustive, not sampled: every packed codec in the registry, every
+    // one of its 2^bits codes, compared bit-for-bit (f64::to_bits so NaN
+    // payloads and signed zeros count too)
+    let mut checked = 0;
+    for scheme in Registry::global().schemes() {
+        let Some(lut) = DequantLut::for_codec(&scheme.codec) else {
+            continue; // f32 passthrough has no code table
+        };
+        assert_eq!(lut.len(), 1usize << scheme.codec.bits_per_elem(), "{}", scheme.label());
+        // usize loop: `lut.len() as u16` would wrap to 0 for 16-bit codecs
+        for code in 0..lut.len() {
+            let code = code as u16;
+            assert_eq!(
+                lut.decode(code).to_bits(),
+                scheme.codec.decode(code).to_bits(),
+                "{}: code {code} decodes differently via the LUT",
+                scheme.label()
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 10, "only {checked} packed codecs in the registry?");
+}
+
+#[test]
+fn prop_fused_kv_reads_match_mirror_for_every_registered_scheme() {
+    use gaussws::nn::kv::{KvQuant, PagedKv};
+    use gaussws::quant::Registry;
+    use gaussws::testing::fuzz::model_under_test;
+    // same packed codes, two read paths: the fused dequant-dot kernels vs
+    // the opt-in f32 decode mirror must produce bit-identical logits for
+    // every scheme the KV arena can host (blockwise or passthrough)
+    let (model, params) = model_under_test();
+    let tokens: Vec<usize> = (0..10).map(|k| (k * 11 + 3) % 50).collect();
+    let mut hosted = 0;
+    for scheme in Registry::global().schemes() {
+        let Ok(quant) = KvQuant::new(scheme.clone(), model.cfg.d_model, 0xBEEF) else {
+            continue; // elementwise geometries are not hostable — skip
+        };
+        let label = scheme.label().to_string();
+        let mut fused = PagedKv::new_quantized(&model.cfg, 4, tokens.len(), quant.clone());
+        let mut mirrored = PagedKv::new_quantized(&model.cfg, 4, tokens.len(), quant.with_mirror());
+        for &t in &tokens {
+            let a = model.decode_step(&params, t, &mut fused);
+            let b = model.decode_step(&params, t, &mut mirrored);
+            assert_eq!(a.len(), b.len(), "{label}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{label}: fused logits diverged from the mirror"
+                );
+            }
+        }
+        hosted += 1;
+    }
+    assert!(hosted >= 10, "only {hosted} KV-hostable schemes in the registry?");
+}
+
+#[test]
 fn prop_fpformat_enumeration_closed_under_cast() {
     // every enumerated value is a fixed point of cast (tiny formats)
     check("enumeration fixed points", 6, |g| {
