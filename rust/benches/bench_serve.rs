@@ -23,6 +23,11 @@
 //!     `kv_mirror` off/on — the greedy token streams are asserted
 //!     bit-identical (via per-arm token digests recorded in the BENCH
 //!     schema), demonstrating the fused kernels are a pure storage win;
+//!   * speculative decoding on vs off at batch 8: the "on" arm drafts 4
+//!     tokens/round through a `fp4_e2m1_sr` round-trip of the serving
+//!     weights and verifies them in one wave — token digests are asserted
+//!     identical (exact-match acceptance is lossless) and the record
+//!     carries tokens/sec plus the observed acceptance rate;
 //!   * telemetry on vs off at batch 8 (best-of-N tokens/sec each): the
 //!     "on" arm records full per-request trace timelines on top of the
 //!     always-on registry; asserted within 2% of the "off" arm;
@@ -56,6 +61,10 @@ struct Arm {
     mirror: bool,
     /// record per-request trace timelines (the telemetry-overhead arm)
     trace: bool,
+    /// self-speculative decoding: `(draft store label, spec_k)` — the
+    /// serving weights round-tripped through the draft scheme propose
+    /// `spec_k` tokens per round, verified in one wave (the spec-on arm)
+    spec: Option<(&'static str, usize)>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -85,6 +94,10 @@ fn run_arm(
             kv_seed,
             kv_mirror: arm.mirror,
             trace: arm.trace,
+            spec_draft_store: arm
+                .spec
+                .map(|(label, _)| gaussws::quant::resolve(label).expect("draft store label")),
+            spec_k: arm.spec.map_or(4, |(_, k)| k),
             ..EngineConfig::default()
         },
     );
@@ -200,6 +213,7 @@ fn main() {
             kv_store: "f32".into(),
             mirror: false,
             trace: false,
+            spec: None,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
     }
@@ -216,6 +230,7 @@ fn main() {
             kv_store: "f32".into(),
             mirror: false,
             trace: false,
+            spec: None,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
     }
@@ -236,6 +251,7 @@ fn main() {
         kv_store: "f32".into(),
         mirror: false,
         trace: false,
+        spec: None,
     };
     let (rec_on, hit_rate_on, occ_on) =
         run_arm(&store, &corpus, &mk_prefix_arm(true), threads, prompt_len, max_new, seed, &[], vec![]);
@@ -294,6 +310,7 @@ fn main() {
             kv_store: kv_store.into(),
             mirror: false,
             trace: false,
+            spec: None,
         };
         // the per-prompt drifts land in the stats histogram, so the BENCH
         // record carries kv_logit_drift_max AND kv_logit_drift_p50
@@ -324,6 +341,7 @@ fn main() {
         kv_store: "fp8_e3m4".into(),
         mirror,
         trace: false,
+        spec: None,
     };
     let (rec_fused, ..) =
         run_arm(&store, &corpus, &mk_fused_arm(false), threads, prompt_len, max_new, seed, &[], vec![]);
@@ -342,6 +360,54 @@ fn main() {
     records.push(rec_fused);
     records.push(rec_mirror);
 
+    // ---- speculative decoding on vs off, equal workload ----
+    // spec-on forks each greedy decode into a fp4-draft + one-wave-verify
+    // round; exact-match acceptance keeps the token streams bit-identical
+    // (asserted via digests), so the arm isolates the wave-count win and
+    // reports the observed acceptance rate
+    let mk_spec_arm = |spec: Option<(&'static str, usize)>| Arm {
+        label: format!("{}/spec-{}/b8", store.label(), if spec.is_some() { "on" } else { "off" }),
+        batch: 8,
+        kv_block: 16,
+        prefix_cache: true,
+        shared_prefix: 0,
+        requests: 8 * per_slot,
+        kv_store: "fp8_e3m4".into(),
+        mirror: false,
+        trace: false,
+        spec,
+    };
+    let (rec_spec_off, ..) =
+        run_arm(&store, &corpus, &mk_spec_arm(None), threads, prompt_len, max_new, seed, &[], vec![]);
+    let (rec_spec_on, ..) = run_arm(
+        &store,
+        &corpus,
+        &mk_spec_arm(Some(("fp4_e2m1_sr", 4))),
+        threads,
+        prompt_len,
+        max_new,
+        seed,
+        &[],
+        vec![],
+    );
+    assert_eq!(
+        rec_spec_on.get("tokens_digest").as_str(),
+        rec_spec_off.get("tokens_digest").as_str(),
+        "speculative decoding must be bit-identical to plain greedy decode"
+    );
+    let rounds = rec_spec_on.get("spec_rounds").as_f64().unwrap_or(0.0);
+    let rate = rec_spec_on.get("spec_acceptance_rate").as_f64().unwrap_or(-1.0);
+    assert!(rounds > 0.0, "spec-on arm ran no speculative rounds");
+    assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate} out of range");
+    println!(
+        "spec decode: off {:.1} tok/s, on {:.1} tok/s, acceptance {:.0}%",
+        rec_spec_off.get("tokens_per_sec").as_f64().unwrap_or(0.0),
+        rec_spec_on.get("tokens_per_sec").as_f64().unwrap_or(0.0),
+        rate * 100.0
+    );
+    records.push(rec_spec_off);
+    records.push(rec_spec_on);
+
     // ---- telemetry overhead: trace timelines on vs off, equal workload ----
     // the registry is always on (ServeStats is a view over it), so this
     // isolates the incremental cost of full per-request trace recording;
@@ -356,6 +422,7 @@ fn main() {
         kv_store: "f32".into(),
         mirror: false,
         trace: on,
+        spec: None,
     };
     let reps = if quick { 2 } else { 3 };
     let mut best = [0f64; 2];

@@ -10,6 +10,8 @@
 //!           (Table C.1 on a checkpoint; labels resolve via quant::Registry)
 //!   serve   [--checkpoint ck | --snapshot s.gwqs] --store fp8_e3m4
 //!           (quantized-snapshot serving engine + self-driven load;
+//!            --spec-draft enables self-speculative decoding via a
+//!            lower-bit draft store (greedy outputs unchanged),
 //!            --trace-out exports per-request Chrome trace timelines,
 //!            --metrics-every prints telemetry registry snapshots;
 //!            --listen ADDR serves over TCP — length-prefixed
@@ -79,6 +81,9 @@ fn print_usage() {
          \x20               [--kv-block 16 --kv-blocks 0(auto) --prefill-chunk 8]\n\
          \x20               [--kv-store f32|fp8_e3m4|int8_sr|... (KV arena quantization)]\n\
          \x20               [--kv-mirror (debug: keep an f32 decode mirror beside the codes)]\n\
+         \x20               [--spec-draft fp4_e2m1_sr --spec-k 4 (self-speculative decoding:\n\
+         \x20                draft via a lower-bit weight store, verify in one wave;\n\
+         \x20                greedy outputs stay bit-identical)]\n\
          \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
@@ -450,10 +455,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // mode; the fused packed-code read path is bit-identical to it)
         kv_mirror: args.flag("kv-mirror"),
         trace: args.get("trace-out").is_some(),
+        // --spec-draft: self-speculative decoding — the served weights
+        // round-tripped through a second (lower-bit) store draft
+        // --spec-k tokens per round, verified in one wave; exact-match
+        // acceptance keeps greedy outputs bit-identical to plain decode
+        spec_draft_store: match args.get("spec-draft") {
+            Some(label) => Some(gaussws::quant::resolve(label)?),
+            None => None,
+        },
+        spec_k: args.usize_or("spec-k", 4),
     };
     // degenerate paging configs (including an unhostable --kv-store
     // geometry for this model) fail here with a clean error, not a panic
     ecfg.validate_for(&mcfg)?;
+    if let Some(label) = args.get("spec-draft") {
+        println!(
+            "speculative decoding: {label} draft, {} tokens/round, exact-match verify",
+            ecfg.spec_k
+        );
+    }
     let mut engine = Engine::from_store(&store, ecfg);
     println!(
         "kv store: {} — {} B/position encoded vs {} B f32 ({:.2}x)",

@@ -762,6 +762,26 @@ impl PagedKv {
         std::mem::take(&mut self.blocks)
     }
 
+    /// Truncate the committed length to `new_len` (rejected speculative
+    /// tail rollback), dropping the whole blocks the shorter chain no
+    /// longer covers and returning them so the caller can release them to
+    /// its arena. Slots `new_len..` inside the kept tail block become
+    /// stale: the next append simply rewrites them, and because stage-time
+    /// SR encoding is keyed per (seed, layer, absolute position) the
+    /// rewritten codes are deterministic — a position re-encoded after a
+    /// rollback is bit-identical to one that was never speculated on.
+    pub fn truncate(&mut self, new_len: usize) -> Vec<Arc<KvBlock>> {
+        assert!(new_len <= self.len, "truncate({new_len}) beyond committed len {}", self.len);
+        let keep = new_len.div_ceil(self.block_size);
+        let released = if keep < self.blocks.len() {
+            self.blocks.split_off(keep)
+        } else {
+            Vec::new()
+        };
+        self.len = new_len;
+        released
+    }
+
     /// The chain prefix covering the first `positions` positions (e.g. the
     /// prompt's blocks, for prefix-index insertion).
     pub fn blocks_covering(&self, positions: usize) -> &[Arc<KvBlock>] {
@@ -1147,6 +1167,67 @@ mod tests {
         // …and the opt-in mirror costs exactly the f32 rows on top
         let m = KvBlock::for_quant(0, c.n_layer, 4, c.d_model, &q4.with_mirror());
         assert_eq!(m.bytes(), b.bytes() + 2 * c.n_layer * 4 * c.d_model * 4);
+    }
+
+    #[test]
+    fn truncate_drops_uncovered_blocks_and_rewrites_deterministically() {
+        let c = cfg();
+        let mk = || {
+            let q = KvQuant::new(crate::quant::resolve("int8_sr").unwrap(), c.d_model, 11)
+                .unwrap()
+                .with_mirror();
+            PagedKv::new_quantized(&c, 4, 16, q)
+        };
+        let row_at = |pos: usize| -> Vec<f32> {
+            (0..c.d_model).map(|i| ((i * 7 + pos * 13) % 19) as f32 * 0.05 - 0.4).collect()
+        };
+        // reference: positions 0..6 written straight through
+        let mut reference = mk();
+        for pos in 0..6 {
+            let r = row_at(pos);
+            for l in 0..c.n_layer {
+                reference.write(l, pos, &r, &r);
+            }
+            reference.commit(1);
+        }
+        // speculated: 0..9 written, then rolled back to 6 and nothing more
+        let mut speculated = mk();
+        for pos in 0..9 {
+            let r = row_at(100 + pos); // draft rows differ from the reference
+            for l in 0..c.n_layer {
+                speculated.write(l, pos, &r, &r);
+            }
+            speculated.commit(1);
+        }
+        let released = speculated.truncate(6);
+        assert_eq!(released.len(), 1, "9 positions / block 4 = 3 blocks; 6 keeps 2");
+        assert_eq!(speculated.len(), 6);
+        assert_eq!(speculated.n_blocks(), 2);
+        // a cache that re-stages the reference rows from scratch must match
+        // the reference bit-for-bit: SR draws are keyed on the absolute
+        // position, not on write history, so rollback + rewrite is
+        // indistinguishable from never having speculated
+        let mut replay = mk();
+        for pos in 0..6 {
+            let r = row_at(pos);
+            for l in 0..c.n_layer {
+                replay.write(l, pos, &r, &r);
+            }
+            replay.commit(1);
+        }
+        for pos in 0..6 {
+            for l in 0..c.n_layer {
+                assert_eq!(reference.k_row(l, pos), replay.k_row(l, pos));
+            }
+        }
+        // truncate to a block boundary releases exactly the tail
+        let released = replay.truncate(4);
+        assert_eq!(released.len(), 1);
+        assert_eq!(replay.len(), 4);
+        // truncate to zero drains everything
+        let released = speculated.truncate(0);
+        assert_eq!(released.len(), 2);
+        assert_eq!(speculated.n_blocks(), 0);
     }
 
     #[test]

@@ -474,6 +474,65 @@ impl Transformer {
         tokens: &[usize],
         cache: &mut C,
     ) -> Vec<f32> {
+        let x = self.prefill_hidden(params, tokens, cache);
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        // final norm over the chunk (row-wise), logits for the last row only
+        let mut last = Mat::from_vec(1, cfg.d_model, x.row(t - 1).to_vec());
+        match cfg.arch {
+            Arch::Gpt2 => {
+                layer_norm(&mut last, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+            }
+            Arch::Llama2 => rms_norm(&mut last, &params.get("lnf.g").data, 1e-5),
+        }
+        let mut logits = Mat::zeros(1, cfg.vocab);
+        matmul_bt(&last, params.get("embed"), &mut logits);
+        cache.commit(t);
+        logits.data
+    }
+
+    /// [`Transformer::prefill_chunk`], but returning the logits row of
+    /// **every** chunk position (a `tokens.len() × vocab` [`Mat`]): row `i`
+    /// is the next-token distribution after consuming `tokens[i]` at
+    /// position `cache.len() + i`. This is the speculative-decode verify
+    /// wave — one chunk of `[last_token, draft_0, …, draft_{K-1}]` scores
+    /// all K drafts at once. The final norm and the logits projection are
+    /// row-wise ops (`layer_norm`/`rms_norm` normalize each row
+    /// independently; `matmul_bt` computes output rows independently), so
+    /// every row here is bit-identical to the logits `prefill_chunk` would
+    /// return for the same position fed as the chunk's last token.
+    pub fn prefill_chunk_logits<C: KvStorage>(
+        &self,
+        params: &Params,
+        tokens: &[usize],
+        cache: &mut C,
+    ) -> Mat {
+        let mut x = self.prefill_hidden(params, tokens, cache);
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        match cfg.arch {
+            Arch::Gpt2 => {
+                layer_norm(&mut x, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+            }
+            Arch::Llama2 => rms_norm(&mut x, &params.get("lnf.g").data, 1e-5),
+        }
+        let mut logits = Mat::zeros(t, cfg.vocab);
+        matmul_bt(&x, params.get("embed"), &mut logits);
+        cache.commit(t);
+        logits
+    }
+
+    /// The shared body of [`Transformer::prefill_chunk`] /
+    /// [`Transformer::prefill_chunk_logits`]: run the chunk through every
+    /// block, staging each position's K/V into `cache`, and return the
+    /// pre-final-norm hidden states (`tokens.len() × d_model`). Does **not**
+    /// commit — the callers commit after projecting logits.
+    fn prefill_hidden<C: KvStorage>(
+        &self,
+        params: &Params,
+        tokens: &[usize],
+        cache: &mut C,
+    ) -> Mat {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let t = tokens.len();
@@ -617,19 +676,7 @@ impl Transformer {
                 x.data[i] += down.data[i];
             }
         }
-
-        // final norm over the chunk (row-wise), logits for the last row only
-        let mut last = Mat::from_vec(1, d, x.row(t - 1).to_vec());
-        match cfg.arch {
-            Arch::Gpt2 => {
-                layer_norm(&mut last, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
-            }
-            Arch::Llama2 => rms_norm(&mut last, &params.get("lnf.g").data, 1e-5),
-        }
-        let mut logits = Mat::zeros(1, cfg.vocab);
-        matmul_bt(&last, params.get("embed"), &mut logits);
-        cache.commit(t);
-        logits.data
+        x
     }
 
     /// Mean cross-entropy of next-token prediction over a token sequence.
@@ -780,6 +827,42 @@ mod tests {
                     assert_eq!(cache.k[l].data, ref_cache.k[l].data, "{arch:?} chunk {chunk} K{l}");
                     assert_eq!(cache.v[l].data, ref_cache.v[l].data, "{arch:?} chunk {chunk} V{l}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_logits_rows_match_stepwise_decode_bit_for_bit() {
+        // the speculative-verify contract: row i of the all-rows variant
+        // must be the exact logits the engine would have sampled had
+        // tokens[..=i] been fed through ordinary sequential decode
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let tokens = [3usize, 17, 42, 5, 11, 29, 7];
+            let mut ref_cache = DecodeCache::new(&t.cfg, 16);
+            let mut ref_rows: Vec<Vec<f32>> = Vec::new();
+            for &tok in &tokens {
+                ref_rows.push(t.decode_step(&p, tok, &mut ref_cache));
+            }
+            // whole sequence in one all-rows wave
+            let mut cache = DecodeCache::new(&t.cfg, 16);
+            let all = t.prefill_chunk_logits(&p, &tokens, &mut cache);
+            assert_eq!((all.rows, all.cols), (tokens.len(), t.cfg.vocab));
+            for (i, want) in ref_rows.iter().enumerate() {
+                assert_eq!(all.row(i), &want[..], "{arch:?}: row {i} diverges");
+            }
+            assert_eq!(cache.len, ref_cache.len);
+            // split waves: a committed prefix then an all-rows tail, the
+            // shape the verify wave actually runs in
+            let mut cache = DecodeCache::new(&t.cfg, 16);
+            t.prefill_chunk(&p, &tokens[..3], &mut cache);
+            let tail = t.prefill_chunk_logits(&p, &tokens[3..], &mut cache);
+            for (i, want) in ref_rows.iter().enumerate().skip(3) {
+                assert_eq!(tail.row(i - 3), &want[..], "{arch:?}: tail row {i} diverges");
+            }
+            for l in 0..t.cfg.n_layer {
+                assert_eq!(cache.k[l].data, ref_cache.k[l].data, "{arch:?} K{l}");
+                assert_eq!(cache.v[l].data, ref_cache.v[l].data, "{arch:?} V{l}");
             }
         }
     }

@@ -63,6 +63,34 @@ pub fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut P
     *idx.last().unwrap()
 }
 
+/// One speculative round planned for a sequence: the engine forks the
+/// sequence's KV chain (shared blocks, zero copies), drafts up to `k`
+/// tokens through the low-bit draft store into `draft_kv`, then verifies
+/// them in one all-rows chunk through the target store. The wave worker
+/// fills in the outcome fields; the planner thread rolls the target cache
+/// back to `commit_len` and releases the fork afterwards — so a plan left
+/// attached at preemption/expiry/retirement is simply drained there,
+/// keeping the arena leak-free no matter where the round was abandoned.
+#[derive(Debug)]
+pub struct SpecPlan {
+    /// The CoW fork the draft tokens decode into (shares the parent's
+    /// committed blocks; its own appends copy-on-write).
+    pub draft_kv: crate::nn::kv::PagedKv,
+    /// Draft tokens to produce this round (already capped by budget,
+    /// `max_new_tokens` headroom, and sequence length).
+    pub k: usize,
+    /// Committed target length when the round was planned.
+    pub base_len: usize,
+    /// Draft tokens actually produced (== `k` unless the draft hit EOS
+    /// territory — drafting never stops early today, so == `k`).
+    pub drafted: usize,
+    /// Drafts confirmed by exact greedy match against the target logits.
+    pub accepted: usize,
+    /// Target length the planner must roll back to after the wave
+    /// (`base_len` + tokens the verify pass absorbed).
+    pub commit_len: usize,
+}
+
 /// One admitted sequence: request + decode progress + its paged KV chain.
 ///
 /// The *feed stream* of a sequence is `prompt ++ generated` — every token
@@ -85,6 +113,9 @@ pub struct ActiveSeq {
     /// Admission order stamp (re-stamped on re-admission); the preemption
     /// victim is always the sequence with the highest stamp.
     pub seq_no: u64,
+    /// The speculative round in flight for this wave, if the engine
+    /// planned one (greedy steady-state decode only).
+    pub spec: Option<SpecPlan>,
 }
 
 impl ActiveSeq {
@@ -100,6 +131,7 @@ impl ActiveSeq {
             first_token_at: None,
             finish: None,
             seq_no: 0,
+            spec: None,
         }
     }
 
@@ -179,6 +211,15 @@ impl ActiveSeq {
                 .as_secs_f64(),
             total_s: now.duration_since(self.enqueued).as_secs_f64(),
         }
+    }
+}
+
+/// Release a sequence's in-flight draft fork, if any — called wherever a
+/// sequence leaves the active set (preemption, deadline expiry,
+/// retirement) so an abandoned speculative round can never strand blocks.
+fn drain_spec(seq: &mut ActiveSeq, alloc: &mut BlockAllocator) {
+    if let Some(plan) = seq.spec.take() {
+        alloc.release_fork(plan.draft_kv).expect("abandoned draft fork chain was live");
     }
 }
 
@@ -344,6 +385,7 @@ impl Scheduler {
             .max_by_key(|(_, s)| s.seq_no)
             .map(|(i, _)| i)?;
         let mut seq = self.active.remove(idx);
+        drain_spec(&mut seq, alloc);
         let chain = seq.kv.take_blocks();
         let released = chain.len();
         alloc.release_chain(chain).expect("preempted sequence chain was live");
@@ -419,6 +461,7 @@ impl Scheduler {
         while i < self.active.len() {
             if due(&self.active[i].req, self.active[i].enqueued) {
                 let mut seq = self.active.remove(i);
+                drain_spec(&mut seq, alloc);
                 alloc
                     .release_chain(seq.kv.take_blocks())
                     .expect("expired sequence chain was live");
@@ -444,6 +487,7 @@ impl Scheduler {
                 // `remove` (not swap_remove) keeps admission order intact,
                 // so `active.last()` stays the newest sequence
                 let mut seq = self.active.remove(i);
+                drain_spec(&mut seq, alloc);
                 if self.prefix_cache {
                     alloc.prefix_insert(&seq.req.prompt, &seq.kv);
                 }

@@ -22,12 +22,23 @@
 //!    then preempts the newest sequence back to the queue.
 //! 3. **wave** — workers advance every sequence by its chunk via
 //!    `Transformer::prefill_chunk` and sample where prefill completed.
+//!
+//! With a draft store configured ([`EngineConfig::spec_draft_store`]) the
+//! engine additionally runs **self-speculative decoding**: greedy
+//! steady-state decode chunks are opportunistically upgraded to
+//! speculative rounds — the sequence's KV chain is forked copy-on-write,
+//! up to `spec_k` tokens are drafted through a second, lower-bit weight
+//! round-trip of the same model, and all drafts are verified in one
+//! all-rows chunk through the target weights. Acceptance is exact greedy
+//! token match, so the emitted stream is bit-identical to never having
+//! speculated; rejected tails are rolled back and the fork released.
 
 use crate::config::schema::ModelConfig;
-use crate::nn::kv::KvQuant;
+use crate::nn::kv::{KvQuant, KvStorage};
 use crate::nn::transformer::{Params, Transformer};
+use crate::prng::Philox4x32;
 use crate::quant::{Geometry, QuantScheme, Scheme};
-use crate::serve::batcher::{ActiveSeq, Scheduler};
+use crate::serve::batcher::{sample_logits, ActiveSeq, Scheduler, SpecPlan};
 use crate::serve::kvcache::{BlockAllocator, PrefixCacheStats};
 use crate::serve::protocol::{GenRequest, GenResponse};
 use crate::serve::stats::ServeStats;
@@ -76,6 +87,17 @@ pub struct EngineConfig {
     /// decode waves → preempt → retire) into the stats' trace buffer —
     /// exported as Chrome trace-event JSONL via `serve --trace-out`.
     pub trace: bool,
+    /// Self-speculative decoding draft store (CLI `--spec-draft`): a
+    /// registry scheme the serving weights are round-tripped through to
+    /// make the cheap draft model (e.g. `"fp4_e2m1_sr"` drafting for an
+    /// `"fp8_e3m4"` target). `None` disables speculation. Greedy requests
+    /// only; acceptance is exact token match, so outputs are bit-identical
+    /// to plain decode — the draft's quality moves throughput, never
+    /// correctness.
+    pub spec_draft_store: Option<Scheme>,
+    /// Draft tokens proposed per speculative round (CLI `--spec-k`).
+    /// Ignored unless a draft store is configured.
+    pub spec_k: usize,
 }
 
 impl Default for EngineConfig {
@@ -93,6 +115,8 @@ impl Default for EngineConfig {
             kv_seed: 0x6B76_5EED,
             kv_mirror: false,
             trace: false,
+            spec_draft_store: None,
+            spec_k: 4,
         }
     }
 }
@@ -124,6 +148,17 @@ impl EngineConfig {
                 self.kv_scheme.label()
             );
         }
+        if self.spec_draft_store.is_some() {
+            if self.spec_k == 0 {
+                bail!("--spec-k must be positive (draft tokens per speculative round)");
+            }
+            if self.spec_k > 64 {
+                bail!(
+                    "--spec-k {} is past any useful acceptance horizon (max 64)",
+                    self.spec_k
+                );
+            }
+        }
         Ok(())
     }
 
@@ -149,10 +184,18 @@ impl EngineConfig {
     }
 }
 
+/// Seed for the draft store's stochastic-rounding streams. Fixed (not the
+/// KV seed) so the draft weights are a deterministic function of the
+/// target weights and the draft scheme alone.
+const SPEC_DRAFT_SEED: u64 = 0xD8AF_75ED;
+
 /// The batched fake-quantized inference engine.
 pub struct Engine {
     pub model: Transformer,
     pub params: Params,
+    /// Draft weights for speculative decoding: the serving params
+    /// round-tripped through [`EngineConfig::spec_draft_store`].
+    draft: Option<Params>,
     alloc: BlockAllocator,
     sched: Scheduler,
     pub stats: ServeStats,
@@ -179,6 +222,11 @@ impl Engine {
             cfg.kv_block,
             quant,
         );
+        let draft = cfg.spec_draft_store.as_ref().map(|scheme| {
+            WeightStore::from_params(&params, &model_cfg, scheme.clone(), SPEC_DRAFT_SEED)
+                .expect("draft scheme must quantize this model's weights")
+                .to_params()
+        });
         let sched = Scheduler::new(cfg.max_batch, cfg.prefill_chunk, cfg.prefix_cache);
         let mut stats = ServeStats::new();
         stats.set_kv_store(
@@ -190,7 +238,7 @@ impl Engine {
         if cfg.trace {
             stats.enable_trace();
         }
-        Engine { model, params, alloc, sched, stats, cfg, capacity }
+        Engine { model, params, draft, alloc, sched, stats, cfg, capacity }
     }
 
     /// Build from a quantized snapshot: dequantize-on-load, then serve.
@@ -367,6 +415,58 @@ impl Engine {
         if n == 0 {
             return Vec::new(); // everything preempted (arena momentarily dry)
         }
+        // ---- spec plan: opportunistically upgrade greedy steady-state
+        // decode chunks (chunk == 1, cache caught up) into speculative
+        // rounds. Ordering matters: fork FIRST (the fork shares the
+        // committed chain), then reserve the target — reserve's
+        // make_tail_exclusive copy-on-writes the now-shared tail so the
+        // verify chunk and the draft decode write disjoint blocks. If the
+        // arena can't host the round, undo everything and fall back to the
+        // already-planned plain decode token.
+        if self.draft.is_some() {
+            for (w, seq) in self.sched.active.iter_mut().enumerate() {
+                if chunks[w] != 1 || seq.in_prefill() || seq.req.temperature > 0.0 {
+                    continue;
+                }
+                let base = seq.kv.len();
+                // cap so a full sweep (k accepted + 1 bonus) never
+                // overshoots max_new_tokens or the position capacity
+                let remaining = seq.req.max_new_tokens - seq.generated.len();
+                let k = self
+                    .cfg
+                    .spec_k
+                    .min(remaining.saturating_sub(1))
+                    .min(seq.kv.capacity().saturating_sub(base + 1));
+                if k == 0 {
+                    continue;
+                }
+                let mut fork = self
+                    .alloc
+                    .fork_seq(&self.model.cfg, &seq.kv)
+                    .expect("forked chain blocks are live");
+                if !self.alloc.reserve(&mut seq.kv, k + 1) || !self.alloc.reserve(&mut fork, k) {
+                    // arena dry mid-round: release the fork (the tail is
+                    // exclusive again), drop any stray blocks the failed
+                    // reserve attached, and re-establish the plain
+                    // one-token reservation (its block was just returned)
+                    self.alloc.release_fork(fork).expect("fork chain was live");
+                    self.alloc.rollback_to(&mut seq.kv, base).expect("spec tail was live");
+                    assert!(
+                        self.alloc.reserve(&mut seq.kv, 1),
+                        "plain decode reservation must re-establish after spec fallback"
+                    );
+                    continue;
+                }
+                seq.spec = Some(SpecPlan {
+                    draft_kv: fork,
+                    k,
+                    base_len: base,
+                    drafted: 0,
+                    accepted: 0,
+                    commit_len: base,
+                });
+            }
+        }
         // stamp the wave BEFORE the compute so wall-clock throughput
         // includes the first wave's work
         self.stats.record_wave(n);
@@ -393,13 +493,14 @@ impl Engine {
         {
             let model = &self.model;
             let params = &self.params;
+            let draft = self.draft.as_ref();
             let eos = self.cfg.eos;
             let mut work: Vec<(&mut ActiveSeq, usize)> =
                 self.sched.active.iter_mut().zip(chunks).collect();
             let n_threads = self.cfg.threads.clamp(1, work.len());
             if n_threads == 1 {
                 for (seq, chunk) in work.iter_mut() {
-                    advance(model, params, seq, *chunk, eos);
+                    advance(model, params, draft, seq, *chunk, eos);
                 }
             } else {
                 let per = work.len().div_ceil(n_threads);
@@ -407,11 +508,26 @@ impl Engine {
                     for part in work.chunks_mut(per) {
                         sc.spawn(move || {
                             for (seq, chunk) in part.iter_mut() {
-                                advance(model, params, seq, *chunk, eos);
+                                advance(model, params, draft, seq, *chunk, eos);
                             }
                         });
                     }
                 });
+            }
+        }
+        // ---- resolve speculative rounds (before retirement, so a
+        // finishing sequence publishes a clean chain): roll the target
+        // cache back over the rejected tail, release the draft fork,
+        // account the round ----
+        let mut spec_events: Vec<(u64, usize, usize)> = Vec::new();
+        for seq in self.sched.active.iter_mut() {
+            if let Some(plan) = seq.spec.take() {
+                self.alloc
+                    .rollback_to(&mut seq.kv, plan.commit_len)
+                    .expect("rejected speculative tail was live");
+                self.alloc.release_fork(plan.draft_kv).expect("draft fork chain was live");
+                self.stats.record_spec(plan.drafted, plan.accepted);
+                spec_events.push((seq.req.id, plan.drafted, plan.accepted));
             }
         }
         if let Some(start) = wave_start {
@@ -424,6 +540,18 @@ impl Engine {
                         start,
                         dur,
                         vec![("positions", num(positions as f64))],
+                    );
+                }
+                for &(tid, drafted, accepted) in &spec_events {
+                    t.complete(
+                        "spec",
+                        tid,
+                        start,
+                        dur,
+                        vec![
+                            ("drafted", num(drafted as f64)),
+                            ("accepted", num(accepted as f64)),
+                        ],
                     );
                 }
             }
@@ -461,16 +589,80 @@ impl Engine {
 }
 
 /// Advance one sequence by its planned chunk (its blocks are reserved).
+/// A sequence carrying a [`SpecPlan`] runs a speculative round instead of
+/// the plain chunk; the plan is re-attached for the planner thread to
+/// resolve (rollback + fork release) after the wave.
 fn advance(
     model: &Transformer,
     params: &Params,
+    draft: Option<&Params>,
     seq: &mut ActiveSeq,
     chunk: usize,
     eos: Option<usize>,
 ) {
+    if let Some(mut plan) = seq.spec.take() {
+        let draft_params = draft.expect("a spec plan implies a draft store");
+        speculate(model, params, draft_params, seq, &mut plan, eos);
+        seq.spec = Some(plan);
+        return;
+    }
     let tokens = seq.next_tokens(chunk);
     let logits = model.prefill_chunk(params, &tokens, &mut seq.kv);
     seq.absorb(&logits, eos);
+}
+
+/// One speculative round (greedy steady-state decode; target and fork
+/// blocks are reserved). Draft `plan.k` tokens token-at-a-time through
+/// the low-bit draft params on the CoW fork, then verify them all in ONE
+/// all-rows chunk through the target params: row `i` of the verify logits
+/// is bit-identical to what a sequential greedy decode would have seen at
+/// position `base_len + i`, so exact token match is a sound acceptance
+/// rule — the emitted stream is bit-identical to never speculating. Every
+/// round emits at least one token (the correction row on the first miss,
+/// or the bonus row after a full sweep), so the round is never slower
+/// than a plain decode step in tokens emitted.
+fn speculate(
+    model: &Transformer,
+    params: &Params,
+    draft: &Params,
+    seq: &mut ActiveSeq,
+    plan: &mut SpecPlan,
+    eos: Option<usize>,
+) {
+    let t_last = seq.next_tokens(1)[0];
+    // draft pass: greedy argmax through the draft weights on the fork
+    // (temperature 0 never touches the throwaway rng)
+    let mut throwaway = Philox4x32::new(0);
+    let mut drafts = Vec::with_capacity(plan.k);
+    let mut tok = t_last;
+    for _ in 0..plan.k {
+        let logits = model.prefill_chunk(draft, &[tok], &mut plan.draft_kv);
+        tok = sample_logits(&logits, 0.0, 0, &mut throwaway);
+        drafts.push(tok);
+    }
+    plan.drafted = drafts.len();
+    // verify wave: [t_last, draft_0, …, draft_{k-1}] through the target
+    let mut chunk = Vec::with_capacity(plan.k + 1);
+    chunk.push(t_last);
+    chunk.extend_from_slice(&drafts);
+    let all = model.prefill_chunk_logits(params, &chunk, &mut seq.kv);
+    let mut emitted = 0;
+    for i in 0..=plan.k {
+        seq.absorb(all.row(i), eos);
+        emitted += 1;
+        if i < plan.k {
+            let matched = drafts[i] == *seq.generated.last().expect("absorb emitted a token");
+            if matched {
+                plan.accepted += 1;
+            }
+            if !matched || seq.finish.is_some() {
+                break;
+            }
+        }
+    }
+    // the planner rolls the cache back here: exactly the state a
+    // sequential decode of the emitted tokens would have left
+    plan.commit_len = plan.base_len + emitted;
 }
 
 fn serve_loop(
@@ -844,6 +1036,207 @@ mod tests {
             out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(false), run(true), "fused reads must be bit-identical to the mirror");
+    }
+
+    #[test]
+    fn spec_config_validation() {
+        let spec = |k: usize| EngineConfig {
+            spec_draft_store: Some(crate::quant::resolve("fp4_e2m1_sr").unwrap()),
+            spec_k: k,
+            ..EngineConfig::default()
+        };
+        let err = spec(0).validate().unwrap_err().to_string();
+        assert!(err.contains("spec-k"), "{err}");
+        let err = spec(65).validate().unwrap_err().to_string();
+        assert!(err.contains("spec-k"), "{err}");
+        assert!(spec(1).validate().is_ok());
+        assert!(spec(64).validate().is_ok());
+        // spec_k is ignored (not validated) when speculation is off
+        let off = EngineConfig { spec_k: 0, ..EngineConfig::default() };
+        assert!(off.validate().is_ok());
+    }
+
+    #[test]
+    fn speculative_greedy_is_bit_identical_to_plain_decode() {
+        // the load-bearing invariant: speculation must never change a
+        // single greedy token, whatever the draft store or depth
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(11);
+        let run = |spec: Option<&str>, spec_k: usize| {
+            let mut e = Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 4,
+                    kv_block: 8,
+                    prefill_chunk: 4,
+                    threads: 2,
+                    spec_draft_store: spec.map(|l| crate::quant::resolve(l).unwrap()),
+                    spec_k,
+                    ..EngineConfig::default()
+                },
+            );
+            for id in 0..4u64 {
+                let prompt: Vec<usize> =
+                    (0..7).map(|k| (id as usize * 9 + k * 4) % 50).collect();
+                e.enqueue(GenRequest::greedy(id, prompt, 8)).unwrap();
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            (out.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), e)
+        };
+        let (plain, baseline) = run(None, 4);
+        assert_eq!(baseline.stats.spec_rounds(), 0);
+        for (label, k) in [("fp4_e2m1_sr", 4), ("fp8_e3m4", 3), ("int8_sr", 1)] {
+            let (spec, e) = run(Some(label), k);
+            assert_eq!(plain, spec, "{label}/k={k}: spec decode changed greedy outputs");
+            assert!(e.stats.spec_rounds() > 0, "{label}: no speculative rounds ran");
+            assert!(e.stats.spec_drafted() > 0, "{label}: rounds drafted nothing");
+            let (live, ..) = e.kv_usage();
+            assert_eq!(live, 0, "{label}: speculation leaked blocks");
+        }
+    }
+
+    #[test]
+    fn identical_draft_store_accepts_every_token() {
+        // accept-all: an f32 (lossless) draft round-trip makes the draft
+        // weights bit-identical to the target, and the fork writes each
+        // draft position through the same position-keyed KV encoding the
+        // verify pass uses — so every draft matches and every round
+        // sweeps k accepted + 1 bonus
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(7);
+        let mut e = Engine::new(
+            cfg,
+            params,
+            EngineConfig {
+                max_batch: 2,
+                kv_block: 8,
+                prefill_chunk: 4,
+                threads: 1,
+                spec_draft_store: Some(crate::quant::resolve("f32").unwrap()),
+                spec_k: 3,
+                ..EngineConfig::default()
+            },
+        );
+        e.enqueue(GenRequest::greedy(1, vec![3, 1, 4, 1, 5], 9)).unwrap();
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 9);
+        assert!(e.stats.spec_rounds() >= 2, "9 tokens at k=3 needs multiple rounds");
+        assert_eq!(
+            e.stats.spec_accepted(),
+            e.stats.spec_drafted(),
+            "a lossless draft must never be rejected"
+        );
+        assert_eq!(e.stats.spec_acceptance_rate(), 1.0);
+        let (live, ..) = e.kv_usage();
+        assert_eq!(live, 0);
+    }
+
+    #[test]
+    fn unrelated_draft_store_rolls_back_everything_and_stays_exact() {
+        // rollback-all: swap the draft weights for a completely unrelated
+        // model AFTER construction — drafts are effectively random tokens,
+        // nearly every round rejects at the first row and rolls the whole
+        // speculative tail back. Outputs must still be bit-identical.
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(11);
+        let mk = |sabotage: bool| {
+            let mut e = Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 2,
+                    kv_block: 8,
+                    prefill_chunk: 4,
+                    threads: 1,
+                    spec_draft_store: sabotage
+                        .then(|| crate::quant::resolve("fp8_e3m4").unwrap()),
+                    spec_k: 4,
+                    ..EngineConfig::default()
+                },
+            );
+            if sabotage {
+                e.draft = Some(e.model.init_params(999));
+            }
+            for id in 0..2u64 {
+                e.enqueue(GenRequest::greedy(id, vec![2 + id as usize, 7, 9], 7)).unwrap();
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            (out.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), e)
+        };
+        let (plain, _) = mk(false);
+        let (spec, e) = mk(true);
+        assert_eq!(plain, spec, "rejected drafts must leave outputs untouched");
+        assert!(e.stats.spec_rounds() > 0);
+        assert!(
+            e.stats.spec_accepted() < e.stats.spec_drafted(),
+            "an unrelated draft model cannot be always-right ({} of {})",
+            e.stats.spec_accepted(),
+            e.stats.spec_drafted()
+        );
+        let (live, ..) = e.kv_usage();
+        assert_eq!(live, 0, "rolled-back rounds leaked blocks");
+    }
+
+    #[test]
+    fn spec_under_tight_arena_preempts_without_leaks() {
+        // fork-under-pressure: a 4-block arena cannot host most rounds
+        // (fork + k+1 reservation), so the planner exercises the fallback
+        // path constantly while preemption churns sequences in and out.
+        // Everything must still complete bit-identically and leak-free.
+        let mk_reqs = || -> Vec<GenRequest> {
+            (0..6)
+                .map(|id| {
+                    let prompt: Vec<usize> =
+                        (0..12).map(|k| (id as usize * 5 + k * 3) % 50).collect();
+                    GenRequest::greedy(id, prompt, 6)
+                })
+                .collect()
+        };
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(3);
+        let mk = |kv_blocks: usize, spec: bool| {
+            Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 4,
+                    kv_block: 8,
+                    kv_blocks,
+                    prefill_chunk: 4,
+                    prefix_cache: false,
+                    threads: 1,
+                    spec_draft_store: spec
+                        .then(|| crate::quant::resolve("fp4_e2m1_sr").unwrap()),
+                    spec_k: 4,
+                    ..EngineConfig::default()
+                },
+            )
+        };
+        let mut tight = mk(4, true);
+        let mut roomy = mk(0, false);
+        for r in mk_reqs() {
+            tight.enqueue(r.clone()).unwrap();
+            roomy.enqueue(r).unwrap();
+        }
+        let mut a = tight.run_to_completion();
+        let mut b = roomy.run_to_completion();
+        assert_eq!(a.len(), 6);
+        assert!(tight.stats.preemptions() > 0, "4-block arena must preempt");
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens, "req {}: spec under pressure changed output", x.id);
+        }
+        let (live, ..) = tight.kv_usage();
+        assert_eq!(live, 0, "blocks leaked through spec + preemption");
     }
 
     #[test]

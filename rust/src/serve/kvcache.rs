@@ -396,6 +396,40 @@ impl BlockAllocator {
         true
     }
 
+    // ------------------------------------------------ speculative forking
+
+    /// Fork a sequence's cache (speculative-decode draft): the fork adopts
+    /// the chain covering `kv`'s committed positions and every shared
+    /// block is retained, so the fork starts at the same length reading
+    /// the same physical K/V with **zero copies**. The fork's first append
+    /// into the shared tail copy-on-writes through the ordinary
+    /// [`BlockAllocator::reserve`] path, leaving the parent's view frozen.
+    /// Pure refcount bumps — cannot fail on arena capacity, only on
+    /// retain misuse.
+    pub fn fork_seq(&mut self, cfg: &ModelConfig, kv: &PagedKv) -> Result<PagedKv> {
+        let chain = kv.blocks_covering(kv.len());
+        self.retain(chain)?;
+        let mut fork = self.new_seq(cfg, kv.capacity());
+        fork.adopt_prefix(chain, kv.len());
+        Ok(fork)
+    }
+
+    /// Release a fork created by [`BlockAllocator::fork_seq`] (the draft
+    /// round is over — accepted or not, the draft chain is discarded).
+    pub fn release_fork(&mut self, mut fork: PagedKv) -> Result<()> {
+        self.release_chain(fork.take_blocks())
+    }
+
+    /// Roll a sequence's cache back to `new_len` committed positions
+    /// (rejected speculative tail), releasing the blocks the shorter chain
+    /// no longer covers. Stale slots inside the kept tail block are simply
+    /// rewritten by the next append — stage-time SR encoding is keyed on
+    /// the absolute position, so the rewrite is deterministic.
+    pub fn rollback_to(&mut self, kv: &mut PagedKv, new_len: usize) -> Result<()> {
+        let released = kv.truncate(new_len);
+        self.release_chain(released)
+    }
+
     // ---------------------------------------------------- prefix caching
 
     /// Publish `tokens`' K/V chain (a retired sequence's prompt) under the
@@ -781,6 +815,69 @@ mod tests {
         a.release_chain(chain).unwrap();
         assert!(a.prefix_evict_lru());
         assert_eq!(a.prefix_stats().entries, 0);
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn fork_shares_blocks_and_first_append_cows() {
+        let c = cfg();
+        let mut a = arena(6, 4);
+        let mut kv = a.new_seq(&c, 64);
+        assert!(a.reserve(&mut kv, 6)); // 2 blocks, tail half-full
+        let row = vec![1.0f32; c.d_model];
+        for pos in 0..6 {
+            for l in 0..c.n_layer {
+                kv.write(l, pos, &row, &row);
+            }
+            kv.commit(1);
+        }
+        let live_before = a.live_blocks();
+        let mut fork = a.fork_seq(&c, &kv).unwrap();
+        assert_eq!(fork.len(), 6);
+        assert_eq!(fork.block_table(), kv.block_table(), "fork shares the chain");
+        assert_eq!(a.live_blocks(), live_before, "fork is refcounts only, zero fresh blocks");
+        assert!(a.is_shared(kv.tail_block().unwrap().id));
+        // fork's first append copy-on-writes its tail; parent stays frozen
+        assert!(a.reserve(&mut fork, 1));
+        assert_eq!(a.cow_copies, 1);
+        assert_ne!(fork.block_table()[1], kv.block_table()[1]);
+        let draft = vec![9.0f32; c.d_model];
+        for l in 0..c.n_layer {
+            fork.write(l, 6, &draft, &draft);
+        }
+        fork.commit(1);
+        assert_eq!(kv.k_row(0, 5), &row[..], "parent view unchanged by the fork's append");
+        // parent appends next: its tail is exclusive again after the CoW
+        assert!(!a.is_shared(kv.tail_block().unwrap().id));
+        a.release_fork(fork).unwrap();
+        a.release_chain(kv.take_blocks()).unwrap();
+        assert_eq!(a.live_blocks(), 0, "fork + rollback leaks nothing");
+    }
+
+    #[test]
+    fn rollback_releases_uncovered_blocks() {
+        let c = cfg();
+        let mut a = arena(4, 4);
+        let mut kv = a.new_seq(&c, 64);
+        assert!(a.reserve(&mut kv, 11)); // 3 blocks
+        let row = vec![0.5f32; c.d_model];
+        for pos in 0..11 {
+            for l in 0..c.n_layer {
+                kv.write(l, pos, &row, &row);
+            }
+            kv.commit(1);
+        }
+        assert_eq!(a.live_blocks(), 3);
+        a.rollback_to(&mut kv, 6).unwrap();
+        assert_eq!(kv.len(), 6);
+        assert_eq!(a.live_blocks(), 2, "block 3 released to the arena");
+        // the kept tail's stale slots are rewritable straight away
+        assert!(a.reserve(&mut kv, 1));
+        for l in 0..c.n_layer {
+            kv.write(l, 6, &row, &row);
+        }
+        kv.commit(1);
+        a.rollback_to(&mut kv, 0).unwrap();
         assert_eq!(a.live_blocks(), 0);
     }
 

@@ -44,7 +44,18 @@
 //!    chunk, advances the wave across worker threads (safe: blocks are
 //!    `Arc`-shared read-only, writable tails exclusive), and retires
 //!    finished sequences into the prefix index; a spawned engine front
-//!    exposes blocking [`engine::EngineClient`]s.
+//!    exposes blocking [`engine::EngineClient`]s. With a draft store
+//!    configured (`--spec-draft`, [`engine::EngineConfig::spec_draft_store`])
+//!    the engine runs **self-speculative decoding** on the CoW machinery:
+//!    greedy decode chunks fork the sequence's KV chain
+//!    ([`kvcache::BlockAllocator::fork_seq`], refcount bumps only), draft
+//!    up to `--spec-k` tokens through a lower-bit round-trip of the same
+//!    weights, verify all of them in one all-rows chunk
+//!    (`nn::transformer::prefill_chunk_logits`) through the target
+//!    weights, then roll back the rejected tail
+//!    ([`kvcache::BlockAllocator::rollback_to`]) and release the fork.
+//!    Acceptance is exact greedy token match, so spec on/off outputs are
+//!    bit-identical ([`batcher::SpecPlan`]).
 //! 6. **account** — [`stats::ServeStats`] is a view over a shared
 //!    [`crate::telemetry::Registry`]: counters, gauges and log-bucketed
 //!    histograms back p50/p95/p99 latency, TTFT, tokens/sec, batch
@@ -84,7 +95,7 @@ pub mod protocol;
 pub mod stats;
 pub mod weights;
 
-pub use batcher::{sample_logits, ActiveSeq, Scheduler};
+pub use batcher::{sample_logits, ActiveSeq, Scheduler, SpecPlan};
 pub use engine::{Engine, EngineClient, EngineConfig, EngineHandle};
 pub use kvcache::{BlockAllocator, BlockId, BlockState, PrefixCacheStats};
 pub use net::{NetClient, NetServer, NetServerConfig};

@@ -35,12 +35,21 @@ use crate::serve::stats::ServeStats;
 use crate::telemetry::Counter;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Open-connection registry: one shutdown handle per live connection,
+/// keyed by a monotonic connection id. The acceptor inserts, the
+/// connection's reader removes its own entry when it exits — so the map
+/// tracks exactly the live connections (it is how graceful drain unblocks
+/// blocked readers) instead of accumulating one dead `TcpStream` clone
+/// per connection ever accepted for the server's whole lifetime.
+type ConnMap = Arc<Mutex<HashMap<u64, TcpStream>>>;
 
 /// Front-end admission knobs (the engine's own config governs everything
 /// behind the socket).
@@ -68,6 +77,7 @@ impl Default for NetServerConfig {
 struct ConnCounters {
     accepted: Counter,
     closed: Counter,
+    clone_failed: Counter,
     frames_in: Counter,
     frames_bad: Counter,
 }
@@ -80,7 +90,7 @@ enum NetMsg {
 pub struct NetServer {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conns: ConnMap,
     msg_tx: Option<mpsc::Sender<NetMsg>>,
     acceptor: Option<std::thread::JoinHandle<()>>,
     engine_join: Option<std::thread::JoinHandle<ServeStats>>,
@@ -94,12 +104,13 @@ impl NetServer {
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let local = listener.local_addr().context("local_addr")?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns: ConnMap = Arc::new(Mutex::new(HashMap::new()));
         let (msg_tx, msg_rx) = mpsc::channel::<NetMsg>();
         let reg = engine.stats.registry().clone();
         let counters = ConnCounters {
             accepted: reg.counter("net.connections_accepted"),
             closed: reg.counter("net.connections_closed"),
+            clone_failed: reg.counter("net.accept_clone_failures"),
             frames_in: reg.counter("net.frames_in"),
             frames_bad: reg.counter("net.frames_bad"),
         };
@@ -125,6 +136,14 @@ impl NetServer {
         self.addr
     }
 
+    /// Connections currently open (registry entries). Closed connections
+    /// are reaped by their reader on exit, so this is live state, not a
+    /// lifetime total — `net.connections_accepted` minus
+    /// `net.connections_closed` converges to it at quiescence.
+    pub fn open_connections(&self) -> usize {
+        self.conns.lock().expect("conns lock").len()
+    }
+
     /// Graceful drain: stop accepting, finish every in-flight request,
     /// flush its response, and return the engine's stats.
     pub fn shutdown(mut self) -> ServeStats {
@@ -136,8 +155,9 @@ impl NetServer {
         if let Some(a) = self.acceptor.take() {
             a.join().expect("acceptor thread panicked");
         }
-        // unblock every reader: in-flight requests drain, new frames stop
-        for c in self.conns.lock().expect("conns lock").drain(..) {
+        // unblock every still-open reader: in-flight requests drain, new
+        // frames stop (each reader reaps its own registry entry as it exits)
+        for (_, c) in self.conns.lock().expect("conns lock").iter() {
             let _ = c.shutdown(Shutdown::Read);
         }
         drop(self.msg_tx.take());
@@ -161,9 +181,10 @@ fn accept_loop(
     listener: TcpListener,
     msg_tx: mpsc::Sender<NetMsg>,
     shutdown: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conns: ConnMap,
     counters: ConnCounters,
 ) {
+    let mut next_conn_id: u64 = 0;
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -172,18 +193,29 @@ fn accept_loop(
                 // mode on some platforms; readers/writers want blocking IO
                 let _ = stream.set_nonblocking(false);
                 let _ = stream.set_nodelay(true);
-                let write_half = match stream.try_clone() {
-                    Ok(w) => w,
-                    Err(_) => continue,
+                // the writer thread and the shutdown registry each need
+                // their own handle; if the OS won't dup the fd the
+                // connection cannot be served — close it explicitly and
+                // count both edges (it was counted accepted) rather than
+                // silently leaking a half-set-up socket
+                let (write_half, keep) = match (stream.try_clone(), stream.try_clone()) {
+                    (Ok(w), Ok(k)) => (w, k),
+                    _ => {
+                        counters.clone_failed.inc();
+                        counters.closed.inc();
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
                 };
-                if let Ok(keep) = stream.try_clone() {
-                    conns.lock().expect("conns lock").push(keep);
-                }
+                let conn_id = next_conn_id;
+                next_conn_id += 1;
+                conns.lock().expect("conns lock").insert(conn_id, keep);
                 let (out_tx, out_rx) = mpsc::channel::<String>();
                 std::thread::spawn(move || writer_loop(write_half, out_rx));
                 let tx = msg_tx.clone();
                 let cc = counters.clone();
-                std::thread::spawn(move || reader_loop(stream, tx, out_tx, cc));
+                let registry = conns.clone();
+                std::thread::spawn(move || reader_loop(stream, conn_id, registry, tx, out_tx, cc));
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
@@ -195,9 +227,13 @@ fn accept_loop(
 
 /// Per-connection reader: decode frames, strict-parse requests, forward to
 /// the engine thread. Malformed payloads get an [`ErrorResponse`] and the
-/// connection stays open; a framing violation gets one and closes it.
+/// connection stays open; a framing violation gets one and closes it. On
+/// exit the reader reaps its own entry from the open-connection registry
+/// (the socket's last shutdown handle drops with it) and counts the close.
 fn reader_loop(
     stream: TcpStream,
+    conn_id: u64,
+    conns: ConnMap,
     msg_tx: mpsc::Sender<NetMsg>,
     out_tx: mpsc::Sender<String>,
     counters: ConnCounters,
@@ -244,6 +280,7 @@ fn reader_loop(
             }
         }
     }
+    conns.lock().expect("conns lock").remove(&conn_id);
     counters.closed.inc();
 }
 

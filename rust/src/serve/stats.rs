@@ -40,6 +40,9 @@ pub struct ServeStats {
     prefix_tokens_reused: Counter,
     preemptions: Counter,
     deadline_expired: Counter,
+    spec_rounds: Counter,
+    spec_drafted: Counter,
+    spec_accepted: Counter,
     /// Current live arena blocks — an occupancy-over-time gauge updated on
     /// every reserve/release edge, not just end-state.
     blocks_live: Gauge,
@@ -99,6 +102,9 @@ impl ServeStats {
             prefix_tokens_reused: reg.counter("serve.prefix_tokens_reused"),
             preemptions: reg.counter("serve.preemptions"),
             deadline_expired: reg.counter("serve.deadline_expired"),
+            spec_rounds: reg.counter("serve.spec_rounds"),
+            spec_drafted: reg.counter("serve.spec_drafted"),
+            spec_accepted: reg.counter("serve.spec_accepted"),
             blocks_live: reg.gauge("serve.kv_blocks_live"),
             occupancy: reg.histogram("serve.batch_occupancy"),
             block_live: reg.histogram("serve.kv_blocks_live_per_wave"),
@@ -219,6 +225,22 @@ impl ServeStats {
         self.deadline_expired.get() as usize
     }
 
+    /// Speculative rounds executed (one fork + draft + verify cycle).
+    pub fn spec_rounds(&self) -> usize {
+        self.spec_rounds.get() as usize
+    }
+
+    /// Draft tokens proposed across all speculative rounds.
+    pub fn spec_drafted(&self) -> usize {
+        self.spec_drafted.get() as usize
+    }
+
+    /// Draft tokens confirmed by exact greedy match against the target
+    /// store's logits (the accepted-token-rate numerator).
+    pub fn spec_accepted(&self) -> usize {
+        self.spec_accepted.get() as usize
+    }
+
     /// Current live arena blocks (the occupancy-over-time gauge).
     pub fn blocks_live_now(&self) -> f64 {
         self.blocks_live.get()
@@ -286,6 +308,14 @@ impl ServeStats {
         self.preemptions.inc();
     }
 
+    /// Record one speculative round: `drafted` tokens proposed through the
+    /// draft store, `accepted` of them confirmed by the verify wave.
+    pub fn record_spec(&mut self, drafted: usize, accepted: usize) {
+        self.spec_rounds.inc();
+        self.spec_drafted.add(drafted as u64);
+        self.spec_accepted.add(accepted as u64);
+    }
+
     /// Record one KV quantized-vs-f32 logit drift sample into the
     /// streaming drift histogram (`serve.kv_logit_drift`).
     pub fn record_kv_drift(&mut self, drift: f64) {
@@ -323,20 +353,26 @@ impl ServeStats {
     }
 
     /// Record a deadline-expired request. Counts toward completions (the
-    /// caller received a response) and the latency histograms, but not
-    /// toward `prompt_tokens` — an expired-in-queue prompt was never fed,
-    /// and a partially-fed prompt would overcount prefill work either way.
-    /// `was_resident` says whether the sequence sat in the active batch
-    /// when it expired: only then is there an open "resident" trace span
-    /// to close (queued/preempted requests have none — closing one
-    /// unconditionally would break the well-nestedness invariant the fuzz
-    /// harness checks).
+    /// caller received a response) and the total/queue latency histograms,
+    /// but not toward `prompt_tokens` — an expired-in-queue prompt was
+    /// never fed, and a partially-fed prompt would overcount prefill work
+    /// either way. The **TTFT histogram** only takes a sample when the
+    /// request actually delivered tokens: a never-admitted (or
+    /// never-sampled) expiry has no first token, and recording its wait as
+    /// one would pollute the p95/p99 TTFT of the requests that were
+    /// genuinely served. `was_resident` says whether the sequence sat in
+    /// the active batch when it expired: only then is there an open
+    /// "resident" trace span to close (queued/preempted requests have none
+    /// — closing one unconditionally would break the well-nestedness
+    /// invariant the fuzz harness checks).
     pub fn record_deadline(&mut self, resp: &GenResponse, was_resident: bool) {
         self.deadline_expired.inc();
         self.completed.inc();
         self.gen_tokens.add(resp.tokens.len() as u64);
         self.total_s.record(resp.total_s);
-        self.ttft_s.record(resp.ttft_s);
+        if !resp.tokens.is_empty() {
+            self.ttft_s.record(resp.ttft_s);
+        }
         self.queue_s.record(resp.queue_s);
         self.last_done = Some(Instant::now());
         if let Some(t) = self.trace.as_mut() {
@@ -356,6 +392,17 @@ impl ServeStats {
             0.0
         } else {
             self.prefix_hits() as f64 / lookups as f64
+        }
+    }
+
+    /// Fraction of draft tokens the verify wave accepted (0 when no
+    /// speculative round ran).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        let drafted = self.spec_drafted();
+        if drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted() as f64 / drafted as f64
         }
     }
 
@@ -488,6 +535,12 @@ impl ServeStats {
             pairs.push(("kv_logit_drift_max", num(self.kv_drift_max())));
             pairs.push(("kv_logit_drift_p50", num(self.kv_drift_p50())));
         }
+        if self.spec_rounds() > 0 {
+            pairs.push(("spec_rounds", num(self.spec_rounds() as f64)));
+            pairs.push(("spec_drafted", num(self.spec_drafted() as f64)));
+            pairs.push(("spec_accepted", num(self.spec_accepted() as f64)));
+            pairs.push(("spec_acceptance_rate", num(self.spec_acceptance_rate())));
+        }
         pairs.extend(extra);
         obj(pairs)
     }
@@ -509,6 +562,7 @@ impl ServeStats {
              prefix hits     {:>10}  ({:.0}% rate, {} positions reused)\n\
              preemptions     {:>10}\n\
              deadline expiry {:>10}\n\
+             spec decode     {:>10} rounds ({} drafted, {} accepted, {:.0}% rate)\n\
              kv blocks       {:>7.2}/{} live mean (occupancy {:.0}%, peak {:.0}%)\n\
              kv store        {:>10}  ({} B/position encoded, arena {} B encoded)",
             self.completed(),
@@ -530,6 +584,10 @@ impl ServeStats {
             self.prefix_tokens_reused(),
             self.preemptions(),
             self.deadline_expired(),
+            self.spec_rounds(),
+            self.spec_drafted(),
+            self.spec_accepted(),
+            self.spec_acceptance_rate() * 100.0,
             self.mean_blocks_live(),
             self.kv_blocks_total,
             self.block_occupancy_mean() * 100.0,
@@ -736,6 +794,62 @@ mod tests {
         assert!(crate::telemetry::check_well_nested(st.trace_events()).is_ok());
         let j = st.bench_json("deadline", vec![]);
         assert_eq!(j.get("deadline_expired").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn never_admitted_expiry_leaves_ttft_histogram_empty() {
+        // the TTFT-pollution regression: a queued request that expired
+        // before emitting any token must not contribute a first-token
+        // sample (its "TTFT" would just be its queue wait, skewing
+        // p95/p99), while total/queue latency still count it
+        let mut st = ServeStats::new();
+        let mut r = resp(0, 0, 5.0); // 0 tokens, waited 5 s in queue
+        r.ttft_s = 5.0;
+        r.finish = FinishReason::Deadline;
+        st.record_deadline(&r, false);
+        let snap = st.registry().snapshot_json();
+        assert_eq!(
+            snap.get("serve.latency_ttft_s").get("count").as_usize(),
+            Some(0),
+            "never-admitted expiry must not record a TTFT sample"
+        );
+        assert_eq!(snap.get("serve.latency_total_s").get("count").as_usize(), Some(1));
+        assert_eq!(snap.get("serve.latency_queue_s").get("count").as_usize(), Some(1));
+        assert_eq!(st.completed(), 1, "latency totals still count the expiry");
+        assert_eq!(st.p95_ttft_ms(), 0.0, "percentiles stay clean");
+        // an expiry that DID deliver tokens keeps its genuine TTFT sample
+        let mut r = resp(1, 2, 0.07);
+        r.ttft_s = 0.03;
+        r.finish = FinishReason::Deadline;
+        st.record_deadline(&r, true);
+        let snap = st.registry().snapshot_json();
+        assert_eq!(snap.get("serve.latency_ttft_s").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn spec_counters_aggregate_and_flow_to_bench_json() {
+        let mut st = ServeStats::new();
+        assert_eq!(st.spec_acceptance_rate(), 0.0, "no rounds: rate is 0");
+        // spec keys only appear once a round ran (like the drift keys)
+        assert_eq!(*st.bench_json("spec", vec![]).get("spec_rounds"), Json::Null);
+        st.record_spec(4, 4); // accept-all round
+        st.record_spec(4, 1); // mostly rejected round
+        st.record_spec(2, 0); // rollback-all round
+        assert_eq!(st.spec_rounds(), 3);
+        assert_eq!(st.spec_drafted(), 10);
+        assert_eq!(st.spec_accepted(), 5);
+        assert!((st.spec_acceptance_rate() - 0.5).abs() < 1e-12);
+        let j = st.bench_json("spec", vec![]);
+        assert_eq!(j.get("spec_rounds").as_usize(), Some(3));
+        assert_eq!(j.get("spec_drafted").as_usize(), Some(10));
+        assert_eq!(j.get("spec_accepted").as_usize(), Some(5));
+        assert_eq!(j.get("spec_acceptance_rate").as_f64(), Some(0.5));
+        let snap = st.registry().snapshot_json();
+        assert_eq!(snap.get("serve.spec_rounds").as_usize(), Some(3));
+        assert_eq!(snap.get("serve.spec_accepted").as_usize(), Some(5));
+        let text = st.render("spec");
+        assert!(text.contains("spec decode"), "{text}");
+        assert!(text.contains("50% rate"), "{text}");
     }
 
     #[test]

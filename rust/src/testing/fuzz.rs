@@ -39,6 +39,12 @@
 //!    `EngineConfig::kv_mirror` on (the f32 debug mirror beside the packed
 //!    codes) yields bit-identical greedy tokens: the fused dequant-dot
 //!    kernels read exactly what the mirror materializes.
+//! 9. **speculative transparency** — re-running the engine with
+//!    self-speculative decoding on (`EngineConfig::spec_draft_store`, a
+//!    4-bit SR draft round-trip, depth varied by seed) yields bit-identical
+//!    greedy tokens and the same leak-free drain: exact-match acceptance
+//!    plus deterministic rollback (position-keyed SR re-encoding) means
+//!    speculation can never change an output, only its wave count.
 //!
 //! Cases are deliberately small (arena sizes near the per-request minimum
 //! force preemption and copy-on-write; prompts shorter than a block force
@@ -346,6 +352,27 @@ pub fn check_case(seed: u64) -> Result<(), String> {
         return Err(format!(
             "{tag}: greedy outputs changed when the f32 decode mirror was enabled \
              (fused dequant-dot kernels diverge from the mirror)"
+        ));
+    }
+
+    // 9. speculative transparency: the same case with self-speculative
+    // decoding on (lowest-bit draft stratum, depth varied by seed) must
+    // reproduce every greedy token and drain leak-free (run_engine checks
+    // leaks + telemetry; every fuzz request is greedy, so every decode
+    // chunk is spec-eligible)
+    let spec = EngineConfig {
+        spec_draft_store: Some(
+            crate::quant::resolve("fp4_e2m1_sr").expect("draft label is registered"),
+        ),
+        spec_k: 1 + (seed % 4) as usize,
+        ..case.ecfg.clone()
+    };
+    let fifth = run_engine(&model, &params, &spec, &case.requests, &tag)?;
+    if tokens_of(&first) != tokens_of(&fifth) {
+        return Err(format!(
+            "{tag}: greedy outputs changed with speculative decoding on \
+             (draft fp4_e2m1_sr, k={})",
+            spec.spec_k
         ));
     }
 

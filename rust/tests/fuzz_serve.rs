@@ -13,6 +13,9 @@
 //! * quantized-KV logit drift vs f32 stays bounded (per-scheme bound);
 //! * enabling the f32 decode mirror (`kv_mirror`) never changes greedy
 //!   outputs — the fused packed-code kernels match the mirror bit-for-bit;
+//! * enabling self-speculative decoding (`spec_draft_store` = 4-bit SR
+//!   draft, depth varied by seed) never changes greedy outputs and drains
+//!   leak-free — exact-match acceptance + deterministic rollback;
 //! * (net arm) the same mix replayed over loopback TCP — wire codec,
 //!   strict parse, framing, drain — yields bit-identical tokens with zero
 //!   lost responses and zero live blocks (`check_case_net`).

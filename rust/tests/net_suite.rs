@@ -7,8 +7,10 @@
 //! connection lifetime semantics), strict-parse error frames, deadline
 //! expiry over the wire (per-request and server-default), deterministic
 //! shed-with-retry backpressure, drain-under-load (no admitted response is
-//! lost, live-block gauge ends at zero), and duplicate in-flight id
-//! rejection.
+//! lost, live-block gauge ends at zero), duplicate in-flight id rejection,
+//! and connection-registry hygiene (closed connections are reaped, not
+//! accumulated for the server's lifetime; accepted/closed counters
+//! converge at quiescence).
 
 use gaussws::config::schema::{Arch, ModelConfig};
 use gaussws::load::{run, Dist, Driver, WorkloadSpec};
@@ -247,6 +249,46 @@ fn drain_under_load_loses_no_admitted_responses() {
     assert_eq!(stats.completed(), 4);
     assert_eq!(stats.blocks_live_now(), 0.0, "live-block gauge must read zero after drain");
     assert_eq!(stats.registry().counter("net.responses_sent").get(), 4);
+}
+
+#[test]
+fn connect_disconnect_cycles_reap_the_conn_registry() {
+    // regression: the open-connection registry used to push one TcpStream
+    // clone per accepted connection and only drain at shutdown — a
+    // long-lived server leaked one fd per connection ever accepted. Now
+    // each reader reaps its own entry on exit, so after N full
+    // connect/serve/disconnect cycles the registry must be empty and the
+    // accepted/closed counters must agree.
+    const CYCLES: u64 = 8;
+    let server = NetServer::bind("127.0.0.1:0", tiny_engine(base_cfg()), NetServerConfig::default())
+        .unwrap();
+    for id in 0..CYCLES {
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        let resp = client.generate(&GenRequest::greedy(id, vec![1 + id as usize, 2], 2)).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.tokens.len(), 2);
+    } // client drops: server reader sees EOF, reaps its registry entry
+    // reaping is asynchronous (reader threads observe the EOF on their own
+    // schedule): poll until the registry drains, bounded by a deadline
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.open_connections() > 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        server.open_connections(),
+        0,
+        "closed connections must be reaped from the registry, not accumulated"
+    );
+    let stats = server.shutdown();
+    let reg = stats.registry();
+    assert_eq!(reg.counter("net.connections_accepted").get(), CYCLES);
+    assert_eq!(
+        reg.counter("net.connections_closed").get(),
+        CYCLES,
+        "every accepted connection must be counted closed at quiescence"
+    );
+    assert_eq!(reg.counter("net.accept_clone_failures").get(), 0);
+    assert_eq!(stats.completed(), CYCLES as usize);
 }
 
 #[test]
