@@ -1,0 +1,177 @@
+//! Dense-kernel microbench: the two primitives the serving hot path leans
+//! on, measured in isolation so regressions show up without the engine's
+//! scheduling noise on top.
+//!
+//! Arms:
+//!   * `gemm.decode` — `matmul_bt` at the weight-stationary decode-wave
+//!     geometry: a `(n_seqs × d)` activation panel against each of the
+//!     per-layer weights (`d × d` attention projections, `d_ff × d` MLP,
+//!     `vocab × d` logits). The batched wave is compared against decoding
+//!     the same rows one sequence at a time (n_seqs separate `1 × d`
+//!     calls) — same flops, but the batched form streams each weight
+//!     matrix once instead of n_seqs times, which is the whole point of
+//!     the decode wave. Outputs are asserted bit-identical row-for-row.
+//!   * `gemm.panel` — the fused-qkv panel read (`matmul_bt_panel` over the
+//!     three d-row slices of a `3d × d` weight) vs materializing the full
+//!     `(t × 3d)` product; asserted bit-identical against the full
+//!     product's column slices.
+//!   * `gemm.prefill` — `matmul_bt` at prefill geometry (`t × d` against
+//!     `d_ff × d`), the tiled kernel's cache-blocking showcase.
+//!   * `packed.group` — sub-byte group decode throughput: summing 4-bit
+//!     codes through `PackedCodes::iter_group`'s word-at-a-time reader
+//!     (one u64 load yields up to 16 codes) vs the scalar per-code
+//!     `get()`; asserted to agree exactly.
+//!
+//! Run: cargo bench --bench bench_kernels [-- --quick]
+
+use std::time::Instant;
+
+use gaussws::nn::tensor::{matmul_bt, matmul_bt_panel, Mat};
+use gaussws::quant::PackedCodes;
+use gaussws::testing::prop::Gen;
+use gaussws::util::Args;
+
+/// Best-of-`reps` wall time for `f`, in seconds.
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn gflops(m: usize, k: usize, n: usize, secs: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.flag("quick");
+    let reps = if quick { 3 } else { 8 };
+    let mut g = Gen::new(args.u64_or("seed", 11));
+
+    // serving-scale geometry: bigger than the tiny test config so the
+    // weight matrices genuinely fall out of cache between per-seq calls
+    let d = if quick { 128 } else { 256 };
+    let d_ff = 4 * d;
+    let vocab = if quick { 1024 } else { 4096 };
+    let n_seqs = 16;
+
+    println!("bench_kernels: d {d}, d_ff {d_ff}, vocab {vocab}, n_seqs {n_seqs}, best of {reps}");
+
+    // ---- gemm.decode: one batched wave vs n_seqs per-sequence calls ----
+    let acts = Mat::from_vec(n_seqs, d, g.normal_vec_f32(n_seqs * d));
+    for (tag, rows) in [("attn", d), ("mlp", d_ff), ("logits", vocab)] {
+        let w = Mat::from_vec(rows, d, g.normal_vec_f32(rows * d));
+        let mut wave = Mat::zeros(n_seqs, rows);
+        let batched = best_of(reps, || {
+            matmul_bt(&acts, &w, &mut wave);
+            std::hint::black_box(&wave);
+        });
+        let mut solo_out = Mat::zeros(1, rows);
+        let solo = best_of(reps, || {
+            for s in 0..n_seqs {
+                let row = Mat::from_vec(1, d, acts.row(s).to_vec());
+                matmul_bt(&row, &w, &mut solo_out);
+                std::hint::black_box(&solo_out);
+            }
+        });
+        // the batched wave must be a pure execution-shape change
+        for s in 0..n_seqs {
+            let row = Mat::from_vec(1, d, acts.row(s).to_vec());
+            matmul_bt(&row, &w, &mut solo_out);
+            assert_eq!(wave.row(s), solo_out.row(0), "gemm.decode/{tag}: row {s} diverged");
+        }
+        println!(
+            "BENCH {{\"bench\":\"kernels\",\"arm\":\"gemm.decode/{tag}\",\
+             \"gflops_batched\":{:.2},\"gflops_per_seq\":{:.2},\"speedup\":{:.2}}}",
+            gflops(n_seqs, d, rows, batched),
+            gflops(n_seqs, d, rows, solo),
+            solo / batched
+        );
+    }
+
+    // ---- gemm.panel: fused-qkv panel reads vs the full product ----
+    let t = n_seqs;
+    let wqkv = Mat::from_vec(3 * d, d, g.normal_vec_f32(3 * d * d));
+    let h = Mat::from_vec(t, d, g.normal_vec_f32(t * d));
+    let mut q = Mat::zeros(t, d);
+    let mut k = Mat::zeros(t, d);
+    let mut v = Mat::zeros(t, d);
+    let panels = best_of(reps, || {
+        matmul_bt_panel(&h, &wqkv, 0, d, &mut q);
+        matmul_bt_panel(&h, &wqkv, d, d, &mut k);
+        matmul_bt_panel(&h, &wqkv, 2 * d, d, &mut v);
+        std::hint::black_box((&q, &k, &v));
+    });
+    let mut full = Mat::zeros(t, 3 * d);
+    let fused = best_of(reps, || {
+        matmul_bt(&h, &wqkv, &mut full);
+        std::hint::black_box(&full);
+    });
+    for i in 0..t {
+        for j in 0..d {
+            assert_eq!(q.at(i, j), full.at(i, j), "q panel diverged at ({i},{j})");
+            assert_eq!(k.at(i, j), full.at(i, d + j), "k panel diverged at ({i},{j})");
+            assert_eq!(v.at(i, j), full.at(i, 2 * d + j), "v panel diverged at ({i},{j})");
+        }
+    }
+    println!(
+        "BENCH {{\"bench\":\"kernels\",\"arm\":\"gemm.panel\",\
+         \"gflops_panels\":{:.2},\"gflops_full\":{:.2}}}",
+        gflops(t, d, 3 * d, panels),
+        gflops(t, d, 3 * d, fused)
+    );
+
+    // ---- gemm.prefill: the tiled kernel at prefill geometry ----
+    let t_pre = if quick { 64 } else { 128 };
+    let a = Mat::from_vec(t_pre, d, g.normal_vec_f32(t_pre * d));
+    let w = Mat::from_vec(d_ff, d, g.normal_vec_f32(d_ff * d));
+    let mut out = Mat::zeros(t_pre, d_ff);
+    let pre = best_of(reps, || {
+        matmul_bt(&a, &w, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "BENCH {{\"bench\":\"kernels\",\"arm\":\"gemm.prefill\",\"gflops\":{:.2}}}",
+        gflops(t_pre, d, d_ff, pre)
+    );
+
+    // ---- packed.group: word-at-a-time group decode vs scalar get() ----
+    let n_codes = if quick { 1 << 16 } else { 1 << 20 };
+    let mut codes = PackedCodes::with_len(4, n_codes);
+    for i in 0..n_codes {
+        codes.set(i, (g.u64() & 0xF) as u16);
+    }
+    let group = 64;
+    let mut sum_word = 0u64;
+    let word = best_of(reps, || {
+        sum_word = 0;
+        let mut start = 0;
+        while start < n_codes {
+            for c in codes.iter_group(start, group) {
+                sum_word += c as u64;
+            }
+            start += group;
+        }
+        std::hint::black_box(sum_word);
+    });
+    let mut sum_scalar = 0u64;
+    let scalar = best_of(reps, || {
+        sum_scalar = 0;
+        for i in 0..n_codes {
+            sum_scalar += codes.get(i) as u64;
+        }
+        std::hint::black_box(sum_scalar);
+    });
+    assert_eq!(sum_word, sum_scalar, "word-at-a-time group decode changed the codes");
+    println!(
+        "BENCH {{\"bench\":\"kernels\",\"arm\":\"packed.group\",\
+         \"mcodes_per_sec_word\":{:.1},\"mcodes_per_sec_scalar\":{:.1},\"speedup\":{:.2}}}",
+        n_codes as f64 / word / 1e6,
+        n_codes as f64 / scalar / 1e6,
+        scalar / word
+    );
+}

@@ -28,6 +28,12 @@
 //!     weights and verifies them in one wave — token digests are asserted
 //!     identical (exact-match acceptance is lossless) and the record
 //!     carries tokens/sec plus the observed acceptance rate;
+//!   * wave batching on vs off at batch 8 (`wave-on`/`wave-off`): the
+//!     "on" arm stacks every steady-state decode chunk into one
+//!     weight-stationary `decode_wave` — each weight matrix streamed once
+//!     per wave instead of once per sequence — and its record carries the
+//!     `serve.wave_batch_size` histogram (waves/mean/max); token digests
+//!     are asserted bit-identical to the per-sequence "off" arm;
 //!   * telemetry on vs off at batch 8 (best-of-N tokens/sec each): the
 //!     "on" arm records full per-request trace timelines on top of the
 //!     always-on registry; asserted within 2% of the "off" arm;
@@ -65,6 +71,10 @@ struct Arm {
     /// serving weights round-tripped through the draft scheme propose
     /// `spec_k` tokens per round, verified in one wave (the spec-on arm)
     spec: Option<(&'static str, usize)>,
+    /// batch steady-state decode chunks into one weight-stationary
+    /// `decode_wave` (`EngineConfig::wave_batch`; on everywhere except the
+    /// wave-off comparison arm)
+    wave_batch: bool,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -98,6 +108,7 @@ fn run_arm(
                 .spec
                 .map(|(label, _)| gaussws::quant::resolve(label).expect("draft store label")),
             spec_k: arm.spec.map_or(4, |(_, k)| k),
+            wave_batch: arm.wave_batch,
             ..EngineConfig::default()
         },
     );
@@ -157,6 +168,7 @@ fn run_arm(
         ("prefix_cache", Json::Bool(arm.prefix_cache)),
         ("shared_prefix", num(arm.shared_prefix as f64)),
         ("kv_mirror", Json::Bool(arm.mirror)),
+        ("wave_batch", Json::Bool(arm.wave_batch)),
         ("tokens_digest", s(&format!("{digest:016x}"))),
     ];
     extras.extend(extra);
@@ -214,6 +226,7 @@ fn main() {
             mirror: false,
             trace: false,
             spec: None,
+            wave_batch: true,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
     }
@@ -231,6 +244,7 @@ fn main() {
             mirror: false,
             trace: false,
             spec: None,
+            wave_batch: true,
         };
         records.push(run_arm(&store, &corpus, &arm, threads, prompt_len, max_new, seed, &[], vec![]).0);
     }
@@ -252,6 +266,7 @@ fn main() {
         mirror: false,
         trace: false,
         spec: None,
+        wave_batch: true,
     };
     let (rec_on, hit_rate_on, occ_on) =
         run_arm(&store, &corpus, &mk_prefix_arm(true), threads, prompt_len, max_new, seed, &[], vec![]);
@@ -311,6 +326,7 @@ fn main() {
             mirror: false,
             trace: false,
             spec: None,
+            wave_batch: true,
         };
         // the per-prompt drifts land in the stats histogram, so the BENCH
         // record carries kv_logit_drift_max AND kv_logit_drift_p50
@@ -342,6 +358,7 @@ fn main() {
         mirror,
         trace: false,
         spec: None,
+        wave_batch: true,
     };
     let (rec_fused, ..) =
         run_arm(&store, &corpus, &mk_fused_arm(false), threads, prompt_len, max_new, seed, &[], vec![]);
@@ -376,6 +393,7 @@ fn main() {
         mirror: false,
         trace: false,
         spec,
+        wave_batch: true,
     };
     let (rec_spec_off, ..) =
         run_arm(&store, &corpus, &mk_spec_arm(None), threads, prompt_len, max_new, seed, &[], vec![]);
@@ -408,6 +426,47 @@ fn main() {
     records.push(rec_spec_off);
     records.push(rec_spec_on);
 
+    // ---- wave batching on vs off, equal workload ----
+    // wave-on is the default (steady-state decode chunks stacked into one
+    // weight-stationary decode_wave, each weight matrix streamed once per
+    // wave); wave-off decodes every sequence separately. Same schedule,
+    // two execution shapes: the token streams must be bit-identical,
+    // proven by the recorded digests, and the wave-on record carries the
+    // serve.wave_batch_size histogram
+    let mk_wave_arm = |on: bool| Arm {
+        label: format!("{}/wave-{}/b8", store.label(), if on { "on" } else { "off" }),
+        batch: 8,
+        kv_block: 16,
+        prefix_cache: true,
+        shared_prefix: 0,
+        requests: 8 * per_slot,
+        kv_store: "fp8_e3m4".into(),
+        mirror: false,
+        trace: false,
+        spec: None,
+        wave_batch: on,
+    };
+    let (rec_wave_on, ..) =
+        run_arm(&store, &corpus, &mk_wave_arm(true), threads, prompt_len, max_new, seed, &[], vec![]);
+    let (rec_wave_off, ..) =
+        run_arm(&store, &corpus, &mk_wave_arm(false), threads, prompt_len, max_new, seed, &[], vec![]);
+    assert_eq!(
+        rec_wave_on.get("tokens_digest").as_str(),
+        rec_wave_off.get("tokens_digest").as_str(),
+        "wave-batched decode must be bit-identical to per-sequence decode"
+    );
+    let waves = rec_wave_on.get("wave_batch_waves").as_f64().unwrap_or(0.0);
+    let widest = rec_wave_on.get("wave_batch_max").as_f64().unwrap_or(0.0);
+    assert!(waves > 0.0, "wave-on arm batched no decode waves");
+    assert!(widest > 1.0, "wave-on arm at batch 8 never stacked >1 sequence");
+    println!(
+        "wave batching: off {:.1} tok/s, on {:.1} tok/s, {waves:.0} batched waves (max width {widest:.0})",
+        rec_wave_off.get("tokens_per_sec").as_f64().unwrap_or(0.0),
+        rec_wave_on.get("tokens_per_sec").as_f64().unwrap_or(0.0),
+    );
+    records.push(rec_wave_on);
+    records.push(rec_wave_off);
+
     // ---- telemetry overhead: trace timelines on vs off, equal workload ----
     // the registry is always on (ServeStats is a view over it), so this
     // isolates the incremental cost of full per-request trace recording;
@@ -423,6 +482,7 @@ fn main() {
         mirror: false,
         trace: on,
         spec: None,
+        wave_batch: true,
     };
     let reps = if quick { 2 } else { 3 };
     let mut best = [0f64; 2];

@@ -22,8 +22,12 @@
 //!   global refcounted arena ([`nn::kv::PagedKv`] +
 //!   `serve::BlockAllocator`), chunked prefill, cross-request prefix
 //!   caching with copy-on-write, preemption under memory pressure, a
-//!   multi-threaded decode worker pool, and p50/p95 latency + tokens/sec
-//!   + block-occupancy accounting. The KV arena itself can be
+//!   multi-threaded decode worker pool with **weight-stationary wave
+//!   batching** (steady-state decodes stack into one
+//!   [`nn::transformer::Transformer::decode_wave`] GEMM per layer, so
+//!   each weight matrix is streamed once per wave instead of once per
+//!   sequence — bit-identical outputs either way), and p50/p95 latency +
+//!   tokens/sec + block-occupancy accounting. The KV arena itself can be
 //!   **quantized block-by-block** through any blockwise quant scheme
 //!   ([`nn::kv::KvQuant`], `serve --kv-store fp8_e3m4|fp4_e2m1_sr|…`):
 //!   sub-byte [`quant::PackedCodes`] + per-group po2 scales are the
@@ -51,8 +55,9 @@
 //!   random request mix + engine config, `check_case(seed)` asserts the
 //!   serving invariants (leak-free drain, determinism, prefix-cache
 //!   transparency, paged-f32 == contiguous, bounded quantized-KV logit
-//!   drift, fused-decode == mirror bit-identity), and
-//!   `tests/fuzz_serve.rs` runs the fixed 8-seed matrix (widened to 12 in
+//!   drift, fused-decode == mirror bit-identity, spec on/off and
+//!   wave-batch on/off bit-identity), and
+//!   `tests/fuzz_serve.rs` runs the fixed 8-seed matrix (widened to 20 in
 //!   CI to cover every KV stratum) in a dedicated release-mode CI job.
 //! * **[`quant`]** — the unified quantization seam underneath L3 and L4:
 //!   one `QuantScheme` trait (codec × rounding × scale geometry) plus a

@@ -84,6 +84,8 @@ fn print_usage() {
          \x20               [--spec-draft fp4_e2m1_sr --spec-k 4 (self-speculative decoding:\n\
          \x20                draft via a lower-bit weight store, verify in one wave;\n\
          \x20                greedy outputs stay bit-identical)]\n\
+         \x20               [--no-wave-batch (debug: per-sequence decode instead of the\n\
+         \x20                weight-stationary batched wave; outputs are bit-identical)]\n\
          \x20               [--no-prefix-cache] [--shared-prefix 0]\n\
          \x20               [--prompt-len 16 --max-new 24 --temperature 0 --top-k 0]\n\
          \x20               [--eval=true] [--bench-out runs/BENCH_serve.json]\n\
@@ -464,6 +466,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => None,
         },
         spec_k: args.usize_or("spec-k", 4),
+        // --no-wave-batch: fall back to per-sequence decode (debug mode;
+        // the weight-stationary batched wave is bit-identical to it)
+        wave_batch: !args.flag("no-wave-batch"),
     };
     // degenerate paging configs (including an unhostable --kv-store
     // geometry for this model) fail here with a clean error, not a panic

@@ -406,7 +406,10 @@ impl KvBlock {
     /// group at a time — fetch the group's po2 scale once, then for each
     /// code: one [`DequantLut`] table index, one widen-by-scale, one f32
     /// multiply-accumulate *in ascending element order*, which makes the
-    /// result bit-identical to dotting against the decode mirror.
+    /// result bit-identical to dotting against the decode mirror. Code
+    /// extraction rides [`PackedCodes::iter_group`]'s word-at-a-time
+    /// reader — one u64 load yields up to 16 sub-byte codes — so the
+    /// per-code cost is shifts and a mask, not byte reassembly.
     pub fn dot_k_encoded(
         &self,
         layer: usize,

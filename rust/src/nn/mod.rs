@@ -1,8 +1,13 @@
-//! Neural-network substrate: f32 tensor ops, a GPT2/Llama2 transformer with
-//! both a train-shaped full forward (evaluation path) and an incremental
-//! KV-cache decode (serving path, storage-generic over [`kv::KvStorage`]
-//! with contiguous and paged block-table implementations), and the
-//! rust-side optimizers that apply HLO-computed gradients.
+//! Neural-network substrate: f32 tensor ops (tiled GEMM over `Bᵀ` weight
+//! layout, with row-panel access for fused weights), a GPT2/Llama2
+//! transformer with a train-shaped full forward (evaluation path), an
+//! incremental KV-cache decode (serving path, storage-generic over
+//! [`kv::KvStorage`] with contiguous and paged block-table
+//! implementations), and a weight-stationary batched decode
+//! ([`transformer::Transformer::decode_wave`]: many sequences' current
+//! tokens through each weight matrix in one GEMM, bit-identical to
+//! per-sequence decode), plus the rust-side optimizers that apply
+//! HLO-computed gradients.
 
 pub mod kv;
 pub mod optim;

@@ -49,31 +49,70 @@ impl Mat {
     }
 }
 
+/// Output-row panel height for the blocked [`matmul_bt`] kernel: enough A
+/// rows to amortize each streamed B panel, few enough that the panel of
+/// partial C rows stays resident.
+const GEMM_TILE_M: usize = 8;
+/// Output-column panel width (B rows per panel): `GEMM_TILE_N` rows of B
+/// at typical depths fit in L1/L2, so a panel loaded for A row 0 is still
+/// hot for rows 1..GEMM_TILE_M.
+const GEMM_TILE_N: usize = 64;
+
 /// `C = A · B` where `A` is (m,k) and `b_t` is **B transposed** (n,k).
 /// Transposing B makes both inner loops unit-stride.
+///
+/// The (i, j) output space is walked in `GEMM_TILE_M` × `GEMM_TILE_N`
+/// panels so each panel of B rows is reused across a panel of A rows
+/// instead of being re-streamed from memory per row. Tiling only reorders
+/// *which* output cell is computed next — every `C[i][j]` is still one
+/// full-depth ascending-k accumulation written exactly once — so the
+/// result is bit-identical to the untiled kernel (the invariant the
+/// weight-stationary decode wave relies on).
 pub fn matmul_bt(a: &Mat, b_t: &Mat, out: &mut Mat) {
-    let (m, k, n) = (a.rows, a.cols, b_t.rows);
-    assert_eq!(b_t.cols, k);
-    assert_eq!((out.rows, out.cols), (m, n));
-    for i in 0..m {
-        let ar = a.row(i);
-        let or = &mut out.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let br = b_t.row(j);
-            let mut acc = 0f32;
-            // the compiler vectorizes this reliably
-            for (x, y) in ar.iter().zip(br.iter()) {
-                acc += x * y;
-            }
-            or[j] = acc;
-        }
-    }
+    matmul_bt_panel(a, b_t, 0, b_t.rows, out)
 }
 
-/// `C = A · B` with B in natural (k,n) layout (transposes internally).
-pub fn matmul(a: &Mat, b: &Mat, out: &mut Mat) {
-    let bt = b.transpose();
-    matmul_bt(a, &bt, out);
+///// [`matmul_bt`] against a row panel of `b_t`: `C = A · B[b_row0 ..
+/// b_row0+n]ᵀ`, with `out` sized (a.rows × n). This is how a fused-weight
+/// matrix is consumed in slices — e.g. the GPT-2 qkv weight (3d × d) is
+/// read as three d-row panels producing q, k and v directly, with no
+/// (t × 3d) intermediate and no row-copy split. Each output cell is the
+/// same full-depth ascending-k dot against the same weight row as the
+/// full-matrix call, so panel results are bit-identical to slicing the
+/// full product.
+pub fn matmul_bt_panel(a: &Mat, b_t: &Mat, b_row0: usize, n: usize, out: &mut Mat) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(b_t.cols, k);
+    assert!(
+        b_row0 + n <= b_t.rows,
+        "panel rows [{b_row0}, {}) out of range {}",
+        b_row0 + n,
+        b_t.rows
+    );
+    assert_eq!((out.rows, out.cols), (m, n));
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + GEMM_TILE_N).min(n);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + GEMM_TILE_M).min(m);
+            for i in i0..i1 {
+                let ar = a.row(i);
+                let or = &mut out.data[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let br = b_t.row(b_row0 + j);
+                    let mut acc = 0f32;
+                    // the compiler vectorizes this reliably
+                    for (x, y) in ar.iter().zip(br.iter()) {
+                        acc += x * y;
+                    }
+                    or[j] = acc;
+                }
+            }
+            i0 = i1;
+        }
+        j0 = j1;
+    }
 }
 
 /// In-place row-wise softmax with max-subtraction, optionally causal
@@ -174,8 +213,9 @@ mod tests {
     fn matmul_small_known() {
         let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let bt = b.transpose();
         let mut c = Mat::zeros(2, 2);
-        matmul(&a, &b, &mut c);
+        matmul_bt(&a, &bt, &mut c);
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
     }
 
@@ -186,8 +226,9 @@ mod tests {
             let (m, k, n) = (g.usize_in(1, 17), g.usize_in(1, 23), g.usize_in(1, 13));
             let a = Mat::from_vec(m, k, g.normal_vec_f32(m * k));
             let b = Mat::from_vec(k, n, g.normal_vec_f32(k * n));
+            let bt = b.transpose();
             let mut c = Mat::zeros(m, n);
-            matmul(&a, &b, &mut c);
+            matmul_bt(&a, &bt, &mut c);
             for i in 0..m {
                 for j in 0..n {
                     let mut acc = 0f64;
@@ -196,6 +237,75 @@ mod tests {
                     }
                     if (acc as f32 - c.at(i, j)).abs() > 1e-3 {
                         return Err(format!("({i},{j}): {} vs {}", acc, c.at(i, j)));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_matmul_bt_is_bit_identical_to_untiled() {
+        // the blocked kernel must not just be close — every output cell is
+        // one full-depth ascending-k f32 accumulation, so it must equal the
+        // unblocked row-major walk bit-for-bit across shapes that land on
+        // every tile-boundary phase (including shapes smaller than a tile
+        // and shapes spanning several panels in both dimensions)
+        use crate::testing::prop::{check, Gen};
+        check("tiled matmul_bt == untiled, bit-for-bit", 20, |g: &mut Gen| {
+            let m = g.usize_in(1, 3 * GEMM_TILE_M + 1);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, 2 * GEMM_TILE_N + 3);
+            let a = Mat::from_vec(m, k, g.normal_vec_f32(m * k));
+            let bt = Mat::from_vec(n, k, g.normal_vec_f32(n * k));
+            let mut c = Mat::zeros(m, n);
+            matmul_bt(&a, &bt, &mut c);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f32;
+                    for (x, y) in a.row(i).iter().zip(bt.row(j).iter()) {
+                        acc += x * y;
+                    }
+                    if acc.to_bits() != c.at(i, j).to_bits() {
+                        return Err(format!(
+                            "({m},{k},{n}) cell ({i},{j}): {acc} vs {} (bits differ)",
+                            c.at(i, j)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_bt_panel_equals_column_slice_of_full_product() {
+        // consuming a fused weight as row panels (the GPT-2 qkv split)
+        // must reproduce the corresponding column slice of the full
+        // product bit-for-bit, including panels that start mid-matrix
+        use crate::testing::prop::{check, Gen};
+        check("matmul_bt_panel == full-product slice", 20, |g: &mut Gen| {
+            let m = g.usize_in(1, 2 * GEMM_TILE_M + 1);
+            let k = g.usize_in(1, 32);
+            let rows = g.usize_in(2, GEMM_TILE_N + 9);
+            let a = Mat::from_vec(m, k, g.normal_vec_f32(m * k));
+            let bt = Mat::from_vec(rows, k, g.normal_vec_f32(rows * k));
+            let mut full = Mat::zeros(m, rows);
+            matmul_bt(&a, &bt, &mut full);
+            let b_row0 = g.usize_in(0, rows - 1);
+            let n = g.usize_in(1, rows - b_row0);
+            let mut panel = Mat::zeros(m, n);
+            matmul_bt_panel(&a, &bt, b_row0, n, &mut panel);
+            for i in 0..m {
+                for j in 0..n {
+                    if panel.at(i, j).to_bits() != full.at(i, b_row0 + j).to_bits() {
+                        return Err(format!(
+                            "({m},{k},{rows}) panel [{b_row0},{}) cell ({i},{j}): \
+                             {} vs {} (bits differ)",
+                            b_row0 + n,
+                            panel.at(i, j),
+                            full.at(i, b_row0 + j)
+                        ));
                     }
                 }
             }

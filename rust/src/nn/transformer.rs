@@ -3,14 +3,18 @@
 //! Table C.1 / FP6–FP12 claims, L3 overhead benchmarks) plus an
 //! incremental decode over a per-sequence KV cache — the serving hot
 //! path. Decode is storage-agnostic: [`Transformer::prefill_chunk`]
-//! advances a sequence by N positions per wave and
-//! [`Transformer::decode_step`] is its single-token special case, both
-//! generic over [`KvStorage`] (contiguous [`DecodeCache`] or the paged
-//! [`crate::nn::kv::PagedKv`]). Attention reads go through the storage's
-//! fused hooks ([`KvStorage::dot_k`] / [`KvStorage::axpy_v`]), so a
-//! quantized paged cache dequantizes its packed codes inside the dot
-//! products — no f32 mirror — while raw storages keep the classic loops,
-//! bit-identically. Training runs through the L2 HLO artifacts.
+//! advances a sequence by N positions per wave,
+//! [`Transformer::decode_step`] is its single-token special case, and
+//! [`Transformer::decode_wave`] is the weight-stationary batched form —
+//! one token from each of N *different* sequences stacked into a single
+//! (N × d_model) activation so every dense weight matrix is read once per
+//! wave instead of once per sequence. All are generic over [`KvStorage`]
+//! (contiguous [`DecodeCache`] or the paged [`crate::nn::kv::PagedKv`]).
+//! Attention reads go through the storage's fused hooks
+//! ([`KvStorage::dot_k`] / [`KvStorage::axpy_v`]), so a quantized paged
+//! cache dequantizes its packed codes inside the dot products — no f32
+//! mirror — while raw storages keep the classic loops, bit-identically.
+//! Training runs through the L2 HLO artifacts.
 //!
 //! Weight layout matches `python/compile/model.py` exactly (see the
 //! manifest ordering in `runtime::artifact`), so HLO-trained parameters
@@ -18,7 +22,8 @@
 
 use super::kv::KvStorage;
 use super::tensor::{
-    gelu, layer_norm, matmul_bt, rms_norm, rope, rope_row, silu, softmax_rows, Mat,
+    gelu, layer_norm, matmul_bt, matmul_bt_panel, rms_norm, rope, rope_row, silu, softmax_rows,
+    Mat,
 };
 use crate::config::schema::{Arch, ModelConfig};
 use crate::prng::Philox4x32;
@@ -316,16 +321,16 @@ impl Transformer {
             }
             let (q, k, v) = match cfg.arch {
                 Arch::Gpt2 => {
-                    let mut qkv = Mat::zeros(t, 3 * d);
-                    matmul_bt(&h, params.get(&p("qkv")), &mut qkv);
+                    // read the fused (3d × d) qkv weight as three d-row
+                    // panels, writing q/k/v directly — no (t × 3d)
+                    // intermediate, no row-copy split
+                    let w = params.get(&p("qkv"));
                     let mut q = Mat::zeros(t, d);
                     let mut k = Mat::zeros(t, d);
                     let mut v = Mat::zeros(t, d);
-                    for i in 0..t {
-                        q.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[..d]);
-                        k.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[d..2 * d]);
-                        v.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[2 * d..]);
-                    }
+                    matmul_bt_panel(&h, w, 0, d, &mut q);
+                    matmul_bt_panel(&h, w, d, d, &mut k);
+                    matmul_bt_panel(&h, w, 2 * d, d, &mut v);
                     (q, k, v)
                 }
                 Arch::Llama2 => {
@@ -448,7 +453,9 @@ impl Transformer {
     /// Incremental decode: run ONE token at position `cache.len()`,
     /// appending its K/V and attending over all cached positions. Returns
     /// the logits row (vocab). The single-token special case of
-    /// [`Transformer::prefill_chunk`].
+    /// [`Transformer::prefill_chunk`] — and the 1-sequence case of
+    /// [`Transformer::decode_wave`], which batches this across sequences
+    /// without changing any output bit.
     pub fn decode_step<C: KvStorage>(
         &self,
         params: &Params,
@@ -456,6 +463,215 @@ impl Transformer {
         cache: &mut C,
     ) -> Vec<f32> {
         self.prefill_chunk(params, &[token], cache)
+    }
+
+    /// Weight-stationary batched decode: advance N *different* sequences by
+    /// one token each in a single wave. `tokens[s]` is decoded at position
+    /// `caches[s].len()` of its own cache, and the returned `(N × vocab)`
+    /// [`Mat`] holds sequence `s`'s logits in row `s`.
+    ///
+    /// The point is weight traffic: the per-sequence path streams every
+    /// dense weight matrix once *per sequence* per wave (each linear a
+    /// 1 × d matvec), so an N-sequence decode wave reads N × |W| weight
+    /// bytes. Here the N current-token hidden rows are stacked into one
+    /// `(N × d_model)` activation and each layer's linears — qkv (or
+    /// q/k/v), attention-out, the MLP pair, and the `vocab × d` logits
+    /// head, the largest of all — run as ONE [`matmul_bt`] per wave: |W|
+    /// bytes total, amortized across the batch. Attention stays
+    /// per-sequence over each sequence's own [`KvStorage`] (sharded
+    /// round-robin across `threads` scoped threads when `threads > 1`).
+    ///
+    /// **Bit-identity:** every dense kernel here computes output rows
+    /// independently with the same full-depth ascending-k dot order as the
+    /// 1-row call, `layer_norm`/`rms_norm`/`softmax_rows` are row-wise,
+    /// `rope_row` is applied at each sequence's own absolute position, and
+    /// the per-row attention goes through the same `attend_row` kernel as
+    /// [`Transformer::prefill_chunk`]. Stacking N sequences' rows into one
+    /// Mat and slicing the results back out is therefore exactly
+    /// value-preserving: row `s` is bit-identical to what
+    /// [`Transformer::decode_step`] would have returned for sequence `s`
+    /// alone, for any batch composition, thread count, and KV storage.
+    /// Each cache is committed by one position before returning.
+    pub fn decode_wave<C: KvStorage + Sync>(
+        &self,
+        params: &Params,
+        tokens: &[usize],
+        caches: &mut [&mut C],
+        threads: usize,
+    ) -> Mat {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let n = tokens.len();
+        assert!(n > 0, "decode wave must be non-empty");
+        assert_eq!(n, caches.len(), "one cache per decoding sequence");
+        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        for (s, c) in caches.iter().enumerate() {
+            assert!(
+                pos[s] < c.capacity(),
+                "KV cache full: seq {s} at {}/{}",
+                pos[s],
+                c.capacity()
+            );
+            assert!(pos[s] < cfg.seq_len, "seq {s}: decode past seq_len {}", cfg.seq_len);
+        }
+
+        let embed = params.get("embed");
+        let mut x = Mat::zeros(n, d);
+        for (s, &tok) in tokens.iter().enumerate() {
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            x.data[s * d..(s + 1) * d].copy_from_slice(embed.row(tok));
+        }
+        if cfg.arch == Arch::Gpt2 {
+            let pe = params.get("pos_embed");
+            for s in 0..n {
+                for j in 0..d {
+                    x.data[s * d + j] += pe.at(pos[s], j);
+                }
+            }
+        }
+
+        let hd = d / cfg.n_head;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            let p = |s: &str| format!("blk{l}.{s}");
+            // ---- attention sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln1.g")).data,
+                    &params.get(&p("ln1.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln1.g")).data, 1e-5),
+            }
+            let (mut q, mut k, v) = match cfg.arch {
+                Arch::Gpt2 => {
+                    let w = params.get(&p("qkv"));
+                    let mut q = Mat::zeros(n, d);
+                    let mut k = Mat::zeros(n, d);
+                    let mut v = Mat::zeros(n, d);
+                    matmul_bt_panel(&h, w, 0, d, &mut q);
+                    matmul_bt_panel(&h, w, d, d, &mut k);
+                    matmul_bt_panel(&h, w, 2 * d, d, &mut v);
+                    (q, k, v)
+                }
+                Arch::Llama2 => {
+                    let mut q = Mat::zeros(n, d);
+                    let mut k = Mat::zeros(n, d);
+                    let mut v = Mat::zeros(n, d);
+                    matmul_bt(&h, params.get(&p("q")), &mut q);
+                    matmul_bt(&h, params.get(&p("k")), &mut k);
+                    matmul_bt(&h, params.get(&p("v")), &mut v);
+                    (q, k, v)
+                }
+            };
+            if cfg.arch == Arch::Llama2 {
+                // rotary at each sequence's own absolute position
+                for s in 0..n {
+                    for head in 0..cfg.n_head {
+                        let o = s * d + head * hd;
+                        rope_row(&mut q.data[o..o + hd], pos[s], 10000.0);
+                        rope_row(&mut k.data[o..o + hd], pos[s], 10000.0);
+                    }
+                }
+            }
+            for (s, c) in caches.iter_mut().enumerate() {
+                c.write(l, pos[s], k.row(s), v.row(s));
+            }
+
+            // attention is the only per-sequence stage: each row attends
+            // over its own cache through the shared `attend_row` kernel.
+            // Rows are independent (disjoint output slices, &C reads), so
+            // they shard round-robin across scoped threads.
+            let mut att = Mat::zeros(n, d);
+            let nt = threads.clamp(1, n);
+            if nt == 1 {
+                for (s, out) in att.data.chunks_mut(d).enumerate() {
+                    attend_row(&*caches[s], l, pos[s], q.row(s), out, cfg.n_head, hd, scale);
+                }
+            } else {
+                let shared: Vec<&C> = caches.iter().map(|c| &**c).collect();
+                let (q, pos) = (&q, &pos);
+                let mut parts: Vec<Vec<(usize, &mut [f32])>> =
+                    (0..nt).map(|_| Vec::new()).collect();
+                for (s, out) in att.data.chunks_mut(d).enumerate() {
+                    parts[s % nt].push((s, out));
+                }
+                std::thread::scope(|sc| {
+                    for part in parts {
+                        let shared = &shared;
+                        sc.spawn(move || {
+                            for (s, out) in part {
+                                attend_row(
+                                    shared[s],
+                                    l,
+                                    pos[s],
+                                    q.row(s),
+                                    out,
+                                    self.cfg.n_head,
+                                    hd,
+                                    scale,
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+            let mut att_out = Mat::zeros(n, d);
+            matmul_bt(&att, params.get(&p("out")), &mut att_out);
+            for i in 0..x.data.len() {
+                x.data[i] += att_out.data[i];
+            }
+            // ---- MLP sublayer ----
+            let mut h = x.clone();
+            match cfg.arch {
+                Arch::Gpt2 => layer_norm(
+                    &mut h,
+                    &params.get(&p("ln2.g")).data,
+                    &params.get(&p("ln2.b")).data,
+                    1e-5,
+                ),
+                Arch::Llama2 => rms_norm(&mut h, &params.get(&p("ln2.g")).data, 1e-5),
+            }
+            let mut mlp = Mat::zeros(n, cfg.d_ff);
+            match cfg.arch {
+                Arch::Gpt2 => {
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for v in mlp.data.iter_mut() {
+                        *v = gelu(*v);
+                    }
+                }
+                Arch::Llama2 => {
+                    let mut gate = Mat::zeros(n, cfg.d_ff);
+                    matmul_bt(&h, params.get(&p("gate")), &mut gate);
+                    matmul_bt(&h, params.get(&p("up")), &mut mlp);
+                    for (m, g) in mlp.data.iter_mut().zip(gate.data.iter()) {
+                        *m *= silu(*g);
+                    }
+                }
+            }
+            let mut down = Mat::zeros(n, d);
+            matmul_bt(&mlp, params.get(&p("down")), &mut down);
+            for i in 0..x.data.len() {
+                x.data[i] += down.data[i];
+            }
+        }
+
+        match cfg.arch {
+            Arch::Gpt2 => {
+                layer_norm(&mut x, &params.get("lnf.g").data, &params.get("lnf.b").data, 1e-5)
+            }
+            Arch::Llama2 => rms_norm(&mut x, &params.get("lnf.g").data, 1e-5),
+        }
+        // tied head: ONE (n × vocab) projection for the whole wave — the
+        // single biggest weight matrix, read once instead of n times
+        let mut logits = Mat::zeros(n, cfg.vocab);
+        matmul_bt(&x, embed, &mut logits);
+        for c in caches.iter_mut() {
+            c.commit(1);
+        }
+        logits
     }
 
     /// Chunked prefill: advance a sequence by `tokens.len()` positions in
@@ -577,16 +793,17 @@ impl Transformer {
             }
             let (q, k, v) = match cfg.arch {
                 Arch::Gpt2 => {
-                    let mut qkv = Mat::zeros(t, 3 * d);
-                    matmul_bt(&h, params.get(&p("qkv")), &mut qkv);
+                    // read the fused (3d × d) qkv weight as three d-row
+                    // panels, writing q/k/v directly — no (t × 3d)
+                    // intermediate, no row-copy split (bit-identical: each
+                    // output cell is the same dot against the same row)
+                    let w = params.get(&p("qkv"));
                     let mut q = Mat::zeros(t, d);
                     let mut k = Mat::zeros(t, d);
                     let mut v = Mat::zeros(t, d);
-                    for i in 0..t {
-                        q.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[..d]);
-                        k.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[d..2 * d]);
-                        v.data[i * d..(i + 1) * d].copy_from_slice(&qkv.row(i)[2 * d..]);
-                    }
+                    matmul_bt_panel(&h, w, 0, d, &mut q);
+                    matmul_bt_panel(&h, w, d, d, &mut k);
+                    matmul_bt_panel(&h, w, 2 * d, d, &mut v);
                     (q, k, v)
                 }
                 Arch::Llama2 => {
@@ -617,25 +834,13 @@ impl Transformer {
             // 0..=p0+i through the storage's fused hooks — quantized paged
             // caches dequantize packed codes in place, contiguous/mirrored
             // caches run the classic f32 loops; both accumulate in the
-            // same element order, so the logits are storage-invariant
+            // same element order, so the logits are storage-invariant.
+            // The per-row kernel is shared with `decode_wave`, making the
+            // batched wave's bit-identity structural rather than mirrored.
             let mut att = Mat::zeros(t, d);
             for i in 0..t {
-                let pos = p0 + i;
-                for head in 0..cfg.n_head {
-                    let qh = &q.row(i)[head * hd..(head + 1) * hd];
-                    let mut scores = Mat::zeros(1, pos + 1);
-                    for j in 0..=pos {
-                        *scores.at_mut(0, j) = cache.dot_k(l, j, head * hd, qh) * scale;
-                    }
-                    softmax_rows(&mut scores, None);
-                    // j-outer so each attended position's row resolves (or
-                    // decodes) once; per-element adds stay in ascending-j
-                    // order, bit-identical to the e-outer form
-                    let ar = &mut att.data[i * d + head * hd..i * d + (head + 1) * hd];
-                    for j in 0..=pos {
-                        cache.axpy_v(l, j, head * hd, scores.at(0, j), ar);
-                    }
-                }
+                let out = &mut att.data[i * d..(i + 1) * d];
+                attend_row(&*cache, l, p0 + i, q.row(i), out, cfg.n_head, hd, scale);
             }
             let mut att_out = Mat::zeros(t, d);
             matmul_bt(&att, params.get(&p("out")), &mut att_out);
@@ -693,6 +898,40 @@ impl Transformer {
             total += (lse - row[target]) as f64;
         }
         total / n as f64
+    }
+}
+
+/// One row of causal attention at absolute position `pos`: score `q_row`
+/// against cached positions `0..=pos` per head, softmax, and accumulate the
+/// attended values into `out` (a d_model slice) through the storage's fused
+/// hooks. j-outer so each attended position's row resolves (or decodes)
+/// once; per-element adds stay in ascending-j order, bit-identical to the
+/// e-outer form. This is THE per-row attention kernel — both
+/// [`Transformer::prefill_chunk`] (via `prefill_hidden`) and
+/// [`Transformer::decode_wave`] call it, so per-sequence and batched decode
+/// share the attention arithmetic by construction.
+#[allow(clippy::too_many_arguments)]
+fn attend_row<C: KvStorage>(
+    cache: &C,
+    layer: usize,
+    pos: usize,
+    q_row: &[f32],
+    out: &mut [f32],
+    n_head: usize,
+    hd: usize,
+    scale: f32,
+) {
+    for head in 0..n_head {
+        let qh = &q_row[head * hd..(head + 1) * hd];
+        let mut scores = Mat::zeros(1, pos + 1);
+        for j in 0..=pos {
+            *scores.at_mut(0, j) = cache.dot_k(layer, j, head * hd, qh) * scale;
+        }
+        softmax_rows(&mut scores, None);
+        let ar = &mut out[head * hd..(head + 1) * hd];
+        for j in 0..=pos {
+            cache.axpy_v(layer, j, head * hd, scores.at(0, j), ar);
+        }
     }
 }
 
@@ -881,6 +1120,81 @@ mod tests {
                 assert_eq!(a, b, "{arch:?}: paged logits diverge from contiguous");
             }
             assert_eq!(paged.n_blocks(), 3, "5 positions at block 2");
+        }
+    }
+
+    #[test]
+    fn decode_wave_single_sequence_equals_decode_step() {
+        // n=1 wave over a contiguous cache == decode_step, bit for bit
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let mut solo = DecodeCache::new(&t.cfg, 16);
+            let mut wave = DecodeCache::new(&t.cfg, 16);
+            for &tok in &[9usize, 1, 30, 44, 2] {
+                let want = t.decode_step(&p, tok, &mut solo);
+                let mut refs = [&mut wave];
+                let got = t.decode_wave(&p, &[tok], &mut refs, 1);
+                assert_eq!((got.rows, got.cols), (1, t.cfg.vocab));
+                assert_eq!(got.row(0), &want[..], "{arch:?}: n=1 wave diverges");
+            }
+            assert_eq!(wave.len, solo.len);
+        }
+    }
+
+    #[test]
+    fn decode_wave_is_bit_identical_to_per_sequence_decode() {
+        // the weight-stationary batched wave must be a pure traffic
+        // optimization: for any batch size, prefix stagger, thread count
+        // and KV quantization scheme, row s of decode_wave equals the
+        // decode_step logits of sequence s run alone — and leaves the
+        // caches in identical states (checked by continuing for rounds)
+        use crate::nn::kv::{KvQuant, PagedKv};
+        use crate::testing::prop::check;
+        for arch in [Arch::Gpt2, Arch::Llama2] {
+            let (t, p) = tiny(arch);
+            let labels = ["f32", "fp8_e3m4", "int8_sr", "fp4_e2m1_sr"];
+            check("decode_wave == per-seq decode_step", 6, |g| {
+                let n = g.usize_in(1, 5);
+                let label = *g.choose(&labels);
+                let threads = g.usize_in(1, 3);
+                let seed = g.u64();
+                let mk = || {
+                    let q = KvQuant::new(
+                        crate::quant::resolve(label).unwrap(),
+                        t.cfg.d_model,
+                        seed,
+                    )
+                    .unwrap();
+                    PagedKv::new_quantized(&t.cfg, 4, t.cfg.seq_len, q)
+                };
+                let mut wave: Vec<PagedKv> = (0..n).map(|_| mk()).collect();
+                let mut solo: Vec<PagedKv> = (0..n).map(|_| mk()).collect();
+                // stagger every sequence to its own position via a random
+                // prefix fed identically into both cache sets
+                for s in 0..n {
+                    let plen = g.usize_in(1, 6);
+                    let prefix: Vec<usize> =
+                        (0..plen).map(|_| g.usize_in(0, t.cfg.vocab - 1)).collect();
+                    t.prefill_chunk(&p, &prefix, &mut wave[s]);
+                    t.prefill_chunk(&p, &prefix, &mut solo[s]);
+                }
+                for round in 0..g.usize_in(1, 3) {
+                    let tokens: Vec<usize> =
+                        (0..n).map(|_| g.usize_in(0, t.cfg.vocab - 1)).collect();
+                    let mut refs: Vec<&mut PagedKv> = wave.iter_mut().collect();
+                    let logits = t.decode_wave(&p, &tokens, &mut refs, threads);
+                    for s in 0..n {
+                        let want = t.decode_step(&p, tokens[s], &mut solo[s]);
+                        if logits.row(s) != &want[..] {
+                            return Err(format!(
+                                "{arch:?} {label} n={n} threads={threads} \
+                                 round {round} seq {s}: wave logits diverge"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
         }
     }
 

@@ -33,7 +33,7 @@ pub mod packing;
 pub mod registry;
 pub mod scheme;
 
-pub use packing::{packed_bytes, DequantLut, PackedCodes};
+pub use packing::{packed_bytes, DequantLut, GroupIter, PackedCodes};
 pub use registry::{labels, resolve, Registry, DEFAULT_BLOCK};
 pub use scheme::{
     fake_quantize, po2_scale, tensor_seed, Axis, Codec, Geometry, QuantScheme, Quantized, Scheme,

@@ -167,16 +167,83 @@ impl PackedCodes {
 
     /// Codes `[start, start + n)` — one scale group of a KV row, or any
     /// other contiguous span (group boundaries need not be byte-aligned).
-    pub fn iter_group(&self, start: usize, n: usize) -> impl Iterator<Item = u16> + '_ {
+    ///
+    /// Decodes word-at-a-time: one `u64` read from the byte buffer yields
+    /// up to `⌊57/bits⌋` codes (16 for 2-bit, 14 for 4-bit, 9 for 6-bit)
+    /// before the next refill, instead of the 3-byte reassembly
+    /// [`PackedCodes::get`] pays per code. Code order and values are
+    /// identical to the scalar walk — this is purely a read-width change.
+    pub fn iter_group(&self, start: usize, n: usize) -> GroupIter<'_> {
         assert!(
             start + n <= self.len,
             "group [{start}, {}) out of range {}",
             start + n,
             self.len
         );
-        (start..start + n).map(move |i| self.get(i))
+        GroupIter {
+            bytes: &self.bytes,
+            bits: self.bits as usize,
+            mask: self.mask(),
+            bit: start * self.bits as usize,
+            remaining: n,
+            acc: 0,
+            acc_bits: 0,
+        }
     }
 }
+
+/// Word-at-a-time reader over a contiguous span of packed codes (from
+/// [`PackedCodes::iter_group`]): a 64-bit accumulator is refilled with one
+/// wide load and drained LSB-first, so most `next` calls are a shift+mask.
+#[derive(Debug)]
+pub struct GroupIter<'a> {
+    bytes: &'a [u8],
+    bits: usize,
+    mask: u32,
+    /// Absolute bit offset of the next code not yet in the accumulator.
+    bit: usize,
+    remaining: usize,
+    acc: u64,
+    /// Valid low bits of `acc` still undrained.
+    acc_bits: usize,
+}
+
+impl Iterator for GroupIter<'_> {
+    type Item = u16;
+
+    #[inline]
+    fn next(&mut self) -> Option<u16> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if self.acc_bits < self.bits {
+            // refill from the cursor: up to 8 bytes assembled little-endian
+            // (fewer at the buffer tail — the span's last code is fully
+            // inside the buffer, so the partial word still covers it)
+            let byte = self.bit / 8;
+            let shift = self.bit % 8;
+            let end = self.bytes.len().min(byte + 8);
+            let mut word = 0u64;
+            for (k, &b) in self.bytes[byte..end].iter().enumerate() {
+                word |= (b as u64) << (8 * k);
+            }
+            self.acc = word >> shift;
+            self.acc_bits = (end - byte) * 8 - shift;
+        }
+        let code = (self.acc as u32 & self.mask) as u16;
+        self.acc >>= self.bits;
+        self.acc_bits -= self.bits;
+        self.bit += self.bits;
+        self.remaining -= 1;
+        Some(code)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for GroupIter<'_> {}
 
 /// The full `2^bits` code→value table of a packed codec: `table[c] ==
 /// codec.decode(c)` for every representable code pattern (including the
@@ -275,6 +342,50 @@ mod tests {
             let want: Vec<u16> = (gi as u16 * 3..gi as u16 * 3 + 3).map(|c| c * 7 % 64).collect();
             assert_eq!(got, want, "group {gi}");
         }
+    }
+
+    #[test]
+    fn word_iter_group_matches_scalar_get_for_every_width() {
+        // the word-at-a-time reader must reproduce the scalar 3-byte `get`
+        // walk exactly for every supported width, every start phase, and
+        // spans that end at (and short of) the buffer tail
+        for bits in 2..=16u32 {
+            let len = 131; // prime so group starts land on every bit phase
+            let mask = (1u32 << bits) - 1;
+            let mut pc = PackedCodes::with_len(bits, len);
+            for i in 0..len {
+                pc.set(i, ((i as u32).wrapping_mul(2654435761).rotate_right(7) & mask) as u16);
+            }
+            for &(start, n) in
+                &[(0usize, len), (1, len - 1), (7, 13), (len - 9, 9), (len - 1, 1), (5, 0), (len, 0)]
+            {
+                let got: Vec<u16> = pc.iter_group(start, n).collect();
+                let want: Vec<u16> = (start..start + n).map(|i| pc.get(i)).collect();
+                assert_eq!(got, want, "bits {bits} span [{start}, {})", start + n);
+            }
+        }
+    }
+
+    #[test]
+    fn word_iter_group_matches_scalar_get_random_spans() {
+        use crate::testing::prop::{check, Gen};
+        check("word iter_group == scalar get", 30, |g: &mut Gen| {
+            let bits = g.usize_in(2, 16) as u32;
+            let len = g.usize_in(1, 300);
+            let mask = (1u64 << bits) - 1;
+            let mut pc = PackedCodes::with_len(bits, len);
+            for i in 0..len {
+                pc.set(i, (g.u64() & mask) as u16);
+            }
+            let start = g.usize_in(0, len - 1);
+            let n = g.usize_in(0, len - start);
+            let got: Vec<u16> = pc.iter_group(start, n).collect();
+            let want: Vec<u16> = (start..start + n).map(|i| pc.get(i)).collect();
+            if got != want {
+                return Err(format!("bits {bits} len {len} span [{start}, {})", start + n));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -20,8 +20,14 @@
 //!    (prefill chunk or one decode token) and its blocks are reserved;
 //!    when the arena runs dry the engine first evicts LRU prefix entries,
 //!    then preempts the newest sequence back to the queue.
-//! 3. **wave** — workers advance every sequence by its chunk via
-//!    `Transformer::prefill_chunk` and sample where prefill completed.
+//! 3. **wave** — steady-state decode chunks batch into ONE
+//!    weight-stationary `Transformer::decode_wave` (every dense weight
+//!    matrix read once for the whole batch, attention per-sequence across
+//!    scoped threads; [`EngineConfig::wave_batch`]); prefill chunks and
+//!    speculative rounds advance per-sequence via
+//!    `Transformer::prefill_chunk`, dealt largest-first round-robin across
+//!    workers so wave wall time is bounded by the largest single item.
+//!    Both paths emit bit-identical tokens by construction.
 //!
 //! With a draft store configured ([`EngineConfig::spec_draft_store`]) the
 //! engine additionally runs **self-speculative decoding**: greedy
@@ -98,6 +104,12 @@ pub struct EngineConfig {
     /// Draft tokens proposed per speculative round (CLI `--spec-k`).
     /// Ignored unless a draft store is configured.
     pub spec_k: usize,
+    /// Batch steady-state decode chunks into one weight-stationary
+    /// [`Transformer::decode_wave`] per wave (each dense weight matrix read
+    /// once for the whole batch instead of once per sequence). On by
+    /// default; the CLI `--no-wave-batch` debug flag turns it off to
+    /// A/B-check the bit-identity claim — outputs never differ either way.
+    pub wave_batch: bool,
 }
 
 impl Default for EngineConfig {
@@ -117,6 +129,7 @@ impl Default for EngineConfig {
             trace: false,
             spec_draft_store: None,
             spec_k: 4,
+            wave_batch: true,
         }
     }
 }
@@ -364,8 +377,9 @@ impl Engine {
     /// One engine iteration: admit from the queue, plan and reserve each
     /// active sequence's chunk (evicting cached prefixes / preempting the
     /// newest sequence if the arena runs dry), advance every sequence by
-    /// its chunk (parallel across workers), retire finished sequences.
-    /// Returns completions.
+    /// its chunk — steady-state decodes batched into one weight-stationary
+    /// `decode_wave`, the rest parallel across workers — and retire
+    /// finished sequences. Returns completions.
     pub fn step(&mut self) -> Vec<GenResponse> {
         // deadline sweep first: an expired queued request must not be
         // admitted, and an expired active sequence must not burn a wave
@@ -490,30 +504,92 @@ impl Engine {
             Vec::new()
         };
         // ---- wave: advance every sequence by its chunk ----
+        let wave_batch_n;
         {
             let model = &self.model;
             let params = &self.params;
             let draft = self.draft.as_ref();
             let eos = self.cfg.eos;
-            let mut work: Vec<(&mut ActiveSeq, usize)> =
+            let wave_batch = self.cfg.wave_batch;
+            let threads = self.cfg.threads.max(1);
+            let work: Vec<(&mut ActiveSeq, usize)> =
                 self.sched.active.iter_mut().zip(chunks).collect();
-            let n_threads = self.cfg.threads.clamp(1, work.len());
-            if n_threads == 1 {
-                for (seq, chunk) in work.iter_mut() {
-                    advance(model, params, draft, seq, *chunk, eos);
-                }
+            // split the wave: steady-state decode chunks with no
+            // speculative round in flight batch into ONE weight-stationary
+            // `decode_wave` — every dense weight matrix is read once for
+            // the whole batch instead of once per sequence. Prefill chunks
+            // and speculative rounds stay on the per-sequence path.
+            let (mut batch, rest): (Vec<_>, Vec<_>) = if wave_batch {
+                work.into_iter().partition(|(seq, chunk)| {
+                    *chunk == 1 && !seq.in_prefill() && seq.spec.is_none()
+                })
             } else {
-                let per = work.len().div_ceil(n_threads);
+                (Vec::new(), work)
+            };
+            wave_batch_n = batch.len();
+            // deal per-sequence items largest-estimate-first round-robin
+            // across workers: a contiguous split hands all the long prefill
+            // chunks to one thread when requests arrive sorted, bounding
+            // the wave by a chunk-sum; interleaving bounds it by the
+            // largest single item. Cost model: dense work scales with
+            // positions fed, attention with the end position (a spec round
+            // feeds k draft steps plus a k+1 verify chunk).
+            let mut costed: Vec<(usize, (&mut ActiveSeq, usize))> = rest
+                .into_iter()
+                .map(|it| {
+                    let fed = match &it.0.spec {
+                        Some(plan) => 2 * plan.k + 1,
+                        None => it.1,
+                    };
+                    (fed * (1 + it.0.kv.len() + fed), it)
+                })
+                .collect();
+            costed.sort_by_key(|&(cost, _)| std::cmp::Reverse(cost));
+            let nt = threads.clamp(1, costed.len().max(1));
+            let mut bins: Vec<Vec<(&mut ActiveSeq, usize)>> =
+                (0..nt).map(|_| Vec::new()).collect();
+            for (i, (_, it)) in costed.into_iter().enumerate() {
+                bins[i % nt].push(it);
+            }
+            // the batched decode runs on this thread (inside the scope, so
+            // it overlaps the spawned per-sequence work); attention within
+            // it shards across its own scoped threads
+            let run_batch = |batch: &mut Vec<(&mut ActiveSeq, usize)>| {
+                if batch.is_empty() {
+                    return;
+                }
+                let tokens: Vec<usize> =
+                    batch.iter().map(|(seq, _)| seq.next_tokens(1)[0]).collect();
+                let mut caches: Vec<_> =
+                    batch.iter_mut().map(|(seq, _)| &mut seq.kv).collect();
+                let logits = model.decode_wave(params, &tokens, &mut caches, threads);
+                drop(caches);
+                for (s, (seq, _)) in batch.iter_mut().enumerate() {
+                    seq.absorb(logits.row(s), eos);
+                }
+            };
+            if threads == 1 {
+                for bin in bins.iter_mut() {
+                    for (seq, chunk) in bin.iter_mut() {
+                        advance(model, params, draft, seq, *chunk, eos);
+                    }
+                }
+                run_batch(&mut batch);
+            } else {
                 std::thread::scope(|sc| {
-                    for part in work.chunks_mut(per) {
+                    for mut bin in bins.into_iter().filter(|b| !b.is_empty()) {
                         sc.spawn(move || {
-                            for (seq, chunk) in part.iter_mut() {
+                            for (seq, chunk) in bin.iter_mut() {
                                 advance(model, params, draft, seq, *chunk, eos);
                             }
                         });
                     }
+                    run_batch(&mut batch);
                 });
             }
+        }
+        if self.cfg.wave_batch {
+            self.stats.record_wave_batch(wave_batch_n);
         }
         // ---- resolve speculative rounds (before retirement, so a
         // finishing sequence publishes a clean chain): roll the target
@@ -1036,6 +1112,62 @@ mod tests {
             out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(false), run(true), "fused reads must be bit-identical to the mirror");
+    }
+
+    #[test]
+    fn wave_batching_is_bit_identical_to_per_sequence_decode() {
+        // flipping the weight-stationary batched decode off must not change
+        // a single token — across worker counts, a quantized KV store, a
+        // tight arena (preemption churn) and speculative decoding, which
+        // routes around the batch but shares the wave
+        let cfg = ModelConfig::tiny(Arch::Gpt2);
+        let model = Transformer::new(cfg.clone());
+        let params = model.init_params(13);
+        let run = |wave_batch: bool, threads: usize, kv_blocks: usize, spec: bool| {
+            let mut e = Engine::new(
+                cfg.clone(),
+                params.clone(),
+                EngineConfig {
+                    max_batch: 4,
+                    kv_block: 8,
+                    kv_blocks,
+                    prefill_chunk: 4,
+                    prefix_cache: false,
+                    threads,
+                    kv_scheme: crate::quant::resolve("fp8_e3m4").unwrap(),
+                    spec_draft_store: spec
+                        .then(|| crate::quant::resolve("fp4_e2m1_sr").unwrap()),
+                    spec_k: 3,
+                    wave_batch,
+                    ..EngineConfig::default()
+                },
+            );
+            for id in 0..6u64 {
+                let prompt: Vec<usize> =
+                    (0..5 + id as usize).map(|k| (id as usize * 7 + k * 3) % 50).collect();
+                e.enqueue(GenRequest::greedy(id, prompt, 6)).unwrap();
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            let tokens: Vec<_> = out.into_iter().map(|r| r.tokens).collect();
+            let (live, ..) = e.kv_usage();
+            assert_eq!(live, 0, "wave_batch={wave_batch}: blocks leaked");
+            (tokens, e)
+        };
+        for (threads, kv_blocks, spec) in [(1, 0, false), (3, 0, false), (2, 6, false), (2, 0, true)]
+        {
+            let (on, e_on) = run(true, threads, kv_blocks, spec);
+            let (off, _) = run(false, threads, kv_blocks, spec);
+            assert_eq!(
+                on, off,
+                "threads={threads} kv_blocks={kv_blocks} spec={spec}: \
+                 wave batching changed outputs"
+            );
+            assert!(
+                e_on.stats.wave_batch_waves() > 0,
+                "threads={threads}: no wave was ever batched"
+            );
+        }
     }
 
     #[test]

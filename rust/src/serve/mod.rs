@@ -18,7 +18,12 @@
 //!    N positions per wave (`decode_step` is its 1-token case) against a
 //!    paged per-sequence KV chain ([`crate::nn::kv::PagedKv`]): fixed-size
 //!    position blocks resolved through a block table, bit-identical to the
-//!    contiguous cache.
+//!    contiguous cache. `nn::transformer::decode_wave` is the
+//!    weight-stationary batched form: the current-token rows of many
+//!    decoding sequences stack into one activation matrix so each layer's
+//!    dense weights are streamed once per wave instead of once per
+//!    sequence, with attention still per-sequence over its own cache —
+//!    logits bit-identical to per-sequence decode.
 //! 3. **allocate** — [`kvcache::BlockAllocator`] owns the global block
 //!    arena: free-list recycling, per-block refcounted states (O(1)
 //!    double-free detection, surfaced as `Err` not panics), copy-on-write
@@ -41,9 +46,15 @@
 //!    runs dry the newest sequence is preempted back to the queue (blocks
 //!    freed, tokens retained, re-prefilled later).
 //! 5. **serve** — [`engine::Engine`] plans + reserves each sequence's
-//!    chunk, advances the wave across worker threads (safe: blocks are
-//!    `Arc`-shared read-only, writable tails exclusive), and retires
-//!    finished sequences into the prefix index; a spawned engine front
+//!    chunk, then splits the wave: steady-state single-token decodes are
+//!    stacked into one weight-stationary `decode_wave` batch
+//!    ([`engine::EngineConfig::wave_batch`], on by default — each weight
+//!    matrix read once for the whole batch), while prefill chunks and
+//!    speculative rounds advance per-sequence across worker threads,
+//!    dealt round-robin by estimated cost so wall time tracks the largest
+//!    item (safe: blocks are `Arc`-shared read-only, writable tails
+//!    exclusive); both paths are bit-identical by construction. Finished
+//!    sequences retire into the prefix index; a spawned engine front
 //!    exposes blocking [`engine::EngineClient`]s. With a draft store
 //!    configured (`--spec-draft`, [`engine::EngineConfig::spec_draft_store`])
 //!    the engine runs **self-speculative decoding** on the CoW machinery:
@@ -81,8 +92,9 @@
 //!
 //! The conformance harness for all of the above — a seeded, deterministic
 //! serving fuzzer asserting leak-freedom, determinism, paged-vs-contiguous
-//! greedy identity, prefix on/off equivalence, bounded quantized-KV
-//! logit drift, and telemetry/trace consistency — lives in
+//! greedy identity, prefix on/off equivalence, wave-batch on/off
+//! equivalence, bounded quantized-KV logit drift, and telemetry/trace
+//! consistency — lives in
 //! [`crate::testing::fuzz`] and runs from `tests/fuzz_serve.rs`; the
 //! net-transport arm replays the same seeds over a loopback TCP server and
 //! asserts bit-identical outputs.

@@ -47,6 +47,10 @@ pub struct ServeStats {
     /// every reserve/release edge, not just end-state.
     blocks_live: Gauge,
     occupancy: Histogram,
+    /// Sequences advanced through the weight-stationary batched decode
+    /// (`Transformer::decode_wave`) per wave; only waves that batched at
+    /// least one sequence record a sample.
+    wave_batch: Histogram,
     block_live: Histogram,
     total_s: Histogram,
     ttft_s: Histogram,
@@ -107,6 +111,7 @@ impl ServeStats {
             spec_accepted: reg.counter("serve.spec_accepted"),
             blocks_live: reg.gauge("serve.kv_blocks_live"),
             occupancy: reg.histogram("serve.batch_occupancy"),
+            wave_batch: reg.histogram("serve.wave_batch_size"),
             block_live: reg.histogram("serve.kv_blocks_live_per_wave"),
             total_s: reg.histogram("serve.latency_total_s"),
             ttft_s: reg.histogram("serve.latency_ttft_s"),
@@ -258,6 +263,17 @@ impl ServeStats {
         if self.first_wave.is_none() {
             self.first_wave = Some(Instant::now());
         }
+    }
+
+    /// Record one wave whose steady-state decodes went through the
+    /// weight-stationary batched path (`n_seqs` sequences in the batch).
+    /// Waves with nothing to batch (all prefill / speculative) record no
+    /// sample, mirroring [`ServeStats::record_wave`]'s empty-wave rule.
+    pub fn record_wave_batch(&mut self, n_seqs: usize) {
+        if n_seqs == 0 {
+            return;
+        }
+        self.wave_batch.record(n_seqs as f64);
     }
 
     /// Sample the arena's live-block count for the current wave.
@@ -486,6 +502,22 @@ impl ServeStats {
         self.occupancy.max() as usize
     }
 
+    /// Waves in which at least one sequence decoded through the batched
+    /// weight-stationary path.
+    pub fn wave_batch_waves(&self) -> usize {
+        self.wave_batch.count() as usize
+    }
+
+    /// Mean batched-decode size over batching waves (exact; 0 when none).
+    pub fn mean_wave_batch(&self) -> f64 {
+        self.wave_batch.mean()
+    }
+
+    /// Peak batched-decode size in any wave (exact; 0 when none).
+    pub fn max_wave_batch(&self) -> usize {
+        self.wave_batch.max() as usize
+    }
+
     /// Max KV quantized logit drift observed (0 when none recorded).
     pub fn kv_drift_max(&self) -> f64 {
         self.kv_drift.max()
@@ -534,6 +566,11 @@ impl ServeStats {
         if self.kv_drift.count() > 0 {
             pairs.push(("kv_logit_drift_max", num(self.kv_drift_max())));
             pairs.push(("kv_logit_drift_p50", num(self.kv_drift_p50())));
+        }
+        if self.wave_batch_waves() > 0 {
+            pairs.push(("wave_batch_waves", num(self.wave_batch_waves() as f64)));
+            pairs.push(("wave_batch_mean", num(self.mean_wave_batch())));
+            pairs.push(("wave_batch_max", num(self.max_wave_batch() as f64)));
         }
         if self.spec_rounds() > 0 {
             pairs.push(("spec_rounds", num(self.spec_rounds() as f64)));
@@ -850,6 +887,27 @@ mod tests {
         let text = st.render("spec");
         assert!(text.contains("spec decode"), "{text}");
         assert!(text.contains("50% rate"), "{text}");
+    }
+
+    #[test]
+    fn wave_batch_aggregates_and_flows_to_bench_json() {
+        let mut st = ServeStats::new();
+        assert_eq!(st.wave_batch_waves(), 0);
+        // like the spec/drift keys, absent until a wave actually batched
+        assert_eq!(*st.bench_json("wb", vec![]).get("wave_batch_waves"), Json::Null);
+        st.record_wave_batch(0); // nothing to batch: no sample
+        assert_eq!(st.wave_batch_waves(), 0);
+        st.record_wave_batch(4);
+        st.record_wave_batch(2);
+        assert_eq!(st.wave_batch_waves(), 2);
+        assert_eq!(st.max_wave_batch(), 4);
+        assert!((st.mean_wave_batch() - 3.0).abs() < 1e-12);
+        let j = st.bench_json("wb", vec![]);
+        assert_eq!(j.get("wave_batch_waves").as_usize(), Some(2));
+        assert_eq!(j.get("wave_batch_max").as_usize(), Some(4));
+        assert_eq!(j.get("wave_batch_mean").as_f64(), Some(3.0));
+        let snap = st.registry().snapshot_json();
+        assert_eq!(snap.get("serve.wave_batch_size").get("count").as_usize(), Some(2));
     }
 
     #[test]

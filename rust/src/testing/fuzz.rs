@@ -45,6 +45,12 @@
 //!    greedy tokens and the same leak-free drain: exact-match acceptance
 //!    plus deterministic rollback (position-keyed SR re-encoding) means
 //!    speculation can never change an output, only its wave count.
+//! 10. **wave-batch transparency** — re-running the engine with
+//!    `EngineConfig::wave_batch` off (per-sequence decode instead of the
+//!    weight-stationary batched wave) yields bit-identical greedy tokens
+//!    and the same leak-free drain: stacking decode rows into one GEMM
+//!    reorders nothing inside any row's accumulations, so batching can
+//!    only change weight traffic, never an output.
 //!
 //! Cases are deliberately small (arena sizes near the per-request minimum
 //! force preemption and copy-on-write; prompts shorter than a block force
@@ -373,6 +379,19 @@ pub fn check_case(seed: u64) -> Result<(), String> {
             "{tag}: greedy outputs changed with speculative decoding on \
              (draft fp4_e2m1_sr, k={})",
             spec.spec_k
+        ));
+    }
+
+    // 10. wave-batch transparency: disabling the weight-stationary batched
+    // decode wave (per-sequence decode for every chunk) must not change a
+    // single greedy token — the default runs above all had it on, so this
+    // pins both sides of the switch to the same token streams
+    let unbatched = EngineConfig { wave_batch: false, ..case.ecfg.clone() };
+    let sixth = run_engine(&model, &params, &unbatched, &case.requests, &tag)?;
+    if tokens_of(&first) != tokens_of(&sixth) {
+        return Err(format!(
+            "{tag}: greedy outputs changed when wave batching was disabled \
+             (batched decode_wave diverges from per-sequence decode)"
         ));
     }
 

@@ -16,6 +16,9 @@
 //! * enabling self-speculative decoding (`spec_draft_store` = 4-bit SR
 //!   draft, depth varied by seed) never changes greedy outputs and drains
 //!   leak-free — exact-match acceptance + deterministic rollback;
+//! * disabling wave batching (`wave_batch = false`, per-sequence decode
+//!   instead of the weight-stationary batched wave) never changes greedy
+//!   outputs and drains leak-free;
 //! * (net arm) the same mix replayed over loopback TCP — wire codec,
 //!   strict parse, framing, drain — yields bit-identical tokens with zero
 //!   lost responses and zero live blocks (`check_case_net`).
